@@ -1,0 +1,69 @@
+//! Calibration landscape dump: per (model, batch) the best parallelism,
+//! per-minibatch time, and GPU-hours "area" at each GPU count — the raw
+//! material behind the Fig 1(B) crossovers and Fig 4/7 gaps. Not part of
+//! the paper reproduction; a tool for tuning the analytic cost model.
+
+use saturn::cluster::Node;
+use saturn::costmodel::{CostModel, ParallelismKind};
+use saturn::model::ModelDesc;
+use saturn::trainer::{workloads, HParams, Optimizer, Task};
+use saturn::util::table::TextTable;
+
+fn main() {
+    let cm = CostModel::default();
+    let node = Node::a100(0, 8);
+    let cases = vec![
+        (ModelDesc::gpt2_1_5b(), 16usize),
+        (ModelDesc::gpt2_1_5b(), 32),
+        (ModelDesc::gpt_j_6b(), 16),
+        (ModelDesc::gpt_j_6b(), 32),
+        (ModelDesc::vit_g_1_8b(), 64),
+        (ModelDesc::resnet_200m(), 64),
+    ];
+    for (model, batch) in cases {
+        let examples = match model.arch {
+            saturn::model::Arch::ConvNet | saturn::model::Arch::VisionTransformer => {
+                workloads::IMAGENET_SUBSET_EXAMPLES
+            }
+            _ => workloads::text_examples(model.seq_len),
+        };
+        let task = Task::new(0, model.clone(), HParams::new(batch, 1e-4, 10, Optimizer::Adam), examples);
+        let mut t = TextTable::new(vec!["g", "best", "knobs", "s/mb", "task-h", "GPU-h", "ddp", "fsdp", "pipe", "spill"]);
+        for g in 1..=8 {
+            let per: Vec<String> = ParallelismKind::ALL
+                .iter()
+                .map(|&k| {
+                    cm.search(&task, k, g, &node)
+                        .map(|(_, e)| format!("{:.2}", e.minibatch_secs))
+                        .unwrap_or_else(|| "-".into())
+                })
+                .collect();
+            let best = ParallelismKind::ALL
+                .iter()
+                .filter_map(|&k| cm.search(&task, k, g, &node).map(|(kn, e)| (k, kn, e)))
+                .min_by(|a, b| a.2.minibatch_secs.total_cmp(&b.2.minibatch_secs));
+            match best {
+                Some((k, kn, e)) => {
+                    let task_h = task.total_runtime(e.minibatch_secs) / 3600.0;
+                    t.row(vec![
+                        g.to_string(),
+                        k.name().to_string(),
+                        kn.summary(k),
+                        format!("{:.2}", e.minibatch_secs),
+                        format!("{:.2}", task_h),
+                        format!("{:.1}", task_h * g as f64),
+                        per[0].clone(),
+                        per[1].clone(),
+                        per[2].clone(),
+                        per[3].clone(),
+                    ]);
+                }
+                None => {
+                    t.row(vec![g.to_string(), "-".into(), "".into(), "".into(), "".into(), "".into(),
+                        per[0].clone(), per[1].clone(), per[2].clone(), per[3].clone()]);
+                }
+            }
+        }
+        println!("=== {} batch {} ===\n{}", model.name, batch, t.render());
+    }
+}

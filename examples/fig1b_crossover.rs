@@ -1,0 +1,63 @@
+//! Fig 1(B): empirical runtime crossovers between FSDP and pipeline
+//! parallelism as GPU count and batch size change (knobs tuned per
+//! setting, as in the paper).
+//!
+//! Paper shape to reproduce: neither parallelism dominates — pipelining
+//! wins at some (batch, GPU-count) points, FSDP at others, and the
+//! crossover point moves with batch size.
+
+use saturn::cluster::Node;
+use saturn::costmodel::{CostModel, ParallelismKind};
+use saturn::metrics::write_report;
+use saturn::model::ModelDesc;
+use saturn::trainer::{workloads, HParams, Optimizer, Task};
+use saturn::util::table::TextTable;
+
+fn main() {
+    let cm = CostModel::default();
+    let node = Node::a100(0, 8);
+    let mut report = String::new();
+    println!("Fig 1(B): FSDP vs pipeline per-minibatch runtime (s), knobs auto-tuned\n");
+    for (model, batches) in [
+        (ModelDesc::gpt2_1_5b(), vec![16usize, 32]),
+        (ModelDesc::gpt_j_6b(), vec![16, 32]),
+    ] {
+        for &batch in &batches {
+            let task = Task::new(
+                0,
+                model.clone(),
+                HParams::new(batch, 1e-4, 10, Optimizer::Adam),
+                workloads::text_examples(model.seq_len),
+            );
+            let mut t = TextTable::new(vec!["gpus", "fsdp (s)", "fsdp knobs", "pipeline (s)", "pipe knobs", "winner"]);
+            let mut winners = Vec::new();
+            for g in 2..=8 {
+                let f = cm.search(&task, ParallelismKind::Fsdp, g, &node);
+                let p = cm.search(&task, ParallelismKind::Pipeline, g, &node);
+                let (fs, fk) = f
+                    .map(|(k, e)| (format!("{:.2}", e.minibatch_secs), k.summary(ParallelismKind::Fsdp)))
+                    .unwrap_or(("OOM".into(), String::new()));
+                let (ps, pk) = p
+                    .map(|(k, e)| (format!("{:.2}", e.minibatch_secs), k.summary(ParallelismKind::Pipeline)))
+                    .unwrap_or(("OOM".into(), String::new()));
+                let winner = match (f, p) {
+                    (Some((_, fe)), Some((_, pe))) => {
+                        if fe.minibatch_secs < pe.minibatch_secs { "FSDP" } else { "pipeline" }
+                    }
+                    (Some(_), None) => "FSDP",
+                    (None, Some(_)) => "pipeline",
+                    (None, None) => "-",
+                };
+                winners.push(winner);
+                t.row(vec![g.to_string(), fs, fk, ps, pk, winner.to_string()]);
+            }
+            let heading = format!("--- {} batch {} ---", model.name, batch);
+            println!("{heading}\n{}", t.render());
+            let crossings = winners.windows(2).filter(|w| w[0] != w[1] && w[0] != "-" && w[1] != "-").count();
+            println!("crossovers in 2..=8: {crossings}\n");
+            report.push_str(&format!("{heading}\n{}\ncrossovers: {crossings}\n\n", t.render()));
+        }
+    }
+    let path = write_report("fig1b_crossover.txt", &report).expect("write report");
+    println!("report -> {}", path.display());
+}

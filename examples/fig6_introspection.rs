@@ -1,0 +1,68 @@
+//! Fig 6: sensitivity of Saturn and Optimus-Dynamic to the introspection
+//! interval and improvement-threshold knobs.
+//!
+//! Paper shape: Saturn's makespan improves (weakly) monotonically as the
+//! knobs become finer — lower intervals/thresholds subsume higher ones
+//! because each round re-solves holistically; the locally-optimizing
+//! Optimus-Dynamic behaves non-monotonically. Fixed: threshold = 500 s
+//! for the interval sweep, interval = 1000 s for the threshold sweep.
+
+use saturn::baselines::OptimusGreedy;
+use saturn::cluster::Cluster;
+use saturn::costmodel::CostModel;
+use saturn::introspect::{interval_sweep, threshold_sweep};
+use saturn::metrics::write_report;
+use saturn::parallelism::UppRegistry;
+use saturn::profiler::TrialRunner;
+use saturn::sim::SimConfig;
+use saturn::solver::joint::JointOptimizer;
+use saturn::trainer::workloads;
+use saturn::util::table::TextTable;
+use std::sync::Arc;
+
+fn main() {
+    let workload = workloads::txt_workload();
+    let cluster = Cluster::single_node_8gpu();
+    let runner = TrialRunner::new(UppRegistry::default_library(Arc::new(CostModel::default())));
+    let (grid, _) = runner.profile(&workload, &cluster);
+    let base = SimConfig::default();
+    let saturn = JointOptimizer::default();
+    let optimus = OptimusGreedy;
+    let mut report = String::new();
+
+    let intervals = [500.0, 1000.0, 2000.0, 4000.0, 8000.0];
+    let mut t = TextTable::new(vec!["interval (s)", "Saturn (h)", "rounds", "switches", "Optimus-Dyn (h)"]);
+    let s_pts = interval_sweep(&saturn, &workload, &grid, &cluster, &intervals, 500.0, base, 7);
+    let o_pts = interval_sweep(&optimus, &workload, &grid, &cluster, &intervals, 500.0, base, 7);
+    for (s, o) in s_pts.iter().zip(&o_pts) {
+        t.row(vec![
+            format!("{:.0}", s.knob),
+            format!("{:.2}", s.makespan / 3600.0),
+            s.rounds.to_string(),
+            s.switches.to_string(),
+            format!("{:.2}", o.makespan / 3600.0),
+        ]);
+    }
+    let block = format!("=== interval sweep (threshold fixed at 500 s) ===\n{}\n", t.render());
+    print!("{block}");
+    report.push_str(&block);
+
+    let thresholds = [100.0, 250.0, 500.0, 1000.0, 2000.0];
+    let mut t = TextTable::new(vec!["threshold (s)", "Saturn (h)", "switches", "Optimus-Dyn (h)"]);
+    let s_pts = threshold_sweep(&saturn, &workload, &grid, &cluster, &thresholds, 1000.0, base, 7);
+    let o_pts = threshold_sweep(&optimus, &workload, &grid, &cluster, &thresholds, 1000.0, base, 7);
+    for (s, o) in s_pts.iter().zip(&o_pts) {
+        t.row(vec![
+            format!("{:.0}", s.knob),
+            format!("{:.2}", s.makespan / 3600.0),
+            s.switches.to_string(),
+            format!("{:.2}", o.makespan / 3600.0),
+        ]);
+    }
+    let block = format!("=== threshold sweep (interval fixed at 1000 s) ===\n{}\n", t.render());
+    print!("{block}");
+    report.push_str(&block);
+
+    let path = write_report("fig6_introspection.txt", &report).expect("write report");
+    println!("report -> {}", path.display());
+}

@@ -1,0 +1,117 @@
+//! Fig 8: Saturn's sensitivity to (A) workload size, (B) model size, and
+//! (C) cluster size, on the TXT workload family.
+//!
+//! Paper shapes:
+//! - (A) slightly superlinear scaling in the number of tasks (more models
+//!   → more optimization scope);
+//! - (B) mostly linear in model size, with slight slowdowns at the largest
+//!   sizes (only the 8-GPU FSDP ckpt+offload config remains viable);
+//! - (C) superlinear speedups with GPU count (spilling gives way to a
+//!   richer parallelism space, and the solver gets more combinations).
+
+use saturn::cluster::Cluster;
+use saturn::costmodel::CostModel;
+use saturn::metrics::write_report;
+use saturn::parallelism::UppRegistry;
+use saturn::profiler::TrialRunner;
+use saturn::sim::{simulate, SimConfig};
+use saturn::solver::joint::JointOptimizer;
+use saturn::trainer::workloads;
+use saturn::util::rng::DetRng;
+use saturn::util::table::TextTable;
+use std::sync::Arc;
+
+fn run(workload: &saturn::trainer::Workload, cluster: &Cluster, seed: u64) -> f64 {
+    let runner = TrialRunner::new(UppRegistry::default_library(Arc::new(CostModel::default())));
+    let (grid, _) = runner.profile(workload, cluster);
+    let mut rng = DetRng::new(seed);
+    simulate(&JointOptimizer::default(), workload, &grid, cluster, SimConfig::default(), &mut rng).makespan
+}
+
+fn main() {
+    let mut report = String::new();
+
+    // (A) workload size: GPT-2 fixed, batch 16, vary #learning rates
+    let cluster = Cluster::single_node_8gpu();
+    let sizes = [2usize, 4, 8, 16, 24];
+    let mut t = TextTable::new(vec!["tasks", "makespan (h)", "normalized", "per-task (norm)"]);
+    let mut base = 0.0;
+    for &n in &sizes {
+        let w = workloads::txt_lr_sweep(n);
+        let ms = run(&w, &cluster, 11);
+        if base == 0.0 {
+            base = ms;
+        }
+        t.row(vec![
+            n.to_string(),
+            format!("{:.2}", ms / 3600.0),
+            format!("{:.2}x", ms / base),
+            format!("{:.2}", (ms / base) / (n as f64 / sizes[0] as f64)),
+        ]);
+    }
+    let block = format!("=== Fig 8(A): workload size (GPT-2 lr sweep, 8 GPUs) ===\n{}\n", t.render());
+    print!("{block}");
+    report.push_str(&block);
+
+    // (B) model size: stack transformer blocks (GPT-3-style growth)
+    let layer_counts = [12usize, 24, 48, 96, 144];
+    let mut t = TextTable::new(vec!["layers", "params (B)", "makespan (h)", "normalized", "per-param (norm)"]);
+    let mut base = 0.0;
+    let mut base_params = 0.0;
+    for &l in &layer_counts {
+        let w = workloads::txt_model_size(l, 4);
+        let params_b = w[0].model.params_b();
+        let ms = run(&w, &cluster, 13);
+        if base == 0.0 {
+            base = ms;
+            base_params = params_b;
+        }
+        t.row(vec![
+            l.to_string(),
+            format!("{:.2}", params_b),
+            format!("{:.2}", ms / 3600.0),
+            format!("{:.2}x", ms / base),
+            format!("{:.2}", (ms / base) / (params_b / base_params)),
+        ]);
+    }
+    let block = format!("=== Fig 8(B): model size (stacked GPT-2 blocks, 4 tasks, 8 GPUs) ===\n{}\n", t.render());
+    print!("{block}");
+    report.push_str(&block);
+
+    // (C) cluster size: TXT workload, 1..16 GPUs (16 = 2 nodes)
+    let gpu_counts: Vec<(usize, Cluster)> = vec![
+        (1, Cluster::homogeneous(1, 1)),
+        (2, Cluster::homogeneous(1, 2)),
+        (4, Cluster::homogeneous(1, 4)),
+        (8, Cluster::homogeneous(1, 8)),
+        (16, Cluster::homogeneous(2, 8)),
+    ];
+    let w = workloads::txt_workload();
+    let mut t = TextTable::new(vec!["gpus", "makespan (h)", "speedup vs prev", "speedup vs 1 GPU", "linear would be"]);
+    let mut prev = 0.0;
+    let mut first = 0.0;
+    for (g, cluster) in &gpu_counts {
+        let ms = run(&w, cluster, 17);
+        let vs_prev = if prev > 0.0 { prev / ms } else { 1.0 };
+        if first == 0.0 {
+            first = ms;
+        }
+        t.row(vec![
+            g.to_string(),
+            format!("{:.2}", ms / 3600.0),
+            format!("{:.2}x", vs_prev),
+            format!("{:.2}x", first / ms),
+            format!("{:.0}x", *g as f64),
+        ]);
+        prev = ms;
+    }
+    let block = format!(
+        "=== Fig 8(C): cluster size (TXT) — superlinear region expected as spilling gives way to parallelism choices ===\n{}\n",
+        t.render()
+    );
+    print!("{block}");
+    report.push_str(&block);
+
+    let path = write_report("fig8_sensitivity.txt", &report).expect("write report");
+    println!("report -> {}", path.display());
+}

@@ -1,0 +1,65 @@
+//! Quickstart: the paper's two-call workflow on the TXT workload.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Profiles the 12-task TXT model-selection grid on a single 8-GPU node,
+//! solves SPASE, prints the chosen plan (parallelism + GPUs + start time
+//! per task), then executes it in the simulator and compares against the
+//! current-practice baseline.
+
+use saturn::baselines::CurrentPractice;
+use saturn::cluster::Cluster;
+use saturn::coordinator::Saturn;
+use saturn::metrics::reduction_pct;
+use saturn::sim::{simulate, SimConfig};
+use saturn::solver::policy::{PlanCtx, Policy};
+use saturn::trainer::workloads;
+use saturn::util::rng::DetRng;
+use saturn::util::table::TextTable;
+
+fn main() {
+    let workload = workloads::txt_workload();
+    let cluster = Cluster::single_node_8gpu();
+    let mut saturn = Saturn::new(cluster.clone());
+
+    // 1. profile(tasks) — the Trial Runner estimates every physical plan
+    let overhead = saturn.profile(&workload);
+    println!("Trial Runner: {} plans profiled (simulated overhead {:.0}s)\n", saturn.grid.as_ref().unwrap().len(), overhead);
+
+    // 2. plan — the Joint Optimizer solves SPASE
+    let plan = saturn.plan(&workload, 42);
+    plan.validate(&cluster, &workload).expect("valid plan");
+    let mut t = TextTable::new(vec!["task", "parallelism", "gpus", "start", "duration"]);
+    let mut rows: Vec<_> = plan.assignments.iter().collect();
+    rows.sort_by(|a, b| a.start.total_cmp(&b.start));
+    for a in rows {
+        let task = workload.iter().find(|t| t.id == a.task_id).unwrap();
+        t.row(vec![
+            task.name.clone(),
+            a.config.upp.clone(),
+            a.config.gpus.to_string(),
+            format!("{:.0}s", a.start),
+            format!("{:.0}s", a.duration),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("planned makespan: {}\n", saturn::util::fmt_hms(plan.makespan()));
+
+    // 3. execute — simulate with introspection, vs current practice
+    let result = saturn.execute_simulated(&workload, SimConfig::default(), 42);
+    let grid = saturn.grid.as_ref().unwrap();
+    let ctx = PlanCtx::fresh(&workload, grid, &cluster);
+    let mut rng = DetRng::new(42);
+    let cp_plan = CurrentPractice.plan(&ctx, &mut rng);
+    let mut rng = DetRng::new(42);
+    let cp = simulate(&CurrentPractice, &workload, grid, &cluster, SimConfig::default(), &mut rng);
+    println!("Saturn simulated makespan:          {}", saturn::util::fmt_hms(result.makespan));
+    println!("Current-practice planned makespan:  {}", saturn::util::fmt_hms(cp_plan.makespan()));
+    println!("Current-practice simulated makespan:{}", saturn::util::fmt_hms(cp.makespan));
+    println!(
+        "reduction vs current practice: {:.1}% (paper: 39–49%)",
+        reduction_pct(result.makespan, cp.makespan)
+    );
+}

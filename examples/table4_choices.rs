@@ -1,0 +1,57 @@
+//! Table 4: the parallelism + apportionment mixture Saturn chooses.
+//!
+//! Paper shape: a non-trivial mixture across models — e.g. GPT-2 tasks on
+//! pipelining@5 / FSDP@4, GPT-J on FSDP@8 / pipelining@3, ResNet on DDP@2
+//! or spilling@1, ViT-G on FSDP@4-6. Individually unintuitive choices
+//! that pack well jointly.
+
+use saturn::cluster::Cluster;
+use saturn::costmodel::CostModel;
+use saturn::metrics::write_report;
+use saturn::parallelism::UppRegistry;
+use saturn::profiler::TrialRunner;
+use saturn::solver::joint::JointOptimizer;
+use saturn::solver::policy::{PlanCtx, Policy};
+use saturn::trainer::workloads;
+use saturn::util::rng::DetRng;
+use saturn::util::table::TextTable;
+use std::collections::HashSet;
+use std::sync::Arc;
+
+fn main() {
+    let cluster = Cluster::single_node_8gpu();
+    let mut report = String::new();
+    for (wname, workload) in [("TXT", workloads::txt_workload()), ("IMG", workloads::img_workload())] {
+        let runner = TrialRunner::new(UppRegistry::default_library(Arc::new(CostModel::default())));
+        let (grid, _) = runner.profile(&workload, &cluster);
+        let ctx = PlanCtx::fresh(&workload, &grid, &cluster);
+        let mut rng = DetRng::new(42);
+        let plan = JointOptimizer::default().plan(&ctx, &mut rng);
+        plan.validate(&cluster, &workload).expect("valid plan");
+
+        let mut t = TextTable::new(vec!["model config", "parallelism", "apportionment", "knobs"]);
+        let mut rows: Vec<_> = plan.assignments.iter().collect();
+        rows.sort_by_key(|a| a.task_id);
+        for a in rows {
+            let task = workload.iter().find(|t| t.id == a.task_id).unwrap();
+            t.row(vec![
+                format!("{} (Batch {}, {:.0e} LR)", task.model.name, task.hparams.batch_size, task.hparams.lr),
+                a.config.upp.clone(),
+                format!("{} GPUs", a.config.gpus),
+                a.config.knobs.summary(a.config.kind),
+            ]);
+        }
+        let kinds: HashSet<_> = plan.assignments.iter().map(|a| a.config.kind).collect();
+        let counts: HashSet<_> = plan.assignments.iter().map(|a| a.config.gpus).collect();
+        let block = format!(
+            "=== Table 4 ({wname}, single 8-GPU node) ===\n{}\ndistinct parallelisms: {} | distinct apportionments: {}\n\n",
+            t.render(),
+            kinds.len(),
+            counts.len()
+        );
+        print!("{block}");
+        report.push_str(&block);
+    }
+    let path = write_report("table4_choices.txt", &report).expect("write report");
+    println!("report -> {}", path.display());
+}

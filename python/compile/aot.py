@@ -1,0 +1,138 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts + manifest.json.
+
+Build-time only (``make artifacts``); Python never runs on the request
+path. Each model variant yields two artifacts:
+
+  - ``<name>_train``: (params f32[P], tokens i32[B,S], targets i32[B,S],
+    lr f32[]) -> (params' f32[P], loss f32[])
+  - ``<name>_init``:  (seed i32[]) -> (params f32[P],)
+
+Interchange format is **HLO text**, not serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` crate binds) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import ModelCfg, make_init, make_train_step
+
+# The model variants shipped as artifacts. Small enough to train for
+# hundreds of steps on CPU PJRT; structured like the paper's LLM tasks
+# (the e2e example runs a model-selection grid over batch sizes / lrs).
+VARIANTS = [
+    ModelCfg(layers=2, hidden=64, vocab=128, seq=16, batch=4),    # test model
+    ModelCfg(layers=4, hidden=128, vocab=256, seq=32, batch=8),   # e2e small
+    ModelCfg(layers=4, hidden=128, vocab=256, seq=32, batch=16),  # e2e, larger batch
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (with return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(cfg: ModelCfg, out_dir: str):
+    """Lower one variant's train/init artifacts; return manifest entries."""
+    p = cfg.param_count()
+    b, s, v = cfg.batch, cfg.seq, cfg.vocab
+    meta = {
+        "layers": cfg.layers,
+        "hidden": cfg.hidden,
+        "vocab": v,
+        "seq": s,
+        "batch": b,
+        "param_count": p,
+    }
+
+    train = make_train_step(cfg)
+    lowered = jax.jit(train).lower(
+        jax.ShapeDtypeStruct((p,), jnp.float32),
+        jax.ShapeDtypeStruct((b, s), jnp.int32),
+        jax.ShapeDtypeStruct((b, s), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    train_file = f"{cfg.name}_train.hlo.txt"
+    with open(os.path.join(out_dir, train_file), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    init = make_init(cfg)
+    lowered = jax.jit(init).lower(jax.ShapeDtypeStruct((), jnp.int32))
+    init_file = f"{cfg.name}_init.hlo.txt"
+    with open(os.path.join(out_dir, init_file), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    return [
+        {
+            "name": f"{cfg.name}_train",
+            "file": train_file,
+            "inputs": [
+                {"name": "params", "dtype": "f32", "shape": [p]},
+                {"name": "tokens", "dtype": "i32", "shape": [b, s]},
+                {"name": "targets", "dtype": "i32", "shape": [b, s]},
+                {"name": "lr", "dtype": "f32", "shape": []},
+            ],
+            "outputs": [
+                {"name": "params", "dtype": "f32", "shape": [p]},
+                {"name": "loss", "dtype": "f32", "shape": []},
+            ],
+            "meta": meta,
+        },
+        {
+            "name": f"{cfg.name}_init",
+            "file": init_file,
+            "inputs": [{"name": "seed", "dtype": "i32", "shape": []}],
+            "outputs": [{"name": "params", "dtype": "f32", "shape": [p]}],
+            "meta": meta,
+        },
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    artifacts = []
+    for cfg in VARIANTS:
+        print(f"lowering {cfg.name} (params={cfg.param_count():,}) ...", flush=True)
+        artifacts.extend(lower_variant(cfg, args.out_dir))
+    manifest = {"artifacts": artifacts}
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+    # cross-language numeric fixture: the Rust integration test executes
+    # the smallest train artifact on these deterministic inputs and must
+    # reproduce loss0/param_sum (see rust/tests/runtime_e2e.rs)
+    cfg = VARIANTS[0]
+    seed, lr = 0, 0.1
+    flat = jax.jit(make_init(cfg))(jnp.int32(seed))[0]
+    toks = np.arange(cfg.batch * cfg.seq, dtype=np.int32).reshape(cfg.batch, cfg.seq) % cfg.vocab
+    tgts = (toks + 1) % cfg.vocab
+    new_flat, loss = jax.jit(make_train_step(cfg))(flat, toks, tgts, jnp.float32(lr))
+    selfcheck = {
+        "variant": cfg.name,
+        "seed": seed,
+        "lr": lr,
+        "loss0": float(loss),
+        "param_sum": float(jnp.sum(new_flat)),
+    }
+    with open(os.path.join(args.out_dir, "selfcheck.json"), "w") as f:
+        json.dump(selfcheck, f, indent=2)
+    print(f"wrote {len(artifacts)} artifacts + manifest + selfcheck to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,211 @@
+"""L1: fused causal self-attention as a Pallas kernel (TPU idiom).
+
+The paper's workloads are attention-heavy transformers (GPT-2/GPT-J/ViT).
+The training hot-spot is the attention block, so that is what we hand-
+fuse: QK^T -> scale -> causal mask -> online softmax -> V in one kernel,
+with a custom VJP whose backward pass is a second Pallas kernel.
+
+Hardware adaptation (GPU paper idioms -> TPU idioms, see DESIGN.md):
+  - tiling targets VMEM via ``BlockSpec`` (grid over (batch*heads,
+    q-blocks); K/V stream through an inner loop) instead of CUDA
+    threadblocks over shared memory;
+  - the inner matmuls are MXU-shaped (block sizes multiples of 8x128
+    whenever the sequence allows) and accumulate in f32;
+  - the online-softmax recurrence (running max + normalizer) is the
+    flash-attention insight restated for a systolic array: one pass over
+    K/V per q-block, no S x S score materialization in HBM.
+
+The kernel MUST run with ``interpret=True`` on this image: the CPU PJRT
+plugin cannot execute Mosaic custom-calls, and interpret-mode lowering
+produces plain HLO that the Rust runtime executes. Real-TPU efficiency is
+*estimated* from the block shapes (see EXPERIMENTS.md SSPerf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *, block_k: int, scale: float):
+    """One (batch*head, q-block) grid cell of the causal flash forward.
+
+    Streams K/V in ``block_k`` chunks, maintaining the running row max
+    ``m`` and normalizer ``l`` of the online softmax. Writes the attention
+    output block plus (m, l) stats needed by the backward kernel.
+    """
+    q_idx = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32)  # [block_q, d]
+    block_q = q.shape[0]
+    seq = k_ref.shape[0]
+    q_offset = q_idx * block_q
+
+    def body(start, carry):
+        acc, m_i, l_i = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[...], start * block_k, block_k, axis=0)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[...], start * block_k, block_k, axis=0)
+        s = q @ k.astype(jnp.float32).T * scale  # [block_q, block_k]
+        # causal mask: query row (q_offset + i) attends to key col (start*block_k + j) iff col <= row
+        rows = q_offset + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        cols = start * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(cols <= rows, s, NEG_INF)
+        # online softmax update
+        m_new = jnp.maximum(m_i, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = l_i * alpha + p.sum(axis=1)
+        acc = acc * alpha[:, None] + p @ v.astype(jnp.float32)
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, q.shape[1]), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    # causal: only K blocks at or before this q-block contribute
+    n_k = jnp.minimum((q_offset + block_q + block_k - 1) // block_k, seq // block_k)
+    acc, m_i, l_i = jax.lax.fori_loop(0, n_k, body, (acc0, m0, l0))
+    o_ref[...] = (acc / l_i[:, None]).astype(o_ref.dtype)
+    m_ref[...] = m_i
+    l_ref[...] = l_i
+
+
+def _bwd_kernel(q_ref, k_ref, v_ref, o_ref, do_ref, m_ref, l_ref, dq_ref, dk_ref, dv_ref, *, scale: float):
+    """One (batch*head) grid cell of the attention backward.
+
+    Recomputes the probability matrix from the saved softmax stats (no
+    S x S tensor ever leaves VMEM) and produces dQ, dK, dV for this head.
+    """
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    o = o_ref[...].astype(jnp.float32)
+    do = do_ref[...].astype(jnp.float32)
+    m = m_ref[...]
+    l = l_ref[...]
+
+    seq = q.shape[0]
+    s = q @ k.T * scale
+    rows = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(cols <= rows, s, NEG_INF)
+    p = jnp.exp(s - m[:, None]) / l[:, None]  # softmax probabilities
+
+    dv = p.T @ do
+    dp = do @ v.T
+    # d(softmax): ds = p * (dp - rowsum(do * o))
+    delta = (do * o).sum(axis=1)
+    ds = p * (dp - delta[:, None])
+    dq = ds @ k * scale
+    dk = ds.T @ q * scale
+    dq_ref[...] = dq.astype(dq_ref.dtype)
+    dk_ref[...] = dk.astype(dk_ref.dtype)
+    dv_ref[...] = dv.astype(dv_ref.dtype)
+
+
+def _pick_block(seq: int, target: int = 64) -> int:
+    """Largest divisor of ``seq`` that is <= target (VMEM-friendly tiles)."""
+    b = min(seq, target)
+    while seq % b != 0:
+        b -= 1
+    return max(b, 1)
+
+
+def _fwd_pallas(q, k, v):
+    """Run the forward kernel. Shapes: [B, H, S, D] -> (out, m, l)."""
+    b, h, s, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    block_q = _pick_block(s)
+    block_k = _pick_block(s)
+    bh = b * h
+    qf = q.reshape(bh, s, d)
+    kf = k.reshape(bh, s, d)
+    vf = v.reshape(bh, s, d)
+    grid = (bh, s // block_q)
+    out, m, l = pl.pallas_call(
+        functools.partial(_fwd_kernel, block_k=block_k, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda i, j: (i, j, 0)),  # q tile
+            pl.BlockSpec((None, s, d), lambda i, j: (i, 0, 0)),        # full K for the head
+            pl.BlockSpec((None, s, d), lambda i, j: (i, 0, 0)),        # full V for the head
+        ],
+        out_specs=[
+            pl.BlockSpec((None, block_q, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, block_q), lambda i, j: (i, j)),
+            pl.BlockSpec((None, block_q), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, s), jnp.float32),
+            jax.ShapeDtypeStruct((bh, s), jnp.float32),
+        ],
+        interpret=True,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d), m.reshape(b, h, s), l.reshape(b, h, s)
+
+
+def _bwd_pallas(q, k, v, o, do, m, l):
+    """Run the backward kernel. Shapes: [B, H, S, D] -> (dq, dk, dv)."""
+    b, h, s, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    bh = b * h
+    flat = lambda x: x.reshape(bh, *x.shape[2:])
+    grid = (bh,)
+    spec3 = pl.BlockSpec((None, s, d), lambda i: (i, 0, 0))
+    spec2 = pl.BlockSpec((None, s), lambda i: (i, 0))
+    dq, dk, dv = pl.pallas_call(
+        functools.partial(_bwd_kernel, scale=scale),
+        grid=grid,
+        in_specs=[spec3, spec3, spec3, spec3, spec3, spec2, spec2],
+        out_specs=[spec3, spec3, spec3],
+        out_shape=[jax.ShapeDtypeStruct((bh, s, d), q.dtype)] * 3,
+        interpret=True,
+    )(flat(q), flat(k), flat(v), flat(o), flat(do), flat(m), flat(l))
+    unflat = lambda x: x.reshape(b, h, s, d)
+    return unflat(dq), unflat(dk), unflat(dv)
+
+
+@jax.custom_vjp
+def causal_attention(q, k, v):
+    """Fused causal self-attention.
+
+    Args:
+      q, k, v: ``[batch, heads, seq, head_dim]`` arrays.
+
+    Returns:
+      ``[batch, heads, seq, head_dim]`` attention output.
+    """
+    out, _, _ = _fwd_pallas(q, k, v)
+    return out
+
+
+def _attn_fwd(q, k, v):
+    out, m, l = _fwd_pallas(q, k, v)
+    return out, (q, k, v, out, m, l)
+
+
+def _attn_bwd(res, do):
+    q, k, v, o, m, l = res
+    return _bwd_pallas(q, k, v, o, do, m, l)
+
+
+causal_attention.defvjp(_attn_fwd, _attn_bwd)
+
+
+def vmem_estimate_bytes(seq: int, head_dim: int, block_q: int | None = None, block_k: int | None = None) -> int:
+    """Estimated VMEM working set per forward grid cell, in bytes.
+
+    Used by the SSPerf analysis: q tile + one K/V block pair + accumulator
+    + softmax stats, all f32.
+    """
+    bq = block_q or _pick_block(seq)
+    bk = block_k or _pick_block(seq)
+    f32 = 4
+    q_tile = bq * head_dim * f32
+    kv_block = 2 * bk * head_dim * f32
+    scores = bq * bk * f32
+    acc = bq * head_dim * f32
+    stats = 2 * bq * f32
+    return q_tile + kv_block + scores + acc + stats

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here written
+with plain ``jax.numpy`` ops — no Pallas, no fusion tricks. pytest checks
+kernel-vs-ref to tolerance across shapes and dtypes (the CORE correctness
+signal), and hypothesis sweeps randomized shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def causal_attention_ref(q, k, v):
+    """Reference causal attention: softmax(QK^T / sqrt(d) + mask) V.
+
+    Args:
+      q, k, v: ``[batch, heads, seq, head_dim]``.
+
+    Returns:
+      ``[batch, heads, seq, head_dim]``.
+    """
+    d = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) / jnp.sqrt(
+        jnp.float32(d)
+    )
+    seq = q.shape[2]
+    mask = jnp.tril(jnp.ones((seq, seq), bool))
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def softmax_xent_ref(logits, targets):
+    """Reference mean softmax cross-entropy.
+
+    Args:
+      logits: ``[batch, seq, vocab]``.
+      targets: ``[batch, seq]`` int32 class ids.
+
+    Returns:
+      scalar mean loss.
+    """
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    picked = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -picked.mean()

@@ -1,0 +1,132 @@
+"""L1: fused softmax cross-entropy as a Pallas kernel.
+
+The LM loss head is the second memory-bound hot-spot after attention: a
+naive log_softmax materializes an [N, V] log-probability tensor in HBM
+just to gather one column per row. This kernel fuses max → exp-sum →
+gather into one pass over the logits (per row-block), and the backward
+kernel forms dlogits = softmax − onehot directly from the saved (max,
+logsumexp) stats without re-reading any probability tensor.
+
+TPU idiom notes: rows are tiled with ``BlockSpec`` so one (row-block ×
+vocab) tile sits in VMEM; reductions run on the VPU; no GPU-style
+warp-shuffle tricks. interpret=True on this image (see attention.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fwd_kernel(logits_ref, targets_ref, loss_ref, m_ref, lse_ref):
+    """Per row-block: loss_i = lse_i − logit_i[target_i]."""
+    logits = logits_ref[...].astype(jnp.float32)  # [block, V]
+    targets = targets_ref[...]  # [block]
+    m = logits.max(axis=1)
+    lse = m + jnp.log(jnp.exp(logits - m[:, None]).sum(axis=1))
+    v = logits.shape[1]
+    onehot = jax.nn.one_hot(targets, v, dtype=jnp.float32)
+    picked = (logits * onehot).sum(axis=1)
+    loss_ref[...] = lse - picked
+    m_ref[...] = m
+    lse_ref[...] = lse
+
+
+def _bwd_kernel(logits_ref, targets_ref, lse_ref, g_ref, dlogits_ref):
+    """dlogits = g_i · (softmax(logits)_i − onehot(target_i))."""
+    logits = logits_ref[...].astype(jnp.float32)
+    lse = lse_ref[...]
+    g = g_ref[...]
+    p = jnp.exp(logits - lse[:, None])
+    v = logits.shape[1]
+    onehot = jax.nn.one_hot(targets_ref[...], v, dtype=jnp.float32)
+    dlogits_ref[...] = ((p - onehot) * g[:, None]).astype(dlogits_ref.dtype)
+
+
+def _pick_block(n: int, target: int = 128) -> int:
+    b = min(n, target)
+    while n % b != 0:
+        b -= 1
+    return max(b, 1)
+
+
+def _fwd_pallas(logits2d, targets1d):
+    n, v = logits2d.shape
+    block = _pick_block(n)
+    grid = (n // block,)
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, v), lambda i: (i, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(logits2d, targets1d)
+
+
+@jax.custom_vjp
+def softmax_xent(logits, targets):
+    """Mean softmax cross-entropy, fused.
+
+    Args:
+      logits: ``[batch, seq, vocab]`` (any float dtype).
+      targets: ``[batch, seq]`` int32 class ids.
+
+    Returns:
+      scalar mean loss (f32).
+    """
+    b, s, v = logits.shape
+    losses, _, _ = _fwd_pallas(logits.reshape(b * s, v), targets.reshape(b * s))
+    return losses.mean()
+
+
+def _xent_fwd(logits, targets):
+    b, s, v = logits.shape
+    losses, m, lse = _fwd_pallas(logits.reshape(b * s, v), targets.reshape(b * s))
+    return losses.mean(), (logits, targets, lse)
+
+
+def _xent_bwd(res, g):
+    logits, targets, lse = res
+    b, s, v = logits.shape
+    n = b * s
+    block = _pick_block(n)
+    grid = (n // block,)
+    gs = jnp.full((n,), g / n, jnp.float32)  # d(mean)/d(loss_i)
+    dlogits = pl.pallas_call(
+        _bwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, v), lambda i: (i, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block, v), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, v), logits.dtype),
+        interpret=True,
+    )(logits.reshape(n, v), targets.reshape(n), lse, gs)
+    return dlogits.reshape(b, s, v), None
+
+
+softmax_xent.defvjp(_xent_fwd, _xent_bwd)
+
+
+def vmem_estimate_bytes(vocab: int, block_rows: int | None = None) -> int:
+    """Estimated VMEM working set per grid cell (f32): one logits tile +
+    stats + onehot scratch."""
+    br = block_rows or 128
+    f32 = 4
+    return br * vocab * f32 * 2 + 4 * br * f32

@@ -1,0 +1,167 @@
+"""L2: the decoder-only transformer LM trained by Saturn's e2e example.
+
+The whole model state lives in ONE flat f32 vector so the Rust runtime
+marshals exactly three tensors per step: ``params [P]``, ``tokens [B,S]``,
+``targets [B,S]`` (plus a learning-rate scalar — model selection compares
+tasks that differ only in lr/batch). The attention hot-spot calls the L1
+Pallas kernel (``kernels.attention.causal_attention``); everything lowers
+into a single HLO module via ``aot.py``.
+
+Architecture: pre-LN transformer blocks (LN → fused causal attention →
+residual, LN → GELU MLP → residual), learned positional embeddings, tied
+input/output embedding. Optimizer: SGD (``p ← p − lr·g``) — enough for a
+real, visibly-decreasing loss curve on the synthetic corpus while keeping
+the artifact I/O small.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import causal_attention
+from .kernels.xent import softmax_xent
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    """Static model configuration (baked into each AOT artifact)."""
+
+    layers: int
+    hidden: int
+    vocab: int
+    seq: int
+    batch: int
+    head_dim: int = 32
+    mlp_ratio: int = 4
+
+    @property
+    def heads(self) -> int:
+        assert self.hidden % self.head_dim == 0, "hidden must be a multiple of head_dim"
+        return self.hidden // self.head_dim
+
+    @property
+    def name(self) -> str:
+        return f"tiny_l{self.layers}_h{self.hidden}_v{self.vocab}_b{self.batch}_s{self.seq}"
+
+    def param_specs(self):
+        """Ordered (name, shape) list defining the flat parameter layout."""
+        h, v, s, r = self.hidden, self.vocab, self.seq, self.mlp_ratio
+        specs = [("tok_emb", (v, h)), ("pos_emb", (s, h))]
+        for i in range(self.layers):
+            specs += [
+                (f"blk{i}.ln1_g", (h,)),
+                (f"blk{i}.ln1_b", (h,)),
+                (f"blk{i}.qkv_w", (h, 3 * h)),
+                (f"blk{i}.qkv_b", (3 * h,)),
+                (f"blk{i}.proj_w", (h, h)),
+                (f"blk{i}.proj_b", (h,)),
+                (f"blk{i}.ln2_g", (h,)),
+                (f"blk{i}.ln2_b", (h,)),
+                (f"blk{i}.mlp_w1", (h, r * h)),
+                (f"blk{i}.mlp_b1", (r * h,)),
+                (f"blk{i}.mlp_w2", (r * h, h)),
+                (f"blk{i}.mlp_b2", (h,)),
+            ]
+        specs += [("lnf_g", (h,)), ("lnf_b", (h,))]
+        return specs
+
+    def param_count(self) -> int:
+        """Total flat-vector length."""
+        total = 0
+        for _, shape in self.param_specs():
+            n = 1
+            for d in shape:
+                n *= d
+            total += n
+        return total
+
+
+def unpack(cfg: ModelCfg, flat):
+    """Flat vector -> dict of named parameter arrays (static offsets)."""
+    params = {}
+    off = 0
+    for name, shape in cfg.param_specs():
+        n = 1
+        for d in shape:
+            n *= d
+        params[name] = flat[off : off + n].reshape(shape)
+        off += n
+    return params
+
+
+def pack(cfg: ModelCfg, params) -> jnp.ndarray:
+    """Dict of parameter arrays -> flat vector (inverse of unpack)."""
+    return jnp.concatenate([params[name].reshape(-1) for name, _ in cfg.param_specs()])
+
+
+def init_params(cfg: ModelCfg, seed):
+    """Initialize the flat parameter vector from an i32 seed scalar."""
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    specs = cfg.param_specs()
+    keys = jax.random.split(key, len(specs))
+    for k, (name, shape) in zip(keys, specs):
+        if name.endswith(("_g",)):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith(("_b", "_b1", "_b2", "ln1_b", "ln2_b")) or "_b" in name.split(".")[-1]:
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif len(shape) == 1:
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            params[name] = 0.02 * jax.random.normal(k, shape, jnp.float32)
+    return pack(cfg, params)
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def forward(cfg: ModelCfg, flat, tokens):
+    """Logits for a token batch. tokens: ``[B, S]`` i32 -> ``[B, S, V]``."""
+    p = unpack(cfg, flat)
+    b, s = tokens.shape
+    x = p["tok_emb"][tokens] + p["pos_emb"][None, :s, :]
+    for i in range(cfg.layers):
+        blk = lambda n: p[f"blk{i}.{n}"]
+        h = _layernorm(x, blk("ln1_g"), blk("ln1_b"))
+        qkv = h @ blk("qkv_w") + blk("qkv_b")
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        # [B, S, H] -> [B, heads, S, head_dim]
+        to_heads = lambda t: t.reshape(b, s, cfg.heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        attn = causal_attention(to_heads(q), to_heads(k), to_heads(v))
+        attn = attn.transpose(0, 2, 1, 3).reshape(b, s, cfg.hidden)
+        x = x + attn @ blk("proj_w") + blk("proj_b")
+        h = _layernorm(x, blk("ln2_g"), blk("ln2_b"))
+        h = jax.nn.gelu(h @ blk("mlp_w1") + blk("mlp_b1"))
+        x = x + h @ blk("mlp_w2") + blk("mlp_b2")
+    x = _layernorm(x, p["lnf_g"], p["lnf_b"])
+    return x @ p["tok_emb"].T  # tied output head
+
+
+def loss_fn(cfg: ModelCfg, flat, tokens, targets):
+    """Mean next-token cross-entropy (fused Pallas loss head)."""
+    logits = forward(cfg, flat, tokens)
+    return softmax_xent(logits, targets)
+
+
+def make_train_step(cfg: ModelCfg):
+    """Build the jittable SGD step: (flat, tokens, targets, lr) -> (flat', loss)."""
+
+    def step(flat, tokens, targets, lr):
+        loss, grads = jax.value_and_grad(functools.partial(loss_fn, cfg))(flat, tokens, targets)
+        return (flat - lr * grads, loss)
+
+    return step
+
+
+def make_init(cfg: ModelCfg):
+    """Build the jittable initializer: (seed i32[]) -> flat params."""
+
+    def init(seed):
+        return (init_params(cfg, seed),)
+
+    return init

@@ -1,0 +1,136 @@
+"""L2 model tests: parameter packing, shapes, loss behaviour, training."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    ModelCfg,
+    forward,
+    init_params,
+    loss_fn,
+    make_init,
+    make_train_step,
+    pack,
+    unpack,
+)
+
+CFG = ModelCfg(layers=2, hidden=64, vocab=128, seq=16, batch=4)
+
+
+def batch(key, cfg=CFG):
+    k1, k2 = jax.random.split(key)
+    toks = jax.random.randint(k1, (cfg.batch, cfg.seq), 0, cfg.vocab, jnp.int32)
+    tgts = jax.random.randint(k2, (cfg.batch, cfg.seq), 0, cfg.vocab, jnp.int32)
+    return toks, tgts
+
+
+def test_param_count_matches_layout():
+    flat = init_params(CFG, 0)
+    assert flat.shape == (CFG.param_count(),)
+
+
+def test_pack_unpack_roundtrip():
+    flat = init_params(CFG, 1)
+    again = pack(CFG, unpack(CFG, flat))
+    np.testing.assert_array_equal(flat, again)
+
+
+def test_unpack_shapes():
+    p = unpack(CFG, init_params(CFG, 2))
+    assert p["tok_emb"].shape == (CFG.vocab, CFG.hidden)
+    assert p["pos_emb"].shape == (CFG.seq, CFG.hidden)
+    assert p["blk0.qkv_w"].shape == (CFG.hidden, 3 * CFG.hidden)
+    assert p["lnf_g"].shape == (CFG.hidden,)
+
+
+def test_init_statistics():
+    p = unpack(CFG, init_params(CFG, 3))
+    assert np.allclose(p["blk0.ln1_g"], 1.0)
+    assert np.allclose(p["blk0.qkv_b"], 0.0)
+    std = float(p["tok_emb"].std())
+    assert 0.015 < std < 0.025, std
+
+
+def test_forward_shape_and_finiteness():
+    flat = init_params(CFG, 4)
+    toks, _ = batch(jax.random.PRNGKey(0))
+    logits = forward(CFG, flat, toks)
+    assert logits.shape == (CFG.batch, CFG.seq, CFG.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_initial_loss_near_uniform():
+    """An untrained LM's cross-entropy should sit near ln(vocab)."""
+    flat = init_params(CFG, 5)
+    toks, tgts = batch(jax.random.PRNGKey(1))
+    loss = float(loss_fn(CFG, flat, toks, tgts))
+    assert abs(loss - np.log(CFG.vocab)) < 0.8, loss
+
+
+def test_train_step_decreases_loss_on_fixed_batch():
+    step = jax.jit(make_train_step(CFG))
+    flat = init_params(CFG, 6)
+    toks, tgts = batch(jax.random.PRNGKey(2))
+    first = None
+    for _ in range(10):
+        flat, loss = step(flat, toks, tgts, jnp.float32(0.1))
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first - 0.2, (first, float(loss))
+
+
+def test_different_lr_different_trajectory():
+    step = jax.jit(make_train_step(CFG))
+    flat0 = init_params(CFG, 7)
+    toks, tgts = batch(jax.random.PRNGKey(3))
+    f1, l1 = step(flat0, toks, tgts, jnp.float32(0.01))
+    f2, l2 = step(flat0, toks, tgts, jnp.float32(0.2))
+    assert float(l1) == float(l2)  # same forward loss
+    assert not np.allclose(f1, f2)  # different updates
+
+
+def test_init_deterministic_per_seed():
+    a = init_params(CFG, 42)
+    b = init_params(CFG, 42)
+    c = init_params(CFG, 43)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+def test_make_init_tuple_convention():
+    init = jax.jit(make_init(CFG))
+    (flat,) = init(jnp.int32(9))
+    assert flat.shape == (CFG.param_count(),)
+
+
+def test_causal_lm_ignores_future_tokens():
+    """Logits at position i must be independent of tokens at j > i."""
+    flat = init_params(CFG, 8)
+    toks, _ = batch(jax.random.PRNGKey(4))
+    logits1 = forward(CFG, flat, toks)
+    toks2 = toks.at[:, -1].set((toks[:, -1] + 1) % CFG.vocab)
+    logits2 = forward(CFG, flat, toks2)
+    np.testing.assert_allclose(
+        logits1[:, : CFG.seq - 1], logits2[:, : CFG.seq - 1], rtol=1e-4, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("layers,hidden", [(1, 32), (2, 64), (3, 96)])
+def test_cfg_variants_consistent(layers, hidden):
+    cfg = ModelCfg(layers=layers, hidden=hidden, vocab=64, seq=8, batch=2)
+    flat = init_params(cfg, 0)
+    assert flat.shape == (cfg.param_count(),)
+    toks = jnp.zeros((2, 8), jnp.int32)
+    logits = forward(cfg, flat, toks)
+    assert logits.shape == (2, 8, 64)
+
+
+def test_grad_flows_to_all_params():
+    flat = init_params(CFG, 10)
+    toks, tgts = batch(jax.random.PRNGKey(5))
+    grads = jax.grad(lambda f: loss_fn(CFG, f, toks, tgts))(flat)
+    gdict = unpack(CFG, grads)
+    for name, g in gdict.items():
+        assert float(jnp.abs(g).max()) > 0.0, f"dead gradient: {name}"

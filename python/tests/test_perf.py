@@ -1,0 +1,62 @@
+"""Tests for the SSPerf structural analysis (compile.perf)."""
+
+import os
+import tempfile
+
+from compile.perf import attention_perf, audit_hlo, naive_attention_hbm, VMEM_BYTES
+
+
+def test_vmem_fits_with_double_buffering():
+    for seq, d in [(128, 32), (1024, 64), (4096, 128)]:
+        p = attention_perf(seq, d)
+        assert 2 * p.vmem_bytes < VMEM_BYTES, (seq, d, p.vmem_bytes)
+
+
+def test_intensity_grows_with_seq():
+    a = attention_perf(256, 64)
+    b = attention_perf(2048, 64)
+    assert b.intensity > a.intensity
+
+
+def test_mxu_bound_saturates_for_large_models():
+    p = attention_perf(2048, 128)
+    assert p.mxu_bound == 1.0  # compute-bound at GPT-J scale
+
+
+def test_flash_beats_naive_hbm_traffic():
+    for seq, d in [(512, 64), (2048, 128)]:
+        p = attention_perf(seq, d)
+        assert naive_attention_hbm(seq, d) > 3.0 * p.hbm_bytes, (seq, d)
+
+
+def test_audit_counts_ops():
+    hlo = """HloModule m
+ENTRY main {
+  p0 = f32[2,2]{1,0} parameter(0)
+  p1 = f32[2,2]{1,0} parameter(1)
+  d = f32[2,2]{1,0} dot(p0, p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT a = f32[2,2]{1,0} add(d, p0)
+}
+"""
+    with tempfile.NamedTemporaryFile("w", suffix=".hlo.txt", delete=False) as f:
+        f.write(hlo)
+        path = f.name
+    try:
+        a = audit_hlo(path)
+        assert a["dots"] == 1
+        assert a["custom_calls"] == 0
+        assert a["ops"] >= 3
+    finally:
+        os.unlink(path)
+
+
+def test_artifacts_have_no_custom_calls():
+    """Mosaic custom-calls must never leak into the CPU artifacts."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    if not os.path.isdir(art):
+        import pytest
+
+        pytest.skip("artifacts not built")
+    for f in os.listdir(art):
+        if f.endswith(".hlo.txt"):
+            assert audit_hlo(os.path.join(art, f))["custom_calls"] == 0, f

@@ -1,0 +1,93 @@
+"""Fused softmax cross-entropy kernel vs the pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import softmax_xent_ref
+from compile.kernels.xent import softmax_xent, _pick_block, vmem_estimate_bytes
+
+
+def data(key, b, s, v, scale=1.0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(key))
+    logits = scale * jax.random.normal(k1, (b, s, v), jnp.float32)
+    targets = jax.random.randint(k2, (b, s), 0, v, jnp.int32)
+    return logits, targets
+
+
+@pytest.mark.parametrize("b,s,v", [(1, 4, 16), (2, 16, 64), (4, 32, 256), (3, 10, 100)])
+def test_forward_matches_ref(b, s, v):
+    logits, targets = data(b * 100 + v, b, s, v)
+    a = softmax_xent(logits, targets)
+    r = softmax_xent_ref(logits, targets)
+    np.testing.assert_allclose(float(a), float(r), rtol=1e-5)
+
+
+@pytest.mark.parametrize("b,s,v", [(2, 8, 32), (2, 16, 128)])
+def test_gradient_matches_ref(b, s, v):
+    logits, targets = data(7, b, s, v)
+    ga = jax.grad(lambda l: softmax_xent(l, targets))(logits)
+    gr = jax.grad(lambda l: softmax_xent_ref(l, targets))(logits)
+    np.testing.assert_allclose(ga, gr, rtol=1e-4, atol=1e-7)
+
+
+def test_extreme_logits_stable():
+    logits, targets = data(9, 2, 8, 32, scale=50.0)
+    a = softmax_xent(logits, targets)
+    r = softmax_xent_ref(logits, targets)
+    assert np.isfinite(float(a))
+    np.testing.assert_allclose(float(a), float(r), rtol=1e-4)
+
+
+def test_perfect_prediction_near_zero_loss():
+    v = 32
+    targets = jnp.arange(8, dtype=jnp.int32).reshape(1, 8) % v
+    logits = 100.0 * jax.nn.one_hot(targets, v, dtype=jnp.float32)
+    assert float(softmax_xent(logits, targets)) < 1e-3
+
+
+def test_uniform_logits_loss_is_log_vocab():
+    v = 64
+    logits = jnp.zeros((2, 8, v), jnp.float32)
+    targets = jnp.zeros((2, 8), jnp.int32)
+    np.testing.assert_allclose(float(softmax_xent(logits, targets)), np.log(v), rtol=1e-6)
+
+
+def test_grad_rows_sum_to_zero():
+    """softmax − onehot rows sum to 0: gradient mass is conserved."""
+    logits, targets = data(11, 2, 8, 32)
+    g = jax.grad(lambda l: softmax_xent(l, targets))(logits)
+    np.testing.assert_allclose(np.asarray(g.sum(-1)), 0.0, atol=1e-6)
+
+
+def test_jit_composes():
+    logits, targets = data(13, 2, 8, 32)
+    f = jax.jit(softmax_xent)
+    np.testing.assert_allclose(float(f(logits, targets)), float(softmax_xent(logits, targets)), rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    s=st.sampled_from([2, 4, 8, 12, 16]),
+    v=st.sampled_from([8, 32, 100, 128]),
+    seed=st.integers(0, 10_000),
+)
+def test_hypothesis_sweep(b, s, v, seed):
+    logits, targets = data(seed, b, s, v, scale=3.0)
+    a = softmax_xent(logits, targets)
+    r = softmax_xent_ref(logits, targets)
+    np.testing.assert_allclose(float(a), float(r), rtol=1e-4)
+
+
+def test_pick_block_divides():
+    for n in [1, 7, 64, 96, 128, 1000]:
+        blk = _pick_block(n)
+        assert n % blk == 0 and blk >= 1
+
+
+def test_vmem_budget():
+    # even a 50k vocab tile fits VMEM with modest row blocks
+    assert vmem_estimate_bytes(50_304, block_rows=16) < 16 * 1024 * 1024

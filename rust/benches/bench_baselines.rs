@@ -1,0 +1,45 @@
+//! Baseline planner benchmarks (paper: heuristics run in <10 s vs the
+//! solver's 5-minute budget — here everything is sub-millisecond except
+//! the annealing solver, by design).
+
+use saturn::baselines::{CurrentPractice, MaxHeuristic, MinHeuristic, OptimusGreedy, Randomized};
+use saturn::cluster::Cluster;
+use saturn::costmodel::CostModel;
+use saturn::parallelism::UppRegistry;
+use saturn::profiler::TrialRunner;
+use saturn::solver::policy::{PlanCtx, Policy};
+use saturn::trainer::workloads;
+use saturn::util::bench::{black_box, Bench};
+use saturn::util::rng::DetRng;
+use std::sync::Arc;
+
+fn main() {
+    let mut b = Bench::new("baselines");
+    let w = workloads::txt_workload();
+    let c = Cluster::heterogeneous_16gpu();
+    let runner = TrialRunner::new(UppRegistry::default_library(Arc::new(CostModel::default())));
+    let (grid, _) = runner.profile(&w, &c);
+    let ctx = PlanCtx::fresh(&w, &grid, &c);
+
+    let policies: Vec<(&str, Box<dyn Policy>)> = vec![
+        ("max_heuristic", Box::new(MaxHeuristic)),
+        ("min_heuristic", Box::new(MinHeuristic)),
+        ("current_practice", Box::new(CurrentPractice)),
+        ("randomized", Box::new(Randomized)),
+        ("optimus_greedy", Box::new(OptimusGreedy)),
+    ];
+    for (name, p) in policies {
+        let mut rng = DetRng::new(5);
+        b.bench(&format!("plan_{name}_12tasks_hetero16"), || {
+            black_box(p.plan(&ctx, &mut rng).makespan());
+        });
+    }
+
+    let _rng = DetRng::new(6);
+    let tasks: Vec<usize> = (0..w.len()).collect();
+    b.bench("optimus_allocate_loop", || {
+        black_box(OptimusGreedy::allocate(&ctx, &tasks, 16, 8));
+    });
+
+    b.write_csv().ok();
+}

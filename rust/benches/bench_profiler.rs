@@ -1,0 +1,58 @@
+//! Trial Runner / cost model benchmarks: full-grid profiling and the
+//! per-plan estimate (called thousands of times per grid).
+
+use saturn::cluster::{Cluster, Node};
+use saturn::costmodel::{CostModel, ParallelismKind};
+use saturn::parallelism::UppRegistry;
+use saturn::profiler::TrialRunner;
+use saturn::trainer::{workloads, HParams, Optimizer, Task};
+use saturn::util::bench::{black_box, Bench};
+use std::sync::Arc;
+
+fn main() {
+    let mut b = Bench::new("profiler");
+    let cm = CostModel::default();
+    let node = Node::a100(0, 8);
+    let task = Task::new(
+        0,
+        saturn::model::ModelDesc::gpt_j_6b(),
+        HParams::new(16, 1e-4, 10, Optimizer::Adam),
+        workloads::text_examples(2048),
+    );
+
+    b.bench("cost_estimate_single_plan", || {
+        black_box(cm.estimate(&task, ParallelismKind::Fsdp, saturn::costmodel::Knobs::default(), 8, &node));
+    });
+
+    b.bench("knob_search_fsdp_8gpu", || {
+        black_box(cm.search(&task, ParallelismKind::Fsdp, 8, &node));
+    });
+
+    b.bench("knob_search_pipeline_8gpu", || {
+        black_box(cm.search(&task, ParallelismKind::Pipeline, 8, &node));
+    });
+
+    let runner = TrialRunner::new(UppRegistry::default_library(Arc::new(CostModel::default())));
+    let w = workloads::txt_workload();
+    let c = Cluster::single_node_8gpu();
+    b.bench("full_grid_profile_txt_8gpu", || {
+        let (grid, _) = runner.profile(&w, &c);
+        black_box(grid.len());
+    });
+
+    let w2 = workloads::img_workload();
+    let c2 = Cluster::four_node_32gpu();
+    b.bench("full_grid_profile_img_4x8", || {
+        let (grid, _) = runner.profile(&w2, &c2);
+        black_box(grid.len());
+    });
+
+    let (grid, _) = runner.profile(&w, &c);
+    b.bench("grid_configs_frontier_lookup", || {
+        for t in &w {
+            black_box(grid.configs(t).len());
+        }
+    });
+
+    b.write_csv().ok();
+}

@@ -1,0 +1,59 @@
+//! PJRT runtime benchmarks: artifact compile time, train-step latency,
+//! and channel/marshalling overhead of the executor's compute path.
+//! Requires `make artifacts`; exits cleanly if absent.
+
+use saturn::exec::{init_name, ComputeHandle, SyntheticCorpus};
+use saturn::util::bench::{black_box, Bench};
+
+const TINY: &str = "tiny_l2_h64_v128_b4_s16_train";
+const SMALL: &str = "tiny_l4_h128_v256_b8_s32_train";
+
+fn main() {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP bench_runtime: artifacts/ not built (run `make artifacts`)");
+        return;
+    }
+    let mut b = Bench::new("runtime");
+
+    b.bench("runtime_load_and_compile_tiny", || {
+        let mut rt = saturn::runtime::Runtime::load(dir).unwrap();
+        rt.executable(TINY).unwrap();
+        black_box(rt.cache_len());
+    });
+
+    let (handle, join) = ComputeHandle::spawn(dir).unwrap();
+    let (bt, st, vt) = saturn::exec::parse_dims(TINY).unwrap();
+    let mut corpus = SyntheticCorpus::new(vt, 1);
+    let mut params = handle.init(&init_name(TINY), 1).unwrap();
+    // warm the executable
+    let (tk, tg) = corpus.batch(bt, st);
+    let (p, _) = handle.step(TINY, params, tk, tg, 0.1).unwrap();
+    params = p;
+
+    b.bench("train_step_tiny_109k_params", || {
+        let (tk, tg) = corpus.batch(bt, st);
+        let (p, loss) = handle.step(TINY, params.clone(), tk, tg, 0.1).unwrap();
+        black_box((p.len(), loss));
+    });
+
+    let (bs, ss, vs) = saturn::exec::parse_dims(SMALL).unwrap();
+    let mut corpus_s = SyntheticCorpus::new(vs, 1);
+    let mut params_s = handle.init(&init_name(SMALL), 1).unwrap();
+    let (tk, tg) = corpus_s.batch(bs, ss);
+    let (p, _) = handle.step(SMALL, params_s, tk, tg, 0.1).unwrap();
+    params_s = p;
+    b.bench("train_step_small_830k_params", || {
+        let (tk, tg) = corpus_s.batch(bs, ss);
+        let (p, loss) = handle.step(SMALL, params_s.clone(), tk, tg, 0.1).unwrap();
+        black_box((p.len(), loss));
+    });
+
+    b.bench("corpus_batch_generation_16x64", || {
+        black_box(corpus.batch(16, 64));
+    });
+
+    handle.shutdown();
+    join.join().ok();
+    b.write_csv().ok();
+}

@@ -1,0 +1,58 @@
+//! Simulator benchmarks: one-shot replay and the introspective loop
+//! (re-plan rounds dominate; replay itself must be microseconds).
+
+use saturn::baselines::MaxHeuristic;
+use saturn::cluster::Cluster;
+use saturn::costmodel::CostModel;
+use saturn::parallelism::UppRegistry;
+use saturn::profiler::TrialRunner;
+use saturn::sim::{simulate, IntrospectCfg, SimConfig};
+use saturn::solver::joint::JointOptimizer;
+use saturn::trainer::workloads;
+use saturn::util::bench::{black_box, Bench};
+use saturn::util::rng::DetRng;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let mut b = Bench::new("simulator");
+    let w = workloads::txt_workload();
+    let c = Cluster::single_node_8gpu();
+    let runner = TrialRunner::new(UppRegistry::default_library(Arc::new(CostModel::default())));
+    let (grid, _) = runner.profile(&w, &c);
+
+    // one-shot with a cheap policy: measures the replay/commit machinery
+    b.bench("sim_oneshot_max_heuristic", || {
+        let mut rng = DetRng::new(1);
+        let r = simulate(&MaxHeuristic, &w, &grid, &c, SimConfig::default(), &mut rng);
+        black_box(r.makespan);
+    });
+
+    // one-shot with the joint optimizer (solver-dominated)
+    let fast = JointOptimizer { timeout: Duration::from_millis(30), restarts: 1, iters_per_temp: 150 };
+    b.bench("sim_oneshot_saturn_30ms_solver", || {
+        let mut rng = DetRng::new(2);
+        let r = simulate(&fast, &w, &grid, &c, SimConfig::default(), &mut rng);
+        black_box(r.makespan);
+    });
+
+    // introspective run: ~40 re-plan rounds
+    let cfg = SimConfig {
+        introspect: Some(IntrospectCfg { interval: 2000.0, threshold: 500.0 }),
+        ..SimConfig::default()
+    };
+    b.bench("sim_introspective_saturn_30ms_solver", || {
+        let mut rng = DetRng::new(3);
+        let r = simulate(&fast, &w, &grid, &c, cfg, &mut rng);
+        black_box(r.makespan);
+    });
+
+    // utilization trace extraction (Fig 7B post-processing)
+    let mut rng = DetRng::new(4);
+    let r = simulate(&fast, &w, &grid, &c, cfg, &mut rng);
+    b.bench("utilization_trace_100s_samples", || {
+        black_box(r.utilization_trace(&c, 100.0).len());
+    });
+
+    b.write_csv().ok();
+}

@@ -1,0 +1,99 @@
+//! Solver benchmarks: the joint optimizer's hot path (candidate
+//! evaluation + annealing) and the exact LP/MILP substrate.
+//!
+//! Perf targets (EXPERIMENTS.md §Perf): a paper-scale SPASE solve (12
+//! tasks, 8 GPUs) reaches a good incumbent well under its timeout; the
+//! simplex solves the tiny-instance LPs in microseconds–milliseconds.
+
+use saturn::cluster::Cluster;
+use saturn::costmodel::CostModel;
+use saturn::parallelism::UppRegistry;
+use saturn::profiler::TrialRunner;
+use saturn::solver::joint::JointOptimizer;
+use saturn::solver::lp::{Cmp, LinProg};
+use saturn::solver::policy::PlanCtx;
+use saturn::trainer::workloads;
+use saturn::util::bench::{black_box, Bench};
+use saturn::util::rng::DetRng;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let mut b = Bench::new("solver");
+
+    // SPASE solve, paper scale (12 tasks / 8 GPUs), fixed eval budget
+    let w = workloads::txt_workload();
+    let c = Cluster::single_node_8gpu();
+    let runner = TrialRunner::new(UppRegistry::default_library(Arc::new(CostModel::default())));
+    let (grid, _) = runner.profile(&w, &c);
+    let ctx = PlanCtx::fresh(&w, &grid, &c);
+    let tasks = ctx.spase_tasks();
+    let opt = JointOptimizer { timeout: Duration::from_millis(50), restarts: 2, iters_per_temp: 200 };
+    let mut rng = DetRng::new(1);
+    b.bench("spase_solve_12tasks_8gpu_50ms", || {
+        let (s, _) = opt.solve(&tasks, &c, &mut rng);
+        black_box(s.makespan());
+    });
+
+    // 24 tasks on 32 GPUs
+    let mut w2 = workloads::txt_workload();
+    w2.extend(workloads::img_workload().into_iter().map(|mut t| {
+        t.id += 12;
+        t
+    }));
+    let c2 = Cluster::four_node_32gpu();
+    let (grid2, _) = runner.profile(&w2, &c2);
+    let ctx2 = PlanCtx::fresh(&w2, &grid2, &c2);
+    let tasks2 = ctx2.spase_tasks();
+    b.bench("spase_solve_24tasks_32gpu_50ms", || {
+        let (s, _) = opt.solve(&tasks2, &c2, &mut rng);
+        black_box(s.makespan());
+    });
+
+    // single candidate evaluation (the annealing inner loop's unit)
+    let warm = opt.solve(&tasks, &c, &mut rng).0;
+    b.bench("incumbent_eval_via_list_schedule", || {
+        let choices: Vec<saturn::sched::PlacementChoice> = warm
+            .assignments
+            .iter()
+            .map(|a| saturn::sched::PlacementChoice {
+                task_id: a.task_id,
+                duration: a.duration,
+                config: a.config.clone(),
+                node: Some(a.node),
+            })
+            .collect();
+        black_box(saturn::sched::list_schedule(&choices, &c).makespan());
+    });
+
+    // solver stats: evals/sec achieved inside a fixed 50ms budget
+    let mut rng2 = DetRng::new(9);
+    let (_, st) = opt.solve(&tasks, &c, &mut rng2);
+    println!("[info] solver evals in 50ms budget: {} ({:.0} evals/s)", st.evals, st.evals as f64 / st.elapsed_secs.max(1e-9));
+
+    // simplex: a 30-var LP with 60 rows
+    let mut lp = LinProg::new(30);
+    for i in 0..30 {
+        lp.objective[i] = 1.0 + (i % 7) as f64;
+        lp.constrain(vec![(i, 1.0)], Cmp::Ge, (i % 5) as f64);
+    }
+    for i in 0..30 {
+        lp.constrain(vec![(i, 1.0), ((i + 1) % 30, 2.0)], Cmp::Le, 50.0);
+    }
+    b.bench("simplex_30var_60row", || {
+        black_box(lp.solve());
+    });
+
+    // exact SPASE MILP on a tiny instance
+    let tiny = vec![
+        saturn::solver::spase::SpaseTask { id: 0, configs: tasks[0].configs[..2].to_vec() },
+        saturn::solver::spase::SpaseTask { id: 1, configs: tasks[1].configs[..2].to_vec() },
+    ];
+    let inst = saturn::solver::spase::SpaseInstance { tasks: tiny, cluster: Cluster::from_gpu_counts(&[2]) };
+    b.bench("exact_milp_2task_2gpu", || {
+        let r = inst.solve_exact(saturn::util::Deadline::after_secs(20.0));
+        black_box(r.map(|(s, _)| s.makespan()));
+    });
+
+    b.write_csv().ok();
+}

@@ -1,0 +1,157 @@
+//! Cluster topology: nodes, GPUs, DRAM, and interconnect bandwidths.
+//!
+//! Saturn targets the common *fixed-cluster* setting (paper §1.3): a set of
+//! nodes, each with some number of identical GPUs, DRAM for spilling, a fast
+//! intra-node GPU interconnect (NVSwitch in the paper's testbed), and a
+//! PCIe-class link between GPUs and host DRAM. Single-model training never
+//! crosses nodes (paper §3.4); multi-node clusters matter because the
+//! optimizer places *different* tasks on different nodes.
+
+
+/// Hardware description of one node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Node {
+    /// Node index within the cluster.
+    pub id: usize,
+    /// Number of GPUs on this node.
+    pub gpus: usize,
+    /// Memory per GPU in GiB (paper testbed: 40 GiB A100).
+    pub gpu_mem_gib: f64,
+    /// Host DRAM in GiB available for spilling/offload (paper: 1152 GiB).
+    pub dram_gib: f64,
+    /// Peak per-GPU throughput in dense-matmul TFLOP/s.
+    pub gpu_tflops: f64,
+    /// GPU↔GPU interconnect bandwidth, GiB/s per link (NVSwitch-class).
+    pub nvlink_gibs: f64,
+    /// GPU↔DRAM bandwidth, GiB/s (PCIe-class), used by spilling/offload.
+    pub pcie_gibs: f64,
+}
+
+impl Node {
+    /// An A100-40GB-class node with `gpus` GPUs (the paper's testbed unit).
+    pub fn a100(id: usize, gpus: usize) -> Self {
+        Self {
+            id,
+            gpus,
+            gpu_mem_gib: 40.0,
+            dram_gib: 1152.0,
+            gpu_tflops: 150.0, // achievable bf16 matmul throughput (~48% of peak)
+            nvlink_gibs: 300.0,
+            pcie_gibs: 24.0,
+        }
+    }
+
+    /// Total GPU memory on the node in GiB.
+    pub fn total_gpu_mem_gib(&self) -> f64 {
+        self.gpu_mem_gib * self.gpus as f64
+    }
+}
+
+/// A fixed cluster: a list of nodes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cluster {
+    /// Nodes in the cluster.
+    pub nodes: Vec<Node>,
+}
+
+impl Cluster {
+    /// Build a homogeneous cluster of `n_nodes` A100-class nodes with
+    /// `gpus_per_node` GPUs each.
+    pub fn homogeneous(n_nodes: usize, gpus_per_node: usize) -> Self {
+        Self { nodes: (0..n_nodes).map(|i| Node::a100(i, gpus_per_node)).collect() }
+    }
+
+    /// The paper's single-node setting: 1 node × 8 GPUs.
+    pub fn single_node_8gpu() -> Self {
+        Self::homogeneous(1, 8)
+    }
+
+    /// The paper's simulation setting: 4 nodes × 8 GPUs (32 GPUs).
+    pub fn four_node_32gpu() -> Self {
+        Self::homogeneous(4, 8)
+    }
+
+    /// The paper's heterogeneous simulation setting: GPU counts 2, 2, 4, 8.
+    pub fn heterogeneous_16gpu() -> Self {
+        Self { nodes: vec![Node::a100(0, 2), Node::a100(1, 2), Node::a100(2, 4), Node::a100(3, 8)] }
+    }
+
+    /// The paper's end-to-end heterogeneous setting: nodes of 8 and 4 GPUs.
+    pub fn heterogeneous_12gpu() -> Self {
+        Self { nodes: vec![Node::a100(0, 8), Node::a100(1, 4)] }
+    }
+
+    /// Build from explicit per-node GPU counts (A100-class nodes).
+    pub fn from_gpu_counts(counts: &[usize]) -> Self {
+        Self { nodes: counts.iter().enumerate().map(|(i, &g)| Node::a100(i, g)).collect() }
+    }
+
+    /// Total GPU count across nodes.
+    pub fn total_gpus(&self) -> usize {
+        self.nodes.iter().map(|n| n.gpus).sum()
+    }
+
+    /// Largest per-node GPU count (bounds the apportionment grid).
+    pub fn max_gpus_per_node(&self) -> usize {
+        self.nodes.iter().map(|n| n.gpus).max().unwrap_or(0)
+    }
+
+    /// True if every node has the same GPU count.
+    pub fn is_homogeneous(&self) -> bool {
+        self.nodes.windows(2).all(|w| w[0].gpus == w[1].gpus)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_node_counts() {
+        let c = Cluster::single_node_8gpu();
+        assert_eq!(c.nodes.len(), 1);
+        assert_eq!(c.total_gpus(), 8);
+        assert!(c.is_homogeneous());
+    }
+
+    #[test]
+    fn four_node_counts() {
+        let c = Cluster::four_node_32gpu();
+        assert_eq!(c.total_gpus(), 32);
+        assert_eq!(c.max_gpus_per_node(), 8);
+    }
+
+    #[test]
+    fn heterogeneous_counts() {
+        let c = Cluster::heterogeneous_16gpu();
+        assert_eq!(c.total_gpus(), 16);
+        assert!(!c.is_homogeneous());
+        assert_eq!(c.max_gpus_per_node(), 8);
+        let c12 = Cluster::heterogeneous_12gpu();
+        assert_eq!(c12.total_gpus(), 12);
+    }
+
+    #[test]
+    fn from_counts_roundtrip() {
+        let c = Cluster::from_gpu_counts(&[2, 2, 4, 8]);
+        assert_eq!(c.nodes.len(), 4);
+        assert_eq!(c.nodes[3].gpus, 8);
+        assert_eq!(c.total_gpus(), 16);
+    }
+
+    #[test]
+    fn node_memory_totals() {
+        let n = Node::a100(0, 8);
+        assert!((n.total_gpu_mem_gib() - 320.0).abs() < 1e-9);
+        assert!(n.dram_gib > n.total_gpu_mem_gib());
+    }
+
+    #[test]
+    fn clone_and_eq() {
+        let c = Cluster::heterogeneous_16gpu();
+        let d = c.clone();
+        assert_eq!(c, d);
+        let e = Cluster::heterogeneous_12gpu();
+        assert_ne!(c, e);
+    }
+}

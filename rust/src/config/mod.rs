@@ -1,0 +1,282 @@
+//! Experiment / system configuration.
+//!
+//! A real deployment drives Saturn through config files rather than code:
+//! this module defines the JSON-serializable experiment spec consumed by
+//! the `saturn` CLI (`saturn run --config exp.json`) and helpers to parse
+//! compact cluster specs like `"8"`, `"4x8"`, or `"2,2,4,8"`.
+
+use crate::cluster::Cluster;
+use crate::sim::{IntrospectCfg, SimConfig};
+use crate::util::json::Json;
+
+/// Which workload family to build.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkloadKind {
+    /// Paper TXT: GPT-2 + GPT-J grid (12 tasks).
+    Txt,
+    /// Paper IMG: ViT-G + ResNet grid (12 tasks).
+    Img,
+}
+
+/// Which planner to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// Saturn's joint optimizer.
+    Saturn,
+    /// Current-practice baseline (full node, human-fixed FSDP).
+    CurrentPractice,
+    /// Max-Heuristic.
+    Max,
+    /// Min-Heuristic.
+    Min,
+    /// Randomized.
+    Random,
+    /// Optimus-Greedy (static).
+    OptimusStatic,
+    /// Optimus-Greedy re-planned every round.
+    OptimusDynamic,
+}
+
+impl PolicyKind {
+    /// All policy kinds, experiment order.
+    pub const ALL: [PolicyKind; 7] = [
+        PolicyKind::Saturn,
+        PolicyKind::CurrentPractice,
+        PolicyKind::Max,
+        PolicyKind::Min,
+        PolicyKind::Random,
+        PolicyKind::OptimusStatic,
+        PolicyKind::OptimusDynamic,
+    ];
+
+    /// Whether this policy re-plans at introspection boundaries.
+    pub fn is_dynamic(&self) -> bool {
+        matches!(self, PolicyKind::Saturn | PolicyKind::OptimusDynamic)
+    }
+}
+
+/// A full experiment spec.
+#[derive(Debug, Clone)]
+pub struct ExperimentSpec {
+    /// Workload family.
+    pub workload: WorkloadKind,
+    /// Cluster spec, e.g. "8", "4x8", "2,2,4,8".
+    pub cluster: String,
+    /// Policies to compare.
+    pub policies: Vec<PolicyKind>,
+    /// Trials per policy (paper: 3).
+    pub trials: usize,
+    /// Runtime-noise sigma.
+    pub noise_sigma: f64,
+    /// Introspection interval (dynamic policies), seconds.
+    pub interval: f64,
+    /// Introspection threshold, seconds.
+    pub threshold: f64,
+    /// Base RNG seed.
+    pub seed: u64,
+}
+
+impl Default for ExperimentSpec {
+    fn default() -> Self {
+        Self {
+            workload: WorkloadKind::Txt,
+            cluster: "8".to_string(),
+            policies: PolicyKind::ALL.to_vec(),
+            trials: 3,
+            noise_sigma: 0.08,
+            interval: 1000.0,
+            threshold: 500.0,
+            seed: 42,
+        }
+    }
+}
+
+impl WorkloadKind {
+    /// Config-file tag.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            WorkloadKind::Txt => "txt",
+            WorkloadKind::Img => "img",
+        }
+    }
+
+    /// Parse a config-file tag.
+    pub fn from_tag(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "txt" => Ok(WorkloadKind::Txt),
+            "img" => Ok(WorkloadKind::Img),
+            other => anyhow::bail!("unknown workload '{other}' (txt|img)"),
+        }
+    }
+}
+
+impl PolicyKind {
+    /// Config-file tag (kebab-case, matches the CLI).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            PolicyKind::Saturn => "saturn",
+            PolicyKind::CurrentPractice => "current-practice",
+            PolicyKind::Max => "max",
+            PolicyKind::Min => "min",
+            PolicyKind::Random => "random",
+            PolicyKind::OptimusStatic => "optimus-static",
+            PolicyKind::OptimusDynamic => "optimus-dynamic",
+        }
+    }
+
+    /// Parse a config-file tag.
+    pub fn from_tag(s: &str) -> anyhow::Result<Self> {
+        PolicyKind::ALL
+            .into_iter()
+            .find(|p| p.tag() == s)
+            .ok_or_else(|| anyhow::anyhow!("unknown policy '{s}'"))
+    }
+}
+
+impl ExperimentSpec {
+    /// Parse from a JSON file.
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+        Self::from_json(&Json::parse(&std::fs::read_to_string(path)?).map_err(|e| anyhow::anyhow!("{e}"))?)
+    }
+
+    /// Persist to a JSON file.
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().pretty())?;
+        Ok(())
+    }
+
+    /// Lower to a JSON value.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workload", Json::Str(self.workload.tag().into())),
+            ("cluster", Json::Str(self.cluster.clone())),
+            ("policies", Json::Arr(self.policies.iter().map(|p| Json::Str(p.tag().into())).collect())),
+            ("trials", Json::Num(self.trials as f64)),
+            ("noise_sigma", Json::Num(self.noise_sigma)),
+            ("interval", Json::Num(self.interval)),
+            ("threshold", Json::Num(self.threshold)),
+            ("seed", Json::Num(self.seed as f64)),
+        ])
+    }
+
+    /// Parse from a JSON value, defaulting missing fields.
+    pub fn from_json(v: &Json) -> anyhow::Result<Self> {
+        let d = Self::default();
+        let workload = match v.get("workload").and_then(Json::as_str) {
+            Some(s) => WorkloadKind::from_tag(s)?,
+            None => d.workload,
+        };
+        let policies = match v.get("policies").and_then(Json::as_arr) {
+            Some(arr) => arr
+                .iter()
+                .map(|p| {
+                    p.as_str()
+                        .ok_or_else(|| anyhow::anyhow!("policy must be a string"))
+                        .and_then(PolicyKind::from_tag)
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?,
+            None => d.policies.clone(),
+        };
+        Ok(Self {
+            workload,
+            cluster: v.get("cluster").and_then(Json::as_str).unwrap_or(&d.cluster).to_string(),
+            policies,
+            trials: v.get("trials").and_then(Json::as_usize).unwrap_or(d.trials),
+            noise_sigma: v.get("noise_sigma").and_then(Json::as_f64).unwrap_or(d.noise_sigma),
+            interval: v.get("interval").and_then(Json::as_f64).unwrap_or(d.interval),
+            threshold: v.get("threshold").and_then(Json::as_f64).unwrap_or(d.threshold),
+            seed: v.get("seed").and_then(Json::as_u64).unwrap_or(d.seed),
+        })
+    }
+
+    /// Build the cluster from the compact spec.
+    pub fn build_cluster(&self) -> anyhow::Result<Cluster> {
+        parse_cluster(&self.cluster)
+    }
+
+    /// Simulator config for a given policy.
+    pub fn sim_config(&self, policy: PolicyKind) -> SimConfig {
+        SimConfig {
+            noise_sigma: self.noise_sigma,
+            introspect: policy
+                .is_dynamic()
+                .then_some(IntrospectCfg { interval: self.interval, threshold: self.threshold }),
+            ..SimConfig::default()
+        }
+    }
+}
+
+/// Parse `"8"` (one node × 8), `"4x8"` (4 nodes × 8), or `"2,2,4,8"`
+/// (explicit per-node GPU counts).
+pub fn parse_cluster(spec: &str) -> anyhow::Result<Cluster> {
+    let s = spec.trim();
+    if let Some((n, g)) = s.split_once('x') {
+        let n: usize = n.trim().parse()?;
+        let g: usize = g.trim().parse()?;
+        anyhow::ensure!(n > 0 && g > 0, "cluster spec must be positive");
+        return Ok(Cluster::homogeneous(n, g));
+    }
+    if s.contains(',') {
+        let counts: Result<Vec<usize>, _> = s.split(',').map(|c| c.trim().parse()).collect();
+        let counts = counts?;
+        anyhow::ensure!(counts.iter().all(|&c| c > 0), "GPU counts must be positive");
+        return Ok(Cluster::from_gpu_counts(&counts));
+    }
+    let g: usize = s.parse()?;
+    anyhow::ensure!(g > 0, "GPU count must be positive");
+    Ok(Cluster::homogeneous(1, g))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_single_node() {
+        let c = parse_cluster("8").unwrap();
+        assert_eq!(c.nodes.len(), 1);
+        assert_eq!(c.total_gpus(), 8);
+    }
+
+    #[test]
+    fn parse_multi_node() {
+        let c = parse_cluster("4x8").unwrap();
+        assert_eq!(c.nodes.len(), 4);
+        assert_eq!(c.total_gpus(), 32);
+    }
+
+    #[test]
+    fn parse_heterogeneous() {
+        let c = parse_cluster("2, 2, 4, 8").unwrap();
+        assert_eq!(c.nodes.len(), 4);
+        assert_eq!(c.total_gpus(), 16);
+        assert!(!c.is_homogeneous());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_cluster("").is_err());
+        assert!(parse_cluster("0").is_err());
+        assert!(parse_cluster("ax8").is_err());
+    }
+
+    #[test]
+    fn spec_roundtrip() {
+        let spec = ExperimentSpec::default();
+        let dir = crate::util::tmp::TempDir::new("config").unwrap();
+        let p = dir.path().join("exp.json");
+        spec.save(&p).unwrap();
+        let back = ExperimentSpec::load(&p).unwrap();
+        assert_eq!(back.trials, spec.trials);
+        assert_eq!(back.cluster, spec.cluster);
+    }
+
+    #[test]
+    fn sim_config_dynamic_flag() {
+        let spec = ExperimentSpec::default();
+        assert!(spec.sim_config(PolicyKind::Saturn).introspect.is_some());
+        assert!(spec.sim_config(PolicyKind::Max).introspect.is_none());
+        assert!(spec.sim_config(PolicyKind::OptimusDynamic).introspect.is_some());
+        assert!(spec.sim_config(PolicyKind::OptimusStatic).introspect.is_none());
+    }
+}

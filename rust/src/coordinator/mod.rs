@@ -1,0 +1,103 @@
+//! The user-facing Saturn facade — the paper's two-call API (Listing 3):
+//! `profile([t1, t2, ...])` then `execute([t1, t2, ...])`.
+//!
+//! Wires the Parallelism Library, Trial Runner, Joint Optimizer, and the
+//! execution backends (simulator for paper-scale clusters, real PJRT
+//! executor for the e2e example) behind a single struct.
+
+use crate::cluster::Cluster;
+use crate::costmodel::CostModel;
+use crate::parallelism::{Upp, UppRegistry};
+use crate::profiler::{ProfileGrid, TrialRunner};
+use crate::sched::Schedule;
+use crate::sim::{simulate, SimConfig, SimResult};
+use crate::solver::joint::JointOptimizer;
+use crate::solver::policy::{PlanCtx, Policy};
+use crate::trainer::Workload;
+use crate::util::rng::DetRng;
+use std::sync::Arc;
+
+/// The Saturn system handle.
+pub struct Saturn {
+    /// Parallelism Library (UPP registry).
+    pub registry: UppRegistry,
+    /// The cluster Saturn schedules onto.
+    pub cluster: Cluster,
+    /// The joint optimizer.
+    pub optimizer: JointOptimizer,
+    /// Trial Runner output, populated by [`Saturn::profile`].
+    pub grid: Option<ProfileGrid>,
+    /// Simulated profiling overhead (seconds), populated with the grid.
+    pub profile_overhead_secs: f64,
+}
+
+impl Saturn {
+    /// New Saturn over a cluster with the default Parallelism Library
+    /// (DDP, FSDP, GPipe, spilling).
+    pub fn new(cluster: Cluster) -> Self {
+        Self {
+            registry: UppRegistry::default_library(Arc::new(CostModel::default())),
+            cluster,
+            optimizer: JointOptimizer::default(),
+            grid: None,
+            profile_overhead_secs: 0.0,
+        }
+    }
+
+    /// Register a custom UPP (paper Listing 2).
+    pub fn register(&mut self, name: &str, upp: Arc<dyn Upp>) {
+        self.registry.register(name, upp);
+    }
+
+    /// Run the Trial Runner over the workload (paper: `profile(tasks)`).
+    /// Returns the simulated profiling overhead in seconds.
+    pub fn profile(&mut self, workload: &Workload) -> f64 {
+        let runner = TrialRunner::new(self.registry.clone());
+        let (grid, overhead) = runner.profile(workload, &self.cluster);
+        self.grid = Some(grid);
+        self.profile_overhead_secs = overhead;
+        overhead
+    }
+
+    /// Produce a one-shot execution plan (requires [`Saturn::profile`]).
+    pub fn plan(&self, workload: &Workload, seed: u64) -> Schedule {
+        let grid = self.grid.as_ref().expect("call profile() before plan()");
+        let ctx = PlanCtx::fresh(workload, grid, &self.cluster);
+        let mut rng = DetRng::new(seed);
+        self.optimizer.plan(&ctx, &mut rng)
+    }
+
+    /// Execute the workload in the simulator (paper: `execute(tasks)` on
+    /// the simulated testbed). Introspection per `cfg`.
+    pub fn execute_simulated(&self, workload: &Workload, cfg: SimConfig, seed: u64) -> SimResult {
+        let grid = self.grid.as_ref().expect("call profile() before execute()");
+        let mut rng = DetRng::new(seed);
+        simulate(&self.optimizer, workload, grid, &self.cluster, cfg, &mut rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trainer::workloads;
+
+    #[test]
+    fn profile_then_plan_then_execute() {
+        let mut saturn = Saturn::new(Cluster::single_node_8gpu());
+        let w = workloads::txt_workload();
+        let overhead = saturn.profile(&w);
+        assert!(overhead > 0.0);
+        let plan = saturn.plan(&w, 1);
+        plan.validate(&saturn.cluster, &w).unwrap();
+        let result = saturn.execute_simulated(&w, SimConfig::default(), 1);
+        assert_eq!(result.completions.len(), w.len());
+    }
+
+    #[test]
+    #[should_panic(expected = "profile()")]
+    fn plan_requires_profile() {
+        let saturn = Saturn::new(Cluster::single_node_8gpu());
+        let w = workloads::txt_workload();
+        let _ = saturn.plan(&w, 1);
+    }
+}

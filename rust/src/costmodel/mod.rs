@@ -1,0 +1,635 @@
+//! Analytic per-minibatch runtime & memory models for each parallelism.
+//!
+//! The paper profiles parallelisms *empirically* on real GPUs; we do not
+//! have A100s, so this module is the simulation substrate: calibrated
+//! closed-form models of DDP, FSDP, GPipe pipelining, and spilling on an
+//! A100-class node. The constants are chosen so the qualitative structure
+//! the paper's optimizer exploits is preserved:
+//!
+//! - **non-linear scaling** with GPU count (comm terms, latency floors);
+//! - **runtime crossovers** between FSDP and pipelining as GPU count and
+//!   batch size vary (paper Fig 1B) — asserted by unit tests here;
+//! - **memory walls**: DDP OOMs on big models, FSDP knobs (checkpointing,
+//!   offload) trade memory for time, spilling always fits but pays PCIe.
+//!
+//! The Trial Runner (`profiler`) treats this module the way the paper's
+//! Profiler treats a real cluster: a black box producing per-minibatch
+//! times. The measured (PJRT) profiling path bypasses this module entirely.
+
+use crate::cluster::Node;
+use crate::trainer::Task;
+
+/// The four parallelisms in Saturn's default UPP library (paper §3.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ParallelismKind {
+    /// PyTorch-DDP-style all-reduce data parallelism.
+    Ddp,
+    /// Fully-sharded data parallelism (ZeRO-3 class).
+    Fsdp,
+    /// GPipe-style pipeline parallelism.
+    Pipeline,
+    /// DRAM spilling (FairScale offload class) + optional data parallelism.
+    Spilling,
+}
+
+impl ParallelismKind {
+    /// All library parallelisms, in registry order.
+    pub const ALL: [ParallelismKind; 4] =
+        [ParallelismKind::Ddp, ParallelismKind::Fsdp, ParallelismKind::Pipeline, ParallelismKind::Spilling];
+
+    /// Registry name (as a user would `register(...)` it).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ParallelismKind::Ddp => "pytorch-ddp",
+            ParallelismKind::Fsdp => "pytorch-fsdp",
+            ParallelismKind::Pipeline => "gpipe",
+            ParallelismKind::Spilling => "spilling",
+        }
+    }
+}
+
+/// Execution knobs. One struct covers all four parallelisms; each kind
+/// reads only its own fields (paper: FSDP exposes checkpoint/offload,
+/// pipelining exposes microbatch/partition counts, spilling a partition
+/// count).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Knobs {
+    /// FSDP: gradient/activation checkpointing on.
+    pub checkpoint: bool,
+    /// FSDP: offload sharded states to DRAM.
+    pub offload: bool,
+    /// Pipeline: number of microbatches per minibatch.
+    pub microbatches: usize,
+    /// Pipeline: recompute activations per microbatch (torchgpipe-style
+    /// checkpointing) — trades ~1/3 extra compute for activation memory.
+    pub recompute: bool,
+    /// Pipeline/spilling: model partition count.
+    pub partitions: usize,
+}
+
+impl Default for Knobs {
+    fn default() -> Self {
+        Self { checkpoint: false, offload: false, microbatches: 1, recompute: false, partitions: 1 }
+    }
+}
+
+impl Knobs {
+    /// Compact display, e.g. `ckpt+offload` or `m=8,p=4`.
+    pub fn summary(&self, kind: ParallelismKind) -> String {
+        match kind {
+            ParallelismKind::Ddp => "-".to_string(),
+            ParallelismKind::Fsdp => match (self.checkpoint, self.offload) {
+                (false, false) => "plain".to_string(),
+                (true, false) => "ckpt".to_string(),
+                (false, true) => "offload".to_string(),
+                (true, true) => "ckpt+offload".to_string(),
+            },
+            ParallelismKind::Pipeline => format!(
+                "m={},p={}{}",
+                self.microbatches,
+                self.partitions,
+                if self.recompute { ",rc" } else { "" }
+            ),
+            ParallelismKind::Spilling => format!("p={}", self.partitions),
+        }
+    }
+}
+
+/// Result of evaluating one physical plan (task × parallelism × knobs × g).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostEstimate {
+    /// Estimated seconds per minibatch.
+    pub minibatch_secs: f64,
+    /// Peak GPU memory per device, GiB.
+    pub mem_per_gpu_gib: f64,
+    /// Host DRAM required, GiB (spilling/offload).
+    pub dram_gib: f64,
+}
+
+/// Calibration constants. Defaults reproduce the paper's qualitative
+/// behaviours on A100-class hardware; tests in this module pin them down.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Calib {
+    /// Fraction of GPU memory usable by the framework (fragmentation,
+    /// CUDA/XLA context, temp buffers).
+    pub mem_headroom: f64,
+    /// Compute-efficiency half-point in per-device examples:
+    /// eff = eff_max * x / (x + half). Small per-device batches starve
+    /// the MXU/tensor cores — the dominant non-linearity in multi-GPU
+    /// scaling (and the reason "just use all 8 GPUs" wastes resources).
+    pub eff_half: f64,
+    /// Fraction of peak interconnect bandwidth collectives achieve
+    /// (protocol overhead, imperfect overlap).
+    pub comm_eff: f64,
+    /// Maximum achievable fraction of `gpu_tflops`.
+    pub eff_max: f64,
+    /// FSDP: exposed all-gather/reduce-scatter latency per layer per
+    /// collective phase, seconds (3 phases per step).
+    pub fsdp_layer_latency: f64,
+    /// FSDP: compute slowdown from interleaving per-layer collectives with
+    /// the math (weights are gathered just-in-time, unlike pipelining's
+    /// resident stage weights).
+    pub fsdp_compute_overhead: f64,
+    /// FSDP: activation footprint multiplier under checkpointing.
+    pub ckpt_act_factor: f64,
+    /// FSDP: extra compute fraction under checkpointing (recompute fwd).
+    pub ckpt_compute_factor: f64,
+    /// Pipeline: per-stage load imbalance growth per extra stage.
+    pub stage_imbalance: f64,
+    /// Pipeline: per-microbatch scheduling overhead, seconds.
+    pub microbatch_overhead: f64,
+    /// Spilling: per-partition swap setup overhead, seconds.
+    pub spill_partition_overhead: f64,
+    /// Fixed per-step overhead (launch, sync), seconds.
+    pub step_overhead: f64,
+    /// Straggler/jitter tax per additional gang member: every multi-GPU
+    /// step is stretched by `1 + straggler_factor·(g−1)` (OS jitter,
+    /// kernel-launch skew, and sync barriers grow with gang size —
+    /// Jeon et al.'s multi-tenant GPU cluster study documents this).
+    pub straggler_factor: f64,
+}
+
+impl Default for Calib {
+    fn default() -> Self {
+        Self {
+            mem_headroom: 0.92,
+            eff_half: 1.5,
+            comm_eff: 0.4,
+            eff_max: 0.95,
+            fsdp_layer_latency: 0.0015,
+            fsdp_compute_overhead: 1.08,
+            ckpt_act_factor: 0.18,
+            ckpt_compute_factor: 0.33,
+            stage_imbalance: 0.045,
+            microbatch_overhead: 0.004,
+            spill_partition_overhead: 0.01,
+            step_overhead: 0.015,
+            straggler_factor: 0.05,
+        }
+    }
+}
+
+const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+/// Analytic cost model over a node's hardware description.
+#[derive(Debug, Clone, Default)]
+pub struct CostModel {
+    /// Calibration constants.
+    pub calib: Calib,
+}
+
+impl CostModel {
+    /// Cost model with explicit calibration.
+    pub fn new(calib: Calib) -> Self {
+        Self { calib }
+    }
+
+    /// Effective per-device batch for the efficiency curve. ConvNets need
+    /// larger batches to fill the device (little intra-example
+    /// parallelism at 224² resolution vs a 1–2k-token sequence).
+    fn effective_examples(&self, task: &Task, examples_per_device: f64) -> f64 {
+        match task.model.arch {
+            crate::model::Arch::ConvNet => examples_per_device / 8.0,
+            _ => examples_per_device,
+        }
+    }
+
+    /// Compute seconds for `examples` on ONE device, at the efficiency
+    /// implied by per-launch granularity `x_eff`.
+    fn compute_secs(&self, task: &Task, node: &Node, examples: f64, x_eff: f64) -> f64 {
+        let eff = self.calib.eff_max * x_eff / (x_eff + self.calib.eff_half);
+        3.0 * task.model.fwd_flops_per_example * examples / (node.gpu_tflops * 1e12 * eff.max(1e-3))
+    }
+
+    /// Evaluate one physical plan. Returns `None` when memory-infeasible
+    /// (the paper's UPP `search` returns null on OOM).
+    pub fn estimate(&self, task: &Task, kind: ParallelismKind, knobs: Knobs, gpus: usize, node: &Node) -> Option<CostEstimate> {
+        if gpus == 0 || gpus > node.gpus {
+            return None;
+        }
+        let m = &task.model;
+        let b = task.hparams.batch_size as f64;
+        let g = gpus as f64;
+        let state = m.state_bytes(task.hparams.optimizer);
+        let params = m.param_bytes();
+        let act = m.act_bytes_per_example;
+        let gpu_budget = self.calib.mem_headroom * node.gpu_mem_gib * GIB;
+        let nvlink = node.nvlink_gibs * GIB;
+        let pcie = node.pcie_gibs * GIB;
+
+        let est = match kind {
+            ParallelismKind::Ddp => {
+                if gpus > 1 && (task.hparams.batch_size % gpus != 0) && task.hparams.batch_size < gpus {
+                    return None; // cannot split the minibatch that thin
+                }
+                let per_dev = b / g;
+                let mem = state + act * per_dev;
+                if mem > gpu_budget {
+                    return None;
+                }
+                let x = self.effective_examples(task, per_dev);
+                let comp = self.compute_secs(task, node, per_dev, x);
+                // ring all-reduce of bf16 grads: 2·(g-1)/g · payload / bw
+                let comm = if gpus > 1 {
+                    2.0 * (g - 1.0) / g * params / (nvlink * self.calib.comm_eff)
+                } else {
+                    0.0
+                };
+                CostEstimate {
+                    minibatch_secs: comp + comm + self.calib.step_overhead,
+                    mem_per_gpu_gib: mem / GIB,
+                    dram_gib: 0.0,
+                }
+            }
+            ParallelismKind::Fsdp => {
+                let per_dev = b / g;
+                // Unsharded working set: one wrapped layer-group at bf16 ×2
+                // (params + grads resident while the group executes).
+                let working = 2.0 * 2.0 * params / m.layers.max(1) as f64;
+                let act_eff = if knobs.checkpoint { act * self.calib.ckpt_act_factor } else { act };
+                let resident_state = if knobs.offload { 0.15 * state / g } else { state / g };
+                let mem = resident_state + working + act_eff * per_dev;
+                if mem > gpu_budget {
+                    return None;
+                }
+                let dram = if knobs.offload { state / GIB } else { 0.0 };
+                if dram > node.dram_gib {
+                    return None;
+                }
+                let x = self.effective_examples(task, per_dev);
+                let mut comp = self.compute_secs(task, node, per_dev, x) * self.calib.fsdp_compute_overhead;
+                if knobs.checkpoint {
+                    comp *= 1.0 + self.calib.ckpt_compute_factor;
+                }
+                // all-gather (fwd) + all-gather (bwd) + reduce-scatter: 3
+                // passes over the bf16 parameters, ring-scaled, at the
+                // achievable collective bandwidth.
+                let comm_bw = 3.0 * params * (g - 1.0).max(0.0) / g / (nvlink * self.calib.comm_eff);
+                // exposed per-layer collective launch latency, 3 phases
+                let comm_lat = 3.0 * m.layers as f64 * self.calib.fsdp_layer_latency;
+                // offload shuttles the sharded optimizer state over PCIe
+                // both ways (fetch + writeback) every step
+                let offload_cost = if knobs.offload { 2.0 * (state / g) / pcie } else { 0.0 };
+                CostEstimate {
+                    minibatch_secs: comp + comm_bw + comm_lat + offload_cost + self.calib.step_overhead,
+                    mem_per_gpu_gib: mem / GIB,
+                    dram_gib: dram,
+                }
+            }
+            ParallelismKind::Pipeline => {
+                if gpus < 2 || gpus > m.layers {
+                    return None; // a pipeline needs ≥2 stages
+                }
+                let micro = knobs.microbatches.max(1);
+                if micro as f64 > b {
+                    return None; // microbatch must hold ≥1 example
+                }
+                let mb = micro as f64;
+                // GPipe memory: each stage holds 1/g of the states plus
+                // activations. Without recompute the stage stashes its
+                // slice of every in-flight microbatch (act·b/g); with
+                // torchgpipe-style checkpointing it keeps one microbatch's
+                // activations plus boundary stashes for all of them.
+                let mem = if knobs.recompute {
+                    state / g + act * (b / mb) + 2.0 * m.boundary_act_bytes_per_example * b
+                } else {
+                    state / g + act * b / g
+                };
+                if mem > gpu_budget {
+                    return None;
+                }
+                // Each stage streams the whole minibatch through its
+                // layers; efficiency follows the per-device share.
+                let x = self.effective_examples(task, b / g);
+                let mut comp_total = self.compute_secs(task, node, b, x);
+                if knobs.recompute {
+                    comp_total *= 1.0 + self.calib.ckpt_compute_factor;
+                }
+                // GPipe bubble: (m + g - 1)/m serialized stage steps, plus
+                // stage load imbalance growing with the cut count.
+                let imbalance = 1.0 + self.calib.stage_imbalance * (g - 1.0);
+                let pipe = comp_total / g * (1.0 + (g - 1.0) / mb) * imbalance;
+                // p2p activations between adjacent stages, fwd + bwd
+                let p2p = 2.0 * (g - 1.0) * m.boundary_act_bytes_per_example * b
+                    / (nvlink * self.calib.comm_eff);
+                let sched = mb * self.calib.microbatch_overhead;
+                CostEstimate {
+                    minibatch_secs: pipe + p2p + sched + self.calib.step_overhead,
+                    mem_per_gpu_gib: mem / GIB,
+                    dram_gib: 0.0,
+                }
+            }
+            ParallelismKind::Spilling => {
+                let parts = knobs.partitions.max(1) as f64;
+                if knobs.partitions > m.layers.max(1) {
+                    return None;
+                }
+                let per_dev = b / g;
+                // FairScale-style offload: only 1/parts of the model and one
+                // layer's activations are GPU-resident; everything else
+                // (states AND activations) lives in DRAM.
+                let act_resident = 3.0 * act * per_dev / m.layers.max(1) as f64;
+                let mem = state / parts + act_resident;
+                if mem > gpu_budget {
+                    return None;
+                }
+                let dram = (state + act * per_dev) / GIB;
+                if dram > node.dram_gib {
+                    return None;
+                }
+                let x = self.effective_examples(task, per_dev);
+                let comp = self.compute_secs(task, node, per_dev, x) * (1.0 + self.calib.ckpt_compute_factor);
+                // the full state shuttles GPU↔DRAM both ways every step,
+                // and offloaded activations cross once each way (half
+                // hidden by compute overlap)
+                let spill = 2.0 * state / pcie
+                    + act * per_dev / pcie
+                    + parts * self.calib.spill_partition_overhead;
+                // data-parallel grad sync if g > 1
+                let comm = if gpus > 1 {
+                    2.0 * (g - 1.0) / g * params / (nvlink * self.calib.comm_eff)
+                } else {
+                    0.0
+                };
+                CostEstimate {
+                    minibatch_secs: comp + spill + comm + self.calib.step_overhead,
+                    mem_per_gpu_gib: mem / GIB,
+                    dram_gib: dram,
+                }
+            }
+        };
+        // gang-size straggler tax (applies to every multi-GPU plan)
+        let est = CostEstimate {
+            minibatch_secs: est.minibatch_secs * (1.0 + self.calib.straggler_factor * (g - 1.0)),
+            ..est
+        };
+        Some(est)
+    }
+
+    /// Knob auto-search for (task, kind, gpus): the UPP `search` function.
+    /// Returns the best (knobs, estimate) or `None` if every knob setting
+    /// is infeasible (paper: failed searches return null).
+    pub fn search(&self, task: &Task, kind: ParallelismKind, gpus: usize, node: &Node) -> Option<(Knobs, CostEstimate)> {
+        let mut best: Option<(Knobs, CostEstimate)> = None;
+        let mut consider = |knobs: Knobs, est: Option<CostEstimate>| {
+            if let Some(e) = est {
+                if best.as_ref().map_or(true, |(_, b)| e.minibatch_secs < b.minibatch_secs) {
+                    best = Some((knobs, e));
+                }
+            }
+        };
+        match kind {
+            ParallelismKind::Ddp => {
+                let k = Knobs::default();
+                consider(k, self.estimate(task, kind, k, gpus, node));
+            }
+            ParallelismKind::Fsdp => {
+                for checkpoint in [false, true] {
+                    for offload in [false, true] {
+                        let k = Knobs { checkpoint, offload, ..Knobs::default() };
+                        consider(k, self.estimate(task, kind, k, gpus, node));
+                    }
+                }
+            }
+            ParallelismKind::Pipeline => {
+                let b = task.hparams.batch_size;
+                let mut mbs = vec![];
+                let mut m = 1usize;
+                while m <= b {
+                    mbs.push(m);
+                    m *= 2;
+                }
+                if !mbs.contains(&b) {
+                    mbs.push(b);
+                }
+                for micro in mbs {
+                    for recompute in [false, true] {
+                        let k = Knobs {
+                            microbatches: micro,
+                            recompute,
+                            partitions: gpus,
+                            ..Knobs::default()
+                        };
+                        consider(k, self.estimate(task, kind, k, gpus, node));
+                    }
+                }
+            }
+            ParallelismKind::Spilling => {
+                for parts in [1usize, 2, 4, 8, 16, 32] {
+                    let k = Knobs { partitions: parts, ..Knobs::default() };
+                    consider(k, self.estimate(task, kind, k, gpus, node));
+                }
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelDesc;
+    use crate::trainer::{HParams, Optimizer, Task};
+
+    fn node() -> Node {
+        Node::a100(0, 8)
+    }
+
+    fn gpt2(batch: usize) -> Task {
+        Task::new(0, ModelDesc::gpt2_1_5b(), HParams::new(batch, 1e-5, 10, Optimizer::Adam), 19_200)
+    }
+
+    fn gptj(batch: usize) -> Task {
+        Task::new(1, ModelDesc::gpt_j_6b(), HParams::new(batch, 1e-5, 10, Optimizer::Adam), 19_200)
+    }
+
+    #[test]
+    fn ddp_infeasible_for_gptj() {
+        // 6B params × 16 B/param ≈ 96 GiB state ≫ 40 GiB A100: DDP OOMs at
+        // every GPU count — the paper's Alice scenario.
+        let cm = CostModel::default();
+        let t = gptj(16);
+        for g in 1..=8 {
+            assert!(cm.estimate(&t, ParallelismKind::Ddp, Knobs::default(), g, &node()).is_none(), "g={g}");
+        }
+    }
+
+    #[test]
+    fn spilling_always_fits_big_models() {
+        let cm = CostModel::default();
+        let t = gptj(16);
+        let (knobs, est) = cm.search(&t, ParallelismKind::Spilling, 1, &node()).expect("spilling fits");
+        assert!(knobs.partitions >= 4, "needs partitioning: {knobs:?}");
+        assert!(est.dram_gib > 40.0);
+        assert!(est.minibatch_secs > 0.0);
+    }
+
+    #[test]
+    fn fsdp_knobs_unlock_memory() {
+        // GPT-J on 2 GPUs: plain FSDP OOMs (48 GiB state/GPU), but
+        // checkpoint+offload fits — the knob search must find it.
+        let cm = CostModel::default();
+        let t = gptj(16);
+        let plain = cm.estimate(&t, ParallelismKind::Fsdp, Knobs::default(), 2, &node());
+        assert!(plain.is_none());
+        let (knobs, _) = cm.search(&t, ParallelismKind::Fsdp, 2, &node()).expect("knobbed FSDP fits");
+        assert!(knobs.checkpoint || knobs.offload);
+    }
+
+    #[test]
+    fn fsdp_plain_fits_at_8_gpus_for_gptj() {
+        let cm = CostModel::default();
+        let t = gptj(16);
+        let (knobs, est) = cm.search(&t, ParallelismKind::Fsdp, 8, &node()).expect("fits");
+        assert!(!knobs.offload, "no offload needed at 8 GPUs: {knobs:?}");
+        assert!(est.mem_per_gpu_gib < 40.0);
+    }
+
+    #[test]
+    fn more_gpus_reduce_runtime_with_diminishing_returns() {
+        let cm = CostModel::default();
+        let t = gpt2(32);
+        let times: Vec<f64> = (1..=8)
+            .map(|g| cm.search(&t, ParallelismKind::Fsdp, g, &node()).unwrap().1.minibatch_secs)
+            .collect();
+        for w in times.windows(2) {
+            assert!(w[1] < w[0], "monotone: {times:?}");
+        }
+        // marginal gains shrink at high GPU counts (diminishing returns);
+        // the 1→8 total can exceed 8× because low-g configurations are
+        // knob-constrained (checkpoint/offload) — the paper's own Fig 8(C)
+        // observes the same superlinear effect.
+        let marginal_lo = times[1] / times[2]; // 2→3 GPUs
+        let marginal_hi = times[6] / times[7]; // 7→8 GPUs
+        assert!(marginal_hi < marginal_lo, "{times:?}");
+        assert!(times[0] / times[7] > 2.0, "{times:?}");
+    }
+
+    /// The Fig 1(B) reproduction anchor: FSDP vs pipelining crossovers.
+    #[test]
+    fn fig1b_crossover_exists() {
+        let cm = CostModel::default();
+        let t = gpt2(16);
+        let mut pipe_wins = 0;
+        let mut fsdp_wins = 0;
+        for g in 2..=8 {
+            let p = cm.search(&t, ParallelismKind::Pipeline, g, &node()).unwrap().1.minibatch_secs;
+            let f = cm.search(&t, ParallelismKind::Fsdp, g, &node()).unwrap().1.minibatch_secs;
+            if p < f {
+                pipe_wins += 1;
+            } else {
+                fsdp_wins += 1;
+            }
+        }
+        assert!(pipe_wins > 0, "pipelining should win somewhere");
+        assert!(fsdp_wins > 0, "FSDP should win somewhere");
+    }
+
+    #[test]
+    fn fig1b_crossover_shifts_with_batch_size() {
+        // The g at which FSDP overtakes pipelining must differ between
+        // batch 16 and batch 32 (paper: "complex crossovers arise as GPU
+        // counts and batch sizes change").
+        let cm = CostModel::default();
+        let crossover = |batch: usize| -> usize {
+            let t = gpt2(batch);
+            for g in 2..=8 {
+                let p = cm.search(&t, ParallelismKind::Pipeline, g, &node()).map(|r| r.1.minibatch_secs);
+                let f = cm.search(&t, ParallelismKind::Fsdp, g, &node()).map(|r| r.1.minibatch_secs);
+                match (f, p) {
+                    (Some(f), Some(p)) if f < p => return g,
+                    (Some(_), None) => return g, // pipeline OOM counts as an FSDP win
+                    _ => {}
+                }
+            }
+            9
+        };
+        let c16 = crossover(16);
+        let c32 = crossover(32);
+        assert_ne!(c16, c32, "crossover should move with batch size (c16={c16}, c32={c32})");
+    }
+
+    #[test]
+    fn pipeline_needs_two_gpus() {
+        let cm = CostModel::default();
+        let t = gpt2(16);
+        assert!(cm.search(&t, ParallelismKind::Pipeline, 1, &node()).is_none());
+        assert!(cm.search(&t, ParallelismKind::Pipeline, 2, &node()).is_some());
+    }
+
+    #[test]
+    fn pipeline_microbatch_knob_matters() {
+        let cm = CostModel::default();
+        let t = gpt2(32);
+        let one = cm
+            .estimate(&t, ParallelismKind::Pipeline, Knobs { microbatches: 1, partitions: 4, ..Knobs::default() }, 4, &node())
+            .unwrap();
+        let (best_knobs, best) = cm.search(&t, ParallelismKind::Pipeline, 4, &node()).unwrap();
+        assert!(best.minibatch_secs < one.minibatch_secs);
+        assert!(best_knobs.microbatches > 1);
+    }
+
+    #[test]
+    fn checkpoint_trades_time_for_memory() {
+        let cm = CostModel::default();
+        let t = gptj(16);
+        let plain = cm.estimate(&t, ParallelismKind::Fsdp, Knobs::default(), 8, &node()).unwrap();
+        let ck = cm
+            .estimate(&t, ParallelismKind::Fsdp, Knobs { checkpoint: true, ..Knobs::default() }, 8, &node())
+            .unwrap();
+        assert!(ck.mem_per_gpu_gib < plain.mem_per_gpu_gib);
+        assert!(ck.minibatch_secs > plain.minibatch_secs);
+    }
+
+    #[test]
+    fn offload_trades_time_for_memory() {
+        let cm = CostModel::default();
+        let t = gptj(16);
+        let plain = cm.estimate(&t, ParallelismKind::Fsdp, Knobs::default(), 8, &node()).unwrap();
+        let off = cm
+            .estimate(&t, ParallelismKind::Fsdp, Knobs { offload: true, ..Knobs::default() }, 8, &node())
+            .unwrap();
+        assert!(off.mem_per_gpu_gib < plain.mem_per_gpu_gib);
+        assert!(off.minibatch_secs > plain.minibatch_secs);
+    }
+
+    #[test]
+    fn spilling_slower_than_fsdp_when_both_fit() {
+        let cm = CostModel::default();
+        let t = gpt2(16);
+        let s = cm.search(&t, ParallelismKind::Spilling, 4, &node()).unwrap().1;
+        let f = cm.search(&t, ParallelismKind::Fsdp, 4, &node()).unwrap().1;
+        assert!(s.minibatch_secs > f.minibatch_secs);
+    }
+
+    #[test]
+    fn estimates_respect_gpu_count_bounds() {
+        let cm = CostModel::default();
+        let t = gpt2(16);
+        assert!(cm.estimate(&t, ParallelismKind::Ddp, Knobs::default(), 0, &node()).is_none());
+        assert!(cm.estimate(&t, ParallelismKind::Ddp, Knobs::default(), 9, &node()).is_none());
+    }
+
+    #[test]
+    fn resnet_ddp_fast_at_high_gpus() {
+        // Small ConvNet: DDP should be competitive (the paper's Table 4
+        // assigns DDP to ResNet configs).
+        let cm = CostModel::default();
+        let t = Task::new(2, ModelDesc::resnet_200m(), HParams::new(64, 1e-4, 10, Optimizer::Adam), 128_000);
+        let d = cm.search(&t, ParallelismKind::Ddp, 4, &node()).unwrap().1;
+        let f = cm.search(&t, ParallelismKind::Fsdp, 4, &node()).unwrap().1;
+        assert!(d.minibatch_secs < f.minibatch_secs);
+    }
+
+    #[test]
+    fn search_returns_none_only_when_all_knobs_fail() {
+        let cm = CostModel::default();
+        let t = gptj(16);
+        // On a 1-GPU node FSDP with every knob still cannot shard: needs
+        // offload; offload resident = 0.15*96 = 14.4 GiB + working set: fits.
+        let r = cm.search(&t, ParallelismKind::Fsdp, 1, &node());
+        assert!(r.is_some());
+        let (k, _) = r.unwrap();
+        assert!(k.offload);
+    }
+}

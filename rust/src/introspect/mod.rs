@@ -1,0 +1,166 @@
+//! Introspective re-scheduling (paper §4.4, Appendix B Algorithm 2).
+//!
+//! The round logic itself executes inside the simulator / executor: at
+//! every interval boundary the planner re-solves the remaining workload
+//! and the plan is switched iff the proposal beats the current plan's
+//! remaining makespan by more than the tolerance `T`. This module hosts
+//! the knob sweeps behind the paper's Fig 6 sensitivity study and the
+//! derived statistics.
+
+use crate::cluster::Cluster;
+use crate::profiler::ProfileGrid;
+use crate::sim::{simulate, IntrospectCfg, SimConfig, SimResult};
+use crate::solver::policy::Policy;
+use crate::trainer::Workload;
+use crate::util::rng::DetRng;
+
+/// One point of a sensitivity sweep.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    /// The knob value (interval or threshold, seconds).
+    pub knob: f64,
+    /// Resulting makespan.
+    pub makespan: f64,
+    /// Introspection rounds run.
+    pub rounds: usize,
+    /// Plan switches accepted.
+    pub switches: usize,
+}
+
+/// Fig 6 (left): sweep the introspection interval at a fixed threshold.
+pub fn interval_sweep(
+    policy: &dyn Policy,
+    workload: &Workload,
+    grid: &ProfileGrid,
+    cluster: &Cluster,
+    intervals: &[f64],
+    threshold: f64,
+    base: SimConfig,
+    seed: u64,
+) -> Vec<SweepPoint> {
+    intervals
+        .iter()
+        .map(|&interval| {
+            let cfg = SimConfig { introspect: Some(IntrospectCfg { interval, threshold }), ..base };
+            let mut rng = DetRng::new(seed);
+            let r = simulate(policy, workload, grid, cluster, cfg, &mut rng);
+            SweepPoint { knob: interval, makespan: r.makespan, rounds: r.rounds, switches: r.switches }
+        })
+        .collect()
+}
+
+/// Fig 6 (right): sweep the improvement threshold at a fixed interval.
+pub fn threshold_sweep(
+    policy: &dyn Policy,
+    workload: &Workload,
+    grid: &ProfileGrid,
+    cluster: &Cluster,
+    thresholds: &[f64],
+    interval: f64,
+    base: SimConfig,
+    seed: u64,
+) -> Vec<SweepPoint> {
+    thresholds
+        .iter()
+        .map(|&threshold| {
+            let cfg = SimConfig { introspect: Some(IntrospectCfg { interval, threshold }), ..base };
+            let mut rng = DetRng::new(seed);
+            let r = simulate(policy, workload, grid, cluster, cfg, &mut rng);
+            SweepPoint { knob: threshold, makespan: r.makespan, rounds: r.rounds, switches: r.switches }
+        })
+        .collect()
+}
+
+/// Run a policy one-shot and with introspection; returns (one-shot,
+/// introspective) results — the paper's 15–20% introspection-gain claim.
+pub fn oneshot_vs_introspective(
+    policy: &dyn Policy,
+    workload: &Workload,
+    grid: &ProfileGrid,
+    cluster: &Cluster,
+    ic: IntrospectCfg,
+    base: SimConfig,
+    seed: u64,
+) -> (SimResult, SimResult) {
+    let mut r1 = DetRng::new(seed);
+    let one = simulate(policy, workload, grid, cluster, SimConfig { introspect: None, ..base }, &mut r1);
+    let mut r2 = DetRng::new(seed);
+    let two = simulate(policy, workload, grid, cluster, SimConfig { introspect: Some(ic), ..base }, &mut r2);
+    (one, two)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::CostModel;
+    use crate::parallelism::UppRegistry;
+    use crate::profiler::TrialRunner;
+    use crate::solver::joint::JointOptimizer;
+    use crate::trainer::workloads;
+    use std::sync::Arc;
+
+    fn setup(cluster: &Cluster) -> (Workload, ProfileGrid) {
+        let w = workloads::txt_workload();
+        let runner = TrialRunner::new(UppRegistry::default_library(Arc::new(CostModel::default())));
+        let (grid, _) = runner.profile(&w, cluster);
+        (w, grid)
+    }
+
+    #[test]
+    fn interval_sweep_returns_all_points() {
+        let c = Cluster::single_node_8gpu();
+        let (w, grid) = setup(&c);
+        let pts = interval_sweep(
+            &JointOptimizer::default(),
+            &w,
+            &grid,
+            &c,
+            &[500.0, 2000.0],
+            500.0,
+            SimConfig::default(),
+            1,
+        );
+        assert_eq!(pts.len(), 2);
+        for p in &pts {
+            assert!(p.makespan > 0.0);
+        }
+        // finer interval runs at least as many rounds
+        assert!(pts[0].rounds >= pts[1].rounds);
+    }
+
+    #[test]
+    fn threshold_sweep_monotone_switches() {
+        let c = Cluster::single_node_8gpu();
+        let (w, grid) = setup(&c);
+        let pts = threshold_sweep(
+            &JointOptimizer::default(),
+            &w,
+            &grid,
+            &c,
+            &[50.0, 5000.0],
+            1000.0,
+            SimConfig::default(),
+            2,
+        );
+        assert_eq!(pts.len(), 2);
+        // a huge threshold should accept no more switches than a tiny one
+        assert!(pts[1].switches <= pts[0].switches);
+    }
+
+    #[test]
+    fn oneshot_vs_introspective_completes() {
+        let c = Cluster::single_node_8gpu();
+        let (w, grid) = setup(&c);
+        let (one, two) = oneshot_vs_introspective(
+            &JointOptimizer::default(),
+            &w,
+            &grid,
+            &c,
+            IntrospectCfg::default(),
+            SimConfig::default(),
+            3,
+        );
+        assert_eq!(one.completions.len(), w.len());
+        assert_eq!(two.completions.len(), w.len());
+    }
+}

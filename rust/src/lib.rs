@@ -1,0 +1,58 @@
+//! # Saturn — an optimized data system for multi-large-model DL workloads
+//!
+//! Reproduction of *"Saturn: An Optimized Data System for Multi-Large-Model
+//! Deep Learning Workloads"* (Nagrecha & Kumar, 2023) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! Saturn tackles the joint **SPASE** problem: **S**elect a **Pa**rallelism
+//! for each model, apportion GPU**s**, and schedul**E** all jobs on a fixed
+//! cluster so end-to-end makespan is minimized. The crate provides:
+//!
+//! - [`cluster`] — node/GPU/DRAM topology descriptions.
+//! - [`model`] — DL model descriptors (parameter counts, FLOPs, activations).
+//! - [`trainer`] — the user-facing `Task`/`HParams` API and workload builders.
+//! - [`parallelism`] — the UPP (User-Pluggable Parallelism) abstraction and
+//!   the default library: DDP, FSDP, GPipe-style pipelining, and spilling.
+//! - [`costmodel`] — calibrated analytic per-minibatch runtime/memory models.
+//! - [`profiler`] — the Trial Runner: plan enumeration + runtime estimation.
+//! - [`solver`] — the SPASE joint optimizer: simplex LP, branch-and-bound
+//!   MILP (paper eqs. 1–11), and the anytime incumbent search used under a
+//!   wall-clock timeout.
+//! - [`sched`] — execution-plan representation and validity checking.
+//! - [`baselines`] — Max/Min heuristics, Optimus-Greedy, Randomized, and the
+//!   dynamic Optimus variants from the paper's evaluation.
+//! - [`introspect`] — the round-based introspective re-solver (paper Alg. 2).
+//! - [`sim`] — a discrete-event cluster simulator that executes plans,
+//!   models checkpoint/restart costs, and records utilization traces.
+//! - [`runtime`] — PJRT runtime: loads AOT-compiled HLO artifacts (produced
+//!   by the build-time JAX/Pallas layer) and executes them from Rust.
+//! - [`exec`] — the real executor: tokio-based gang launch over emulated
+//!   device slots, driving actual training steps through [`runtime`].
+//! - [`metrics`] — utilization sampling and report generation.
+//!
+//! Python (JAX + Pallas) appears only at build time under `python/compile/`;
+//! the Rust binary is self-contained once `artifacts/` is built.
+
+pub mod baselines;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod costmodel;
+pub mod exec;
+pub mod introspect;
+pub mod metrics;
+pub mod model;
+pub mod parallelism;
+pub mod profiler;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod solver;
+pub mod trainer;
+pub mod util;
+
+pub use cluster::Cluster;
+pub use profiler::{ProfileGrid, TrialRunner};
+pub use sched::Schedule;
+pub use solver::joint::JointOptimizer;
+pub use trainer::{HParams, Task, Workload};

@@ -1,0 +1,265 @@
+//! `saturn` — CLI for the Saturn SPASE system.
+//!
+//! Subcommands:
+//! - `profile`    — run the Trial Runner on a workload and dump the grid;
+//! - `plan`       — produce a one-shot execution plan (table output);
+//! - `simulate`   — compare policies on the simulated cluster;
+//! - `experiment` — run a JSON [`saturn::config::ExperimentSpec`];
+//! - `artifacts`  — verify the AOT artifacts load and compile.
+//!
+//! Flag parsing is hand-rolled (no CLI crate is vendored offline):
+//! `--key value` or `--key=value` pairs after the subcommand.
+
+use saturn::baselines::{CurrentPractice, MaxHeuristic, MinHeuristic, OptimusGreedy, Randomized};
+use saturn::config::{parse_cluster, ExperimentSpec, PolicyKind, WorkloadKind};
+use saturn::coordinator::Saturn;
+use saturn::metrics::{reduction_pct, trial_stats};
+use saturn::sim::simulate;
+use saturn::solver::joint::JointOptimizer;
+use saturn::solver::policy::Policy;
+use saturn::trainer::{workloads, Workload};
+use saturn::util::rng::DetRng;
+use saturn::util::table::TextTable;
+use std::collections::HashMap;
+
+/// Minimal `--key value` / `--key=value` argument map.
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self, String> {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            let Some(key) = a.strip_prefix("--") else {
+                return Err(format!("unexpected argument '{a}'"));
+            };
+            if let Some((k, v)) = key.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+            } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.insert(key.to_string(), argv[i + 1].clone());
+                i += 1;
+            } else {
+                flags.insert(key.to_string(), "true".to_string()); // boolean flag
+            }
+            i += 1;
+        }
+        Ok(Self { flags })
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.flags.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.flags.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+const USAGE: &str = "saturn — joint parallelism selection, GPU apportionment, and scheduling\n\
+\n\
+USAGE: saturn <command> [--flags]\n\
+\n\
+COMMANDS:\n\
+  profile    --workload txt|img --cluster 8|4x8|2,2,4,8\n\
+  plan       --workload txt|img --cluster SPEC --seed N --timeout-ms N\n\
+  simulate   --workload txt|img --cluster SPEC --seed N --trials N\n\
+  experiment [--config exp.json] [--emit-default]\n\
+  artifacts  [--dir artifacts]\n";
+
+fn build_workload(name: &str) -> Workload {
+    match name {
+        "img" => workloads::img_workload(),
+        _ => workloads::txt_workload(),
+    }
+}
+
+fn policy_of(kind: PolicyKind) -> Box<dyn Policy> {
+    match kind {
+        PolicyKind::Saturn => Box::new(JointOptimizer::default()),
+        PolicyKind::CurrentPractice => Box::new(CurrentPractice),
+        PolicyKind::Max => Box::new(MaxHeuristic),
+        PolicyKind::Min => Box::new(MinHeuristic),
+        PolicyKind::Random => Box::new(Randomized),
+        PolicyKind::OptimusStatic | PolicyKind::OptimusDynamic => Box::new(OptimusGreedy),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    };
+    let args = Args::parse(&argv[1..]).map_err(|e| anyhow::anyhow!(e))?;
+    match cmd.as_str() {
+        "profile" => cmd_profile(&args),
+        "plan" => cmd_plan(&args),
+        "simulate" => cmd_simulate(&args),
+        "experiment" => cmd_experiment(&args),
+        "artifacts" => cmd_artifacts(&args),
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_profile(args: &Args) -> anyhow::Result<()> {
+    let w = build_workload(&args.get("workload", "txt"));
+    let c = parse_cluster(&args.get("cluster", "8"))?;
+    let mut saturn = Saturn::new(c);
+    let overhead = saturn.profile(&w);
+    let grid = saturn.grid.as_ref().unwrap();
+    let mut t = TextTable::new(vec!["task", "parallelism", "gpus", "knobs", "s/minibatch"]);
+    for task in &w {
+        for cfg in grid.configs(task) {
+            t.row(vec![
+                task.name.clone(),
+                cfg.upp.clone(),
+                cfg.gpus.to_string(),
+                cfg.knobs.summary(cfg.kind),
+                format!("{:.3}", cfg.minibatch_secs),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!("profiled {} plans; simulated profiling overhead: {:.0}s", grid.len(), overhead);
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> anyhow::Result<()> {
+    let w = build_workload(&args.get("workload", "txt"));
+    let c = parse_cluster(&args.get("cluster", "8"))?;
+    let seed = args.get_u64("seed", 42)?;
+    let timeout_ms = args.get_u64("timeout-ms", 500)?;
+    let mut saturn = Saturn::new(c);
+    saturn.optimizer = JointOptimizer::with_timeout(std::time::Duration::from_millis(timeout_ms));
+    saturn.profile(&w);
+    let plan = saturn.plan(&w, seed);
+    plan.validate(&saturn.cluster, &w).map_err(|e| anyhow::anyhow!(e))?;
+    let mut t = TextTable::new(vec!["task", "parallelism", "gpus", "node", "start", "duration"]);
+    let mut rows: Vec<_> = plan.assignments.iter().collect();
+    rows.sort_by(|a, b| a.start.total_cmp(&b.start));
+    for a in rows {
+        let task = w.iter().find(|t| t.id == a.task_id).unwrap();
+        t.row(vec![
+            task.name.clone(),
+            a.config.upp.clone(),
+            a.config.gpus.to_string(),
+            a.node.to_string(),
+            format!("{:.0}s", a.start),
+            format!("{:.0}s", a.duration),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "makespan: {} (utilization {:.1}%)",
+        saturn::util::fmt_hms(plan.makespan()),
+        100.0 * plan.utilization(&saturn.cluster)
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let w = build_workload(&args.get("workload", "txt"));
+    let c = parse_cluster(&args.get("cluster", "8"))?;
+    let seed = args.get_u64("seed", 42)?;
+    let trials = args.get_usize("trials", 3)?;
+    let mut saturn = Saturn::new(c.clone());
+    let overhead = saturn.profile(&w);
+    let grid = saturn.grid.as_ref().unwrap();
+    let spec = ExperimentSpec { trials, seed, ..Default::default() };
+    let mut t = TextTable::new(vec!["policy", "makespan", "±ci90", "vs current practice"]);
+    let mut cp_mean = 0.0;
+    // run CurrentPractice first to anchor the comparison column
+    let mut order = vec![PolicyKind::CurrentPractice];
+    order.extend(PolicyKind::ALL.into_iter().filter(|k| *k != PolicyKind::CurrentPractice));
+    for kind in order {
+        let policy = policy_of(kind);
+        let cfg = spec.sim_config(kind);
+        let ms: Vec<f64> = (0..trials)
+            .map(|k| {
+                let mut rng = DetRng::new(seed + k as u64);
+                simulate(policy.as_ref(), &w, grid, &c, cfg, &mut rng).makespan + overhead
+            })
+            .collect();
+        let st = trial_stats(&ms);
+        if kind == PolicyKind::CurrentPractice {
+            cp_mean = st.mean;
+        }
+        let vs = if cp_mean > 0.0 && kind != PolicyKind::CurrentPractice {
+            format!("{:.1}% lower", reduction_pct(st.mean, cp_mean))
+        } else {
+            "-".to_string()
+        };
+        t.row(vec![kind.tag().to_string(), saturn::util::fmt_hms(st.mean), format!("{:.0}s", st.ci90), vs]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
+    if args.has("emit-default") {
+        print!("{}", ExperimentSpec::default().to_json().pretty());
+        return Ok(());
+    }
+    let spec = match args.flags.get("config") {
+        Some(p) => ExperimentSpec::load(std::path::Path::new(p))?,
+        None => ExperimentSpec::default(),
+    };
+    let w = match spec.workload {
+        WorkloadKind::Txt => workloads::txt_workload(),
+        WorkloadKind::Img => workloads::img_workload(),
+    };
+    let c = spec.build_cluster()?;
+    let mut saturn = Saturn::new(c.clone());
+    let overhead = saturn.profile(&w);
+    let grid = saturn.grid.as_ref().unwrap();
+    let mut t = TextTable::new(vec!["policy", "makespan(mean)", "±ci90"]);
+    for &kind in &spec.policies {
+        let policy = policy_of(kind);
+        let cfg = spec.sim_config(kind);
+        let ms: Vec<f64> = (0..spec.trials)
+            .map(|k| {
+                let mut rng = DetRng::new(spec.seed + k as u64);
+                simulate(policy.as_ref(), &w, grid, &c, cfg, &mut rng).makespan + overhead
+            })
+            .collect();
+        let st = trial_stats(&ms);
+        t.row(vec![kind.tag().to_string(), saturn::util::fmt_hms(st.mean), format!("{:.0}s", st.ci90)]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from(args.get("dir", "artifacts"));
+    let manifest = saturn::runtime::Manifest::load(&dir)?;
+    println!("manifest: {} artifacts", manifest.artifacts.len());
+    let mut rt = saturn::runtime::Runtime::load(&dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    for art in manifest.artifacts.clone() {
+        rt.executable(&art.name)?;
+        println!("  compiled {:<40} inputs={} outputs={}", art.name, art.inputs.len(), art.outputs.len());
+    }
+    println!("all artifacts compile OK");
+    Ok(())
+}

@@ -1,0 +1,135 @@
+//! Experiment metrics and report helpers.
+//!
+//! The experiment binaries print paper-style tables and persist CSV/JSON
+//! next to them; this module holds the shared aggregation pieces:
+//! repeated-trial statistics (the paper averages 3 trials and shows 90%
+//! confidence intervals), speedup/reduction arithmetic, and report
+//! writers.
+
+use std::path::Path;
+
+/// Mean, spread, and 90% CI of repeated trials.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrialStats {
+    /// Number of trials.
+    pub n: usize,
+    /// Sample mean.
+    pub mean: f64,
+    /// Sample standard deviation (n−1).
+    pub std: f64,
+    /// Half-width of the 90% confidence interval (normal approx).
+    pub ci90: f64,
+    /// Minimum observation.
+    pub min: f64,
+    /// Maximum observation.
+    pub max: f64,
+}
+
+/// Aggregate repeated-trial observations.
+pub fn trial_stats(xs: &[f64]) -> TrialStats {
+    assert!(!xs.is_empty());
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = if n > 1 {
+        xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n as f64 - 1.0)
+    } else {
+        0.0
+    };
+    let std = var.sqrt();
+    // z_{0.95} = 1.645 (paper displays 90% CIs over 3 trials)
+    let ci90 = 1.645 * std / (n as f64).sqrt();
+    TrialStats {
+        n,
+        mean,
+        std,
+        ci90,
+        min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+        max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+    }
+}
+
+/// Makespan *reduction* of `ours` vs `baseline` in percent
+/// (paper: "39–49% lower model selection runtimes").
+pub fn reduction_pct(ours: f64, baseline: f64) -> f64 {
+    if baseline <= 0.0 {
+        return 0.0;
+    }
+    100.0 * (1.0 - ours / baseline)
+}
+
+/// Speedup factor of `ours` vs `baseline` (paper Table 5: "1.95X").
+pub fn speedup(ours: f64, baseline: f64) -> f64 {
+    if ours <= 0.0 {
+        return f64::INFINITY;
+    }
+    baseline / ours
+}
+
+/// Geometric mean (for aggregating speedups across settings).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Write a string report to `reports/<name>`, creating the directory.
+pub fn write_report(name: &str, contents: &str) -> std::io::Result<std::path::PathBuf> {
+    let dir = Path::new("reports");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    std::fs::write(&path, contents)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_constant() {
+        let s = trial_stats(&[5.0, 5.0, 5.0]);
+        assert_eq!(s.mean, 5.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.ci90, 0.0);
+        assert_eq!(s.n, 3);
+    }
+
+    #[test]
+    fn stats_of_spread() {
+        let s = trial_stats(&[1.0, 2.0, 3.0]);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert!((s.std - 1.0).abs() < 1e-12);
+        assert!(s.ci90 > 0.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+    }
+
+    #[test]
+    fn reduction_matches_paper_arithmetic() {
+        // 39% lower: ours = 0.61 × baseline
+        assert!((reduction_pct(61.0, 100.0) - 39.0).abs() < 1e-9);
+        assert_eq!(reduction_pct(50.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn speedup_basic() {
+        assert!((speedup(50.0, 100.0) - 2.0).abs() < 1e-12);
+        assert_eq!(speedup(0.0, 10.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn write_report_creates_file() {
+        // write under the repo's reports/ dir; clean up after
+        let p = write_report("metrics_selftest.txt", "hello").unwrap();
+        assert!(p.exists());
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "hello");
+        let _ = std::fs::remove_file(p);
+    }
+}

@@ -1,0 +1,212 @@
+//! DL model descriptors.
+//!
+//! The SPASE optimizer never inspects weights; it needs the *structural*
+//! facts that determine runtime and memory under each parallelism: parameter
+//! count, layer count (partitionable stages), per-example FLOPs, and
+//! activation footprints. [`ModelDesc`] captures those, with constructors
+//! for the paper's evaluated architectures (GPT-2 1.5B, GPT-J 6B, ViT-G
+//! 1.8B, ResNet 200M) and for the small transformer LMs the end-to-end
+//! example actually trains through the PJRT runtime.
+
+
+/// Broad architecture family (drives UPP hints, e.g. transformer wrap
+/// policies for FSDP, and the model-size sensitivity sweep).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Arch {
+    /// Decoder-only transformer LM (GPT family).
+    TransformerLm,
+    /// Vision transformer.
+    VisionTransformer,
+    /// Convolutional network (ResNet family).
+    ConvNet,
+}
+
+/// Structural description of a model, sufficient for cost modeling.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelDesc {
+    /// Human-readable name (e.g. "gpt2-1.5b").
+    pub name: String,
+    /// Architecture family.
+    pub arch: Arch,
+    /// Total trainable parameters.
+    pub params: f64,
+    /// Number of partitionable stages/blocks (transformer blocks, ResNet
+    /// stages); bounds pipeline partitioning.
+    pub layers: usize,
+    /// Sequence length for transformer inputs (tokens); 0 for ConvNets.
+    pub seq_len: usize,
+    /// Forward-pass FLOPs for ONE example (backward is modeled as 2×).
+    pub fwd_flops_per_example: f64,
+    /// Peak activation bytes for ONE example across the whole model
+    /// (without gradient checkpointing).
+    pub act_bytes_per_example: f64,
+    /// Activation bytes crossing a stage boundary for ONE example (pipeline
+    /// p2p traffic per microbatch per boundary).
+    pub boundary_act_bytes_per_example: f64,
+}
+
+impl ModelDesc {
+    /// Decoder-only transformer LM from (layers, hidden width, seq len,
+    /// vocab). Parameter count uses the standard 12·L·H² + 2·V·H estimate;
+    /// forward FLOPs per token ≈ 2·params.
+    pub fn transformer_lm(name: &str, layers: usize, hidden: usize, seq_len: usize, vocab: usize) -> Self {
+        let l = layers as f64;
+        let h = hidden as f64;
+        let v = vocab as f64;
+        let params = 12.0 * l * h * h + 2.0 * v * h;
+        let tokens = seq_len as f64;
+        // 2 FLOPs per param per token, plus attention score term 2·L·S²·H·2.
+        let fwd_flops = 2.0 * params * tokens + 4.0 * l * tokens * tokens * h;
+        // Activations: ~16·H bytes per token per layer at bf16 with fused attn.
+        let act = 16.0 * h * tokens * l * 2.0;
+        let boundary = 2.0 * h * tokens; // bf16 hidden states at a stage cut
+        Self {
+            name: name.to_string(),
+            arch: Arch::TransformerLm,
+            params,
+            layers,
+            seq_len,
+            fwd_flops_per_example: fwd_flops,
+            act_bytes_per_example: act,
+            boundary_act_bytes_per_example: boundary,
+        }
+    }
+
+    /// GPT-2 XL class model (paper TXT workload; 1.5B params).
+    pub fn gpt2_1_5b() -> Self {
+        Self::transformer_lm("gpt2-1.5b", 48, 1600, 1024, 50257)
+    }
+
+    /// GPT-J class model (paper TXT workload; ~6B params).
+    pub fn gpt_j_6b() -> Self {
+        Self::transformer_lm("gpt-j-6b", 28, 4096, 2048, 50400)
+    }
+
+    /// ViT-G class vision transformer (paper IMG workload; ~1.8B params).
+    pub fn vit_g_1_8b() -> Self {
+        let mut m = Self::transformer_lm("vit-g-1.8b", 48, 1664, 256, 1000);
+        m.arch = Arch::VisionTransformer;
+        m
+    }
+
+    /// Large ResNet (paper IMG workload; ~200M params).
+    pub fn resnet_200m() -> Self {
+        Self {
+            name: "resnet-200m".to_string(),
+            arch: Arch::ConvNet,
+            params: 2.0e8,
+            layers: 16, // residual stage groups usable as pipeline cuts
+            seq_len: 0,
+            // ~40 GFLOPs fwd per 224² image for a 200M-param ResNet.
+            fwd_flops_per_example: 4.0e10,
+            act_bytes_per_example: 6.0e8,
+            boundary_act_bytes_per_example: 2.0e7,
+        }
+    }
+
+    /// GPT-2-style model scaled by stacking blocks (paper Fig 8(B) varies
+    /// size by stacking transformer encoder blocks, like GPT-3 does).
+    pub fn gpt2_stacked(layers: usize) -> Self {
+        Self::transformer_lm(&format!("gpt2-stack-{layers}"), layers, 1600, 1024, 50257)
+    }
+
+    /// Tiny transformer LM actually trainable through the PJRT CPU runtime
+    /// in the e2e example (see `python/compile/model.py` for the matching
+    /// JAX definition).
+    pub fn tiny_lm(layers: usize, hidden: usize, seq_len: usize, vocab: usize) -> Self {
+        Self::transformer_lm(&format!("tiny-lm-l{layers}-h{hidden}"), layers, hidden, seq_len, vocab)
+    }
+
+    /// Model-state bytes per parameter for a given optimizer:
+    /// bf16 weights + bf16 grads (4 B) plus fp32 master+momentum for SGD
+    /// (8 B) or fp32 master+m+v for Adam (12 B). Mirrors the ZeRO paper's
+    /// mixed-precision accounting.
+    pub fn state_bytes(&self, optimizer: crate::trainer::Optimizer) -> f64 {
+        let per_param = match optimizer {
+            crate::trainer::Optimizer::Sgd => 12.0,
+            crate::trainer::Optimizer::Adam => 16.0,
+        };
+        self.params * per_param
+    }
+
+    /// Parameter bytes at bf16 (communication payloads).
+    pub fn param_bytes(&self) -> f64 {
+        self.params * 2.0
+    }
+
+    /// Total train-step FLOPs for a minibatch of `batch` examples
+    /// (forward + backward ≈ 3× forward).
+    pub fn step_flops(&self, batch: usize) -> f64 {
+        3.0 * self.fwd_flops_per_example * batch as f64
+    }
+
+    /// Billions of parameters (display).
+    pub fn params_b(&self) -> f64 {
+        self.params / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpt2_param_count_in_range() {
+        let m = ModelDesc::gpt2_1_5b();
+        assert!(m.params_b() > 1.3 && m.params_b() < 1.8, "{}", m.params_b());
+        assert_eq!(m.layers, 48);
+    }
+
+    #[test]
+    fn gptj_param_count_in_range() {
+        let m = ModelDesc::gpt_j_6b();
+        assert!(m.params_b() > 5.0 && m.params_b() < 7.0, "{}", m.params_b());
+    }
+
+    #[test]
+    fn vit_param_count_in_range() {
+        let m = ModelDesc::vit_g_1_8b();
+        assert!(m.params_b() > 1.4 && m.params_b() < 2.2, "{}", m.params_b());
+        assert_eq!(m.arch, Arch::VisionTransformer);
+    }
+
+    #[test]
+    fn resnet_is_smallest() {
+        let r = ModelDesc::resnet_200m();
+        assert!(r.params < ModelDesc::vit_g_1_8b().params);
+        assert_eq!(r.arch, Arch::ConvNet);
+    }
+
+    #[test]
+    fn step_flops_scales_with_batch() {
+        let m = ModelDesc::gpt2_1_5b();
+        assert!((m.step_flops(32) / m.step_flops(16) - 2.0).abs() < 1e-12);
+        // fwd+bwd = 3x fwd
+        assert!((m.step_flops(1) / m.fwd_flops_per_example - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stacked_models_grow_linearly_in_blocks() {
+        let a = ModelDesc::gpt2_stacked(24);
+        let b = ModelDesc::gpt2_stacked(48);
+        // embedding term is shared, block term doubles
+        assert!(b.params > a.params * 1.6 && b.params < a.params * 2.0);
+    }
+
+    #[test]
+    fn state_bytes_by_optimizer() {
+        let m = ModelDesc::gpt2_1_5b();
+        let sgd = m.state_bytes(crate::trainer::Optimizer::Sgd);
+        let adam = m.state_bytes(crate::trainer::Optimizer::Adam);
+        assert!(adam > sgd);
+        assert!((adam / m.params - 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gptj_needs_multiple_a100s() {
+        // The paper's premise: GPT-J 6B OOMs a single 40 GiB A100 under Adam.
+        let m = ModelDesc::gpt_j_6b();
+        let gib = m.state_bytes(crate::trainer::Optimizer::Adam) / (1024f64.powi(3));
+        assert!(gib > 40.0, "{gib}");
+    }
+}

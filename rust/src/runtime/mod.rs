@@ -1,0 +1,291 @@
+//! PJRT runtime: loads AOT-compiled HLO artifacts and executes them.
+//!
+//! The build-time Python layer (`python/compile/aot.py`) lowers the JAX/
+//! Pallas training computation to **HLO text** (the interchange format —
+//! serialized protos from jax ≥ 0.5 use 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids) and writes
+//! a `manifest.json` describing every artifact's I/O signature. This
+//! module compiles those artifacts on the PJRT CPU client and executes
+//! them from the Rust hot path. Python never runs at execution time.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Dtype tags used in the manifest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    /// 32-bit float.
+    F32,
+    /// 32-bit signed int.
+    I32,
+}
+
+/// One tensor in an artifact's signature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    /// Logical name, e.g. "params".
+    pub name: String,
+    /// Element type.
+    pub dtype: DType,
+    /// Dimensions.
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Metadata for one compiled model variant.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ArtifactMeta {
+    /// Transformer depth.
+    pub layers: usize,
+    /// Hidden width.
+    pub hidden: usize,
+    /// Vocabulary size.
+    pub vocab: usize,
+    /// Sequence length.
+    pub seq: usize,
+    /// Minibatch size baked into the executable.
+    pub batch: usize,
+    /// Total parameter count (flat vector length).
+    pub param_count: usize,
+}
+
+/// One AOT artifact entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Artifact {
+    /// Unique name, e.g. "tiny_lm_b8_train_step".
+    pub name: String,
+    /// HLO text file, relative to the manifest.
+    pub file: String,
+    /// Input signature (argument order).
+    pub inputs: Vec<TensorSpec>,
+    /// Output signature (tuple order).
+    pub outputs: Vec<TensorSpec>,
+    /// Model metadata.
+    pub meta: ArtifactMeta,
+}
+
+/// The artifact manifest written by `make artifacts`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    /// All artifacts.
+    pub artifacts: Vec<Artifact>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    /// Parse manifest JSON text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let arts = v.get("artifacts").and_then(Json::as_arr).ok_or_else(|| anyhow!("missing 'artifacts'"))?;
+        let artifacts = arts.iter().map(parse_artifact).collect::<Result<Vec<_>>>()?;
+        Ok(Self { artifacts })
+    }
+
+    /// Find an artifact by name.
+    pub fn get(&self, name: &str) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+fn parse_tensor(v: &Json) -> Result<TensorSpec> {
+    let name = v.get("name").and_then(Json::as_str).unwrap_or("").to_string();
+    let dtype = match v.get("dtype").and_then(Json::as_str) {
+        Some("f32") => DType::F32,
+        Some("i32") => DType::I32,
+        other => return Err(anyhow!("unsupported dtype {other:?}")),
+    };
+    let shape = v
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("tensor missing shape"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(TensorSpec { name, dtype, shape })
+}
+
+fn parse_artifact(v: &Json) -> Result<Artifact> {
+    let name = v.get("name").and_then(Json::as_str).ok_or_else(|| anyhow!("artifact missing name"))?.to_string();
+    let file = v.get("file").and_then(Json::as_str).ok_or_else(|| anyhow!("artifact missing file"))?.to_string();
+    let inputs = v
+        .get("inputs")
+        .and_then(Json::as_arr)
+        .unwrap_or(&[])
+        .iter()
+        .map(parse_tensor)
+        .collect::<Result<Vec<_>>>()?;
+    let outputs = v
+        .get("outputs")
+        .and_then(Json::as_arr)
+        .unwrap_or(&[])
+        .iter()
+        .map(parse_tensor)
+        .collect::<Result<Vec<_>>>()?;
+    let mut meta = ArtifactMeta::default();
+    if let Some(m) = v.get("meta") {
+        let u = |k: &str| m.get(k).and_then(Json::as_usize).unwrap_or(0);
+        meta = ArtifactMeta {
+            layers: u("layers"),
+            hidden: u("hidden"),
+            vocab: u("vocab"),
+            seq: u("seq"),
+            batch: u("batch"),
+            param_count: u("param_count"),
+        };
+    }
+    Ok(Artifact { name, file, inputs, outputs, meta })
+}
+
+/// The PJRT runtime: a CPU client plus a compiled-executable cache.
+///
+/// NOT `Sync`: PJRT handles are raw pointers. The executor gives the
+/// runtime to a dedicated compute thread (see [`crate::exec`]).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    cache: HashMap<String, Arc<xla::PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    /// Create a CPU-PJRT runtime over an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        Ok(Self { client, manifest, dir, cache: HashMap::new() })
+    }
+
+    /// The manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn executable(&mut self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.get(name) {
+            return Ok(Arc::clone(exe));
+        }
+        let art = self.manifest.get(name).ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        let path = self.dir.join(&art.file);
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let exe = Arc::new(exe);
+        self.cache.insert(name.to_string(), Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Execute an artifact with the given input literals; returns the
+    /// decomposed output tuple.
+    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let art = self.manifest.get(name).ok_or_else(|| anyhow!("unknown artifact {name}"))?.clone();
+        if inputs.len() != art.inputs.len() {
+            return Err(anyhow!("{name}: expected {} inputs, got {}", art.inputs.len(), inputs.len()));
+        }
+        let exe = self.executable(name)?;
+        let out = exe.execute::<xla::Literal>(inputs).map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = out[0][0].to_literal_sync().map_err(|e| anyhow!("fetch: {e:?}"))?;
+        // aot.py lowers with return_tuple=True
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        if parts.len() != art.outputs.len() {
+            return Err(anyhow!("{name}: expected {} outputs, got {}", art.outputs.len(), parts.len()));
+        }
+        Ok(parts)
+    }
+
+    /// Number of compiled executables resident in the cache.
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+/// Build an f32 literal of a given shape.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data).reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// Build an i32 literal of a given shape.
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data).reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let json = r#"{
+            "artifacts": [{
+                "name": "toy",
+                "file": "toy.hlo.txt",
+                "inputs": [{"name": "x", "dtype": "f32", "shape": [2, 2]}],
+                "outputs": [{"name": "y", "dtype": "f32", "shape": [2, 2]}],
+                "meta": {"layers": 2, "hidden": 64, "vocab": 128, "seq": 16, "batch": 4, "param_count": 1000}
+            }]
+        }"#;
+        let m = Manifest::parse(json).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.get("toy").unwrap();
+        assert_eq!(a.inputs[0].elements(), 4);
+        assert_eq!(a.meta.hidden, 64);
+        assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn manifest_meta_defaults() {
+        let json = r#"{"artifacts": [{"name": "a", "file": "a.hlo.txt", "inputs": [], "outputs": []}]}"#;
+        let m = Manifest::parse(json).unwrap();
+        assert_eq!(m.artifacts[0].meta.param_count, 0);
+    }
+
+    #[test]
+    fn missing_manifest_errors_helpfully() {
+        let dir = crate::util::tmp::TempDir::new("manifest").unwrap();
+        let err = format!("{:#}", Manifest::load(dir.path()).unwrap_err());
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn manifest_rejects_bad_dtype() {
+        let json = r#"{"artifacts": [{"name": "a", "file": "a.hlo.txt",
+            "inputs": [{"name": "x", "dtype": "f16", "shape": [1]}], "outputs": []}]}"#;
+        assert!(Manifest::parse(json).is_err());
+    }
+
+    #[test]
+    fn literal_builders() {
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        let i = literal_i32(&[1, 2, 3], &[3]).unwrap();
+        assert_eq!(i.element_count(), 3);
+    }
+
+    // Tests that execute real artifacts live in rust/tests/runtime_e2e.rs
+    // (they require `make artifacts` to have run).
+}

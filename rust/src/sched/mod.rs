@@ -1,0 +1,357 @@
+//! Execution-plan representation and validation.
+//!
+//! A SPASE solution is a full execution plan: for every task, a
+//! configuration (parallelism + GPU count), a node, a concrete GPU set on
+//! that node, and a gang start time. [`Schedule::validate`] enforces the
+//! MILP's feasibility constraints (paper eqs. 3–11): one configuration per
+//! task, one node per task, exactly the requested GPUs, gang start, and no
+//! two tasks overlapping on a GPU.
+//!
+//! [`list_schedule`] is the greedy gang list scheduler used to turn
+//! (order, node, config) decisions into concrete start times — the
+//! evaluation engine inside the joint optimizer's incumbent search and all
+//! baselines.
+
+use crate::cluster::Cluster;
+use crate::profiler::TaskConfig;
+use crate::trainer::Workload;
+
+/// One task's placement in the plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Assignment {
+    /// Task id.
+    pub task_id: usize,
+    /// Node index.
+    pub node: usize,
+    /// GPU indices on that node (the gang). `len() == config.gpus`.
+    pub gpus: Vec<usize>,
+    /// Gang start time, seconds.
+    pub start: f64,
+    /// Runtime at the chosen configuration, seconds.
+    pub duration: f64,
+    /// The chosen configuration (parallelism, knobs, GPU count).
+    pub config: TaskConfig,
+}
+
+impl Assignment {
+    /// Completion time.
+    pub fn end(&self) -> f64 {
+        self.start + self.duration
+    }
+}
+
+/// A complete execution plan.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Schedule {
+    /// One assignment per task.
+    pub assignments: Vec<Assignment>,
+}
+
+impl Schedule {
+    /// Plan makespan (latest completion; 0 for an empty plan).
+    pub fn makespan(&self) -> f64 {
+        self.assignments.iter().map(Assignment::end).fold(0.0, f64::max)
+    }
+
+    /// Find the assignment for a task.
+    pub fn assignment_for(&self, task_id: usize) -> Option<&Assignment> {
+        self.assignments.iter().find(|a| a.task_id == task_id)
+    }
+
+    /// Validate against the MILP's feasibility constraints.
+    ///
+    /// Checks (paper eqs. 3–11): every workload task assigned exactly once;
+    /// node/GPU indices in range; GPU set distinct and sized to the
+    /// configuration; non-negative start; no GPU-time overlap between
+    /// tasks on the same node.
+    pub fn validate(&self, cluster: &Cluster, workload: &Workload) -> Result<(), String> {
+        // exactly one assignment per task
+        let mut seen = vec![false; workload.len()];
+        for a in &self.assignments {
+            let t = workload
+                .iter()
+                .find(|t| t.id == a.task_id)
+                .ok_or_else(|| format!("assignment for unknown task {}", a.task_id))?;
+            let idx = workload.iter().position(|x| x.id == t.id).unwrap();
+            if seen[idx] {
+                return Err(format!("task {} assigned twice", a.task_id));
+            }
+            seen[idx] = true;
+
+            let node = cluster.nodes.get(a.node).ok_or_else(|| format!("task {}: bad node {}", a.task_id, a.node))?;
+            if a.gpus.is_empty() {
+                return Err(format!("task {}: empty gang", a.task_id));
+            }
+            if a.gpus.len() != a.config.gpus {
+                return Err(format!(
+                    "task {}: gang size {} != configuration {}",
+                    a.task_id,
+                    a.gpus.len(),
+                    a.config.gpus
+                ));
+            }
+            let mut sorted = a.gpus.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            if sorted.len() != a.gpus.len() {
+                return Err(format!("task {}: duplicate GPUs in gang", a.task_id));
+            }
+            if *sorted.last().unwrap() >= node.gpus {
+                return Err(format!("task {}: GPU index out of range on node {}", a.task_id, a.node));
+            }
+            if a.start < 0.0 || !a.start.is_finite() || !a.duration.is_finite() || a.duration < 0.0 {
+                return Err(format!("task {}: bad times start={} dur={}", a.task_id, a.start, a.duration));
+            }
+        }
+        for (idx, ok) in seen.iter().enumerate() {
+            if !ok {
+                return Err(format!("task {} not scheduled", workload[idx].id));
+            }
+        }
+        // task isolation: no overlap on any (node, gpu)
+        for (i, a) in self.assignments.iter().enumerate() {
+            for b in self.assignments.iter().skip(i + 1) {
+                if a.node != b.node {
+                    continue;
+                }
+                let share_gpu = a.gpus.iter().any(|g| b.gpus.contains(g));
+                if !share_gpu {
+                    continue;
+                }
+                let eps = 1e-9 * (1.0 + a.end().abs().max(b.end().abs()));
+                let overlap = a.start < b.end() - eps && b.start < a.end() - eps;
+                if overlap {
+                    return Err(format!(
+                        "tasks {} and {} overlap on node {} (a: [{:.1},{:.1}) b: [{:.1},{:.1}))",
+                        a.task_id,
+                        b.task_id,
+                        a.node,
+                        a.start,
+                        a.end(),
+                        b.start,
+                        b.end()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Aggregate GPU-seconds of useful work (for utilization accounting).
+    pub fn busy_gpu_seconds(&self) -> f64 {
+        self.assignments.iter().map(|a| a.duration * a.gpus.len() as f64).sum()
+    }
+
+    /// Cluster-wide average GPU utilization over the makespan.
+    pub fn utilization(&self, cluster: &Cluster) -> f64 {
+        let ms = self.makespan();
+        if ms <= 0.0 {
+            return 0.0;
+        }
+        self.busy_gpu_seconds() / (ms * cluster.total_gpus() as f64)
+    }
+}
+
+/// One scheduling decision fed to the list scheduler: which task, which
+/// configuration, and (optionally) a forced node.
+#[derive(Debug, Clone)]
+pub struct PlacementChoice {
+    /// Task id.
+    pub task_id: usize,
+    /// Runtime of the chosen configuration, seconds.
+    pub duration: f64,
+    /// Chosen configuration.
+    pub config: TaskConfig,
+    /// Force this node (baselines in the heterogeneous setting randomize
+    /// node choice); `None` lets the scheduler pick greedily.
+    pub node: Option<usize>,
+}
+
+/// Greedy gang list scheduler.
+///
+/// Processes `choices` in order. For each, picks the node (or uses the
+/// forced one) where the gang can start earliest — the start time on a
+/// node is the g-th smallest GPU free time — then occupies the g
+/// earliest-free GPUs. Produces a valid gang schedule for any input order;
+/// the *order* and the *configs* are the optimizer's job.
+pub fn list_schedule(choices: &[PlacementChoice], cluster: &Cluster) -> Schedule {
+    let mut free: Vec<Vec<f64>> = cluster.nodes.iter().map(|n| vec![0.0f64; n.gpus]).collect();
+    let mut assignments = Vec::with_capacity(choices.len());
+    for c in choices {
+        let g = c.config.gpus;
+        let candidate_nodes: Vec<usize> = match c.node {
+            Some(n) => vec![n],
+            None => (0..cluster.nodes.len()).collect(),
+        };
+        // earliest gang start across candidate nodes
+        let mut best: Option<(usize, f64)> = None;
+        for &ni in &candidate_nodes {
+            if free[ni].len() < g {
+                continue;
+            }
+            let mut f = free[ni].clone();
+            f.sort_by(f64::total_cmp);
+            let start = f[g - 1];
+            if best.map_or(true, |(_, s)| start < s) {
+                best = Some((ni, start));
+            }
+        }
+        let (ni, start) = match best {
+            Some(x) => x,
+            None => continue, // no node large enough; caller validates
+        };
+        let mut idx: Vec<usize> = (0..free[ni].len()).collect();
+        idx.sort_by(|&a, &b| free[ni][a].total_cmp(&free[ni][b]).then(a.cmp(&b)));
+        let gang: Vec<usize> = idx.into_iter().take(g).collect();
+        for &gi in &gang {
+            free[ni][gi] = start + c.duration;
+        }
+        assignments.push(Assignment {
+            task_id: c.task_id,
+            node: ni,
+            gpus: gang,
+            start,
+            duration: c.duration,
+            config: c.config.clone(),
+        });
+    }
+    Schedule { assignments }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::{Knobs, ParallelismKind};
+    use crate::model::ModelDesc;
+    use crate::trainer::{HParams, Optimizer, Task};
+
+    fn cfg(gpus: usize) -> TaskConfig {
+        TaskConfig {
+            gpus,
+            upp: "pytorch-fsdp".into(),
+            kind: ParallelismKind::Fsdp,
+            knobs: Knobs::default(),
+            minibatch_secs: 1.0,
+            task_secs: 100.0,
+        }
+    }
+
+    fn choice(task_id: usize, gpus: usize, dur: f64) -> PlacementChoice {
+        PlacementChoice { task_id, duration: dur, config: cfg(gpus), node: None }
+    }
+
+    fn tiny_workload(n: usize) -> Workload {
+        (0..n)
+            .map(|i| Task::new(i, ModelDesc::resnet_200m(), HParams::new(32, 1e-4, 1, Optimizer::Sgd), 320))
+            .collect()
+    }
+
+    #[test]
+    fn list_schedule_parallel_packing() {
+        let c = Cluster::single_node_8gpu();
+        // four 2-GPU tasks of 100 s: all parallel, makespan 100
+        let choices: Vec<_> = (0..4).map(|i| choice(i, 2, 100.0)).collect();
+        let s = list_schedule(&choices, &c);
+        assert_eq!(s.assignments.len(), 4);
+        assert!((s.makespan() - 100.0).abs() < 1e-9);
+        s.validate(&c, &tiny_workload(4)).unwrap();
+    }
+
+    #[test]
+    fn list_schedule_serializes_when_oversubscribed() {
+        let c = Cluster::single_node_8gpu();
+        // two 8-GPU tasks must serialize
+        let choices = vec![choice(0, 8, 50.0), choice(1, 8, 70.0)];
+        let s = list_schedule(&choices, &c);
+        assert!((s.makespan() - 120.0).abs() < 1e-9);
+        s.validate(&c, &tiny_workload(2)).unwrap();
+    }
+
+    #[test]
+    fn gang_start_waits_for_full_gang() {
+        let c = Cluster::single_node_8gpu();
+        // 6-GPU task, then a 4-GPU task: only 2 GPUs free → waits for 4
+        let choices = vec![choice(0, 6, 100.0), choice(1, 4, 10.0)];
+        let s = list_schedule(&choices, &c);
+        let a1 = s.assignment_for(1).unwrap();
+        assert!((a1.start - 100.0).abs() < 1e-9, "start={}", a1.start);
+        s.validate(&c, &tiny_workload(2)).unwrap();
+    }
+
+    #[test]
+    fn forced_node_respected() {
+        let c = Cluster::heterogeneous_12gpu();
+        let mut ch = choice(0, 4, 10.0);
+        ch.node = Some(1);
+        let s = list_schedule(&[ch], &c);
+        assert_eq!(s.assignments[0].node, 1);
+    }
+
+    #[test]
+    fn skips_unplaceable_tasks() {
+        let c = Cluster::from_gpu_counts(&[2]);
+        let s = list_schedule(&[choice(0, 4, 10.0)], &c);
+        assert!(s.assignments.is_empty());
+    }
+
+    #[test]
+    fn validate_rejects_overlap() {
+        let c = Cluster::single_node_8gpu();
+        let w = tiny_workload(2);
+        let mut s = list_schedule(&[choice(0, 4, 100.0), choice(1, 4, 100.0)], &c);
+        // force an overlap
+        s.assignments[1].gpus = s.assignments[0].gpus.clone();
+        s.assignments[1].start = 50.0;
+        assert!(s.validate(&c, &w).unwrap_err().contains("overlap"));
+    }
+
+    #[test]
+    fn validate_rejects_missing_task() {
+        let c = Cluster::single_node_8gpu();
+        let w = tiny_workload(2);
+        let s = list_schedule(&[choice(0, 4, 100.0)], &c);
+        assert!(s.validate(&c, &w).unwrap_err().contains("not scheduled"));
+    }
+
+    #[test]
+    fn validate_rejects_gang_size_mismatch() {
+        let c = Cluster::single_node_8gpu();
+        let w = tiny_workload(1);
+        let mut s = list_schedule(&[choice(0, 4, 100.0)], &c);
+        s.assignments[0].gpus.pop();
+        assert!(s.validate(&c, &w).unwrap_err().contains("gang size"));
+    }
+
+    #[test]
+    fn validate_rejects_duplicate_gpu() {
+        let c = Cluster::single_node_8gpu();
+        let w = tiny_workload(1);
+        let mut s = list_schedule(&[choice(0, 4, 100.0)], &c);
+        s.assignments[0].gpus = vec![0, 0, 1, 2];
+        assert!(s.validate(&c, &w).unwrap_err().contains("duplicate"));
+    }
+
+    #[test]
+    fn back_to_back_tasks_do_not_overlap() {
+        // touching intervals (end == start) are fine
+        let c = Cluster::from_gpu_counts(&[1]);
+        let w = tiny_workload(2);
+        let s = list_schedule(&[choice(0, 1, 10.0), choice(1, 1, 10.0)], &c);
+        s.validate(&c, &w).unwrap();
+        assert!((s.makespan() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn utilization_accounting() {
+        let c = Cluster::single_node_8gpu();
+        let s = list_schedule(&[choice(0, 8, 100.0)], &c);
+        assert!((s.utilization(&c) - 1.0).abs() < 1e-9);
+        let s2 = list_schedule(&[choice(0, 4, 100.0)], &c);
+        assert!((s2.utilization(&c) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn makespan_empty_is_zero() {
+        assert_eq!(Schedule::default().makespan(), 0.0);
+    }
+}

@@ -1,0 +1,454 @@
+//! Dense two-phase primal simplex LP solver.
+//!
+//! The substrate under the branch-and-bound MILP solver ([`super::milp`]).
+//! Problems are stated as `min c·x` subject to sparse linear constraints
+//! (`≤`, `≥`, `=`) over non-negative variables, with optional finite upper
+//! bounds (realized as constraint rows — adequate at the sizes Saturn's
+//! exact MILP path solves; the production anytime optimizer does not go
+//! through the LP).
+//!
+//! Implementation notes: Phase 1 minimizes artificial-variable mass to find
+//! a basic feasible solution; Phase 2 optimizes the real objective with
+//! artificial columns banned. Dantzig pricing with a Bland's-rule fallback
+//! guards against cycling.
+
+/// Constraint comparator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cmp {
+    /// `≤`
+    Le,
+    /// `≥`
+    Ge,
+    /// `=`
+    Eq,
+}
+
+/// One sparse constraint: `Σ coeff·x[var]  cmp  rhs`.
+#[derive(Debug, Clone)]
+pub struct Constraint {
+    /// (variable index, coefficient) terms.
+    pub terms: Vec<(usize, f64)>,
+    /// Comparator.
+    pub cmp: Cmp,
+    /// Right-hand side.
+    pub rhs: f64,
+}
+
+/// A linear program: `min c·x` s.t. constraints, `x ≥ 0`, `x ≤ upper`.
+#[derive(Debug, Clone, Default)]
+pub struct LinProg {
+    /// Objective coefficients (length = number of variables).
+    pub objective: Vec<f64>,
+    /// Constraint rows.
+    pub constraints: Vec<Constraint>,
+    /// Optional per-variable upper bounds (`f64::INFINITY` = none).
+    pub upper: Vec<f64>,
+}
+
+/// Solver outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LpResult {
+    /// Optimal solution found.
+    Optimal {
+        /// Variable values.
+        x: Vec<f64>,
+        /// Objective value.
+        obj: f64,
+    },
+    /// No feasible point.
+    Infeasible,
+    /// Objective unbounded below.
+    Unbounded,
+    /// Iteration limit hit (numerical trouble).
+    MaxIter,
+}
+
+const EPS: f64 = 1e-9;
+
+impl LinProg {
+    /// New LP with `n` variables, zero objective, no constraints.
+    pub fn new(n: usize) -> Self {
+        Self { objective: vec![0.0; n], constraints: Vec::new(), upper: vec![f64::INFINITY; n] }
+    }
+
+    /// Number of variables.
+    pub fn num_vars(&self) -> usize {
+        self.objective.len()
+    }
+
+    /// Add a constraint row.
+    pub fn constrain(&mut self, terms: Vec<(usize, f64)>, cmp: Cmp, rhs: f64) {
+        self.constraints.push(Constraint { terms, cmp, rhs });
+    }
+
+    /// Solve with the two-phase simplex.
+    pub fn solve(&self) -> LpResult {
+        let n = self.num_vars();
+        // materialize finite upper bounds as rows
+        let mut rows: Vec<Constraint> = self.constraints.clone();
+        for (i, &u) in self.upper.iter().enumerate() {
+            if u.is_finite() {
+                rows.push(Constraint { terms: vec![(i, 1.0)], cmp: Cmp::Le, rhs: u });
+            }
+        }
+        let m = rows.len();
+        // normalize rhs ≥ 0
+        let mut norm: Vec<(Vec<(usize, f64)>, Cmp, f64)> = Vec::with_capacity(m);
+        for c in &rows {
+            let mut terms = c.terms.clone();
+            let (cmp, rhs) = if c.rhs < 0.0 {
+                for t in &mut terms {
+                    t.1 = -t.1;
+                }
+                let cmp = match c.cmp {
+                    Cmp::Le => Cmp::Ge,
+                    Cmp::Ge => Cmp::Le,
+                    Cmp::Eq => Cmp::Eq,
+                };
+                (cmp, -c.rhs)
+            } else {
+                (c.cmp, c.rhs)
+            };
+            norm.push((terms, cmp, rhs));
+        }
+        // column layout: [structural | slacks/surplus | artificials]
+        let n_slack = norm.iter().filter(|(_, cmp, _)| *cmp != Cmp::Eq).count();
+        let n_art = norm.iter().filter(|(_, cmp, _)| *cmp != Cmp::Le).count();
+        let total = n + n_slack + n_art;
+        let mut tab = vec![vec![0.0f64; total + 1]; m + 1];
+        let mut basis = vec![usize::MAX; m];
+        let mut art_cols: Vec<usize> = Vec::with_capacity(n_art);
+        let mut s_next = n;
+        let mut a_next = n + n_slack;
+        for (i, (terms, cmp, rhs)) in norm.iter().enumerate() {
+            for &(j, v) in terms {
+                debug_assert!(j < n, "term var out of range");
+                tab[i][j] += v;
+            }
+            tab[i][total] = *rhs;
+            match cmp {
+                Cmp::Le => {
+                    tab[i][s_next] = 1.0;
+                    basis[i] = s_next;
+                    s_next += 1;
+                }
+                Cmp::Ge => {
+                    tab[i][s_next] = -1.0;
+                    s_next += 1;
+                    tab[i][a_next] = 1.0;
+                    basis[i] = a_next;
+                    art_cols.push(a_next);
+                    a_next += 1;
+                }
+                Cmp::Eq => {
+                    tab[i][a_next] = 1.0;
+                    basis[i] = a_next;
+                    art_cols.push(a_next);
+                    a_next += 1;
+                }
+            }
+        }
+
+        let banned = vec![false; total];
+        // Phase 1
+        if !art_cols.is_empty() {
+            let mut cost1 = vec![0.0; total];
+            for &a in &art_cols {
+                cost1[a] = 1.0;
+            }
+            Self::load_objective(&mut tab, &basis, &cost1, m, total);
+            match Self::iterate(&mut tab, &mut basis, m, total, &banned) {
+                SimplexStatus::Optimal => {}
+                SimplexStatus::Unbounded => return LpResult::MaxIter, // phase-1 can't be unbounded; numeric
+                SimplexStatus::MaxIter => return LpResult::MaxIter,
+            }
+            let phase1_obj = -tab[m][total];
+            if phase1_obj > 1e-6 {
+                return LpResult::Infeasible;
+            }
+            // drive artificials out of the basis where possible
+            for i in 0..m {
+                if art_cols.contains(&basis[i]) {
+                    if let Some(j) = (0..n + n_slack).find(|&j| tab[i][j].abs() > 1e-7) {
+                        Self::pivot(&mut tab, &mut basis, m, total, i, j);
+                    }
+                }
+            }
+            // delete rows whose artificial could not be driven out: they
+            // are redundant (all-zero over real columns). Leaving them in
+            // lets the stuck artificial drift to a nonzero value during
+            // phase-2 pivots, silently producing an infeasible "optimum".
+            let keep: Vec<usize> = (0..m).filter(|&i| !art_cols.contains(&basis[i])).collect();
+            if keep.len() != m {
+                let mut new_tab = Vec::with_capacity(keep.len() + 1);
+                let mut new_basis = Vec::with_capacity(keep.len());
+                for &i in &keep {
+                    new_tab.push(std::mem::take(&mut tab[i]));
+                    new_basis.push(basis[i]);
+                }
+                new_tab.push(std::mem::take(&mut tab[m]));
+                tab = new_tab;
+                basis = new_basis;
+            }
+        }
+        let m = basis.len();
+        // Phase 2: ban artificial columns
+        let mut banned = vec![false; total];
+        for &a in &art_cols {
+            banned[a] = true;
+        }
+        let mut cost2 = vec![0.0; total];
+        cost2[..n].copy_from_slice(&self.objective);
+        Self::load_objective(&mut tab, &basis, &cost2, m, total);
+        match Self::iterate(&mut tab, &mut basis, m, total, &banned) {
+            SimplexStatus::Optimal => {}
+            SimplexStatus::Unbounded => return LpResult::Unbounded,
+            SimplexStatus::MaxIter => return LpResult::MaxIter,
+        }
+        let mut x = vec![0.0; n];
+        for i in 0..m {
+            if basis[i] < n {
+                x[basis[i]] = tab[i][total];
+            }
+        }
+        // safety net: verify the reported optimum actually satisfies the
+        // constraint system (numerical failures degrade to MaxIter so
+        // callers treat the node as unreliable rather than trusting it)
+        if !self.verify(&x, 1e-5) {
+            return LpResult::MaxIter;
+        }
+        let obj = self.objective.iter().zip(&x).map(|(c, v)| c * v).sum();
+        LpResult::Optimal { x, obj }
+    }
+
+    /// Check `x` against all constraints and bounds within `tol`
+    /// (relative to row magnitude).
+    pub fn verify(&self, x: &[f64], tol: f64) -> bool {
+        for (i, &u) in self.upper.iter().enumerate() {
+            if x[i] < -tol || x[i] > u + tol * (1.0 + u.abs()) {
+                return false;
+            }
+        }
+        for c in &self.constraints {
+            let lhs: f64 = c.terms.iter().map(|&(j, a)| a * x[j]).sum();
+            let scale = 1.0 + c.rhs.abs() + c.terms.iter().map(|&(_, a)| a.abs()).fold(0.0, f64::max);
+            let t = tol * scale;
+            let ok = match c.cmp {
+                Cmp::Le => lhs <= c.rhs + t,
+                Cmp::Ge => lhs >= c.rhs - t,
+                Cmp::Eq => (lhs - c.rhs).abs() <= t,
+            };
+            if !ok {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Install `cost` as the z-row, priced out against the current basis.
+    fn load_objective(tab: &mut [Vec<f64>], basis: &[usize], cost: &[f64], m: usize, total: usize) {
+        for j in 0..=total {
+            tab[m][j] = if j < total { cost[j] } else { 0.0 };
+        }
+        for i in 0..m {
+            let cb = cost[basis[i]];
+            if cb != 0.0 {
+                for j in 0..=total {
+                    tab[m][j] -= cb * tab[i][j];
+                }
+            }
+        }
+    }
+
+    fn pivot(tab: &mut [Vec<f64>], basis: &mut [usize], m: usize, total: usize, r: usize, c: usize) {
+        let p = tab[r][c];
+        for j in 0..=total {
+            tab[r][j] /= p;
+        }
+        for i in 0..=m {
+            if i != r && tab[i][c].abs() > 0.0 {
+                let f = tab[i][c];
+                for j in 0..=total {
+                    tab[i][j] -= f * tab[r][j];
+                }
+            }
+        }
+        basis[r] = c;
+    }
+
+    fn iterate(tab: &mut [Vec<f64>], basis: &mut [usize], m: usize, total: usize, banned: &[bool]) -> SimplexStatus {
+        let max_iter = 200 * (m + total) + 2000;
+        let bland_after = 20 * (m + total) + 200;
+        for it in 0..max_iter {
+            // entering column
+            let mut enter: Option<usize> = None;
+            if it < bland_after {
+                let mut best = -EPS;
+                for (j, &ban) in banned.iter().enumerate() {
+                    if !ban && tab[m][j] < best {
+                        best = tab[m][j];
+                        enter = Some(j);
+                    }
+                }
+            } else {
+                enter = (0..total).find(|&j| !banned[j] && tab[m][j] < -EPS);
+            }
+            let Some(c) = enter else {
+                return SimplexStatus::Optimal;
+            };
+            // ratio test
+            let mut leave: Option<usize> = None;
+            let mut best_ratio = f64::INFINITY;
+            for i in 0..m {
+                if tab[i][c] > EPS {
+                    let r = tab[i][total] / tab[i][c];
+                    if r < best_ratio - EPS || (r < best_ratio + EPS && leave.map_or(true, |l| basis[i] < basis[l])) {
+                        best_ratio = r;
+                        leave = Some(i);
+                    }
+                }
+            }
+            let Some(r) = leave else {
+                return SimplexStatus::Unbounded;
+            };
+            Self::pivot(tab, basis, m, total, r, c);
+        }
+        SimplexStatus::MaxIter
+    }
+}
+
+enum SimplexStatus {
+    Optimal,
+    Unbounded,
+    MaxIter,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_opt(r: &LpResult, want_obj: f64, want_x: Option<&[f64]>) {
+        match r {
+            LpResult::Optimal { x, obj } => {
+                assert!((obj - want_obj).abs() < 1e-6, "obj={obj} want {want_obj}");
+                if let Some(w) = want_x {
+                    for (a, b) in x.iter().zip(w) {
+                        assert!((a - b).abs() < 1e-6, "x={x:?} want {w:?}");
+                    }
+                }
+            }
+            other => panic!("expected optimal, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn textbook_maximization() {
+        // max 3x + 5y s.t. x ≤ 4, 2y ≤ 12, 3x + 2y ≤ 18 → (2, 6), obj 36
+        let mut lp = LinProg::new(2);
+        lp.objective = vec![-3.0, -5.0];
+        lp.constrain(vec![(0, 1.0)], Cmp::Le, 4.0);
+        lp.constrain(vec![(1, 2.0)], Cmp::Le, 12.0);
+        lp.constrain(vec![(0, 3.0), (1, 2.0)], Cmp::Le, 18.0);
+        assert_opt(&lp.solve(), -36.0, Some(&[2.0, 6.0]));
+    }
+
+    #[test]
+    fn equality_constraints() {
+        // min x + y s.t. x + y = 10, x ≥ 3 → obj 10
+        let mut lp = LinProg::new(2);
+        lp.objective = vec![1.0, 1.0];
+        lp.constrain(vec![(0, 1.0), (1, 1.0)], Cmp::Eq, 10.0);
+        lp.constrain(vec![(0, 1.0)], Cmp::Ge, 3.0);
+        assert_opt(&lp.solve(), 10.0, None);
+    }
+
+    #[test]
+    fn ge_constraints_phase1() {
+        // min 2x + 3y s.t. x + y ≥ 4, x + 3y ≥ 6 → (3, 1), obj 9
+        let mut lp = LinProg::new(2);
+        lp.objective = vec![2.0, 3.0];
+        lp.constrain(vec![(0, 1.0), (1, 1.0)], Cmp::Ge, 4.0);
+        lp.constrain(vec![(0, 1.0), (1, 3.0)], Cmp::Ge, 6.0);
+        assert_opt(&lp.solve(), 9.0, Some(&[3.0, 1.0]));
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        // x ≤ 1 and x ≥ 2
+        let mut lp = LinProg::new(1);
+        lp.objective = vec![1.0];
+        lp.constrain(vec![(0, 1.0)], Cmp::Le, 1.0);
+        lp.constrain(vec![(0, 1.0)], Cmp::Ge, 2.0);
+        assert_eq!(lp.solve(), LpResult::Infeasible);
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        // min -x, x ≥ 0 unconstrained above
+        let mut lp = LinProg::new(1);
+        lp.objective = vec![-1.0];
+        assert_eq!(lp.solve(), LpResult::Unbounded);
+    }
+
+    #[test]
+    fn upper_bounds_respected() {
+        let mut lp = LinProg::new(1);
+        lp.objective = vec![-1.0];
+        lp.upper[0] = 7.5;
+        assert_opt(&lp.solve(), -7.5, Some(&[7.5]));
+    }
+
+    #[test]
+    fn negative_rhs_normalized() {
+        // x - y ≤ -2 (i.e. y ≥ x + 2), min y → x=0, y=2
+        let mut lp = LinProg::new(2);
+        lp.objective = vec![0.0, 1.0];
+        lp.constrain(vec![(0, 1.0), (1, -1.0)], Cmp::Le, -2.0);
+        assert_opt(&lp.solve(), 2.0, Some(&[0.0, 2.0]));
+    }
+
+    #[test]
+    fn degenerate_does_not_cycle() {
+        // classic degeneracy: several redundant constraints at the optimum
+        let mut lp = LinProg::new(2);
+        lp.objective = vec![-1.0, -1.0];
+        lp.constrain(vec![(0, 1.0)], Cmp::Le, 1.0);
+        lp.constrain(vec![(1, 1.0)], Cmp::Le, 1.0);
+        lp.constrain(vec![(0, 1.0), (1, 1.0)], Cmp::Le, 2.0);
+        lp.constrain(vec![(0, 1.0), (1, 1.0)], Cmp::Le, 2.0);
+        assert_opt(&lp.solve(), -2.0, Some(&[1.0, 1.0]));
+    }
+
+    #[test]
+    fn redundant_equalities() {
+        let mut lp = LinProg::new(2);
+        lp.objective = vec![1.0, 2.0];
+        lp.constrain(vec![(0, 1.0), (1, 1.0)], Cmp::Eq, 5.0);
+        lp.constrain(vec![(0, 2.0), (1, 2.0)], Cmp::Eq, 10.0); // same plane
+        assert_opt(&lp.solve(), 5.0, Some(&[5.0, 0.0]));
+    }
+
+    #[test]
+    fn bigger_random_lp_agrees_with_bound() {
+        // min Σ x_i s.t. for each i: x_i ≥ i → obj = Σ i
+        let n = 30;
+        let mut lp = LinProg::new(n);
+        lp.objective = vec![1.0; n];
+        for i in 0..n {
+            lp.constrain(vec![(i, 1.0)], Cmp::Ge, i as f64);
+        }
+        let want: f64 = (0..n).map(|i| i as f64).sum();
+        assert_opt(&lp.solve(), want, None);
+    }
+
+    #[test]
+    fn mixed_system() {
+        // min -x - 2y s.t. x + y ≤ 4, x - y ≥ -2, y = 2 → x=2,y=2, obj -6
+        let mut lp = LinProg::new(2);
+        lp.objective = vec![-1.0, -2.0];
+        lp.constrain(vec![(0, 1.0), (1, 1.0)], Cmp::Le, 4.0);
+        lp.constrain(vec![(0, 1.0), (1, -1.0)], Cmp::Ge, -2.0);
+        lp.constrain(vec![(1, 1.0)], Cmp::Eq, 2.0);
+        assert_opt(&lp.solve(), -6.0, Some(&[2.0, 2.0]));
+    }
+}

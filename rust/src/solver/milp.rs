@@ -1,0 +1,312 @@
+//! Branch-and-bound MILP solver over the simplex LP relaxation.
+//!
+//! The paper hands its SPASE formulation to Gurobi with a wall-clock
+//! timeout and takes the incumbent. This module plays Gurobi's role: an
+//! anytime exact search — best-first branch-and-bound, most-fractional
+//! branching, incumbent tracking — returning the best integral solution
+//! found when the deadline (or the tree) is exhausted.
+
+use super::lp::{Cmp, LinProg, LpResult};
+use crate::util::Deadline;
+
+/// A mixed-integer linear program: an LP plus integrality marks.
+#[derive(Debug, Clone)]
+pub struct Milp {
+    /// The relaxation.
+    pub lp: LinProg,
+    /// Indices of variables required to be integral.
+    pub integers: Vec<usize>,
+}
+
+/// Termination status.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MilpStatus {
+    /// Search tree exhausted: the incumbent is optimal.
+    Optimal,
+    /// Deadline hit: incumbent is best-found, not proven optimal.
+    TimedOut,
+    /// No feasible integral point exists.
+    Infeasible,
+}
+
+/// Solver outcome.
+#[derive(Debug, Clone)]
+pub struct MilpResult {
+    /// Best integral solution (x, objective), if any.
+    pub best: Option<(Vec<f64>, f64)>,
+    /// How the search ended.
+    pub status: MilpStatus,
+    /// Branch-and-bound nodes explored.
+    pub nodes: usize,
+    /// Nodes whose relaxation was infeasible.
+    pub lp_infeasible: usize,
+    /// Nodes abandoned for numerical trouble (simplex iteration cap).
+    pub lp_maxiter: usize,
+}
+
+const INT_TOL: f64 = 1e-6;
+
+/// One B&B node: extra bounds layered on the root LP.
+#[derive(Debug, Clone)]
+struct BbNode {
+    /// (var, lower) overrides.
+    lows: Vec<(usize, f64)>,
+    /// (var, upper) overrides.
+    highs: Vec<(usize, f64)>,
+    /// Parent LP bound (for best-first ordering).
+    bound: f64,
+}
+
+impl Milp {
+    /// Solve with best-first branch and bound under `deadline`.
+    /// `warm` optionally seeds the incumbent (e.g. from a heuristic).
+    pub fn solve(&self, deadline: Deadline, warm: Option<(Vec<f64>, f64)>) -> MilpResult {
+        let mut best: Option<(Vec<f64>, f64)> = warm.filter(|(x, _)| self.is_integral(x));
+        let mut nodes = 0usize;
+        let mut lp_infeasible = 0usize;
+        let mut lp_maxiter = 0usize;
+        let mut open: Vec<BbNode> = vec![BbNode { lows: vec![], highs: vec![], bound: f64::NEG_INFINITY }];
+        let mut any_feasible_relaxation = false;
+        let mut timed_out = false;
+
+        while let Some(node) = Self::pop_best(&mut open) {
+            if deadline.expired() {
+                timed_out = true;
+                break;
+            }
+            // prune by incumbent using the parent bound
+            if let Some((_, inc)) = &best {
+                if node.bound >= *inc - INT_TOL {
+                    continue;
+                }
+            }
+            nodes += 1;
+            if std::env::var("MILP_DEBUG").is_ok() && nodes <= 40 {
+                eprintln!("node {nodes}: depth={} bound={}", node.lows.len() + node.highs.len(), node.bound);
+            }
+            let mut lp = self.lp.clone();
+            for &(v, lo) in &node.lows {
+                lp.constrain(vec![(v, 1.0)], Cmp::Ge, lo);
+            }
+            for &(v, hi) in &node.highs {
+                lp.upper[v] = lp.upper[v].min(hi);
+            }
+            let (x, obj) = match lp.solve() {
+                LpResult::Optimal { x, obj } => (x, obj),
+                LpResult::Infeasible => {
+                    lp_infeasible += 1;
+                    continue;
+                }
+                LpResult::Unbounded | LpResult::MaxIter => {
+                    // Unbounded relaxation of a bounded MILP, or numerical
+                    // trouble: cannot bound this subtree, skip it.
+                    lp_maxiter += 1;
+                    continue;
+                }
+            };
+            any_feasible_relaxation = true;
+            if let Some((_, inc)) = &best {
+                if obj >= *inc - INT_TOL {
+                    continue;
+                }
+            }
+            // most fractional integer variable
+            let frac = self
+                .integers
+                .iter()
+                .map(|&i| (i, (x[i] - x[i].round()).abs()))
+                .filter(|(_, f)| *f > INT_TOL)
+                .max_by(|a, b| a.1.total_cmp(&b.1));
+            match frac {
+                None => {
+                    // integral: candidate incumbent
+                    if best.as_ref().map_or(true, |(_, inc)| obj < *inc - INT_TOL) {
+                        best = Some((x, obj));
+                    }
+                }
+                Some((v, _)) => {
+                    let floor = x[v].floor();
+                    let mut down = node.clone();
+                    down.highs.push((v, floor));
+                    down.bound = obj;
+                    let mut up = node.clone();
+                    up.lows.push((v, floor + 1.0));
+                    up.bound = obj;
+                    open.push(down);
+                    open.push(up);
+                }
+            }
+        }
+
+        let status = if timed_out || (!open.is_empty() && deadline.expired()) {
+            MilpStatus::TimedOut
+        } else if best.is_some() {
+            MilpStatus::Optimal
+        } else if any_feasible_relaxation {
+            // tree exhausted with feasible relaxations but no integral point
+            MilpStatus::Infeasible
+        } else {
+            MilpStatus::Infeasible
+        };
+        MilpResult { best, status, nodes, lp_infeasible, lp_maxiter }
+    }
+
+    /// True if every integer-marked variable is integral in `x`.
+    pub fn is_integral(&self, x: &[f64]) -> bool {
+        self.integers.iter().all(|&i| (x[i] - x[i].round()).abs() <= INT_TOL)
+    }
+
+    /// Pop the next node: deepest-first (dive for incumbents quickly —
+    /// big-M relaxations give weak bounds, so pure best-first degenerates
+    /// to breadth-first), tie-broken by best parent bound.
+    fn pop_best(open: &mut Vec<BbNode>) -> Option<BbNode> {
+        if open.is_empty() {
+            return None;
+        }
+        let depth = |n: &BbNode| n.lows.len() + n.highs.len();
+        let mut bi = 0;
+        for (i, n) in open.iter().enumerate() {
+            let (di, db) = (depth(n), n.bound);
+            let (bd, bb) = (depth(&open[bi]), open[bi].bound);
+            if di > bd || (di == bd && db < bb) {
+                bi = i;
+            }
+        }
+        Some(open.swap_remove(bi))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn deadline() -> Deadline {
+        Deadline::after(Duration::from_secs(10))
+    }
+
+    #[test]
+    fn knapsack_small() {
+        // max 10a + 13b + 7c, 3a + 4b + 2c ≤ 6, binaries → a=0,b=1,c=1 (20)
+        let mut lp = LinProg::new(3);
+        lp.objective = vec![-10.0, -13.0, -7.0];
+        lp.upper = vec![1.0, 1.0, 1.0];
+        lp.constrain(vec![(0, 3.0), (1, 4.0), (2, 2.0)], Cmp::Le, 6.0);
+        let milp = Milp { lp, integers: vec![0, 1, 2] };
+        let r = milp.solve(deadline(), None);
+        assert_eq!(r.status, MilpStatus::Optimal);
+        let (x, obj) = r.best.unwrap();
+        assert!((obj + 20.0).abs() < 1e-6, "obj={obj}");
+        assert!((x[1] - 1.0).abs() < 1e-6 && (x[2] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn integer_rounding_matters() {
+        // max x s.t. 2x ≤ 5, x integer → 2 (LP relaxation: 2.5)
+        let mut lp = LinProg::new(1);
+        lp.objective = vec![-1.0];
+        lp.constrain(vec![(0, 2.0)], Cmp::Le, 5.0);
+        let milp = Milp { lp, integers: vec![0] };
+        let r = milp.solve(deadline(), None);
+        let (x, _) = r.best.unwrap();
+        assert!((x[0] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mixed_integer_continuous() {
+        // min y s.t. y ≥ x - 0.5, y ≥ 2.3 - x, x integer → x=1, y ≥ max(0.5, 1.3) = 1.3
+        let mut lp = LinProg::new(2);
+        lp.objective = vec![0.0, 1.0];
+        lp.constrain(vec![(1, 1.0), (0, -1.0)], Cmp::Ge, -0.5);
+        lp.constrain(vec![(1, 1.0), (0, 1.0)], Cmp::Ge, 2.3);
+        lp.upper[0] = 5.0;
+        let milp = Milp { lp, integers: vec![0] };
+        let r = milp.solve(deadline(), None);
+        let (x, obj) = r.best.unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-6, "x={x:?}");
+        assert!((obj - 1.3).abs() < 1e-6, "obj={obj}");
+    }
+
+    #[test]
+    fn infeasible_milp() {
+        // x ≥ 0.4, x ≤ 0.6, x integer
+        let mut lp = LinProg::new(1);
+        lp.objective = vec![1.0];
+        lp.constrain(vec![(0, 1.0)], Cmp::Ge, 0.4);
+        lp.upper[0] = 0.6;
+        let milp = Milp { lp, integers: vec![0] };
+        let r = milp.solve(deadline(), None);
+        assert_eq!(r.status, MilpStatus::Infeasible);
+        assert!(r.best.is_none());
+    }
+
+    #[test]
+    fn warm_start_is_used_and_improved() {
+        // max 5a + 4b, 6a + 4b ≤ 9, binaries → optimal a=0... a=1,b=0 (5) vs a=0,b=1 (4) vs both infeasible
+        let mut lp = LinProg::new(2);
+        lp.objective = vec![-5.0, -4.0];
+        lp.upper = vec![1.0, 1.0];
+        lp.constrain(vec![(0, 6.0), (1, 4.0)], Cmp::Le, 9.0);
+        let milp = Milp { lp, integers: vec![0, 1] };
+        // warm start with the worse solution (b only)
+        let r = milp.solve(deadline(), Some((vec![0.0, 1.0], -4.0)));
+        let (_, obj) = r.best.unwrap();
+        assert!((obj + 5.0).abs() < 1e-6, "obj={obj}");
+        assert_eq!(r.status, MilpStatus::Optimal);
+    }
+
+    #[test]
+    fn timeout_returns_incumbent() {
+        // a 12-item knapsack with an immediate warm start and 0-time budget
+        let n = 12;
+        let mut lp = LinProg::new(n);
+        for i in 0..n {
+            lp.objective[i] = -((i + 1) as f64);
+            lp.upper[i] = 1.0;
+        }
+        lp.constrain((0..n).map(|i| (i, (i % 3 + 1) as f64)).collect(), Cmp::Le, 7.0);
+        let milp = Milp { lp, integers: (0..n).collect() };
+        let warm_x = {
+            let mut x = vec![0.0; n];
+            x[n - 1] = 1.0;
+            x
+        };
+        let warm_obj = -(n as f64);
+        let d = Deadline::after(Duration::from_millis(0));
+        let r = milp.solve(d, Some((warm_x, warm_obj)));
+        assert_eq!(r.status, MilpStatus::TimedOut);
+        assert!(r.best.unwrap().1 <= warm_obj + 1e-9);
+    }
+
+    #[test]
+    fn gang_toy_scheduling_milp() {
+        // two unit jobs on one machine: start times s0, s1 ≥ 0, binary o
+        // (order), no-overlap via big-M; minimize makespan C.
+        // C ≥ s0+1, C ≥ s1+1; s0 ≥ s1+1 - M(1-o); s1 ≥ s0+1 - M·o
+        let m_big = 100.0;
+        let mut lp = LinProg::new(4); // s0, s1, o, c
+        lp.objective = vec![0.0, 0.0, 0.0, 1.0];
+        lp.upper[2] = 1.0;
+        lp.constrain(vec![(3, 1.0), (0, -1.0)], Cmp::Ge, 1.0);
+        lp.constrain(vec![(3, 1.0), (1, -1.0)], Cmp::Ge, 1.0);
+        lp.constrain(vec![(0, 1.0), (1, -1.0), (2, -m_big)], Cmp::Ge, 1.0 - m_big);
+        lp.constrain(vec![(1, 1.0), (0, -1.0), (2, m_big)], Cmp::Ge, 1.0);
+        let milp = Milp { lp, integers: vec![2] };
+        let r = milp.solve(deadline(), None);
+        let (_, obj) = r.best.unwrap();
+        assert!((obj - 2.0).abs() < 1e-5, "makespan={obj}");
+    }
+
+    #[test]
+    fn node_count_reported() {
+        let mut lp = LinProg::new(2);
+        lp.objective = vec![-1.0, -1.0];
+        lp.upper = vec![1.0, 1.0];
+        lp.constrain(vec![(0, 1.0), (1, 1.0)], Cmp::Le, 1.5);
+        let milp = Milp { lp, integers: vec![0, 1] };
+        let r = milp.solve(deadline(), None);
+        assert!(r.nodes >= 1);
+        assert_eq!(r.status, MilpStatus::Optimal);
+        assert!((r.best.unwrap().1 + 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,21 @@
+//! The SPASE joint optimizer stack.
+//!
+//! - [`lp`]: dense two-phase simplex.
+//! - [`milp`]: branch-and-bound over the LP relaxation (the "industrial
+//!   solver under a timeout" role Gurobi plays in the paper).
+//! - [`spase`]: the paper's exact MILP formulation (eqs. 1–11).
+//! - [`joint`]: the production anytime optimizer — heuristic warm starts +
+//!   simulated-annealing / large-neighborhood incumbent search over
+//!   (configuration, order, node) decisions, evaluated through the gang
+//!   list scheduler. Cross-validated against [`spase`] on tiny instances.
+//! - [`policy`]: the common interface all planners (Saturn + baselines)
+//!   implement, so the simulator and introspection loop can drive any of
+//!   them interchangeably.
+
+pub mod joint;
+pub mod lp;
+pub mod milp;
+pub mod policy;
+pub mod spase;
+
+pub use policy::{PlanCtx, Policy};

@@ -1,0 +1,181 @@
+//! The planner interface shared by Saturn's joint optimizer and every
+//! baseline, plus the planning context they all consume.
+//!
+//! A planner maps (workload, profile grid, cluster, remaining-work
+//! fractions) to a full execution plan. The *remaining-work* vector makes
+//! every planner introspection-ready (paper §4.4): at a round boundary the
+//! simulator re-invokes the planner with partially-trained tasks.
+
+use crate::cluster::Cluster;
+use crate::costmodel::ParallelismKind;
+use crate::profiler::{ProfileGrid, TaskConfig};
+use crate::sched::Schedule;
+use crate::solver::spase::SpaseTask;
+use crate::trainer::Workload;
+use crate::util::rng::DetRng;
+
+/// Everything a planner needs to produce a plan.
+#[derive(Debug, Clone)]
+pub struct PlanCtx<'a> {
+    /// The tasks (full definitions).
+    pub workload: &'a Workload,
+    /// Trial Runner output.
+    pub grid: &'a ProfileGrid,
+    /// The cluster.
+    pub cluster: &'a Cluster,
+    /// Fraction of each task's minibatches still to run, indexed like
+    /// `workload`. 1.0 = untrained, 0.0 = complete (excluded from plans).
+    pub remaining: Vec<f64>,
+}
+
+impl<'a> PlanCtx<'a> {
+    /// Fresh context: nothing trained yet.
+    pub fn fresh(workload: &'a Workload, grid: &'a ProfileGrid, cluster: &'a Cluster) -> Self {
+        Self { workload, grid, cluster, remaining: vec![1.0; workload.len()] }
+    }
+
+    /// Indices of tasks with work left.
+    pub fn active(&self) -> Vec<usize> {
+        (0..self.workload.len()).filter(|&i| self.remaining[i] > 1e-12).collect()
+    }
+
+    /// Configuration frontier for workload index `i`, with runtimes scaled
+    /// to the remaining work.
+    pub fn configs(&self, i: usize) -> Vec<TaskConfig> {
+        let mut cfgs = self.grid.configs(&self.workload[i]);
+        for c in &mut cfgs {
+            c.task_secs *= self.remaining[i];
+        }
+        cfgs
+    }
+
+    /// The best configuration at an exact GPU count, remaining-scaled.
+    pub fn best_at(&self, i: usize, gpus: usize) -> Option<TaskConfig> {
+        let t = &self.workload[i];
+        self.grid.best_at(t.id, gpus).map(|p| TaskConfig {
+            gpus,
+            upp: p.upp.clone(),
+            kind: p.kind,
+            knobs: p.knobs,
+            minibatch_secs: p.minibatch_secs,
+            task_secs: t.total_runtime(p.minibatch_secs) * self.remaining[i],
+        })
+    }
+
+    /// A specific parallelism's configuration at an exact GPU count.
+    pub fn kind_at(&self, i: usize, kind: ParallelismKind, gpus: usize) -> Option<TaskConfig> {
+        let t = &self.workload[i];
+        self.grid.get(t.id, kind.name(), gpus).map(|p| TaskConfig {
+            gpus,
+            upp: p.upp.clone(),
+            kind: p.kind,
+            knobs: p.knobs,
+            minibatch_secs: p.minibatch_secs,
+            task_secs: t.total_runtime(p.minibatch_secs) * self.remaining[i],
+        })
+    }
+
+    /// Active tasks as SPASE instances (configuration grids attached).
+    pub fn spase_tasks(&self) -> Vec<SpaseTask> {
+        self.active()
+            .into_iter()
+            .map(|i| SpaseTask { id: self.workload[i].id, configs: self.configs(i) })
+            .collect()
+    }
+
+    /// Pick a node index randomly, weighted by GPU count (how the paper
+    /// adapts node-unaware baselines to heterogeneous clusters, §4.3.2).
+    pub fn weighted_node(&self, rng: &mut DetRng) -> usize {
+        let total: usize = self.cluster.nodes.iter().map(|n| n.gpus).sum();
+        let mut draw = rng.below(total.max(1));
+        for (i, n) in self.cluster.nodes.iter().enumerate() {
+            if draw < n.gpus {
+                return i;
+            }
+            draw -= n.gpus;
+        }
+        self.cluster.nodes.len() - 1
+    }
+}
+
+/// A planner: Saturn's joint optimizer or any baseline.
+pub trait Policy {
+    /// Display name (matches the paper's baseline labels).
+    fn name(&self) -> &str;
+
+    /// Produce a full plan for the context's active tasks.
+    fn plan(&self, ctx: &PlanCtx, rng: &mut DetRng) -> Schedule;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::CostModel;
+    use crate::parallelism::UppRegistry;
+    use crate::profiler::TrialRunner;
+    use crate::trainer::workloads;
+    use std::sync::Arc;
+
+    fn setup() -> (Workload, ProfileGrid, Cluster) {
+        let w = workloads::txt_workload();
+        let c = Cluster::single_node_8gpu();
+        let runner = TrialRunner::new(UppRegistry::default_library(Arc::new(CostModel::default())));
+        let (grid, _) = runner.profile(&w, &c);
+        (w, grid, c)
+    }
+
+    #[test]
+    fn fresh_ctx_all_active() {
+        let (w, grid, c) = setup();
+        let ctx = PlanCtx::fresh(&w, &grid, &c);
+        assert_eq!(ctx.active().len(), w.len());
+    }
+
+    #[test]
+    fn remaining_scales_runtimes() {
+        let (w, grid, c) = setup();
+        let mut ctx = PlanCtx::fresh(&w, &grid, &c);
+        let full = ctx.configs(0);
+        ctx.remaining[0] = 0.5;
+        let half = ctx.configs(0);
+        for (f, h) in full.iter().zip(&half) {
+            assert!((h.task_secs - 0.5 * f.task_secs).abs() < 1e-9);
+            assert_eq!(f.gpus, h.gpus);
+        }
+    }
+
+    #[test]
+    fn finished_tasks_drop_out() {
+        let (w, grid, c) = setup();
+        let mut ctx = PlanCtx::fresh(&w, &grid, &c);
+        ctx.remaining[3] = 0.0;
+        let active = ctx.active();
+        assert_eq!(active.len(), w.len() - 1);
+        assert!(!active.contains(&3));
+        assert_eq!(ctx.spase_tasks().len(), w.len() - 1);
+    }
+
+    #[test]
+    fn weighted_node_distribution() {
+        let (w, grid, _) = setup();
+        let c = Cluster::heterogeneous_16gpu(); // 2,2,4,8
+        let ctx = PlanCtx::fresh(&w, &grid, &c);
+        let mut rng = DetRng::new(17);
+        let mut counts = [0usize; 4];
+        for _ in 0..4000 {
+            counts[ctx.weighted_node(&mut rng)] += 1;
+        }
+        // node 3 (8 GPUs) should get ~2× node 2 (4 GPUs) and ~4× node 0
+        assert!(counts[3] > counts[2]);
+        assert!(counts[2] > counts[0] + counts[0] / 2);
+    }
+
+    #[test]
+    fn kind_at_respects_feasibility() {
+        let (w, grid, c) = setup();
+        let ctx = PlanCtx::fresh(&w, &grid, &c);
+        let gptj_idx = w.iter().position(|t| t.model.name.contains("gpt-j")).unwrap();
+        assert!(ctx.kind_at(gptj_idx, ParallelismKind::Ddp, 8).is_none());
+        assert!(ctx.kind_at(gptj_idx, ParallelismKind::Spilling, 1).is_some());
+    }
+}

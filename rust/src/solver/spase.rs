@@ -1,0 +1,558 @@
+//! The paper's SPASE MILP formulation (§4.2, eqs. 1–11).
+//!
+//! Builds the exact mixed-integer program over the Trial Runner's
+//! configuration grid and decodes solver output into a [`Schedule`].
+//! Variables (Table 2): makespan `C`; per-task configuration selectors
+//! `B_{t,s}`; node selectors `O_{t,n}`; GPU indicators `P_{t,n,g}`;
+//! ordering indicators `A_{t1,t2}`; start times `I_{t,n,g}`.
+//!
+//! The formulation is faithful to the paper, including the gang-scheduling
+//! trick of eqs. 8–9 (average-start-time consistency) and the big-M
+//! ordering constraints of eqs. 10–11. Exact solves are tractable only for
+//! small instances (the big-M relaxations are weak); Saturn's production
+//! path is the anytime [`super::joint::JointOptimizer`], which this module
+//! cross-validates on tiny instances (see tests).
+
+use super::milp::{Milp, MilpResult};
+use crate::cluster::Cluster;
+use crate::profiler::TaskConfig;
+use crate::sched::{Assignment, Schedule};
+use crate::solver::lp::{Cmp, LinProg};
+use crate::util::Deadline;
+
+/// One task as the MILP sees it: its id and its configuration list
+/// (`G_t`, `R_t` in the paper's notation).
+#[derive(Debug, Clone)]
+pub struct SpaseTask {
+    /// Task id.
+    pub id: usize,
+    /// Available configurations (parallelism+gpus with runtimes).
+    pub configs: Vec<TaskConfig>,
+}
+
+/// A SPASE problem instance.
+#[derive(Debug, Clone)]
+pub struct SpaseInstance {
+    /// Tasks with their configuration grids.
+    pub tasks: Vec<SpaseTask>,
+    /// The cluster.
+    pub cluster: Cluster,
+}
+
+/// Variable indexing for the MILP.
+struct VarMap {
+    c: usize,
+    b: Vec<Vec<usize>>,           // [t][s]
+    o: Vec<Vec<usize>>,           // [t][n]
+    p: Vec<Vec<Vec<usize>>>,      // [t][n][g]
+    a: Vec<Vec<Option<usize>>>,   // [t1][t2], None on diagonal
+    i: Vec<Vec<Vec<usize>>>,      // [t][n][g]
+    total: usize,
+}
+
+impl SpaseInstance {
+    /// Horizon-scale big-M: serial sum of each task's worst runtime.
+    pub fn big_m(&self) -> f64 {
+        let sum: f64 = self
+            .tasks
+            .iter()
+            .map(|t| t.configs.iter().map(|c| c.task_secs).fold(0.0, f64::max))
+            .sum();
+        (sum + 1.0) * 2.0
+    }
+
+    fn var_map(&self) -> VarMap {
+        let nt = self.tasks.len();
+        let nn = self.cluster.nodes.len();
+        let mut next = 0usize;
+        let mut alloc = |k: usize| {
+            let start = next;
+            next += k;
+            start
+        };
+        let c = alloc(1);
+        let mut b = Vec::with_capacity(nt);
+        for t in &self.tasks {
+            let s0 = alloc(t.configs.len());
+            b.push((s0..s0 + t.configs.len()).collect());
+        }
+        let mut o = Vec::with_capacity(nt);
+        for _ in 0..nt {
+            let s0 = alloc(nn);
+            o.push((s0..s0 + nn).collect());
+        }
+        let mut p = Vec::with_capacity(nt);
+        for _ in 0..nt {
+            let mut per_node = Vec::with_capacity(nn);
+            for node in &self.cluster.nodes {
+                let s0 = alloc(node.gpus);
+                per_node.push((s0..s0 + node.gpus).collect());
+            }
+            p.push(per_node);
+        }
+        let mut a = vec![vec![None; nt]; nt];
+        for t1 in 0..nt {
+            for t2 in 0..nt {
+                if t1 != t2 {
+                    a[t1][t2] = Some(alloc(1));
+                }
+            }
+        }
+        let mut i = Vec::with_capacity(nt);
+        for _ in 0..nt {
+            let mut per_node = Vec::with_capacity(nn);
+            for node in &self.cluster.nodes {
+                let s0 = alloc(node.gpus);
+                per_node.push((s0..s0 + node.gpus).collect());
+            }
+            i.push(per_node);
+        }
+        VarMap { c, b, o, p, a, i, total: next }
+    }
+
+    /// Build the MILP per eqs. 1–11.
+    pub fn build_milp(&self) -> (Milp, SpaseDecoder) {
+        let vm = self.var_map();
+        let u = self.big_m();
+        let nt = self.tasks.len();
+        let nn = self.cluster.nodes.len();
+        let mut lp = LinProg::new(vm.total);
+        let mut integers = Vec::new();
+
+        // objective (eq. 1): min C
+        lp.objective[vm.c] = 1.0;
+
+        // binaries
+        for t in 0..nt {
+            for &v in &vm.b[t] {
+                lp.upper[v] = 1.0;
+                integers.push(v);
+            }
+            for &v in &vm.o[t] {
+                lp.upper[v] = 1.0;
+                integers.push(v);
+            }
+            for n in 0..nn {
+                for &v in &vm.p[t][n] {
+                    lp.upper[v] = 1.0;
+                    integers.push(v);
+                }
+            }
+        }
+        for t1 in 0..nt {
+            for t2 in 0..nt {
+                if let Some(v) = vm.a[t1][t2] {
+                    lp.upper[v] = 1.0;
+                    integers.push(v);
+                }
+            }
+        }
+
+        // eq. 2: C ≥ I_{t,n,g} + R_{t,s} − U(1 − B_{t,s})
+        for (t, task) in self.tasks.iter().enumerate() {
+            for (s, cfg) in task.configs.iter().enumerate() {
+                for n in 0..nn {
+                    for g in 0..self.cluster.nodes[n].gpus {
+                        lp.constrain(
+                            vec![(vm.c, 1.0), (vm.i[t][n][g], -1.0), (vm.b[t][s], -u)],
+                            Cmp::Ge,
+                            cfg.task_secs - u,
+                        );
+                    }
+                }
+            }
+        }
+
+        // eq. 3: Σ_s B_{t,s} = 1 and Σ_n O_{t,n} = 1
+        for t in 0..nt {
+            lp.constrain(vm.b[t].iter().map(|&v| (v, 1.0)).collect(), Cmp::Eq, 1.0);
+            lp.constrain(vm.o[t].iter().map(|&v| (v, 1.0)).collect(), Cmp::Eq, 1.0);
+        }
+
+        // eqs. 4–7: GPU counts match the selected configuration; no GPUs on
+        // unselected nodes.
+        for (t, task) in self.tasks.iter().enumerate() {
+            for n in 0..nn {
+                let sum_p: Vec<(usize, f64)> = vm.p[t][n].iter().map(|&v| (v, 1.0)).collect();
+                for (s, cfg) in task.configs.iter().enumerate() {
+                    let g_ts = cfg.gpus as f64;
+                    // (4) ΣP ≥ G_ts − U(2 − O − B)
+                    let mut terms = sum_p.clone();
+                    terms.push((vm.o[t][n], -u));
+                    terms.push((vm.b[t][s], -u));
+                    lp.constrain(terms, Cmp::Ge, g_ts - 2.0 * u);
+                    // (5) ΣP ≤ G_ts + U(2 − O − B)
+                    let mut terms = sum_p.clone();
+                    terms.push((vm.o[t][n], u));
+                    terms.push((vm.b[t][s], u));
+                    lp.constrain(terms, Cmp::Le, g_ts + 2.0 * u);
+                    // (6) ΣP ≥ −U(O + B) — vacuous with P ≥ 0, kept for fidelity
+                    let mut terms = sum_p.clone();
+                    terms.push((vm.o[t][n], u));
+                    terms.push((vm.b[t][s], u));
+                    lp.constrain(terms, Cmp::Ge, 0.0);
+                    // (7) ΣP ≤ U(O + B)
+                    let mut terms = sum_p.clone();
+                    terms.push((vm.o[t][n], -u));
+                    terms.push((vm.b[t][s], -u));
+                    lp.constrain(terms, Cmp::Le, 0.0);
+                }
+                // strengthening implied by eq. 7's intent (robust when a
+                // task has a single configuration): ΣP ≤ gpus·O
+                let mut terms = sum_p.clone();
+                terms.push((vm.o[t][n], -(self.cluster.nodes[n].gpus as f64)));
+                lp.constrain(terms, Cmp::Le, 0.0);
+            }
+        }
+
+        // eqs. 8–9: gang scheduling — every used GPU's start equals the
+        // average start over allocated GPUs.
+        for (t, task) in self.tasks.iter().enumerate() {
+            for (s, cfg) in task.configs.iter().enumerate() {
+                let g_ts = cfg.gpus as f64;
+                for n in 0..nn {
+                    for g in 0..self.cluster.nodes[n].gpus {
+                        // (Σ_x I_{t,n,x})/G ≤ I_{t,n,g} + U(3 − P − B − O)
+                        let mut terms: Vec<(usize, f64)> =
+                            vm.i[t][n].iter().map(|&v| (v, 1.0 / g_ts)).collect();
+                        terms.push((vm.i[t][n][g], -1.0));
+                        terms.push((vm.p[t][n][g], u));
+                        terms.push((vm.b[t][s], u));
+                        terms.push((vm.o[t][n], u));
+                        lp.constrain(terms, Cmp::Le, 3.0 * u);
+                        // (Σ_x I_{t,n,x})/G ≥ I_{t,n,g} − U(3 − P − B − O)
+                        let mut terms: Vec<(usize, f64)> =
+                            vm.i[t][n].iter().map(|&v| (v, 1.0 / g_ts)).collect();
+                        terms.push((vm.i[t][n][g], -1.0));
+                        terms.push((vm.p[t][n][g], -u));
+                        terms.push((vm.b[t][s], -u));
+                        terms.push((vm.o[t][n], -u));
+                        lp.constrain(terms, Cmp::Ge, -3.0 * u);
+                    }
+                }
+            }
+        }
+
+        // eqs. 10–11: task isolation on shared GPUs via ordering binaries.
+        for t1 in 0..nt {
+            for t2 in 0..nt {
+                if t1 == t2 {
+                    continue;
+                }
+                let a21 = vm.a[t2][t1].unwrap();
+                for n in 0..nn {
+                    for g in 0..self.cluster.nodes[n].gpus {
+                        // (10) t1 before t2 (A_{t2,t1} = 0):
+                        // I_{t1} ≤ I_{t2} − R_{t1,s} + U((3 − P1 − P2 − B_{t1,s}) + A_{t2,t1})
+                        for (s, cfg) in self.tasks[t1].configs.iter().enumerate() {
+                            let terms = vec![
+                                (vm.i[t1][n][g], 1.0),
+                                (vm.i[t2][n][g], -1.0),
+                                (vm.p[t1][n][g], u),
+                                (vm.p[t2][n][g], u),
+                                (vm.b[t1][s], u),
+                                (a21, -u),
+                            ];
+                            lp.constrain(terms, Cmp::Le, -cfg.task_secs + 3.0 * u);
+                        }
+                        // (11) t2 before t1 (A_{t2,t1} = 1):
+                        // I_{t1} ≥ I_{t2} + R_{t2,s} − U(4 − P1 − P2 − A_{t2,t1} − B_{t2,s})
+                        for (s, cfg) in self.tasks[t2].configs.iter().enumerate() {
+                            let terms = vec![
+                                (vm.i[t1][n][g], 1.0),
+                                (vm.i[t2][n][g], -1.0),
+                                (vm.p[t1][n][g], -u),
+                                (vm.p[t2][n][g], -u),
+                                (a21, -u),
+                                (vm.b[t2][s], -u),
+                            ];
+                            lp.constrain(terms, Cmp::Ge, cfg.task_secs - 4.0 * u);
+                        }
+                    }
+                }
+            }
+        }
+
+        (
+            Milp { lp, integers },
+            SpaseDecoder {
+                tasks: self.tasks.clone(),
+                node_gpus: self.cluster.nodes.iter().map(|n| n.gpus).collect(),
+            },
+        )
+    }
+
+    /// Build, solve under `deadline`, decode. Returns `None` if no
+    /// integral incumbent was found.
+    pub fn solve_exact(&self, deadline: Deadline) -> Option<(Schedule, MilpResult)> {
+        let (milp, decoder) = self.build_milp();
+        let result = milp.solve(deadline, None);
+        let (x, _) = result.best.clone()?;
+        Some((decoder.decode(&x), result))
+    }
+}
+
+/// Decodes a MILP variable vector into a [`Schedule`].
+pub struct SpaseDecoder {
+    tasks: Vec<SpaseTask>,
+    node_gpus: Vec<usize>,
+}
+
+impl SpaseDecoder {
+    /// Extract assignments from the solution vector.
+    pub fn decode(&self, x: &[f64]) -> Schedule {
+        // rebuild the same variable layout
+        let inst_like = VarLayout::new(&self.tasks, &self.node_gpus);
+        let mut assignments = Vec::new();
+        for (t, task) in self.tasks.iter().enumerate() {
+            let s = (0..task.configs.len())
+                .find(|&s| x[inst_like.b[t][s]] > 0.5)
+                .expect("one config selected");
+            let n = (0..self.node_gpus.len())
+                .find(|&n| x[inst_like.o[t][n]] > 0.5)
+                .expect("one node selected");
+            let gpus: Vec<usize> =
+                (0..self.node_gpus[n]).filter(|&g| x[inst_like.p[t][n][g]] > 0.5).collect();
+            let start = gpus
+                .iter()
+                .map(|&g| x[inst_like.i[t][n][g]])
+                .fold(0.0f64, f64::max);
+            let cfg = task.configs[s].clone();
+            assignments.push(Assignment {
+                task_id: task.id,
+                node: n,
+                gpus,
+                start,
+                duration: cfg.task_secs,
+                config: cfg,
+            });
+        }
+        Schedule { assignments }
+    }
+}
+
+/// Shared variable layout (must match [`SpaseInstance::var_map`]).
+struct VarLayout {
+    b: Vec<Vec<usize>>,
+    o: Vec<Vec<usize>>,
+    p: Vec<Vec<Vec<usize>>>,
+    i: Vec<Vec<Vec<usize>>>,
+}
+
+impl VarLayout {
+    fn new(tasks: &[SpaseTask], node_gpus: &[usize]) -> Self {
+        let nt = tasks.len();
+        let nn = node_gpus.len();
+        let mut next = 1usize; // 0 = C
+        let mut alloc = |k: usize| {
+            let s = next;
+            next += k;
+            s
+        };
+        let mut b = Vec::with_capacity(nt);
+        for t in tasks {
+            let s0 = alloc(t.configs.len());
+            b.push((s0..s0 + t.configs.len()).collect());
+        }
+        let mut o = Vec::with_capacity(nt);
+        for _ in 0..nt {
+            let s0 = alloc(nn);
+            o.push((s0..s0 + nn).collect());
+        }
+        let mut p = Vec::with_capacity(nt);
+        for _ in 0..nt {
+            let mut pn = Vec::with_capacity(nn);
+            for &g in node_gpus {
+                let s0 = alloc(g);
+                pn.push((s0..s0 + g).collect());
+            }
+            p.push(pn);
+        }
+        for t1 in 0..nt {
+            for t2 in 0..nt {
+                if t1 != t2 {
+                    alloc(1);
+                }
+            }
+        }
+        let mut i = Vec::with_capacity(nt);
+        for _ in 0..nt {
+            let mut pn = Vec::with_capacity(nn);
+            for &g in node_gpus {
+                let s0 = alloc(g);
+                pn.push((s0..s0 + g).collect());
+            }
+            i.push(pn);
+        }
+        Self { b, o, p, i }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::{Knobs, ParallelismKind};
+    use crate::solver::milp::MilpStatus;
+    use crate::model::ModelDesc;
+    use crate::trainer::{HParams, Optimizer, Task, Workload};
+    use std::time::Duration;
+
+    fn cfg(gpus: usize, secs: f64) -> TaskConfig {
+        TaskConfig {
+            gpus,
+            upp: "pytorch-fsdp".into(),
+            kind: ParallelismKind::Fsdp,
+            knobs: Knobs::default(),
+            minibatch_secs: secs / 100.0,
+            task_secs: secs,
+        }
+    }
+
+    fn workload_for(tasks: &[SpaseTask]) -> Workload {
+        tasks
+            .iter()
+            .map(|t| Task::new(t.id, ModelDesc::resnet_200m(), HParams::new(32, 1e-4, 1, Optimizer::Sgd), 3200))
+            .collect()
+    }
+
+    #[test]
+    fn two_tasks_two_gpus_parallel() {
+        if cfg!(debug_assertions) {
+            eprintln!("SKIP (debug build): exact-MILP search needs release-mode simplex speed");
+            return;
+        }
+        // each task: 1 GPU 100 s, or 2 GPUs 60 s. Optimal: both on 1 GPU in
+        // parallel → makespan 100 (vs 120 serialized at 2 GPUs each).
+        let inst = SpaseInstance {
+            tasks: vec![
+                SpaseTask { id: 0, configs: vec![cfg(1, 100.0), cfg(2, 60.0)] },
+                SpaseTask { id: 1, configs: vec![cfg(1, 100.0), cfg(2, 60.0)] },
+            ],
+            cluster: Cluster::from_gpu_counts(&[2]),
+        };
+        let (sched, res) = inst.solve_exact(Deadline::after(Duration::from_secs(60))).expect("solved");
+        assert_eq!(res.status, MilpStatus::Optimal);
+        assert!((sched.makespan() - 100.0).abs() < 1e-4, "makespan={}", sched.makespan());
+        sched.validate(&inst.cluster, &workload_for(&inst.tasks)).unwrap();
+    }
+
+    #[test]
+    fn scaling_up_wins_when_parallelism_cannot_help() {
+        // one task: 1 GPU 100 s vs 2 GPUs 55 s → choose 2 GPUs
+        let inst = SpaseInstance {
+            tasks: vec![SpaseTask { id: 0, configs: vec![cfg(1, 100.0), cfg(2, 55.0)] }],
+            cluster: Cluster::from_gpu_counts(&[2]),
+        };
+        let (sched, res) = inst.solve_exact(Deadline::after(Duration::from_secs(30))).expect("solved");
+        assert_eq!(res.status, MilpStatus::Optimal);
+        assert!((sched.makespan() - 55.0).abs() < 1e-4);
+        assert_eq!(sched.assignments[0].config.gpus, 2);
+    }
+
+    #[test]
+    fn serialization_when_sharing_required() {
+        // two tasks, 1 GPU total, only 1-GPU configs → makespan = sum
+        let inst = SpaseInstance {
+            tasks: vec![
+                SpaseTask { id: 0, configs: vec![cfg(1, 40.0)] },
+                SpaseTask { id: 1, configs: vec![cfg(1, 70.0)] },
+            ],
+            cluster: Cluster::from_gpu_counts(&[1]),
+        };
+        let (sched, res) = inst.solve_exact(Deadline::after(Duration::from_secs(30))).expect("solved");
+        assert_eq!(res.status, MilpStatus::Optimal);
+        assert!((sched.makespan() - 110.0).abs() < 1e-4, "makespan={}", sched.makespan());
+        sched.validate(&inst.cluster, &workload_for(&inst.tasks)).unwrap();
+    }
+
+    #[test]
+    fn two_nodes_used_for_parallelism() {
+        // two tasks, each only has a 2-GPU config; two 2-GPU nodes →
+        // one task per node, makespan = max not sum.
+        let inst = SpaseInstance {
+            tasks: vec![
+                SpaseTask { id: 0, configs: vec![cfg(2, 80.0)] },
+                SpaseTask { id: 1, configs: vec![cfg(2, 50.0)] },
+            ],
+            cluster: Cluster::from_gpu_counts(&[2, 2]),
+        };
+        let (sched, res) = inst.solve_exact(Deadline::after(Duration::from_secs(60))).expect("solved");
+        assert_eq!(res.status, MilpStatus::Optimal);
+        assert!((sched.makespan() - 80.0).abs() < 1e-4, "makespan={}", sched.makespan());
+        let n0 = sched.assignments[0].node;
+        let n1 = sched.assignments[1].node;
+        assert_ne!(n0, n1);
+    }
+
+    #[test]
+    fn gang_constraint_enforced_in_decode() {
+        let inst = SpaseInstance {
+            tasks: vec![SpaseTask { id: 0, configs: vec![cfg(2, 50.0)] }],
+            cluster: Cluster::from_gpu_counts(&[2]),
+        };
+        let (sched, _) = inst.solve_exact(Deadline::after(Duration::from_secs(30))).expect("solved");
+        assert_eq!(sched.assignments[0].gpus.len(), 2);
+        sched.validate(&inst.cluster, &workload_for(&inst.tasks)).unwrap();
+    }
+
+    #[test]
+    fn matches_brute_force_on_mixed_instance() {
+        if cfg!(debug_assertions) {
+            eprintln!("SKIP (debug build): exact-MILP search needs release-mode simplex speed");
+            return;
+        }
+        // 3 tasks on a 2-GPU node; configs make the tradeoff non-trivial.
+        let tasks = vec![
+            SpaseTask { id: 0, configs: vec![cfg(1, 90.0), cfg(2, 50.0)] },
+            SpaseTask { id: 1, configs: vec![cfg(1, 60.0), cfg(2, 35.0)] },
+            SpaseTask { id: 2, configs: vec![cfg(1, 30.0), cfg(2, 20.0)] },
+        ];
+        let cluster = Cluster::from_gpu_counts(&[2]);
+        let inst = SpaseInstance { tasks: tasks.clone(), cluster: cluster.clone() };
+        let (sched, _res) = inst.solve_exact(Deadline::after(Duration::from_secs(60))).expect("solved");
+        // brute force over config choices × permutations via list scheduling
+        let mut best = f64::INFINITY;
+        let perms: Vec<Vec<usize>> =
+            vec![vec![0, 1, 2], vec![0, 2, 1], vec![1, 0, 2], vec![1, 2, 0], vec![2, 0, 1], vec![2, 1, 0]];
+        for c0 in 0..2 {
+            for c1 in 0..2 {
+                for c2 in 0..2 {
+                    let choice = [c0, c1, c2];
+                    for perm in &perms {
+                        let choices: Vec<crate::sched::PlacementChoice> = perm
+                            .iter()
+                            .map(|&t| crate::sched::PlacementChoice {
+                                task_id: t,
+                                duration: tasks[t].configs[choice[t]].task_secs,
+                                config: tasks[t].configs[choice[t]].clone(),
+                                node: None,
+                            })
+                            .collect();
+                        let s = crate::sched::list_schedule(&choices, &cluster);
+                        if s.assignments.len() == 3 {
+                            best = best.min(s.makespan());
+                        }
+                    }
+                }
+            }
+        }
+        // the incumbent must match the brute-force optimum even if the
+        // solver has not yet *proven* optimality within the deadline
+        assert!(
+            (sched.makespan() - best).abs() < 1e-3,
+            "milp={} brute={}",
+            sched.makespan(),
+            best
+        );
+        sched.validate(&inst.cluster, &workload_for(&inst.tasks)).unwrap();
+    }
+
+    #[test]
+    fn big_m_scales_with_horizon() {
+        let inst = SpaseInstance {
+            tasks: vec![SpaseTask { id: 0, configs: vec![cfg(1, 1000.0)] }],
+            cluster: Cluster::from_gpu_counts(&[1]),
+        };
+        assert!(inst.big_m() > 1000.0);
+    }
+}

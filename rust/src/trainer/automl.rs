@@ -1,0 +1,172 @@
+//! AutoML model-selection controllers: early stopping over the evolving
+//! workload.
+//!
+//! The paper's introspection loop "naturally supports online AutoML
+//! optimizations such as early-stopping through workload reassessment"
+//! (§4.4) and the generality desideratum calls for grid/random search
+//! *and* AutoML heuristics (§1.2). This module provides that layer:
+//! controllers observe per-task progress at introspection boundaries and
+//! may kill tasks; the simulator re-plans the survivors.
+//!
+//! Included: [`SuccessiveHalving`] (Hyperband's inner loop / ASHA's
+//! synchronous variant): at each rung (a per-task epoch milestone), keep
+//! the top `1/eta` of tasks by score and stop the rest.
+
+use crate::trainer::Workload;
+
+/// Observes training progress and decides which tasks to stop.
+///
+/// `progress[i]` is the fraction of task `i`'s total minibatches
+/// completed (0..=1). Returns workload indices to kill. Called at every
+/// introspection boundary; must be deterministic for reproducibility.
+pub trait WorkloadController {
+    /// Name for reports.
+    fn name(&self) -> &str;
+
+    /// Decide kills given current progress.
+    fn review(&mut self, workload: &Workload, progress: &[f64]) -> Vec<usize>;
+}
+
+/// A controller that never stops anything (pure fidelity mode — the
+/// paper's default setting).
+#[derive(Debug, Default, Clone)]
+pub struct NoController;
+
+impl WorkloadController for NoController {
+    fn name(&self) -> &str {
+        "none"
+    }
+    fn review(&mut self, _workload: &Workload, _progress: &[f64]) -> Vec<usize> {
+        Vec::new()
+    }
+}
+
+/// Synchronous successive halving.
+///
+/// Rungs are fractions of total training (e.g. `[1/9, 1/3]` with
+/// `eta = 3`). When **every** surviving task has passed a rung, the
+/// bottom `1 − 1/eta` by score are stopped. Scores come from a
+/// caller-provided function (in simulation: a seeded proxy for validation
+/// accuracy; in real training: the latest validation metric).
+pub struct SuccessiveHalving<F: Fn(usize) -> f64> {
+    /// Rung thresholds as progress fractions, ascending.
+    pub rungs: Vec<f64>,
+    /// Keep the top 1/eta at each rung.
+    pub eta: f64,
+    /// Score function: higher is better; stable per task.
+    pub score: F,
+    next_rung: usize,
+    killed: Vec<usize>,
+}
+
+impl<F: Fn(usize) -> f64> SuccessiveHalving<F> {
+    /// New controller with the classic Hyperband geometry.
+    pub fn new(rungs: Vec<f64>, eta: f64, score: F) -> Self {
+        assert!(eta > 1.0, "eta must exceed 1");
+        Self { rungs, eta, score, next_rung: 0, killed: Vec::new() }
+    }
+
+    /// Tasks killed so far (for reports).
+    pub fn killed(&self) -> &[usize] {
+        &self.killed
+    }
+}
+
+impl<F: Fn(usize) -> f64> WorkloadController for SuccessiveHalving<F> {
+    fn name(&self) -> &str {
+        "successive-halving"
+    }
+
+    fn review(&mut self, workload: &Workload, progress: &[f64]) -> Vec<usize> {
+        let Some(&rung) = self.rungs.get(self.next_rung) else {
+            return Vec::new();
+        };
+        // survivors = not yet killed
+        let survivors: Vec<usize> =
+            (0..workload.len()).filter(|i| !self.killed.contains(i)).collect();
+        if survivors.is_empty() {
+            return Vec::new();
+        }
+        // the rung fires only once every survivor has reached it (or
+        // finished entirely)
+        if !survivors.iter().all(|&i| progress[i] >= rung || progress[i] >= 1.0) {
+            return Vec::new();
+        }
+        self.next_rung += 1;
+        let keep = ((survivors.len() as f64 / self.eta).ceil() as usize).max(1);
+        let mut ranked = survivors.clone();
+        ranked.sort_by(|&a, &b| (self.score)(b).total_cmp(&(self.score)(a)));
+        let kills: Vec<usize> = ranked[keep..].to_vec();
+        self.killed.extend(&kills);
+        kills
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelDesc;
+    use crate::trainer::{HParams, Optimizer, Task};
+
+    fn workload(n: usize) -> Workload {
+        (0..n)
+            .map(|i| Task::new(i, ModelDesc::resnet_200m(), HParams::new(32, 1e-4, 9, Optimizer::Sgd), 3200))
+            .collect()
+    }
+
+    #[test]
+    fn no_controller_never_kills() {
+        let w = workload(4);
+        let mut c = NoController;
+        assert!(c.review(&w, &[1.0; 4]).is_empty());
+    }
+
+    #[test]
+    fn halving_waits_for_rung() {
+        let w = workload(9);
+        let mut c = SuccessiveHalving::new(vec![1.0 / 9.0, 1.0 / 3.0], 3.0, |i| -(i as f64));
+        // nobody has reached the first rung yet
+        assert!(c.review(&w, &vec![0.05; 9]).is_empty());
+        // everyone past rung 1: keep ceil(9/3)=3 best (lowest ids), kill 6
+        let kills = c.review(&w, &vec![0.2; 9]);
+        assert_eq!(kills.len(), 6);
+        assert!(kills.iter().all(|&i| i >= 3), "{kills:?}");
+    }
+
+    #[test]
+    fn halving_successive_rungs() {
+        let w = workload(9);
+        let mut c = SuccessiveHalving::new(vec![1.0 / 9.0, 1.0 / 3.0], 3.0, |i| -(i as f64));
+        let k1 = c.review(&w, &vec![0.15; 9]);
+        assert_eq!(k1.len(), 6);
+        // rung 2 fires only when survivors (0,1,2) pass 1/3
+        let mut progress = vec![0.15; 9];
+        assert!(c.review(&w, &progress).is_empty());
+        progress[0] = 0.4;
+        progress[1] = 0.4;
+        progress[2] = 0.4;
+        let k2 = c.review(&w, &progress);
+        assert_eq!(k2.len(), 2); // keep ceil(3/3)=1
+        assert_eq!(c.killed().len(), 8);
+        // no rungs left
+        assert!(c.review(&w, &vec![1.0; 9]).is_empty());
+    }
+
+    #[test]
+    fn halving_keeps_at_least_one() {
+        let w = workload(2);
+        let mut c = SuccessiveHalving::new(vec![0.1], 4.0, |i| i as f64);
+        let kills = c.review(&w, &vec![0.2; 2]);
+        assert_eq!(kills.len(), 1);
+        assert_eq!(kills[0], 0); // higher score (task 1) survives
+    }
+
+    #[test]
+    fn finished_tasks_count_as_past_rung() {
+        let w = workload(3);
+        let mut c = SuccessiveHalving::new(vec![0.5], 3.0, |i| i as f64);
+        // task 0 finished early, others at rung: fires
+        let kills = c.review(&w, &[1.0, 0.55, 0.6]);
+        assert_eq!(kills.len(), 2);
+    }
+}

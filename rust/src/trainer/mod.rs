@@ -1,0 +1,129 @@
+//! The user-facing workload API: `Task`, `HParams`, and workload builders.
+//!
+//! Mirrors the paper's Trainer API (§3.1, Listing 1): users create training
+//! `Task`s from a model + data spec + hyper-parameters; Saturn decides
+//! parallelism, GPU apportionment, and schedule. Workload builders construct
+//! the paper's TXT and IMG model-selection grids (Table 3) plus grid/random
+//! search over arbitrary hyper-parameter spaces.
+
+pub mod automl;
+pub mod workloads;
+
+use crate::model::ModelDesc;
+
+/// Optimizer choice — affects model-state memory (fp32 master weights,
+/// momentum/variance) and therefore parallelism feasibility.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Optimizer {
+    /// SGD with momentum.
+    Sgd,
+    /// Adam/AdamW.
+    Adam,
+}
+
+/// Hyper-parameters of one training task (paper Listing 1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HParams {
+    /// Global minibatch size.
+    pub batch_size: usize,
+    /// Learning rate (scheduling-irrelevant, but part of the task identity:
+    /// model selection compares configurations that differ only here).
+    pub lr: f64,
+    /// Number of epochs to train.
+    pub epochs: usize,
+    /// Optimizer.
+    pub optimizer: Optimizer,
+}
+
+impl HParams {
+    /// Convenience constructor.
+    pub fn new(batch_size: usize, lr: f64, epochs: usize, optimizer: Optimizer) -> Self {
+        Self { batch_size, lr, epochs, optimizer }
+    }
+}
+
+/// One model-training job submitted to Saturn.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Task {
+    /// Stable task id (index into the workload).
+    pub id: usize,
+    /// Display name, e.g. "gpt2-1.5b/b16/lr1e-5".
+    pub name: String,
+    /// Model descriptor.
+    pub model: ModelDesc,
+    /// Hyper-parameters.
+    pub hparams: HParams,
+    /// Examples per epoch in the training dataset.
+    pub dataset_examples: usize,
+    /// Hint: model is a transformer (drives FSDP auto-wrap policy, as in
+    /// the paper's appendix Listing 5/6 `hints.is_transformer`).
+    pub is_transformer: bool,
+}
+
+impl Task {
+    /// Build a task; the name is derived from model + hparams.
+    pub fn new(id: usize, model: ModelDesc, hparams: HParams, dataset_examples: usize) -> Self {
+        let name = format!("{}/b{}/lr{:.0e}", model.name, hparams.batch_size, hparams.lr);
+        let is_transformer = !matches!(model.arch, crate::model::Arch::ConvNet);
+        Self { id, name, model, hparams, dataset_examples, is_transformer }
+    }
+
+    /// Minibatches per epoch (ceil division; last partial batch counts).
+    pub fn batches_per_epoch(&self) -> usize {
+        self.dataset_examples.div_ceil(self.hparams.batch_size)
+    }
+
+    /// Total minibatches over all epochs.
+    pub fn total_batches(&self) -> usize {
+        self.batches_per_epoch() * self.hparams.epochs
+    }
+
+    /// Scale a per-minibatch runtime estimate to the full task runtime.
+    /// This is the SGD-consistency extrapolation the Profiler exploits
+    /// (paper §3.2): iteration times are stable within an epoch.
+    pub fn total_runtime(&self, minibatch_secs: f64) -> f64 {
+        minibatch_secs * self.total_batches() as f64
+    }
+}
+
+/// A model-selection workload: the set of tasks given up front (paper §4.1
+/// assumes all jobs known; evolving workloads run epoch-at-a-time).
+pub type Workload = Vec<Task>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task() -> Task {
+        Task::new(0, ModelDesc::gpt2_1_5b(), HParams::new(16, 1e-5, 10, Optimizer::Adam), 1600)
+    }
+
+    #[test]
+    fn batches_per_epoch_ceil() {
+        let mut t = task();
+        assert_eq!(t.batches_per_epoch(), 100);
+        t.dataset_examples = 1601;
+        assert_eq!(t.batches_per_epoch(), 101);
+    }
+
+    #[test]
+    fn total_runtime_extrapolates() {
+        let t = task();
+        assert_eq!(t.total_batches(), 1000);
+        assert!((t.total_runtime(0.5) - 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn name_derived_from_config() {
+        let t = task();
+        assert!(t.name.contains("gpt2-1.5b"));
+        assert!(t.name.contains("b16"));
+        assert!(t.is_transformer);
+    }
+
+    #[test]
+    fn convnet_not_transformer() {
+        let t = Task::new(1, ModelDesc::resnet_200m(), HParams::new(64, 1e-4, 10, Optimizer::Sgd), 1000);
+        assert!(!t.is_transformer);
+    }
+}

@@ -1,0 +1,175 @@
+//! Workload builders: the paper's TXT / IMG model-selection grids (Table 3)
+//! and generic grid / random search constructors.
+
+use super::{HParams, Optimizer, Task, Workload};
+use crate::model::ModelDesc;
+use crate::util::rng::DetRng;
+
+/// Dataset sizes. The scheduler only consumes examples-per-epoch; these
+/// are scaled so simulated makespans land in the multi-hour range the
+/// paper reports. Text datasets are a fixed TOKEN budget — models with
+/// longer sequences see proportionally fewer examples per epoch.
+pub const WIKITEXT2_TOKENS: usize = 19_660_800; // ~20M-token training split
+pub const IMAGENET_SUBSET_EXAMPLES: usize = 128_000;
+
+/// Examples per epoch for a text model: token budget / sequence length.
+pub fn text_examples(seq_len: usize) -> usize {
+    WIKITEXT2_TOKENS / seq_len.max(1)
+}
+
+/// The paper's TXT workload (Table 3): GPT-2 (1.5B) and GPT-J (6B) on
+/// WikiText-2, batch {16, 32} × lr {1e-5, 1e-4, 3e-3}, 10 epochs → 12 tasks.
+pub fn txt_workload() -> Workload {
+    let mut tasks = Vec::new();
+    let mut id = 0;
+    for model in [ModelDesc::gpt2_1_5b(), ModelDesc::gpt_j_6b()] {
+        for &bs in &[16usize, 32] {
+            for &lr in &[1e-5, 1e-4, 3e-3] {
+                let examples = text_examples(model.seq_len);
+                tasks.push(Task::new(id, model.clone(), HParams::new(bs, lr, 10, Optimizer::Adam), examples));
+                id += 1;
+            }
+        }
+    }
+    tasks
+}
+
+/// The paper's IMG workload (Table 3): ViT-G (1.8B) and ResNet (200M) on
+/// ImageNet, batch {64, 128} × lr {1e-5, 1e-4, 3e-3}, 10 epochs → 12 tasks.
+pub fn img_workload() -> Workload {
+    let mut tasks = Vec::new();
+    let mut id = 0;
+    for model in [ModelDesc::vit_g_1_8b(), ModelDesc::resnet_200m()] {
+        for &bs in &[64usize, 128] {
+            for &lr in &[1e-5, 1e-4, 3e-3] {
+                tasks.push(Task::new(
+                    id,
+                    model.clone(),
+                    HParams::new(bs, lr, 10, Optimizer::Adam),
+                    IMAGENET_SUBSET_EXAMPLES,
+                ));
+                id += 1;
+            }
+        }
+    }
+    tasks
+}
+
+/// Fig 8(A) workload-size sweep: GPT-2, batch 16, `n_lrs` learning rates.
+pub fn txt_lr_sweep(n_lrs: usize) -> Workload {
+    (0..n_lrs)
+        .map(|i| {
+            let lr = 1e-5 * 10f64.powf(i as f64 / 3.0);
+            Task::new(i, ModelDesc::gpt2_1_5b(), HParams::new(16, lr, 10, Optimizer::Adam), text_examples(1024))
+        })
+        .collect()
+}
+
+/// Fig 8(B) model-size sweep: GPT-2 with `layers` stacked blocks, batch 16,
+/// lr 1e-5, a small 4-task grid per size point.
+pub fn txt_model_size(layers: usize, n_tasks: usize) -> Workload {
+    (0..n_tasks)
+        .map(|i| {
+            Task::new(
+                i,
+                ModelDesc::gpt2_stacked(layers),
+                HParams::new(16, 1e-5 * (i + 1) as f64, 10, Optimizer::Adam),
+                text_examples(1024),
+            )
+        })
+        .collect()
+}
+
+/// Grid search over batch sizes × learning rates for a single model family.
+pub fn grid_search(model: &ModelDesc, batch_sizes: &[usize], lrs: &[f64], epochs: usize, examples: usize) -> Workload {
+    let mut tasks = Vec::new();
+    let mut id = 0;
+    for &bs in batch_sizes {
+        for &lr in lrs {
+            tasks.push(Task::new(id, model.clone(), HParams::new(bs, lr, epochs, Optimizer::Adam), examples));
+            id += 1;
+        }
+    }
+    tasks
+}
+
+/// Random search: `n` tasks with batch sizes drawn from `batch_sizes` and
+/// log-uniform learning rates in `[lr_lo, lr_hi)` (paper §2, random search).
+pub fn random_search(
+    model: &ModelDesc,
+    n: usize,
+    batch_sizes: &[usize],
+    lr_lo: f64,
+    lr_hi: f64,
+    epochs: usize,
+    examples: usize,
+    rng: &mut DetRng,
+) -> Workload {
+    (0..n)
+        .map(|i| {
+            let bs = *rng.choose(batch_sizes);
+            let lr = (rng.range_f64(lr_lo.ln(), lr_hi.ln())).exp();
+            Task::new(i, model.clone(), HParams::new(bs, lr, epochs, Optimizer::Adam), examples)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn txt_has_12_tasks() {
+        let w = txt_workload();
+        assert_eq!(w.len(), 12);
+        assert_eq!(w.iter().filter(|t| t.model.name.contains("gpt-j")).count(), 6);
+        // ids are dense and unique
+        let mut ids: Vec<_> = w.iter().map(|t| t.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..12).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn img_has_12_tasks() {
+        let w = img_workload();
+        assert_eq!(w.len(), 12);
+        assert!(w.iter().any(|t| t.model.name.contains("resnet")));
+        assert!(w.iter().all(|t| t.hparams.epochs == 10));
+    }
+
+    #[test]
+    fn lr_sweep_sizes() {
+        assert_eq!(txt_lr_sweep(5).len(), 5);
+        let w = txt_lr_sweep(8);
+        // learning rates strictly increasing
+        for i in 1..w.len() {
+            assert!(w[i].hparams.lr > w[i - 1].hparams.lr);
+        }
+    }
+
+    #[test]
+    fn grid_search_cartesian() {
+        let w = grid_search(&ModelDesc::resnet_200m(), &[32, 64], &[1e-4, 1e-3, 1e-2], 5, 1000);
+        assert_eq!(w.len(), 6);
+    }
+
+    #[test]
+    fn random_search_deterministic() {
+        let m = ModelDesc::gpt2_1_5b();
+        let mut r1 = DetRng::new(42);
+        let mut r2 = DetRng::new(42);
+        let a = random_search(&m, 6, &[16, 32], 1e-5, 1e-2, 10, 1000, &mut r1);
+        let b = random_search(&m, 6, &[16, 32], 1e-5, 1e-2, 10, 1000, &mut r2);
+        assert_eq!(a, b);
+        for t in &a {
+            assert!(t.hparams.lr >= 1e-5 && t.hparams.lr < 1e-2);
+        }
+    }
+
+    #[test]
+    fn model_size_sweep_uses_stacked() {
+        let w = txt_model_size(24, 4);
+        assert_eq!(w.len(), 4);
+        assert!(w[0].model.name.contains("stack-24"));
+    }
+}

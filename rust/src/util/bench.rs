@@ -1,0 +1,165 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `harness = false` bench targets use [`Bench`] to run warmup + timed
+//! iterations, report mean/median/σ and throughput, and optionally write a
+//! CSV next to the binary. Timing uses `Instant`; a `black_box` shim
+//! prevents the optimizer from deleting measured work.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+/// Re-export of `std::hint::black_box` for bench bodies.
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// Statistics from one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    /// Benchmark id.
+    pub name: String,
+    /// Timed iterations.
+    pub iters: usize,
+    /// Mean seconds per iteration.
+    pub mean: f64,
+    /// Median seconds per iteration.
+    pub median: f64,
+    /// Standard deviation.
+    pub std: f64,
+    /// Min / max seconds.
+    pub min: f64,
+    /// Max seconds.
+    pub max: f64,
+}
+
+impl BenchStats {
+    /// Human line, auto-scaled units.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter (median {:>12}, σ {:>10}, n={})",
+            self.name,
+            fmt_secs(self.mean),
+            fmt_secs(self.median),
+            fmt_secs(self.std),
+            self.iters
+        )
+    }
+}
+
+/// Format seconds with an adaptive unit.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// A bench suite: runs closures, collects stats, prints a report.
+pub struct Bench {
+    /// Suite name (printed as a header).
+    pub suite: String,
+    /// Target time per benchmark.
+    pub target: Duration,
+    /// Collected stats.
+    pub results: Vec<BenchStats>,
+}
+
+impl Bench {
+    /// New suite with a per-benchmark time budget.
+    pub fn new(suite: &str) -> Self {
+        // honor SATURN_BENCH_FAST=1 for CI smoke runs
+        let target = if std::env::var("SATURN_BENCH_FAST").is_ok() {
+            Duration::from_millis(200)
+        } else {
+            Duration::from_secs(2)
+        };
+        println!("== bench suite: {suite} ==");
+        Self { suite: suite.to_string(), target, results: Vec::new() }
+    }
+
+    /// Run one benchmark: `f` is called once per iteration.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchStats {
+        // warmup + calibration
+        let t0 = Instant::now();
+        f();
+        let first = t0.elapsed().as_secs_f64().max(1e-9);
+        let warmup_iters = ((self.target.as_secs_f64() * 0.1 / first) as usize).clamp(1, 1000);
+        for _ in 0..warmup_iters {
+            f();
+        }
+        // timed runs
+        let budget = self.target.as_secs_f64();
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while start.elapsed().as_secs_f64() < budget || samples.len() < 5 {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+            if samples.len() >= 100_000 {
+                break;
+            }
+        }
+        samples.sort_by(f64::total_cmp);
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let median = samples[n / 2];
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n as f64;
+        let stats = BenchStats {
+            name: name.to_string(),
+            iters: n,
+            mean,
+            median,
+            std: var.sqrt(),
+            min: samples[0],
+            max: samples[n - 1],
+        };
+        println!("{}", stats.line());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// Write results as CSV under `reports/bench_<suite>.csv`.
+    pub fn write_csv(&self) -> std::io::Result<()> {
+        let mut csv = String::from("name,iters,mean_s,median_s,std_s,min_s,max_s\n");
+        for r in &self.results {
+            csv.push_str(&format!(
+                "{},{},{},{},{},{},{}\n",
+                r.name, r.iters, r.mean, r.median, r.std, r.min, r.max
+            ));
+        }
+        std::fs::create_dir_all("reports")?;
+        std::fs::write(format!("reports/bench_{}.csv", self.suite), csv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_secs_units() {
+        assert!(fmt_secs(5e-9).ends_with("ns"));
+        assert!(fmt_secs(5e-6).ends_with("µs"));
+        assert!(fmt_secs(5e-3).ends_with("ms"));
+        assert!(fmt_secs(5.0).ends_with('s'));
+    }
+
+    #[test]
+    fn bench_collects_stats() {
+        std::env::set_var("SATURN_BENCH_FAST", "1");
+        let mut b = Bench::new("selftest");
+        b.target = Duration::from_millis(30);
+        let mut acc = 0u64;
+        b.bench("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        let s = &b.results[0];
+        assert!(s.iters >= 5);
+        assert!(s.mean >= 0.0 && s.min <= s.median && s.median <= s.max);
+    }
+}

@@ -1,0 +1,105 @@
+//! Small shared utilities: deterministic RNG, wall-clock deadlines, and
+//! formatting helpers used across Saturn's modules.
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod table;
+pub mod tmp;
+
+use std::time::{Duration, Instant};
+
+/// A wall-clock deadline used by anytime solvers (the paper runs Gurobi
+/// under a fixed timeout and takes the incumbent).
+#[derive(Debug, Clone, Copy)]
+pub struct Deadline {
+    start: Instant,
+    budget: Duration,
+}
+
+impl Deadline {
+    /// Create a deadline `budget` from now.
+    pub fn after(budget: Duration) -> Self {
+        Self { start: Instant::now(), budget }
+    }
+
+    /// Convenience constructor from seconds.
+    pub fn after_secs(secs: f64) -> Self {
+        Self::after(Duration::from_secs_f64(secs))
+    }
+
+    /// True once the budget is exhausted.
+    pub fn expired(&self) -> bool {
+        self.start.elapsed() >= self.budget
+    }
+
+    /// Time remaining (zero if expired).
+    pub fn remaining(&self) -> Duration {
+        self.budget.saturating_sub(self.start.elapsed())
+    }
+
+    /// Fraction of the budget consumed, clamped to [0, 1].
+    pub fn progress(&self) -> f64 {
+        (self.start.elapsed().as_secs_f64() / self.budget.as_secs_f64()).min(1.0)
+    }
+}
+
+/// Round `x` to `d` decimal places (report formatting).
+pub fn round_to(x: f64, d: u32) -> f64 {
+    let p = 10f64.powi(d as i32);
+    (x * p).round() / p
+}
+
+/// Format a duration in seconds as `h:mm:ss`.
+pub fn fmt_hms(secs: f64) -> String {
+    let s = secs.max(0.0).round() as u64;
+    format!("{}:{:02}:{:02}", s / 3600, (s % 3600) / 60, s % 60)
+}
+
+/// Approximate float equality with relative + absolute tolerance.
+pub fn approx_eq(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deadline_expires() {
+        let d = Deadline::after(Duration::from_millis(1));
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(d.expired());
+        assert_eq!(d.remaining(), Duration::ZERO);
+        assert!((d.progress() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deadline_not_expired() {
+        let d = Deadline::after(Duration::from_secs(60));
+        assert!(!d.expired());
+        assert!(d.remaining() > Duration::from_secs(59));
+        assert!(d.progress() < 0.1);
+    }
+
+    #[test]
+    fn round_to_places() {
+        assert_eq!(round_to(1.23456, 2), 1.23);
+        assert_eq!(round_to(1.235, 2), 1.24);
+        assert_eq!(round_to(-1.235, 0), -1.0);
+    }
+
+    #[test]
+    fn fmt_hms_basic() {
+        assert_eq!(fmt_hms(0.0), "0:00:00");
+        assert_eq!(fmt_hms(3661.0), "1:01:01");
+        assert_eq!(fmt_hms(-5.0), "0:00:00");
+    }
+
+    #[test]
+    fn approx_eq_tolerance() {
+        assert!(approx_eq(1.0, 1.0 + 1e-12, 1e-9));
+        assert!(!approx_eq(1.0, 1.1, 1e-3));
+        assert!(approx_eq(1e9, 1e9 + 1.0, 1e-6));
+    }
+}

@@ -1,0 +1,158 @@
+//! End-to-end integration over the decision stack: profile → solve →
+//! simulate, across workloads and hardware settings — the paper's Fig 4 /
+//! Fig 7 claims as assertions.
+
+use saturn::baselines::{CurrentPractice, MaxHeuristic, MinHeuristic, OptimusGreedy, Randomized};
+use saturn::cluster::Cluster;
+use saturn::coordinator::Saturn;
+use saturn::costmodel::CostModel;
+use saturn::metrics::reduction_pct;
+use saturn::parallelism::UppRegistry;
+use saturn::profiler::{ProfileGrid, TrialRunner};
+use saturn::sim::{simulate, IntrospectCfg, SimConfig};
+use saturn::solver::joint::JointOptimizer;
+use saturn::solver::policy::{PlanCtx, Policy};
+use saturn::trainer::{workloads, Workload};
+use saturn::util::rng::DetRng;
+use std::sync::Arc;
+
+fn profile(w: &Workload, c: &Cluster) -> ProfileGrid {
+    let runner = TrialRunner::new(UppRegistry::default_library(Arc::new(CostModel::default())));
+    runner.profile(w, c).0
+}
+
+fn sim_policy(policy: &dyn Policy, w: &Workload, grid: &ProfileGrid, c: &Cluster, dynamic: bool, seed: u64) -> f64 {
+    let cfg = SimConfig {
+        introspect: dynamic.then_some(IntrospectCfg::default()),
+        ..SimConfig::default()
+    };
+    let mut rng = DetRng::new(seed);
+    simulate(policy, w, grid, c, cfg, &mut rng).makespan
+}
+
+/// Fig 4-shape: Saturn's one-shot optimizer beats every static baseline
+/// on all three hardware settings, for both workloads.
+#[test]
+fn saturn_beats_baselines_everywhere() {
+    let settings: Vec<(&str, Cluster)> = vec![
+        ("8gpu", Cluster::single_node_8gpu()),
+        ("4x8", Cluster::four_node_32gpu()),
+        ("hetero16", Cluster::heterogeneous_16gpu()),
+    ];
+    for (wname, w) in [("txt", workloads::txt_workload()), ("img", workloads::img_workload())] {
+        for (cname, c) in &settings {
+            let grid = profile(&w, c);
+            let saturn = sim_policy(&JointOptimizer::default(), &w, &grid, c, false, 42);
+            for baseline in [
+                Box::new(MaxHeuristic) as Box<dyn Policy>,
+                Box::new(MinHeuristic),
+                Box::new(Randomized),
+                Box::new(OptimusGreedy),
+            ] {
+                let b = sim_policy(baseline.as_ref(), &w, &grid, c, false, 42);
+                assert!(
+                    saturn < b,
+                    "{wname}/{cname}: Saturn {saturn:.0} should beat {} {b:.0}",
+                    baseline.name()
+                );
+            }
+        }
+    }
+}
+
+/// Fig 7-shape: vs Current Practice, the full Saturn (with introspection,
+/// profiler overhead included) lands in the paper's reduction band —
+/// we accept a generous 25–65% window around the paper's 39–49%.
+#[test]
+fn fig7_reduction_band_single_node_txt() {
+    let w = workloads::txt_workload();
+    let c = Cluster::single_node_8gpu();
+    let mut saturn = Saturn::new(c.clone());
+    let overhead = saturn.profile(&w);
+    let grid = saturn.grid.as_ref().unwrap();
+
+    let mut reductions = Vec::new();
+    for seed in [42u64, 43, 44] {
+        let s = {
+            let cfg = SimConfig { introspect: Some(IntrospectCfg::default()), ..SimConfig::default() };
+            let mut rng = DetRng::new(seed);
+            simulate(&JointOptimizer::default(), &w, grid, &c, cfg, &mut rng).makespan + overhead
+        };
+        let cp = {
+            let mut rng = DetRng::new(seed);
+            simulate(&CurrentPractice, &w, grid, &c, SimConfig::default(), &mut rng).makespan
+        };
+        reductions.push(reduction_pct(s, cp));
+    }
+    let mean = reductions.iter().sum::<f64>() / reductions.len() as f64;
+    assert!(
+        (25.0..=65.0).contains(&mean),
+        "reduction vs current practice {mean:.1}% outside band (paper: 39–49%)"
+    );
+}
+
+/// Heterogeneous clusters shrink (but do not erase) Saturn's edge
+/// (paper §4.3.2: 18–42% vs 33–59% homogeneous).
+#[test]
+fn heterogeneous_improves_less_than_homogeneous() {
+    let w = workloads::txt_workload();
+    let homo = Cluster::four_node_32gpu();
+    let hetero = Cluster::heterogeneous_16gpu();
+    let reduction = |c: &Cluster| {
+        let grid = profile(&w, c);
+        let s = sim_policy(&JointOptimizer::default(), &w, &grid, c, false, 7);
+        let m = sim_policy(&OptimusGreedy, &w, &grid, c, false, 7);
+        reduction_pct(s, m)
+    };
+    let r_homo = reduction(&homo);
+    let r_hetero = reduction(&hetero);
+    assert!(r_homo > 0.0 && r_hetero > 0.0, "homo={r_homo:.1}% hetero={r_hetero:.1}%");
+}
+
+/// Introspection (full Saturn) should not lose to the one-shot plan, and
+/// the dynamic Optimus baseline should not beat Saturn (paper: 1.5–4.1×).
+#[test]
+fn introspective_saturn_beats_optimus_dynamic() {
+    let w = workloads::txt_workload();
+    let c = Cluster::single_node_8gpu();
+    let grid = profile(&w, &c);
+    let saturn = sim_policy(&JointOptimizer::default(), &w, &grid, &c, true, 11);
+    let optimus = sim_policy(&OptimusGreedy, &w, &grid, &c, true, 11);
+    assert!(saturn < optimus, "saturn={saturn:.0} optimus-dynamic={optimus:.0}");
+}
+
+/// The coordinator facade wires everything: profile() then execute().
+#[test]
+fn coordinator_end_to_end_img() {
+    let w = workloads::img_workload();
+    let mut saturn = Saturn::new(Cluster::heterogeneous_12gpu());
+    let overhead = saturn.profile(&w);
+    assert!(overhead > 0.0);
+    let plan = saturn.plan(&w, 1);
+    plan.validate(&saturn.cluster, &w).unwrap();
+    let result = saturn.execute_simulated(&w, SimConfig::default(), 1);
+    assert_eq!(result.completions.len(), w.len());
+    assert!(result.avg_utilization(&saturn.cluster) > 0.2);
+}
+
+/// Table-4 shape: the chosen plan mixes parallelisms and GPU counts —
+/// not one-size-fits-all.
+#[test]
+fn plan_is_a_nontrivial_mixture() {
+    let mut w = workloads::txt_workload();
+    w.extend(workloads::img_workload().into_iter().map(|mut t| {
+        t.id += 12;
+        t
+    }));
+    let c = Cluster::single_node_8gpu();
+    let grid = profile(&w, &c);
+    let ctx = PlanCtx::fresh(&w, &grid, &c);
+    let mut rng = DetRng::new(5);
+    let plan = JointOptimizer::default().plan(&ctx, &mut rng);
+    let kinds: std::collections::HashSet<_> =
+        plan.assignments.iter().map(|a| a.config.kind).collect();
+    let gpu_counts: std::collections::HashSet<_> =
+        plan.assignments.iter().map(|a| a.config.gpus).collect();
+    assert!(kinds.len() >= 2, "expected ≥2 parallelisms, got {kinds:?}");
+    assert!(gpu_counts.len() >= 2, "expected ≥2 apportionments, got {gpu_counts:?}");
+}

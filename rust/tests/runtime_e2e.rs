@@ -1,0 +1,157 @@
+//! Integration tests over the PJRT runtime + executor, against real AOT
+//! artifacts. Require `make artifacts`; they skip (with a notice) if the
+//! artifacts directory is absent so `cargo test` stays runnable pre-build.
+
+use saturn::exec::{init_name, run_plan, ComputeHandle, DeviceSlots, JobSpec, SyntheticCorpus};
+use saturn::runtime::{Manifest, Runtime};
+use saturn::sched::{list_schedule, PlacementChoice};
+use saturn::util::json::Json;
+
+const TINY: &str = "tiny_l2_h64_v128_b4_s16_train";
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn manifest_and_compile_all() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    assert!(manifest.artifacts.len() >= 6);
+    let mut rt = Runtime::load(&dir).unwrap();
+    for art in manifest.artifacts.clone() {
+        rt.executable(&art.name).unwrap();
+    }
+    assert_eq!(rt.cache_len(), manifest.artifacts.len());
+}
+
+#[test]
+fn selfcheck_numeric_cross_language() {
+    // Execute the smallest train artifact on the fixture inputs and match
+    // the loss/param-sum that JAX computed at artifact-build time: proves
+    // the HLO-text interchange preserves numerics end to end.
+    let Some(dir) = artifacts_dir() else { return };
+    let sc = Json::parse(&std::fs::read_to_string(dir.join("selfcheck.json")).unwrap()).unwrap();
+    let variant = sc.get("variant").unwrap().as_str().unwrap().to_string();
+    let seed = sc.get("seed").unwrap().as_f64().unwrap() as i32;
+    let lr = sc.get("lr").unwrap().as_f64().unwrap() as f32;
+    let want_loss = sc.get("loss0").unwrap().as_f64().unwrap();
+    let want_sum = sc.get("param_sum").unwrap().as_f64().unwrap();
+
+    let (handle, join) = ComputeHandle::spawn(&dir).unwrap();
+    let train = format!("{variant}_train");
+    let params = handle.init(&init_name(&train), seed).unwrap();
+    let (batch, seq, vocab) = saturn::exec::parse_dims(&train).unwrap();
+    let tokens: Vec<i32> = (0..batch * seq).map(|i| (i % vocab) as i32).collect();
+    let targets: Vec<i32> = tokens.iter().map(|&t| (t + 1) % vocab as i32).collect();
+    let (new_params, loss) = handle.step(&train, params, tokens, targets, lr).unwrap();
+    let sum: f64 = new_params.iter().map(|&x| x as f64).sum();
+
+    assert!((loss as f64 - want_loss).abs() < 1e-4 * (1.0 + want_loss.abs()), "loss={loss} want={want_loss}");
+    assert!((sum - want_sum).abs() < 1e-3 * (1.0 + want_sum.abs()), "sum={sum} want={want_sum}");
+    handle.shutdown();
+    join.join().unwrap();
+}
+
+#[test]
+fn training_loss_decreases() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (handle, join) = ComputeHandle::spawn(&dir).unwrap();
+    let mut params = handle.init(&init_name(TINY), 7).unwrap();
+    let (b, s, v) = saturn::exec::parse_dims(TINY).unwrap();
+    let mut corpus = SyntheticCorpus::new(v, 7);
+    let mut losses = Vec::new();
+    for _ in 0..60 {
+        let (toks, tgts) = corpus.batch(b, s);
+        let (p, loss) = handle.step(TINY, params, toks, tgts, 0.15).unwrap();
+        params = p;
+        losses.push(loss);
+    }
+    let head: f32 = losses[..10].iter().sum::<f32>() / 10.0;
+    let tail: f32 = losses[losses.len() - 10..].iter().sum::<f32>() / 10.0;
+    assert!(
+        tail < head - 0.5,
+        "loss should drop by >0.5 nats: head={head:.3} tail={tail:.3}"
+    );
+    handle.shutdown();
+    join.join().unwrap();
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (handle, join) = ComputeHandle::spawn(&dir).unwrap();
+    let run = |seed: i32| -> f32 {
+        let mut params = handle.init(&init_name(TINY), seed).unwrap();
+        let (b, s, v) = saturn::exec::parse_dims(TINY).unwrap();
+        let mut corpus = SyntheticCorpus::new(v, seed as u64);
+        let mut last = 0.0;
+        for _ in 0..5 {
+            let (toks, tgts) = corpus.batch(b, s);
+            let (p, loss) = handle.step(TINY, params, toks, tgts, 0.1).unwrap();
+            params = p;
+            last = loss;
+        }
+        last
+    };
+    assert_eq!(run(3), run(3));
+    assert_ne!(run(3), run(4));
+    handle.shutdown();
+    join.join().unwrap();
+}
+
+#[test]
+fn executor_runs_gang_scheduled_plan() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (handle, join) = ComputeHandle::spawn(&dir).unwrap();
+    let slots = DeviceSlots::new(4);
+    // two tiny jobs: one on a 3-slot gang, one on 2 slots → must serialize
+    let mk_cfg = |gpus: usize| saturn::profiler::TaskConfig {
+        gpus,
+        upp: "pytorch-fsdp".into(),
+        kind: saturn::costmodel::ParallelismKind::Fsdp,
+        knobs: saturn::costmodel::Knobs::default(),
+        minibatch_secs: 1.0,
+        task_secs: 10.0,
+    };
+    let choices = vec![
+        PlacementChoice { task_id: 0, duration: 10.0, config: mk_cfg(3), node: Some(0) },
+        PlacementChoice { task_id: 1, duration: 10.0, config: mk_cfg(2), node: Some(0) },
+    ];
+    let cluster = saturn::cluster::Cluster::from_gpu_counts(&[4]);
+    let schedule = list_schedule(&choices, &cluster);
+    let jobs = vec![
+        JobSpec { task_id: 0, artifact: TINY.into(), steps: 8, lr: 0.1, seed: 1 },
+        JobSpec { task_id: 1, artifact: TINY.into(), steps: 8, lr: 0.05, seed: 2 },
+    ];
+    let reports = run_plan(&handle, slots, &schedule, &jobs).unwrap();
+    assert_eq!(reports.len(), 2);
+    for r in &reports {
+        assert_eq!(r.losses.len(), 8);
+        assert!(r.losses.iter().all(|(_, l)| l.is_finite()));
+        assert!(!r.gang.is_empty());
+    }
+    // gangs of 3 and 2 cannot overlap on 4 slots — wall times serialize
+    let total: f64 = reports.iter().map(|r| r.wall_secs).sum();
+    assert!(total > 0.0);
+    handle.shutdown();
+    join.join().unwrap();
+}
+
+#[test]
+fn bad_payload_rejected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (handle, join) = ComputeHandle::spawn(&dir).unwrap();
+    let err = handle.step(TINY, vec![0.0; 3], vec![0; 64], vec![0; 64], 0.1);
+    assert!(err.is_err());
+    let err2 = handle.init("no-such-artifact", 0);
+    assert!(err2.is_err());
+    handle.shutdown();
+    join.join().unwrap();
+}
