@@ -1,0 +1,104 @@
+//! Online submissions end-to-end: a Poisson stream of model-selection
+//! jobs scheduled *online* — tasks are injected at their arrival events,
+//! each event re-plans through the joint optimizer, and the incremental
+//! (warm-start) re-solve is compared against cold from-scratch solving.
+//!
+//! Asserts the online invariants as it goes: every task starts and
+//! completes at or after its submission time.
+//!
+//! Flags: --tasks N (default 24)  --mean-gap SECS (default 900)
+
+use saturn::cluster::Cluster;
+use saturn::metrics::write_report;
+use saturn::online::OnlineCoordinator;
+use saturn::solver::joint::JointOptimizer;
+use saturn::trainer::workloads;
+use saturn::util::rng::DetRng;
+use saturn::util::table::TextTable;
+
+fn flag(name: &str, default: f64) -> f64 {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let n_tasks = flag("--tasks", 24.0) as usize;
+    let mean_gap = flag("--mean-gap", 900.0);
+    let mut rng = DetRng::new(42);
+    let stream = workloads::online_mixed_workload(n_tasks, mean_gap, &mut rng);
+    println!(
+        "online stream: {} tasks, Poisson mean gap {:.0}s, last arrival {:.0}s\n",
+        stream.len(),
+        mean_gap,
+        stream.last().map(|t| t.arrival).unwrap_or(0.0)
+    );
+
+    // warm path: incremental re-solve at every arrival (the default)
+    let mut oc = OnlineCoordinator::new(Cluster::single_node_8gpu());
+    oc.submit_all(stream.clone());
+    let warm = oc.run(42);
+
+    // cold path: same stream, full from-scratch solve at every event
+    let mut oc_cold = OnlineCoordinator::new(Cluster::single_node_8gpu());
+    oc_cold.optimizer = JointOptimizer::default();
+    oc_cold.submit_all(stream);
+    let cold = oc_cold.run(42);
+
+    let mut table = TextTable::new(vec!["task", "arrival", "start", "done", "queue delay"]);
+    for task in &warm.workload {
+        let start = warm
+            .result
+            .starts
+            .iter()
+            .find(|(id, _)| *id == task.id)
+            .map(|(_, s)| *s)
+            .expect("every task starts");
+        let done = warm
+            .result
+            .completions
+            .iter()
+            .find(|(id, _)| *id == task.id)
+            .map(|(_, d)| *d)
+            .expect("every task completes");
+        // the online invariant the subsystem exists to uphold
+        assert!(start >= task.arrival - 1e-6, "task {} started before submission", task.id);
+        assert!(done >= task.arrival, "task {} completed before submission", task.id);
+        table.row(vec![
+            task.name.clone(),
+            format!("{:.0}s", task.arrival),
+            format!("{:.0}s", start),
+            format!("{:.0}s", done),
+            format!("{:.0}s", start - task.arrival),
+        ]);
+    }
+    println!("{}", table.render());
+
+    let mut report = String::new();
+    for (label, r) in [("warm (incremental)", &warm), ("cold (from scratch)", &cold)] {
+        let line = format!(
+            "{label:<20} makespan {} | arrivals {} | switches {} | mean queue {:.0}s (max {:.0}s) | mean turnaround {:.0}s | {:.1} tasks/h",
+            saturn::util::fmt_hms(r.result.makespan),
+            r.result.arrival_events,
+            r.result.switches,
+            r.stats.mean_queue_delay,
+            r.stats.max_queue_delay,
+            r.stats.mean_turnaround,
+            r.stats.throughput_per_hour,
+        );
+        println!("{line}");
+        report.push_str(&line);
+        report.push('\n');
+    }
+    println!(
+        "\nevery completion respected its arrival; warm/cold makespan ratio {:.3} \
+         (see benches/bench_online.rs for re-solve latency)",
+        warm.result.makespan / cold.result.makespan.max(1e-9)
+    );
+    if let Ok(p) = write_report("online_arrivals.txt", &report) {
+        println!("report written to {}", p.display());
+    }
+}

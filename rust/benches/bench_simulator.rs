@@ -29,7 +29,12 @@ fn main() {
     });
 
     // one-shot with the joint optimizer (solver-dominated)
-    let fast = JointOptimizer { timeout: Duration::from_millis(30), restarts: 1, iters_per_temp: 150 };
+    let fast = JointOptimizer {
+        timeout: Duration::from_millis(30),
+        restarts: 1,
+        iters_per_temp: 150,
+        ..Default::default()
+    };
     b.bench("sim_oneshot_saturn_30ms_solver", || {
         let mut rng = DetRng::new(2);
         let r = simulate(&fast, &w, &grid, &c, SimConfig::default(), &mut rng);
@@ -53,6 +58,38 @@ fn main() {
     b.bench("utilization_trace_100s_samples", || {
         black_box(r.utilization_trace(&c, 100.0).len());
     });
+
+    // Schedule::validate on a 256-task schedule — covers the de-quadratic
+    // id-index + per-GPU sweep rewrite (was O(n²·m) all-pairs)
+    {
+        use saturn::model::ModelDesc;
+        use saturn::trainer::{HParams, Optimizer, Task};
+        let big: saturn::trainer::Workload = (0..256)
+            .map(|i| {
+                Task::new(i, ModelDesc::resnet_200m(), HParams::new(32, 1e-4, 1, Optimizer::Sgd), 3200)
+            })
+            .collect();
+        let choices: Vec<saturn::sched::PlacementChoice> = (0..256)
+            .map(|i| saturn::sched::PlacementChoice {
+                task_id: i,
+                duration: 50.0 + (i % 7) as f64,
+                config: saturn::profiler::TaskConfig {
+                    gpus: 1 + (i % 4),
+                    upp: "pytorch-fsdp".into(),
+                    kind: saturn::costmodel::ParallelismKind::Fsdp,
+                    knobs: saturn::costmodel::Knobs::default(),
+                    minibatch_secs: 1.0,
+                    task_secs: 1.0,
+                },
+                node: None,
+            })
+            .collect();
+        let sched = saturn::sched::list_schedule(&choices, &c);
+        assert_eq!(sched.assignments.len(), 256);
+        b.bench("schedule_validate_256_tasks", || {
+            black_box(sched.validate(&c, &big).is_ok());
+        });
+    }
 
     b.write_csv().ok();
 }

@@ -28,7 +28,12 @@ fn main() {
     let (grid, _) = runner.profile(&w, &c);
     let ctx = PlanCtx::fresh(&w, &grid, &c);
     let tasks = ctx.spase_tasks();
-    let opt = JointOptimizer { timeout: Duration::from_millis(50), restarts: 2, iters_per_temp: 200 };
+    let opt = JointOptimizer {
+        timeout: Duration::from_millis(50),
+        restarts: 2,
+        iters_per_temp: 200,
+        ..Default::default()
+    };
     let mut rng = DetRng::new(1);
     b.bench("spase_solve_12tasks_8gpu_50ms", || {
         let (s, _) = opt.solve(&tasks, &c, &mut rng);

@@ -103,17 +103,21 @@ impl Policy for MinHeuristic {
         let per_task = (total / active.len()).max(1).min(ctx.cluster.max_gpus_per_node());
         let mut choices = Vec::new();
         for i in active {
+            // pick the node first so the gang can be capped to its size —
+            // an uncapped gang forced onto a small node used to be dropped
+            // silently by the list scheduler
+            let node = if ctx.cluster.is_homogeneous() { None } else { Some(ctx.weighted_node(rng)) };
+            let cap = node.map_or(ctx.cluster.max_gpus_per_node(), |n| ctx.cluster.nodes[n].gpus);
             // spilling at the even share; shrink until feasible
-            let mut g = per_task;
+            let mut g = per_task.min(cap).max(1);
             let cfg = loop {
                 match ctx.kind_at(i, crate::costmodel::ParallelismKind::Spilling, g) {
                     Some(c) => break Some(c),
                     None if g > 1 => g -= 1,
-                    None => break best_at_or_below(ctx, i, per_task),
+                    None => break best_at_or_below(ctx, i, per_task.min(cap).max(1)),
                 }
             };
             if let Some(cfg) = cfg {
-                let node = if ctx.cluster.is_homogeneous() { None } else { Some(ctx.weighted_node(rng)) };
                 choices.push(PlacementChoice {
                     task_id: ctx.workload[i].id,
                     duration: cfg.task_secs,
@@ -122,7 +126,9 @@ impl Policy for MinHeuristic {
                 });
             }
         }
-        list_schedule(&choices, ctx.cluster)
+        let (sched, skipped) = crate::sched::list_schedule_with_skips(&choices, ctx.cluster);
+        debug_assert!(skipped.is_empty(), "Min-Heuristic produced unplaceable gangs: {skipped:?}");
+        sched
     }
 }
 

@@ -68,11 +68,30 @@ impl Saturn {
     }
 
     /// Execute the workload in the simulator (paper: `execute(tasks)` on
-    /// the simulated testbed). Introspection per `cfg`.
+    /// the simulated testbed). Introspection per `cfg`. Tasks with
+    /// positive [`crate::trainer::Task::arrival`] times are injected at
+    /// their arrival events.
     pub fn execute_simulated(&self, workload: &Workload, cfg: SimConfig, seed: u64) -> SimResult {
         let grid = self.grid.as_ref().expect("call profile() before execute()");
         let mut rng = DetRng::new(seed);
         simulate(&self.optimizer, workload, grid, &self.cluster, cfg, &mut rng)
+    }
+
+    /// Execute an online workload (tasks arriving over time) and return
+    /// queueing statistics alongside the raw result. Uses the incremental
+    /// re-solve mode of the joint optimizer for arrival events.
+    pub fn execute_online(
+        &self,
+        workload: &Workload,
+        cfg: SimConfig,
+        seed: u64,
+    ) -> (SimResult, crate::metrics::OnlineStats) {
+        let grid = self.grid.as_ref().expect("call profile() before execute()");
+        let optimizer = JointOptimizer { incremental: true, ..self.optimizer.clone() };
+        let mut rng = DetRng::new(seed);
+        let result = simulate(&optimizer, workload, grid, &self.cluster, cfg, &mut rng);
+        let stats = crate::metrics::online_stats(workload, &result);
+        (result, stats)
     }
 }
 

@@ -22,8 +22,14 @@
 //! - [`baselines`] — Max/Min heuristics, Optimus-Greedy, Randomized, and the
 //!   dynamic Optimus variants from the paper's evaluation.
 //! - [`introspect`] — the round-based introspective re-solver (paper Alg. 2).
+//! - [`online`] — online job submission (the paper's stated follow-on):
+//!   an event-driven coordinator with a pending-job queue; tasks carry an
+//!   `arrival` time, arrival events inject them mid-run, and the joint
+//!   optimizer's *incremental* mode warm-starts each re-solve from the
+//!   incumbent plan instead of solving from scratch.
 //! - [`sim`] — a discrete-event cluster simulator that executes plans,
-//!   models checkpoint/restart costs, and records utilization traces.
+//!   models checkpoint/restart costs, records utilization traces, and
+//!   cuts segments at both introspection and arrival events.
 //! - [`runtime`] — PJRT runtime: loads AOT-compiled HLO artifacts (produced
 //!   by the build-time JAX/Pallas layer) and executes them from Rust.
 //! - [`exec`] — the real executor: tokio-based gang launch over emulated
@@ -42,6 +48,7 @@ pub mod exec;
 pub mod introspect;
 pub mod metrics;
 pub mod model;
+pub mod online;
 pub mod parallelism;
 pub mod profiler;
 pub mod runtime;
@@ -52,6 +59,7 @@ pub mod trainer;
 pub mod util;
 
 pub use cluster::Cluster;
+pub use online::OnlineCoordinator;
 pub use profiler::{ProfileGrid, TrialRunner};
 pub use sched::Schedule;
 pub use solver::joint::JointOptimizer;

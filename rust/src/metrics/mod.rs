@@ -6,6 +6,8 @@
 //! confidence intervals), speedup/reduction arithmetic, and report
 //! writers.
 
+use crate::sim::SimResult;
+use crate::trainer::Workload;
 use std::path::Path;
 
 /// Mean, spread, and 90% CI of repeated trials.
@@ -73,6 +75,60 @@ pub fn geomean(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
 }
 
+/// Per-workload online scheduling statistics: queueing delay (submission
+/// → first GPU) and turnaround (submission → completion), the natural
+/// companions to makespan once tasks arrive over time.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct OnlineStats {
+    /// Tasks that both started and completed.
+    pub finished: usize,
+    /// Mean seconds between a task's arrival and its first GPU occupancy.
+    pub mean_queue_delay: f64,
+    /// Worst queueing delay.
+    pub max_queue_delay: f64,
+    /// Mean seconds between arrival and completion.
+    pub mean_turnaround: f64,
+    /// Worst turnaround.
+    pub max_turnaround: f64,
+    /// Completed tasks per hour of simulated time.
+    pub throughput_per_hour: f64,
+}
+
+/// Aggregate queueing/turnaround statistics from a simulation result.
+/// Tasks without a recorded start or completion (stopped early, or
+/// infeasible) are excluded from the averages.
+pub fn online_stats(workload: &Workload, result: &SimResult) -> OnlineStats {
+    let starts: std::collections::HashMap<usize, f64> = result.starts.iter().copied().collect();
+    let dones: std::collections::HashMap<usize, f64> =
+        result.completions.iter().copied().collect();
+    let mut queue = Vec::new();
+    let mut turn = Vec::new();
+    for t in workload {
+        if let (Some(s), Some(d)) = (starts.get(&t.id), dones.get(&t.id)) {
+            queue.push((s - t.arrival).max(0.0));
+            turn.push((d - t.arrival).max(0.0));
+        }
+    }
+    let finished = turn.len();
+    if finished == 0 {
+        return OnlineStats::default();
+    }
+    let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len() as f64;
+    let max = |xs: &[f64]| xs.iter().cloned().fold(0.0f64, f64::max);
+    OnlineStats {
+        finished,
+        mean_queue_delay: mean(&queue),
+        max_queue_delay: max(&queue),
+        mean_turnaround: mean(&turn),
+        max_turnaround: max(&turn),
+        throughput_per_hour: if result.makespan > 0.0 {
+            finished as f64 * 3600.0 / result.makespan
+        } else {
+            0.0
+        },
+    }
+}
+
 /// Write a string report to `reports/<name>`, creating the directory.
 pub fn write_report(name: &str, contents: &str) -> std::io::Result<std::path::PathBuf> {
     let dir = Path::new("reports");
@@ -122,6 +178,40 @@ mod tests {
     fn geomean_basic() {
         assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
         assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn online_stats_from_sim_result() {
+        use crate::model::ModelDesc;
+        use crate::trainer::{HParams, Optimizer, Task};
+        let w: Workload = (0..2)
+            .map(|i| {
+                Task::new(i, ModelDesc::resnet_200m(), HParams::new(32, 1e-4, 1, Optimizer::Sgd), 320)
+                    .with_arrival(i as f64 * 100.0)
+            })
+            .collect();
+        let result = SimResult {
+            makespan: 3600.0,
+            starts: vec![(0, 10.0), (1, 150.0)],
+            completions: vec![(0, 500.0), (1, 700.0)],
+            ..Default::default()
+        };
+        let s = online_stats(&w, &result);
+        assert_eq!(s.finished, 2);
+        // queue delays: 10-0 = 10, 150-100 = 50
+        assert!((s.mean_queue_delay - 30.0).abs() < 1e-9);
+        assert!((s.max_queue_delay - 50.0).abs() < 1e-9);
+        // turnarounds: 500, 600
+        assert!((s.mean_turnaround - 550.0).abs() < 1e-9);
+        assert!((s.max_turnaround - 600.0).abs() < 1e-9);
+        assert!((s.throughput_per_hour - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn online_stats_empty() {
+        let s = online_stats(&Vec::new(), &SimResult::default());
+        assert_eq!(s.finished, 0);
+        assert_eq!(s.mean_queue_delay, 0.0);
     }
 
     #[test]

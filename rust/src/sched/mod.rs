@@ -15,6 +15,7 @@
 use crate::cluster::Cluster;
 use crate::profiler::TaskConfig;
 use crate::trainer::Workload;
+use std::collections::HashMap;
 
 /// One task's placement in the plan.
 #[derive(Debug, Clone, PartialEq)]
@@ -65,14 +66,16 @@ impl Schedule {
     /// configuration; non-negative start; no GPU-time overlap between
     /// tasks on the same node.
     pub fn validate(&self, cluster: &Cluster, workload: &Workload) -> Result<(), String> {
+        // index tasks by id once (validate used to rescan the workload per
+        // assignment, which was O(n·m); large online workloads hit it hard)
+        let by_id: HashMap<usize, usize> =
+            workload.iter().enumerate().map(|(i, t)| (t.id, i)).collect();
         // exactly one assignment per task
         let mut seen = vec![false; workload.len()];
         for a in &self.assignments {
-            let t = workload
-                .iter()
-                .find(|t| t.id == a.task_id)
+            let idx = *by_id
+                .get(&a.task_id)
                 .ok_or_else(|| format!("assignment for unknown task {}", a.task_id))?;
-            let idx = workload.iter().position(|x| x.id == t.id).unwrap();
             if seen[idx] {
                 return Err(format!("task {} assigned twice", a.task_id));
             }
@@ -108,29 +111,32 @@ impl Schedule {
                 return Err(format!("task {} not scheduled", workload[idx].id));
             }
         }
-        // task isolation: no overlap on any (node, gpu)
-        for (i, a) in self.assignments.iter().enumerate() {
-            for b in self.assignments.iter().skip(i + 1) {
-                if a.node != b.node {
-                    continue;
+        // task isolation: no overlap on any (node, gpu). Sweep per-GPU
+        // sorted intervals instead of comparing all assignment pairs: the
+        // old O(n²·m) pairwise check dominated validate on big workloads.
+        let mut per_gpu: HashMap<(usize, usize), Vec<(f64, f64, usize)>> = HashMap::new();
+        for a in &self.assignments {
+            for &g in &a.gpus {
+                per_gpu.entry((a.node, g)).or_default().push((a.start, a.end(), a.task_id));
+            }
+        }
+        for ((node, _gpu), mut spans) in per_gpu {
+            spans.sort_by(|x, y| x.0.total_cmp(&y.0).then(x.1.total_cmp(&y.1)));
+            // sorted by start, so each interval only has to be checked
+            // against the furthest-reaching earlier interval on this GPU
+            let mut prev: Option<(f64, f64, usize)> = None;
+            for &(b_start, b_end, b_id) in &spans {
+                if let Some((a_start, a_end, a_id)) = prev {
+                    let eps = 1e-9 * (1.0 + a_end.abs().max(b_end.abs()));
+                    if b_start < a_end - eps {
+                        return Err(format!(
+                            "tasks {} and {} overlap on node {} (a: [{:.1},{:.1}) b: [{:.1},{:.1}))",
+                            a_id, b_id, node, a_start, a_end, b_start, b_end
+                        ));
+                    }
                 }
-                let share_gpu = a.gpus.iter().any(|g| b.gpus.contains(g));
-                if !share_gpu {
-                    continue;
-                }
-                let eps = 1e-9 * (1.0 + a.end().abs().max(b.end().abs()));
-                let overlap = a.start < b.end() - eps && b.start < a.end() - eps;
-                if overlap {
-                    return Err(format!(
-                        "tasks {} and {} overlap on node {} (a: [{:.1},{:.1}) b: [{:.1},{:.1}))",
-                        a.task_id,
-                        b.task_id,
-                        a.node,
-                        a.start,
-                        a.end(),
-                        b.start,
-                        b.end()
-                    ));
+                if prev.map_or(true, |(_, a_end, _)| b_end > a_end) {
+                    prev = Some((b_start, b_end, b_id));
                 }
             }
         }
@@ -174,9 +180,22 @@ pub struct PlacementChoice {
 /// node is the g-th smallest GPU free time — then occupies the g
 /// earliest-free GPUs. Produces a valid gang schedule for any input order;
 /// the *order* and the *configs* are the optimizer's job.
+///
+/// Unplaceable gangs (no candidate node with enough GPUs) are skipped;
+/// use [`list_schedule_with_skips`] to learn which. This wrapper keeps
+/// the historical drop-silently behaviour for callers that pre-filter.
 pub fn list_schedule(choices: &[PlacementChoice], cluster: &Cluster) -> Schedule {
+    list_schedule_with_skips(choices, cluster).0
+}
+
+/// [`list_schedule`] variant that also returns the task ids of choices it
+/// could not place (gang larger than every candidate node). Policies use
+/// this to cap gang sizes to the largest node instead of discovering the
+/// loss later as a confusing "task N not scheduled" validate error.
+pub fn list_schedule_with_skips(choices: &[PlacementChoice], cluster: &Cluster) -> (Schedule, Vec<usize>) {
     let mut free: Vec<Vec<f64>> = cluster.nodes.iter().map(|n| vec![0.0f64; n.gpus]).collect();
     let mut assignments = Vec::with_capacity(choices.len());
+    let mut skipped = Vec::new();
     for c in choices {
         let g = c.config.gpus;
         let candidate_nodes: Vec<usize> = match c.node {
@@ -186,7 +205,7 @@ pub fn list_schedule(choices: &[PlacementChoice], cluster: &Cluster) -> Schedule
         // earliest gang start across candidate nodes
         let mut best: Option<(usize, f64)> = None;
         for &ni in &candidate_nodes {
-            if free[ni].len() < g {
+            if ni >= free.len() || free[ni].len() < g {
                 continue;
             }
             let mut f = free[ni].clone();
@@ -198,7 +217,10 @@ pub fn list_schedule(choices: &[PlacementChoice], cluster: &Cluster) -> Schedule
         }
         let (ni, start) = match best {
             Some(x) => x,
-            None => continue, // no node large enough; caller validates
+            None => {
+                skipped.push(c.task_id); // no node large enough
+                continue;
+            }
         };
         let mut idx: Vec<usize> = (0..free[ni].len()).collect();
         idx.sort_by(|&a, &b| free[ni][a].total_cmp(&free[ni][b]).then(a.cmp(&b)));
@@ -215,7 +237,7 @@ pub fn list_schedule(choices: &[PlacementChoice], cluster: &Cluster) -> Schedule
             config: c.config.clone(),
         });
     }
-    Schedule { assignments }
+    (Schedule { assignments }, skipped)
 }
 
 #[cfg(test)]
@@ -292,6 +314,42 @@ mod tests {
         let c = Cluster::from_gpu_counts(&[2]);
         let s = list_schedule(&[choice(0, 4, 10.0)], &c);
         assert!(s.assignments.is_empty());
+    }
+
+    #[test]
+    fn skipped_task_ids_reported() {
+        let c = Cluster::from_gpu_counts(&[2, 4]);
+        let choices = vec![choice(0, 2, 10.0), choice(7, 8, 10.0), choice(3, 4, 10.0)];
+        let (s, skipped) = list_schedule_with_skips(&choices, &c);
+        assert_eq!(s.assignments.len(), 2);
+        assert_eq!(skipped, vec![7]);
+        // forced node too small is also a reported skip
+        let mut ch = choice(9, 4, 5.0);
+        ch.node = Some(0);
+        let (s2, skipped2) = list_schedule_with_skips(&[ch], &c);
+        assert!(s2.assignments.is_empty());
+        assert_eq!(skipped2, vec![9]);
+    }
+
+    #[test]
+    fn validate_catches_overlap_with_long_earlier_interval() {
+        // A long interval followed by two short ones: the second short one
+        // overlaps the LONG interval, not its immediate predecessor — the
+        // sweep must compare against the furthest-reaching earlier span.
+        let c = Cluster::from_gpu_counts(&[1]);
+        let w = tiny_workload(3);
+        let mk = |task_id: usize, start: f64, dur: f64| Assignment {
+            task_id,
+            node: 0,
+            gpus: vec![0],
+            start,
+            duration: dur,
+            config: cfg(1),
+        };
+        let s = Schedule {
+            assignments: vec![mk(0, 0.0, 100.0), mk(1, 1.0, 2.0), mk(2, 50.0, 5.0)],
+        };
+        assert!(s.validate(&c, &w).unwrap_err().contains("overlap"));
     }
 
     #[test]

@@ -91,6 +91,11 @@ pub struct SimResult {
     pub completions: Vec<(usize, f64)>,
     /// (task id, stop time) for tasks killed by an AutoML controller.
     pub stopped: Vec<(usize, f64)>,
+    /// (task id, first time it occupied GPUs), in start order. With
+    /// [`crate::trainer::Task::arrival`] this yields queueing delays.
+    pub starts: Vec<(usize, f64)>,
+    /// Arrival events processed (tasks injected mid-simulation).
+    pub arrival_events: usize,
 }
 
 impl SimResult {
@@ -104,7 +109,15 @@ impl SimResult {
     }
 
     /// Utilization sampled every `period` seconds (Fig 7(B): 100 s).
+    ///
+    /// # Panics
+    /// On a non-positive or non-finite `period` — such a period would
+    /// never advance the sample point (this used to hang forever).
     pub fn utilization_trace(&self, cluster: &Cluster, period: f64) -> Vec<(f64, f64)> {
+        assert!(
+            period > 0.0 && period.is_finite(),
+            "utilization_trace: period must be positive and finite, got {period}"
+        );
         let total = cluster.total_gpus() as f64;
         let mut out = Vec::new();
         let mut t = 0.0;
@@ -161,6 +174,13 @@ pub fn simulate_with_controller(
     controller: &mut dyn crate::trainer::automl::WorkloadController,
 ) -> SimResult {
     let n = workload.len();
+    if let Some(ic) = cfg.introspect {
+        assert!(
+            ic.interval > 0.0 && ic.interval.is_finite(),
+            "introspection interval must be positive and finite, got {}",
+            ic.interval
+        );
+    }
     let mut noise_rng = rng.fork(0xBEEF);
     let mut states: Vec<TaskState> = (0..n)
         .map(|_| TaskState { remaining: 1.0, noise: noise_rng.noise_factor(cfg.noise_sigma), penalty: 0.0 })
@@ -168,31 +188,83 @@ pub fn simulate_with_controller(
     let mut result = SimResult::default();
     let mut now = cfg.start_latency;
 
-    // initial plan
+    // initial plan over the tasks that have already been submitted;
+    // later arrivals are injected at their event times below
     let mut ctx = PlanCtx::fresh(workload, grid, cluster);
-    let mut plan = ordered_choices(&policy.plan(&ctx, rng));
+    for i in 0..n {
+        ctx.available[i] = workload[i].arrival <= now + 1e-9;
+    }
+    let mut plan: Vec<PlacementChoice> = if ctx.active().is_empty() {
+        Vec::new()
+    } else {
+        ordered_choices(&policy.plan(&ctx, rng))
+    };
+    let mut started = vec![false; n];
+    // the next introspection boundary is anchored to the last round, NOT
+    // reset by arrival events — otherwise a sustained arrival stream with
+    // gaps shorter than the interval would starve introspection (and the
+    // AutoML controller) indefinitely
+    let mut next_intro = cfg.introspect.map(|ic| now + ic.interval);
 
     loop {
         // replay the current plan over the remaining work, with actual
         // (noised) durations and pending relaunch penalties
         let trace = replay(&plan, &states, workload, cluster);
-        let horizon = match cfg.introspect {
-            Some(ic) => ic.interval,
-            None => f64::INFINITY,
-        };
         let seg_makespan = trace.makespan();
-        if seg_makespan <= horizon || cfg.introspect.is_none() {
-            // the whole remainder fits this segment: commit and finish
-            commit_segment(&trace, f64::INFINITY, now, &mut states, workload, &mut result);
-            result.makespan = now + seg_makespan;
-            break;
+        // the next event cutting this segment short: an introspection
+        // boundary or the next pending arrival, whichever is sooner
+        let next_arrival = (0..n)
+            .filter(|&i| !ctx.available[i])
+            .map(|i| workload[i].arrival)
+            .fold(f64::INFINITY, f64::min);
+        let intro_h = next_intro.map_or(f64::INFINITY, |t| (t - now).max(0.0));
+        let arr_h = if next_arrival.is_finite() { (next_arrival - now).max(0.0) } else { f64::INFINITY };
+        let horizon = intro_h.min(arr_h);
+
+        if seg_makespan <= horizon {
+            // everything currently planned finishes before the next event
+            commit_segment(&trace, f64::INFINITY, now, &mut states, &mut started, workload, &mut result);
+            if !next_arrival.is_finite() {
+                result.makespan = now + seg_makespan;
+                break;
+            }
+            // idle (or run out the tail) until the next submission, then
+            // take the arrival path below
+            now = next_arrival.max(now + seg_makespan);
+            // there is nothing left to introspect over the idle gap:
+            // restart the interval clock from the arrival
+            next_intro = cfg.introspect.map(|ic| now + ic.interval);
+            plan.retain(|c| {
+                let idx = workload.iter().position(|t| t.id == c.task_id).unwrap();
+                states[idx].remaining > 1e-12
+            });
+            arrival_replan(
+                policy, workload, cluster, &cfg, rng, &mut ctx, &mut states, &mut plan, &started, now,
+                &mut result,
+            );
+            continue;
         }
-        // commit only [0, interval) of the trace
-        commit_segment(&trace, horizon, now, &mut states, workload, &mut result);
+
+        // commit only [0, horizon) of the trace
+        commit_segment(&trace, horizon, now, &mut states, &mut started, workload, &mut result);
         now += horizon;
-        result.rounds += 1;
+
+        if arr_h <= intro_h {
+            // arrival event: inject the newly submitted tasks and re-plan
+            // through the same proposal/threshold path as introspection.
+            // The introspection clock keeps running — on a tie the
+            // overdue round fires on the very next loop iteration (with a
+            // zero-length segment), now seeing the injected tasks.
+            arrival_replan(
+                policy, workload, cluster, &cfg, rng, &mut ctx, &mut states, &mut plan, &started, now,
+                &mut result,
+            );
+            continue;
+        }
 
         // introspection (Alg. 2): re-solve the remaining workload
+        result.rounds += 1;
+        next_intro = cfg.introspect.map(|ic| now + ic.interval);
         let ic = cfg.introspect.unwrap();
         // AutoML review: the controller may stop tasks at this boundary
         let progress: Vec<f64> = states.iter().map(|s| 1.0 - s.remaining).collect();
@@ -203,9 +275,14 @@ pub fn simulate_with_controller(
             }
         }
         ctx.remaining = states.iter().map(|s| s.remaining).collect();
+        refresh_prior(&mut ctx, &plan, &started);
         if ctx.active().is_empty() {
-            result.makespan = now;
-            break;
+            if !has_pending(&ctx, workload) {
+                result.makespan = now;
+                break;
+            }
+            plan.clear();
+            continue;
         }
         let proposal = policy.plan(&ctx, rng);
         let proposal_choices = ordered_choices(&proposal);
@@ -226,12 +303,115 @@ pub fn simulate_with_controller(
                 states[idx].remaining > 1e-12
             });
         }
-        if plan.is_empty() {
+        if plan.is_empty() && !has_pending(&ctx, workload) {
             result.makespan = now;
             break;
         }
     }
     result
+}
+
+/// True if any task has been submitted but not yet injected.
+fn has_pending(ctx: &PlanCtx, workload: &Workload) -> bool {
+    (0..workload.len()).any(|i| !ctx.available[i])
+}
+
+/// Rebuild the context's incumbent-plan view (prior decisions + in-flight
+/// pins) from the simulator's current plan, for incremental re-solvers.
+fn refresh_prior(ctx: &mut PlanCtx, plan: &[PlacementChoice], started: &[bool]) {
+    ctx.prior = plan
+        .iter()
+        .map(|c| crate::solver::policy::PriorDecision {
+            task_id: c.task_id,
+            config: c.config.clone(),
+            node: c.node,
+        })
+        .collect();
+    for i in 0..ctx.workload.len() {
+        ctx.pinned[i] = started[i] && ctx.remaining[i] > 1e-12;
+    }
+}
+
+/// Arrival event: mark newly submitted tasks available and re-plan. The
+/// proposal is compared against keeping the incumbent plan with the new
+/// tasks appended (at their most GPU-efficient configuration); the switch
+/// threshold applies exactly as in introspection rounds, except that a
+/// proposal relocating nothing in-flight is accepted whenever it is
+/// simply better (there is no checkpoint/relaunch churn to amortize).
+#[allow(clippy::too_many_arguments)]
+fn arrival_replan(
+    policy: &dyn Policy,
+    workload: &Workload,
+    cluster: &Cluster,
+    cfg: &SimConfig,
+    rng: &mut DetRng,
+    ctx: &mut PlanCtx,
+    states: &mut Vec<TaskState>,
+    plan: &mut Vec<PlacementChoice>,
+    started: &[bool],
+    now: f64,
+    result: &mut SimResult,
+) {
+    let n = workload.len();
+    let mut newly: Vec<usize> = Vec::new();
+    for i in 0..n {
+        if !ctx.available[i] && workload[i].arrival <= now + 1e-9 {
+            ctx.available[i] = true;
+            newly.push(i);
+        }
+    }
+    if newly.is_empty() {
+        return;
+    }
+    result.arrival_events += 1;
+    ctx.remaining = states.iter().map(|s| s.remaining).collect();
+    refresh_prior(ctx, plan, started);
+    if ctx.active().is_empty() {
+        plan.clear();
+        return;
+    }
+    let proposal_choices = ordered_choices(&policy.plan(ctx, rng));
+    // keep-alternative: the incumbent plan minus finished tasks...
+    let mut keep: Vec<PlacementChoice> = plan.clone();
+    keep.retain(|c| {
+        let idx = workload.iter().position(|t| t.id == c.task_id).unwrap();
+        states[idx].remaining > 1e-12
+    });
+    // switch costs are charged against the pre-append incumbent, so a
+    // brand-new task is never billed for "moving"
+    let mut switch_states = states.clone();
+    let switched = mark_switches(&keep, &proposal_choices, &mut switch_states, cfg.switch_cost, workload);
+    let prop_ms = replay(&proposal_choices, &switch_states, workload, cluster).makespan();
+    // ...with the new arrivals appended at their min-area configuration
+    for &i in &newly {
+        if states[i].remaining <= 1e-12 {
+            continue;
+        }
+        if let Some(c) = ctx.min_area_config(i) {
+            keep.push(PlacementChoice {
+                task_id: workload[i].id,
+                duration: c.task_secs,
+                config: c,
+                node: None,
+            });
+        }
+    }
+    let keep_sched = replay(&keep, states, workload, cluster);
+    let keep_ms = keep_sched.makespan();
+    let threshold = cfg.introspect.map_or(0.0, |ic| ic.threshold);
+    let accept = prop_ms <= keep_ms - threshold
+        || (switched == 0 && prop_ms <= keep_ms)
+        || keep.is_empty();
+    if accept {
+        *plan = proposal_choices;
+        *states = switch_states;
+        result.switches += switched;
+    } else {
+        // materialize concrete nodes for the appended arrivals — leaving
+        // them node-less would let an in-flight gang silently migrate
+        // between nodes (cost-free) on every later replay
+        *plan = ordered_choices(&keep_sched);
+    }
 }
 
 /// Extract a plan as an ordered choice list (by start time).
@@ -272,6 +452,7 @@ fn commit_segment(
     horizon: f64,
     now: f64,
     states: &mut [TaskState],
+    started: &mut [bool],
     workload: &Workload,
     result: &mut SimResult,
 ) {
@@ -284,6 +465,10 @@ fn commit_segment(
         let ran = end - a.start;
         if ran <= 0.0 {
             continue;
+        }
+        if !started[idx] {
+            started[idx] = true;
+            result.starts.push((a.task_id, now + a.start));
         }
         result.spans.push(BusySpan {
             task_id: a.task_id,
@@ -464,6 +649,83 @@ mod tests {
         let sat = simulate(&JointOptimizer::default(), &w, &grid, &c, SimConfig::default(), &mut r1);
         let max = simulate(&MaxHeuristic, &w, &grid, &c, SimConfig::default(), &mut r2);
         assert!(sat.makespan < max.makespan, "saturn={} max={}", sat.makespan, max.makespan);
+    }
+
+    #[test]
+    #[should_panic(expected = "period must be positive")]
+    fn utilization_trace_rejects_nonpositive_period() {
+        // regression: a non-positive period used to never advance the
+        // sample point, looping forever
+        let c = Cluster::single_node_8gpu();
+        let r = SimResult { makespan: 100.0, ..Default::default() };
+        let _ = r.utilization_trace(&c, 0.0);
+    }
+
+    #[test]
+    fn arrivals_delay_starts_and_all_complete() {
+        let c = Cluster::single_node_8gpu();
+        let (mut w, grid) = setup(&c);
+        for (i, t) in w.iter_mut().enumerate() {
+            t.arrival = (i as f64) * 1500.0;
+        }
+        let cfg = SimConfig {
+            introspect: Some(IntrospectCfg { interval: 2000.0, threshold: 300.0 }),
+            ..Default::default()
+        };
+        let mut rng = DetRng::new(21);
+        let r = simulate(&JointOptimizer::default(), &w, &grid, &c, cfg, &mut rng);
+        assert_eq!(r.completions.len(), w.len());
+        assert!(r.arrival_events > 0, "arrival events should fire");
+        for t in &w {
+            let (_, start) = r.starts.iter().find(|(id, _)| *id == t.id).unwrap();
+            assert!(
+                *start >= t.arrival - 1e-6,
+                "task {} started at {start} before its arrival {}",
+                t.id,
+                t.arrival
+            );
+            let (_, done) = r.completions.iter().find(|(id, _)| *id == t.id).unwrap();
+            assert!(*done >= t.arrival, "completion before arrival");
+        }
+    }
+
+    #[test]
+    fn arrivals_work_without_introspection() {
+        // even in one-shot mode, arrival events must inject tasks
+        let c = Cluster::single_node_8gpu();
+        let (mut w, grid) = setup(&c);
+        let n = w.len();
+        for (i, t) in w.iter_mut().enumerate() {
+            if i >= n / 2 {
+                t.arrival = 5000.0;
+            }
+        }
+        let mut rng = DetRng::new(22);
+        let r = simulate(&JointOptimizer::default(), &w, &grid, &c, SimConfig::default(), &mut rng);
+        assert_eq!(r.completions.len(), w.len());
+        assert_eq!(r.rounds, 0, "no introspection rounds in one-shot mode");
+        assert!(r.arrival_events >= 1);
+        for t in w.iter().skip(n / 2) {
+            let (_, start) = r.starts.iter().find(|(id, _)| *id == t.id).unwrap();
+            assert!(*start >= 5000.0 - 1e-6);
+        }
+    }
+
+    #[test]
+    fn late_arrival_extends_makespan_past_idle_gap() {
+        // a single task arriving long after the first finishes: the
+        // cluster idles, then runs it — makespan covers both
+        let c = Cluster::single_node_8gpu();
+        let (mut w, grid) = setup(&c);
+        w.truncate(2);
+        w[1].arrival = 1e7;
+        let cfg = SimConfig { noise_sigma: 0.0, ..Default::default() };
+        let mut rng = DetRng::new(23);
+        let r = simulate(&JointOptimizer::default(), &w, &grid, &c, cfg, &mut rng);
+        assert_eq!(r.completions.len(), 2);
+        assert!(r.makespan > 1e7, "makespan {} should extend past the arrival", r.makespan);
+        let (_, start1) = r.starts.iter().find(|(id, _)| *id == w[1].id).unwrap();
+        assert!(*start1 >= 1e7);
     }
 
     #[test]

@@ -37,11 +37,17 @@ pub struct JointOptimizer {
     pub restarts: usize,
     /// Iterations per temperature level.
     pub iters_per_temp: usize,
+    /// Incremental re-solve mode for online arrivals: when the planning
+    /// context carries an incumbent plan ([`PlanCtx::prior`]), warm-start
+    /// from it — in-flight (pinned) tasks keep their configuration and
+    /// node, only new and not-yet-started tasks are re-decided — instead
+    /// of solving the full problem from scratch.
+    pub incremental: bool,
 }
 
 impl Default for JointOptimizer {
     fn default() -> Self {
-        Self { timeout: Duration::from_millis(500), restarts: 4, iters_per_temp: 400 }
+        Self { timeout: Duration::from_millis(500), restarts: 4, iters_per_temp: 400, incremental: false }
     }
 }
 
@@ -88,10 +94,26 @@ pub struct SolveStats {
     pub elapsed_secs: f64,
 }
 
+/// Index of a task's minimum-GPU·seconds (most efficient) configuration.
+fn min_area_index(task: &SpaseTask) -> usize {
+    (0..task.configs.len())
+        .min_by(|&a, &b| {
+            let ca = &task.configs[a];
+            let cb = &task.configs[b];
+            (ca.task_secs * ca.gpus as f64).total_cmp(&(cb.task_secs * cb.gpus as f64))
+        })
+        .unwrap_or(0)
+}
+
 impl JointOptimizer {
     /// Optimizer with an explicit timeout.
     pub fn with_timeout(timeout: Duration) -> Self {
         Self { timeout, ..Self::default() }
+    }
+
+    /// Incremental-mode optimizer (online arrival path).
+    pub fn incremental() -> Self {
+        Self { incremental: true, ..Self::default() }
     }
 
     /// Solve a SPASE instance, returning the plan and search statistics.
@@ -122,6 +144,7 @@ impl JointOptimizer {
 
         // ---- annealing with restarts ------------------------------------
         let lb = Self::lower_bound(tasks, cluster);
+        let movable: Vec<usize> = (0..nt).collect();
         'outer: for restart in 0..self.restarts.max(1) {
             let mut cur = if restart == 0 {
                 best_state.clone()
@@ -144,7 +167,7 @@ impl JointOptimizer {
                     if deadline.expired() {
                         break 'outer;
                     }
-                    let cand = self.neighbor(&cur, tasks, cluster, rng);
+                    let cand = self.neighbor(&cur, tasks, cluster, rng, &movable);
                     stats.evals += 1;
                     let ms = Self::eval_fast(&cand, &durs, &mut scratch);
                     let accept = ms < cur_ms || rng.f64() < ((cur_ms - ms) / temp).exp();
@@ -272,13 +295,150 @@ impl JointOptimizer {
         (sched, ms)
     }
 
-    fn neighbor(&self, s: &State, tasks: &[SpaseTask], cluster: &Cluster, rng: &mut DetRng) -> State {
-        let mut n = s.clone();
+    /// Incremental re-solve (online arrivals): seed the search from the
+    /// context's incumbent plan, keep pinned in-flight tasks' (config,
+    /// node) fixed, and run a single short annealing pass over the new
+    /// and not-yet-started decisions. Falls back to a cold [`Self::solve`]
+    /// when the incumbent cannot seat a feasible schedule.
+    pub fn resolve_incremental(&self, ctx: &PlanCtx, rng: &mut DetRng) -> (Schedule, SolveStats) {
+        let tasks = ctx.spase_tasks();
+        let cluster = ctx.cluster;
+        let mut stats = SolveStats::default();
+        if tasks.is_empty() {
+            return (Schedule::default(), stats);
+        }
+        let start = std::time::Instant::now();
+        // a fraction of the cold budget: the point of warm-starting
+        let deadline = Deadline::after(self.timeout / 4);
         let nt = tasks.len();
+
+        // seed (config, node, lock) per task from the incumbent
+        let mut cfg = vec![0usize; nt];
+        let mut node: Vec<Option<usize>> = vec![None; nt];
+        let mut locked = vec![false; nt];
+        let mut prior_pos: Vec<Option<usize>> = vec![None; nt];
+        for (t, st) in tasks.iter().enumerate() {
+            match ctx.prior_for(st.id) {
+                Some(p) => {
+                    prior_pos[t] = ctx.prior.iter().position(|q| q.task_id == st.id);
+                    node[t] = p.node;
+                    let matched = st
+                        .configs
+                        .iter()
+                        .position(|c| c.gpus == p.config.gpus && c.upp == p.config.upp);
+                    match matched {
+                        Some(ci) => {
+                            cfg[t] = ci;
+                            let wi = ctx.index_of(st.id);
+                            locked[t] = wi.map_or(false, |i| ctx.pinned[i]);
+                        }
+                        None => cfg[t] = min_area_index(st),
+                    }
+                }
+                None => {
+                    // new task: start at its most GPU-efficient config
+                    cfg[t] = min_area_index(st);
+                }
+            }
+        }
+        // order: incumbent order first, then new tasks by (arrival, id)
+        let arrival_of = |t: usize| -> f64 {
+            ctx.index_of(tasks[t].id).map_or(f64::MAX, |i| ctx.workload[i].arrival)
+        };
+        let mut order: Vec<usize> = (0..nt).collect();
+        order.sort_by(|&a, &b| match (prior_pos[a], prior_pos[b]) {
+            (Some(x), Some(y)) => x.cmp(&y),
+            (Some(_), None) => std::cmp::Ordering::Less,
+            (None, Some(_)) => std::cmp::Ordering::Greater,
+            (None, None) => arrival_of(a).total_cmp(&arrival_of(b)).then(tasks[a].id.cmp(&tasks[b].id)),
+        });
+        let seed = State { cfg, order, node };
+
+        let durs: Vec<Vec<(usize, f64)>> = tasks
+            .iter()
+            .map(|t| t.configs.iter().map(|c| (c.gpus, c.task_secs)).collect())
+            .collect();
+        let mut scratch = Scratch {
+            node_gpus: cluster.nodes.iter().map(|n| n.gpus).collect(),
+            free: cluster.nodes.iter().map(|n| Vec::with_capacity(n.gpus)).collect(),
+            tmp: Vec::new(),
+        };
+        stats.evals += 1;
+        let mut best_state = seed.clone();
+        let mut best_ms = Self::eval_fast(&seed, &durs, &mut scratch);
+        stats.warm_makespan = best_ms;
+        if !best_ms.is_finite() {
+            // incumbent cannot seat the current task set: cold-solve
+            return self.solve(&tasks, cluster, rng);
+        }
+
+        // one short annealing pass; locked tasks keep (config, node)
+        let lb = Self::lower_bound(&tasks, cluster);
+        let movable: Vec<usize> = (0..nt).filter(|&t| !locked[t]).collect();
+        let iters = (self.iters_per_temp / 2).max(50);
+        let mut cur = seed;
+        let mut cur_ms = best_ms;
+        let mut temp = 0.05 * cur_ms.max(1e-9);
+        let min_temp = 1e-4 * cur_ms.max(1e-9);
+        'outer: while temp > min_temp {
+            for _ in 0..iters {
+                if deadline.expired() {
+                    break 'outer;
+                }
+                let cand = self.neighbor(&cur, &tasks, cluster, rng, &movable);
+                stats.evals += 1;
+                let ms = Self::eval_fast(&cand, &durs, &mut scratch);
+                let accept = ms < cur_ms || rng.f64() < ((cur_ms - ms) / temp).exp();
+                if accept {
+                    cur = cand;
+                    cur_ms = ms;
+                    if ms < best_ms - 1e-9 {
+                        best_ms = ms;
+                        best_state = cur.clone();
+                        stats.improvements += 1;
+                    }
+                }
+            }
+            if best_ms <= lb * (1.0 + 1e-6) {
+                break; // provably optimal
+            }
+            temp *= 0.7;
+        }
+
+        let (sched, ms) = self.eval(&best_state, &tasks, cluster, &mut stats);
+        stats.final_makespan = if ms.is_finite() { ms } else { best_ms };
+        stats.elapsed_secs = start.elapsed().as_secs_f64();
+        (sched, stats)
+    }
+
+    /// One annealing move. Configuration/node moves sample tasks from
+    /// `movable` (every task in a cold solve; the unlocked subset in an
+    /// incremental re-solve — pinned in-flight tasks keep their
+    /// placement); order moves may touch any task.
+    fn neighbor(
+        &self,
+        s: &State,
+        tasks: &[SpaseTask],
+        cluster: &Cluster,
+        rng: &mut DetRng,
+        movable: &[usize],
+    ) -> State {
+        let nt = tasks.len();
+        if movable.is_empty() {
+            // only ordering freedom remains
+            let mut n = s.clone();
+            if nt > 1 {
+                let a = rng.below(nt);
+                let b = rng.below(nt);
+                n.order.swap(a, b);
+            }
+            return n;
+        }
+        let mut n = s.clone();
         match rng.below(6) {
             0 => {
                 // nudge one task's configuration up/down the frontier
-                let t = rng.below(nt);
+                let t = movable[rng.below(movable.len())];
                 let k = tasks[t].configs.len();
                 if k > 1 {
                     let cur = n.cfg[t] as isize;
@@ -288,7 +448,7 @@ impl JointOptimizer {
             }
             1 => {
                 // random configuration jump
-                let t = rng.below(nt);
+                let t = movable[rng.below(movable.len())];
                 n.cfg[t] = rng.below(tasks[t].configs.len());
             }
             2 => {
@@ -310,7 +470,7 @@ impl JointOptimizer {
             }
             4 => {
                 // toggle a forced node
-                let t = rng.below(nt);
+                let t = movable[rng.below(movable.len())];
                 n.node[t] = if n.node[t].is_some() || cluster.nodes.len() == 1 {
                     None
                 } else {
@@ -319,8 +479,8 @@ impl JointOptimizer {
             }
             _ => {
                 // block move: re-randomize configs of a few tasks (LNS-ish)
-                for _ in 0..(nt / 4).max(1) {
-                    let t = rng.below(nt);
+                for _ in 0..(movable.len() / 4).max(1) {
+                    let t = movable[rng.below(movable.len())];
                     n.cfg[t] = rng.below(tasks[t].configs.len());
                 }
             }
@@ -427,6 +587,9 @@ impl Policy for JointOptimizer {
     }
 
     fn plan(&self, ctx: &PlanCtx, rng: &mut DetRng) -> Schedule {
+        if self.incremental && !ctx.prior.is_empty() {
+            return self.resolve_incremental(ctx, rng).0;
+        }
         let tasks = ctx.spase_tasks();
         self.solve(&tasks, ctx.cluster, rng).0
     }
@@ -546,6 +709,103 @@ mod tests {
         let (_, stats) = JointOptimizer::default().solve(&tasks, &cluster, &mut rng);
         assert!(stats.final_makespan <= stats.warm_makespan + 1e-9);
         assert!(stats.final_makespan >= JointOptimizer::lower_bound(&tasks, &cluster) - 1e-9);
+    }
+
+    #[test]
+    fn incremental_resolve_pins_in_flight_tasks() {
+        use crate::costmodel::CostModel;
+        use crate::parallelism::UppRegistry;
+        use crate::profiler::TrialRunner;
+        use crate::solver::policy::PriorDecision;
+        use crate::trainer::workloads;
+        use std::sync::Arc;
+
+        let w = workloads::txt_workload();
+        let c = Cluster::single_node_8gpu();
+        let runner = TrialRunner::new(UppRegistry::default_library(Arc::new(CostModel::default())));
+        let (grid, _) = runner.profile(&w, &c);
+        let mut ctx = PlanCtx::fresh(&w, &grid, &c);
+        let mut rng = DetRng::new(41);
+        let cold = JointOptimizer::default().plan(&ctx, &mut rng);
+        cold.validate(&c, &w).unwrap();
+
+        // incumbent = the cold plan; pin the first three by start order
+        let mut assigns = cold.assignments.clone();
+        assigns.sort_by(|a, b| a.start.total_cmp(&b.start).then(a.task_id.cmp(&b.task_id)));
+        ctx.prior = assigns
+            .iter()
+            .map(|a| PriorDecision { task_id: a.task_id, config: a.config.clone(), node: Some(a.node) })
+            .collect();
+        for a in assigns.iter().take(3) {
+            let i = ctx.index_of(a.task_id).unwrap();
+            ctx.pinned[i] = true;
+        }
+
+        // generous timeout so the (wall-clock) deadline never truncates
+        // the pass and the run is deterministic across machines
+        let opt =
+            JointOptimizer { timeout: Duration::from_secs(40), incremental: true, ..Default::default() };
+        let mut rng2 = DetRng::new(42);
+        let (warm, stats) = opt.resolve_incremental(&ctx, &mut rng2);
+        warm.validate(&c, &w).unwrap();
+        // pinned in-flight tasks keep their configuration and node
+        for a in assigns.iter().take(3) {
+            let wa = warm.assignment_for(a.task_id).unwrap();
+            assert_eq!(wa.node, a.node, "pinned task {} moved node", a.task_id);
+            assert_eq!(wa.config.gpus, a.config.gpus, "pinned task {} re-scaled", a.task_id);
+            assert_eq!(wa.config.upp, a.config.upp, "pinned task {} re-parallelized", a.task_id);
+        }
+        // warm start can only improve on the incumbent it seeded from
+        assert!(
+            stats.final_makespan <= cold.makespan() + 1e-6,
+            "warm {} vs incumbent {}",
+            stats.final_makespan,
+            cold.makespan()
+        );
+        // the Policy entry point dispatches to the incremental path
+        let mut rng3 = DetRng::new(42);
+        let via_plan = opt.plan(&ctx, &mut rng3);
+        assert_eq!(via_plan.makespan(), warm.makespan());
+    }
+
+    #[test]
+    fn incremental_appends_new_arrivals() {
+        use crate::costmodel::CostModel;
+        use crate::parallelism::UppRegistry;
+        use crate::profiler::TrialRunner;
+        use crate::solver::policy::PriorDecision;
+        use crate::trainer::workloads;
+        use std::sync::Arc;
+
+        // 6 tasks known up front, 2 arriving later: prior covers the
+        // first 6, the re-solve must place all 8
+        let mut w = workloads::txt_workload();
+        w.truncate(8);
+        for t in w.iter_mut().skip(6) {
+            t.arrival = 4000.0;
+        }
+        let c = Cluster::single_node_8gpu();
+        let runner = TrialRunner::new(UppRegistry::default_library(Arc::new(CostModel::default())));
+        let (grid, _) = runner.profile(&w, &c);
+        let mut ctx = PlanCtx::fresh(&w, &grid, &c);
+        ctx.available[6] = false;
+        ctx.available[7] = false;
+        let mut rng = DetRng::new(43);
+        let first = JointOptimizer::default().plan(&ctx, &mut rng);
+        assert_eq!(first.assignments.len(), 6);
+        // the two tasks arrive
+        ctx.available[6] = true;
+        ctx.available[7] = true;
+        ctx.prior = first
+            .assignments
+            .iter()
+            .map(|a| PriorDecision { task_id: a.task_id, config: a.config.clone(), node: Some(a.node) })
+            .collect();
+        let opt =
+            JointOptimizer { timeout: Duration::from_secs(40), incremental: true, ..Default::default() };
+        let (warm, _) = opt.resolve_incremental(&ctx, &mut rng);
+        assert_eq!(warm.assignments.len(), 8, "new arrivals must be placed");
+        warm.validate(&c, &w).unwrap();
     }
 
     #[test]

@@ -14,6 +14,19 @@ use crate::solver::spase::SpaseTask;
 use crate::trainer::Workload;
 use crate::util::rng::DetRng;
 
+/// One task's decision in an incumbent plan: what it runs as and where.
+/// The incremental re-solver warm-starts from these instead of solving
+/// the full MILP from scratch on every online arrival.
+#[derive(Debug, Clone)]
+pub struct PriorDecision {
+    /// Task id.
+    pub task_id: usize,
+    /// Configuration the incumbent chose.
+    pub config: TaskConfig,
+    /// Node the incumbent chose (if forced).
+    pub node: Option<usize>,
+}
+
 /// Everything a planner needs to produce a plan.
 #[derive(Debug, Clone)]
 pub struct PlanCtx<'a> {
@@ -26,17 +39,59 @@ pub struct PlanCtx<'a> {
     /// Fraction of each task's minibatches still to run, indexed like
     /// `workload`. 1.0 = untrained, 0.0 = complete (excluded from plans).
     pub remaining: Vec<f64>,
+    /// Which tasks have been submitted yet, indexed like `workload`.
+    /// Online workloads flip entries as arrival events fire; planners
+    /// must not schedule unavailable tasks. All-true in offline runs.
+    pub available: Vec<bool>,
+    /// In-flight markers, indexed like `workload`: a pinned task has
+    /// started running and an incremental re-solve keeps its (config,
+    /// node) from [`PlanCtx::prior`] fixed, re-deciding only new and
+    /// not-yet-started tasks.
+    pub pinned: Vec<bool>,
+    /// The incumbent plan's decisions in schedule order. Empty = cold
+    /// solve (no incumbent to warm-start from).
+    pub prior: Vec<PriorDecision>,
 }
 
 impl<'a> PlanCtx<'a> {
-    /// Fresh context: nothing trained yet.
+    /// Fresh context: nothing trained yet, everything available.
     pub fn fresh(workload: &'a Workload, grid: &'a ProfileGrid, cluster: &'a Cluster) -> Self {
-        Self { workload, grid, cluster, remaining: vec![1.0; workload.len()] }
+        let n = workload.len();
+        Self {
+            workload,
+            grid,
+            cluster,
+            remaining: vec![1.0; n],
+            available: vec![true; n],
+            pinned: vec![false; n],
+            prior: Vec::new(),
+        }
     }
 
-    /// Indices of tasks with work left.
+    /// Indices of tasks with work left that have arrived.
     pub fn active(&self) -> Vec<usize> {
-        (0..self.workload.len()).filter(|&i| self.remaining[i] > 1e-12).collect()
+        (0..self.workload.len())
+            .filter(|&i| self.remaining[i] > 1e-12 && self.available[i])
+            .collect()
+    }
+
+    /// Workload index of a task id.
+    pub fn index_of(&self, task_id: usize) -> Option<usize> {
+        self.workload.iter().position(|t| t.id == task_id)
+    }
+
+    /// The incumbent decision for a task id, if any.
+    pub fn prior_for(&self, task_id: usize) -> Option<&PriorDecision> {
+        self.prior.iter().find(|p| p.task_id == task_id)
+    }
+
+    /// The most GPU-efficient configuration (minimum GPU·seconds area)
+    /// for workload index `i`, remaining-scaled. The default for newly
+    /// arrived tasks appended to an incumbent plan.
+    pub fn min_area_config(&self, i: usize) -> Option<TaskConfig> {
+        self.configs(i)
+            .into_iter()
+            .min_by(|a, b| (a.task_secs * a.gpus as f64).total_cmp(&(b.task_secs * b.gpus as f64)))
     }
 
     /// Configuration frontier for workload index `i`, with runtimes scaled
@@ -153,6 +208,45 @@ mod tests {
         assert_eq!(active.len(), w.len() - 1);
         assert!(!active.contains(&3));
         assert_eq!(ctx.spase_tasks().len(), w.len() - 1);
+    }
+
+    #[test]
+    fn unavailable_tasks_excluded() {
+        let (w, grid, c) = setup();
+        let mut ctx = PlanCtx::fresh(&w, &grid, &c);
+        ctx.available[2] = false;
+        ctx.available[5] = false;
+        let active = ctx.active();
+        assert_eq!(active.len(), w.len() - 2);
+        assert!(!active.contains(&2) && !active.contains(&5));
+        assert_eq!(ctx.spase_tasks().len(), w.len() - 2);
+    }
+
+    #[test]
+    fn min_area_config_minimizes_gpu_seconds() {
+        let (w, grid, c) = setup();
+        let ctx = PlanCtx::fresh(&w, &grid, &c);
+        let best = ctx.min_area_config(0).unwrap();
+        for cfg in ctx.configs(0) {
+            assert!(
+                best.task_secs * best.gpus as f64 <= cfg.task_secs * cfg.gpus as f64 + 1e-9,
+                "area({}) < area({})",
+                cfg.gpus,
+                best.gpus
+            );
+        }
+    }
+
+    #[test]
+    fn index_and_prior_lookup() {
+        let (w, grid, c) = setup();
+        let mut ctx = PlanCtx::fresh(&w, &grid, &c);
+        assert_eq!(ctx.index_of(w[3].id), Some(3));
+        assert_eq!(ctx.index_of(999_999), None);
+        assert!(ctx.prior_for(w[0].id).is_none());
+        let cfg = ctx.min_area_config(0).unwrap();
+        ctx.prior = vec![PriorDecision { task_id: w[0].id, config: cfg, node: Some(0) }];
+        assert_eq!(ctx.prior_for(w[0].id).unwrap().node, Some(0));
     }
 
     #[test]

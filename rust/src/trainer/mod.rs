@@ -58,6 +58,11 @@ pub struct Task {
     /// Hint: model is a transformer (drives FSDP auto-wrap policy, as in
     /// the paper's appendix Listing 5/6 `hints.is_transformer`).
     pub is_transformer: bool,
+    /// Submission time, seconds. `0.0` (the default) reproduces the
+    /// paper's offline setting where every job exists up front; the
+    /// online-submission path (`crate::online`, arrival-aware simulation)
+    /// injects tasks with positive arrivals mid-run.
+    pub arrival: f64,
 }
 
 impl Task {
@@ -65,7 +70,14 @@ impl Task {
     pub fn new(id: usize, model: ModelDesc, hparams: HParams, dataset_examples: usize) -> Self {
         let name = format!("{}/b{}/lr{:.0e}", model.name, hparams.batch_size, hparams.lr);
         let is_transformer = !matches!(model.arch, crate::model::Arch::ConvNet);
-        Self { id, name, model, hparams, dataset_examples, is_transformer }
+        Self { id, name, model, hparams, dataset_examples, is_transformer, arrival: 0.0 }
+    }
+
+    /// Builder: set the submission time (online workloads).
+    pub fn with_arrival(mut self, arrival: f64) -> Self {
+        assert!(arrival >= 0.0 && arrival.is_finite(), "arrival must be finite and non-negative");
+        self.arrival = arrival;
+        self
     }
 
     /// Minibatches per epoch (ceil division; last partial batch counts).
@@ -119,6 +131,20 @@ mod tests {
         assert!(t.name.contains("gpt2-1.5b"));
         assert!(t.name.contains("b16"));
         assert!(t.is_transformer);
+    }
+
+    #[test]
+    fn arrival_defaults_to_zero() {
+        let t = task();
+        assert_eq!(t.arrival, 0.0);
+        let t2 = t.with_arrival(120.0);
+        assert_eq!(t2.arrival, 120.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "arrival")]
+    fn arrival_rejects_negative() {
+        let _ = task().with_arrival(-1.0);
     }
 
     #[test]

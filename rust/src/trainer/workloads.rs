@@ -114,6 +114,68 @@ pub fn random_search(
         .collect()
 }
 
+// ---- online arrival traces ------------------------------------------------
+//
+// The paper's §4.1 assumes all jobs are known at t = 0; the online
+// subsystem (`crate::online`, arrival-aware simulation) relaxes that.
+// These helpers stamp arrival times onto any workload.
+
+/// Poisson process arrivals: i.i.d. exponential inter-arrival gaps with
+/// the given mean, cumulatively summed (first task arrives after one gap).
+pub fn with_poisson_arrivals(mut w: Workload, mean_gap_secs: f64, rng: &mut DetRng) -> Workload {
+    assert!(mean_gap_secs > 0.0, "mean inter-arrival gap must be positive");
+    let mut t = 0.0;
+    for task in &mut w {
+        // inverse-CDF sample; 1 - u ∈ (0, 1] so ln is finite
+        t += -mean_gap_secs * (1.0 - rng.f64()).ln();
+        task.arrival = t;
+    }
+    w
+}
+
+/// Bursty arrivals: tasks split into `bursts` near-equal groups, group k
+/// arriving together at `k * burst_gap_secs` (k = 0 arrives at t = 0).
+pub fn with_burst_arrivals(mut w: Workload, bursts: usize, burst_gap_secs: f64) -> Workload {
+    assert!(bursts > 0, "need at least one burst");
+    assert!(burst_gap_secs >= 0.0, "burst gap must be non-negative");
+    let n = w.len();
+    let per = n.div_ceil(bursts.min(n.max(1)));
+    for (i, task) in w.iter_mut().enumerate() {
+        task.arrival = (i / per.max(1)) as f64 * burst_gap_secs;
+    }
+    w
+}
+
+/// Batch-submission arrivals: every `batch` consecutive tasks share a
+/// submission instant, batches spaced `period_secs` apart starting at 0
+/// (a nightly-cron model-selection queue).
+pub fn with_batch_arrivals(mut w: Workload, batch: usize, period_secs: f64) -> Workload {
+    assert!(batch > 0, "batch size must be positive");
+    assert!(period_secs >= 0.0, "period must be non-negative");
+    for (i, task) in w.iter_mut().enumerate() {
+        task.arrival = (i / batch) as f64 * period_secs;
+    }
+    w
+}
+
+/// A streaming model-selection workload: `n` tasks drawn over the GPT-2 /
+/// ViT / ResNet families (short epoch counts so online simulations stay
+/// fast), arriving as a Poisson process with the given mean gap.
+pub fn online_mixed_workload(n: usize, mean_gap_secs: f64, rng: &mut DetRng) -> Workload {
+    let w: Workload = (0..n)
+        .map(|i| {
+            let (model, batch, examples) = match rng.below(3) {
+                0 => (ModelDesc::gpt2_1_5b(), *rng.choose(&[16usize, 32]), text_examples(1024)),
+                1 => (ModelDesc::vit_g_1_8b(), *rng.choose(&[64usize, 128]), IMAGENET_SUBSET_EXAMPLES),
+                _ => (ModelDesc::resnet_200m(), *rng.choose(&[64usize, 128]), IMAGENET_SUBSET_EXAMPLES),
+            };
+            let lr = (rng.range_f64((1e-5f64).ln(), (1e-2f64).ln())).exp();
+            Task::new(i, model, HParams::new(batch, lr, 2, Optimizer::Adam), examples)
+        })
+        .collect();
+    with_poisson_arrivals(w, mean_gap_secs, rng)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -171,5 +233,58 @@ mod tests {
         let w = txt_model_size(24, 4);
         assert_eq!(w.len(), 4);
         assert!(w[0].model.name.contains("stack-24"));
+    }
+
+    #[test]
+    fn poisson_arrivals_strictly_increasing() {
+        let mut rng = DetRng::new(9);
+        let w = with_poisson_arrivals(txt_workload(), 600.0, &mut rng);
+        assert!(w[0].arrival > 0.0);
+        for pair in w.windows(2) {
+            assert!(pair[1].arrival > pair[0].arrival);
+        }
+        // deterministic given the seed
+        let mut rng2 = DetRng::new(9);
+        let w2 = with_poisson_arrivals(txt_workload(), 600.0, &mut rng2);
+        assert_eq!(w[3].arrival, w2[3].arrival);
+        // mean gap lands near the requested one (law of large numbers-ish)
+        let mut rng3 = DetRng::new(10);
+        let big = with_poisson_arrivals(txt_lr_sweep(400), 100.0, &mut rng3);
+        let mean = big.last().unwrap().arrival / 400.0;
+        assert!(mean > 80.0 && mean < 120.0, "mean gap {mean}");
+    }
+
+    #[test]
+    fn burst_arrivals_group_tasks() {
+        let w = with_burst_arrivals(txt_workload(), 3, 1000.0);
+        assert_eq!(w[0].arrival, 0.0);
+        assert_eq!(w[4].arrival, 1000.0);
+        assert_eq!(w[11].arrival, 2000.0);
+        let arrivals: std::collections::BTreeSet<u64> =
+            w.iter().map(|t| t.arrival as u64).collect();
+        assert_eq!(arrivals.len(), 3);
+    }
+
+    #[test]
+    fn batch_arrivals_follow_period() {
+        let w = with_batch_arrivals(txt_workload(), 4, 500.0);
+        assert_eq!(w[3].arrival, 0.0);
+        assert_eq!(w[4].arrival, 500.0);
+        assert_eq!(w[11].arrival, 1000.0);
+    }
+
+    #[test]
+    fn online_mixed_workload_shape() {
+        let mut rng = DetRng::new(12);
+        let w = online_mixed_workload(24, 300.0, &mut rng);
+        assert_eq!(w.len(), 24);
+        // dense unique ids, monotone arrivals, small epoch counts
+        for (i, t) in w.iter().enumerate() {
+            assert_eq!(t.id, i);
+            assert_eq!(t.hparams.epochs, 2);
+        }
+        for pair in w.windows(2) {
+            assert!(pair[1].arrival > pair[0].arrival);
+        }
     }
 }

@@ -13,7 +13,7 @@ use saturn::profiler::TrialRunner;
 use saturn::sched::{list_schedule, PlacementChoice};
 use saturn::sim::{simulate, IntrospectCfg, SimConfig};
 use saturn::solver::joint::JointOptimizer;
-use saturn::solver::policy::{PlanCtx, Policy};
+use saturn::solver::policy::{PlanCtx, Policy, PriorDecision};
 use saturn::trainer::{HParams, Optimizer, Task, Workload};
 use saturn::util::json::Json;
 use saturn::util::rng::DetRng;
@@ -211,6 +211,166 @@ fn prop_json_roundtrip() {
         assert_eq!(compact, v, "case {case}");
         let pretty = Json::parse(&v.pretty()).unwrap();
         assert_eq!(pretty, v, "case {case} (pretty)");
+    }
+}
+
+/// Online arrivals: for random workloads with staggered submission
+/// times, every task's first GPU occupancy and completion respect its
+/// arrival, with and without introspection, and nothing is lost.
+#[test]
+fn prop_no_task_starts_before_arrival() {
+    let registry = UppRegistry::default_library(Arc::new(CostModel::default()));
+    let mut rng = DetRng::new(404);
+    let mut checked = 0;
+    for case in 0..6 {
+        let mut crng = rng.fork(case);
+        let mut w = random_workload(&mut crng);
+        let c = random_cluster(&mut crng);
+        let (grid, _) = TrialRunner::new(registry.clone()).profile(&w, &c);
+        if w.iter().any(|t| grid.configs(t).is_empty()) {
+            continue;
+        }
+        let mut t_arr = 0.0;
+        for t in w.iter_mut() {
+            t.arrival = t_arr;
+            t_arr += crng.range_f64(50.0, 3000.0);
+        }
+        for introspect in [None, Some(IntrospectCfg { interval: 800.0, threshold: 200.0 })] {
+            let cfg = SimConfig { noise_sigma: 0.05, introspect, ..SimConfig::default() };
+            let policy = JointOptimizer {
+                timeout: std::time::Duration::from_millis(60),
+                incremental: true,
+                ..Default::default()
+            };
+            let mut srng = crng.fork(7);
+            let r = simulate(&policy, &w, &grid, &c, cfg, &mut srng);
+            assert_eq!(r.completions.len(), w.len(), "case {case}: all complete");
+            for t in &w {
+                let (_, s) = r.starts.iter().find(|(id, _)| *id == t.id).unwrap();
+                assert!(
+                    *s >= t.arrival - 1e-6,
+                    "case {case}: task {} started {s} before arrival {}",
+                    t.id,
+                    t.arrival
+                );
+                let (_, d) = r.completions.iter().find(|(id, _)| *id == t.id).unwrap();
+                assert!(*d >= t.arrival, "case {case}: completion before arrival");
+            }
+            checked += 1;
+        }
+    }
+    assert!(checked >= 4, "too few online cases: {checked}");
+}
+
+/// Arrival-triggered incremental re-solves always produce plans that
+/// pass `validate` over the arrived sub-workload, with the incumbent
+/// threaded from step to step and in-flight tasks pinned.
+#[test]
+fn prop_arrival_resolves_stay_valid() {
+    let registry = UppRegistry::default_library(Arc::new(CostModel::default()));
+    let mut rng = DetRng::new(505);
+    let mut checked = 0;
+    for case in 0..8 {
+        let mut crng = rng.fork(case);
+        let w = random_workload(&mut crng);
+        let c = random_cluster(&mut crng);
+        let (grid, _) = TrialRunner::new(registry.clone()).profile(&w, &c);
+        if w.iter().any(|t| grid.configs(t).is_empty()) {
+            continue;
+        }
+        let opt = JointOptimizer {
+            timeout: std::time::Duration::from_millis(60),
+            incremental: true,
+            ..Default::default()
+        };
+        let mut ctx = PlanCtx::fresh(&w, &grid, &c);
+        for i in 0..w.len() {
+            ctx.available[i] = false;
+        }
+        let mut prior: Vec<PriorDecision> = Vec::new();
+        // tasks arrive one at a time; each arrival re-solves warm
+        for k in 0..w.len() {
+            ctx.available[k] = true;
+            ctx.prior = prior.clone();
+            // everything already planned once counts as in-flight
+            for i in 0..k {
+                ctx.pinned[i] = prior.iter().any(|p| p.task_id == w[i].id);
+            }
+            let plan = opt.plan(&ctx, &mut crng);
+            let arrived: saturn::trainer::Workload =
+                (0..=k).map(|i| w[i].clone()).collect();
+            if plan.assignments.len() == arrived.len() {
+                plan.validate(&c, &arrived)
+                    .unwrap_or_else(|e| panic!("case {case}, arrival {k}: {e}"));
+                checked += 1;
+            }
+            prior = plan
+                .assignments
+                .iter()
+                .map(|a| PriorDecision {
+                    task_id: a.task_id,
+                    config: a.config.clone(),
+                    node: Some(a.node),
+                })
+                .collect();
+        }
+    }
+    assert!(checked > 20, "too few validated arrival re-solves: {checked}");
+}
+
+/// The warm-started incremental re-solve never lands more than the
+/// introspection threshold above a cold from-scratch solve of the same
+/// instance (the contract that makes per-arrival re-planning safe).
+#[test]
+fn prop_warm_resolve_within_threshold_of_cold() {
+    let registry = UppRegistry::default_library(Arc::new(CostModel::default()));
+    let mut rng = DetRng::new(606);
+    let threshold = IntrospectCfg::default().threshold;
+    for case in 0..4 {
+        let mut crng = rng.fork(case);
+        // small fast-converging tasks so both solvers reach their fixed
+        // points even in debug builds
+        let w: Workload = (0..8)
+            .map(|i| {
+                saturn::trainer::Task::new(
+                    i,
+                    ModelDesc::resnet_200m(),
+                    HParams::new(64, 1e-4, 1, Optimizer::Adam),
+                    6_400,
+                )
+            })
+            .collect();
+        let c = Cluster::single_node_8gpu();
+        let (grid, _) = TrialRunner::new(registry.clone()).profile(&w, &c);
+        let mut ctx = PlanCtx::fresh(&w, &grid, &c);
+        // incumbent over the first 5 tasks; 3 arrive afterwards
+        for i in 5..8 {
+            ctx.available[i] = false;
+        }
+        let cold_opt = JointOptimizer::default();
+        let incumbent = cold_opt.plan(&ctx, &mut crng);
+        ctx.prior = incumbent
+            .assignments
+            .iter()
+            .map(|a| PriorDecision {
+                task_id: a.task_id,
+                config: a.config.clone(),
+                node: Some(a.node),
+            })
+            .collect();
+        for i in 5..8 {
+            ctx.available[i] = true;
+        }
+        let warm_opt = JointOptimizer::incremental();
+        let (warm, _) = warm_opt.resolve_incremental(&ctx, &mut crng);
+        let cold = cold_opt.plan(&ctx, &mut crng);
+        assert_eq!(warm.assignments.len(), 8);
+        assert!(
+            warm.makespan() <= cold.makespan() + threshold,
+            "case {case}: warm {} vs cold {} (threshold {threshold})",
+            warm.makespan(),
+            cold.makespan()
+        );
     }
 }
 

@@ -1,0 +1,219 @@
+//! Offline stub of the `xla` PJRT binding surface used by
+//! `saturn::runtime` / `saturn::exec`.
+//!
+//! The real crate links the XLA C++ runtime, which cannot be built in the
+//! offline container. Host-side tensor plumbing ([`Literal`]) is fully
+//! functional so manifest parsing and payload marshalling stay testable;
+//! every device/compilation entry point ([`PjRtClient::cpu`],
+//! [`HloModuleProto::from_text_file`]) returns an error, which the
+//! artifact-gated tests, benches, and examples already treat as "skip".
+
+use std::fmt;
+
+/// Stub error: a message carrying the failing operation.
+pub struct Error(pub String);
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+/// Stub result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(op: &str) -> Error {
+    Error(format!("{op}: PJRT/XLA backend is not vendored in this offline build"))
+}
+
+/// Raw storage for a [`Literal`].
+#[doc(hidden)]
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    /// 32-bit floats.
+    F32(Vec<f32>),
+    /// 32-bit signed integers.
+    I32(Vec<i32>),
+}
+
+impl Payload {
+    fn len(&self) -> usize {
+        match self {
+            Payload::F32(v) => v.len(),
+            Payload::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Element types storable in a [`Literal`].
+pub trait NativeType: Copy {
+    #[doc(hidden)]
+    fn to_payload(data: &[Self]) -> Payload;
+    #[doc(hidden)]
+    fn from_payload(p: &Payload) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn to_payload(data: &[Self]) -> Payload {
+        Payload::F32(data.to_vec())
+    }
+    fn from_payload(p: &Payload) -> Option<Vec<Self>> {
+        match p {
+            Payload::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn to_payload(data: &[Self]) -> Payload {
+        Payload::I32(data.to_vec())
+    }
+    fn from_payload(p: &Payload) -> Option<Vec<Self>> {
+        match p {
+            Payload::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// A host tensor: typed element buffer plus dimensions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    payload: Payload,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { payload: T::to_payload(data), dims: vec![data.len() as i64] }
+    }
+
+    /// Reinterpret under new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.payload.len() {
+            return Err(Error(format!(
+                "reshape: {} elements into dims {dims:?}",
+                self.payload.len()
+            )));
+        }
+        Ok(Literal { payload: self.payload.clone(), dims: dims.to_vec() })
+    }
+
+    /// Total element count.
+    pub fn element_count(&self) -> usize {
+        self.payload.len()
+    }
+
+    /// Dimensions.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Copy out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::from_payload(&self.payload).ok_or_else(|| Error("to_vec: dtype mismatch".to_string()))
+    }
+
+    /// Decompose a tuple literal. The stub never produces tuples.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("to_tuple"))
+    }
+}
+
+/// Stub PJRT client: construction always fails offline.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// The CPU client — unavailable in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    /// Platform name.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation — unavailable in the stub.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Stub HLO module proto.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse HLO text — unavailable in the stub.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// Stub XLA computation handle.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a proto.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Stub loaded executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute — unavailable in the stub.
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Stub device buffer.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Fetch to host — unavailable in the stub.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let l = Literal::vec1(&[7i32, 8, 9]);
+        assert_eq!(l.element_count(), 3);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn device_paths_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+    }
+}
