@@ -79,10 +79,65 @@ fn main() {
         warm_mean * 1e3
     );
     println!(
-        "[info] remaining-makespan quality: warm {:.0}s (evals {}) vs cold {:.0}s",
+        "[info] remaining-makespan quality: warm {:.0}s ({} evals, {:.0} evals/s) vs cold {:.0}s",
         warm_sched.makespan(),
         warm_stats.evals,
+        warm_stats.evals_per_sec,
         cold_sched.makespan()
+    );
+
+    // ---- 100+-task queued stream: per-arrival re-solve latency at the
+    // scale the delta kernel exists for (EXPERIMENTS.md §Perf). 120-task
+    // Poisson stream on 32 GPUs; 100 planned (60 in flight), 20 arriving.
+    let mut rng_s = DetRng::new(11);
+    let w2 = workloads::online_mixed_workload(120, 120.0, &mut rng_s);
+    let c2 = Cluster::four_node_32gpu();
+    let (grid2, _) = runner.profile(&w2, &c2);
+    let mut ctx2 = PlanCtx::fresh(&w2, &grid2, &c2);
+    for i in 100..w2.len() {
+        ctx2.available[i] = false;
+    }
+    let mut rng_i = DetRng::new(12);
+    let incumbent2 = JointOptimizer::default().plan(&ctx2, &mut rng_i);
+    ctx2.prior = incumbent2
+        .assignments
+        .iter()
+        .map(|a| PriorDecision { task_id: a.task_id, config: a.config.clone(), node: Some(a.node) })
+        .collect();
+    for a in incumbent2.assignments.iter().take(60) {
+        let i = ctx2.index_of(a.task_id).unwrap();
+        ctx2.pinned[i] = true;
+    }
+    for i in 100..w2.len() {
+        ctx2.available[i] = true; // the queued arrivals fire
+    }
+    let warm_full = JointOptimizer { full_replay: true, ..JointOptimizer::incremental() };
+    let mut rng_w2 = DetRng::new(13);
+    let warm120 = b
+        .bench("warm_incremental_resolve_120tasks_32gpu", || {
+            let (s, _) = warm.resolve_incremental(&ctx2, &mut rng_w2);
+            black_box(s.makespan());
+        })
+        .mean;
+    let mut rng_f2 = DetRng::new(13);
+    let warm120_full = b
+        .bench("warm_incremental_resolve_120tasks_32gpu_fullreplay", || {
+            let (s, _) = warm_full.resolve_incremental(&ctx2, &mut rng_f2);
+            black_box(s.makespan());
+        })
+        .mean;
+    let (s_d, st_d) = warm.resolve_incremental(&ctx2, &mut DetRng::new(14));
+    let (s_f, st_f) = warm_full.resolve_incremental(&ctx2, &mut DetRng::new(14));
+    println!(
+        "[info] 120-task stream re-solve: delta {:.0} evals/s vs full-replay {:.0} evals/s ({:.1}x); \
+         makespan {:.0}s vs {:.0}s; mean latency {:.1}ms vs {:.1}ms",
+        st_d.evals_per_sec,
+        st_f.evals_per_sec,
+        st_d.evals_per_sec / st_f.evals_per_sec.max(1e-9),
+        s_d.makespan(),
+        s_f.makespan(),
+        warm120 * 1e3,
+        warm120_full * 1e3
     );
 
     b.write_csv().ok();

@@ -3,7 +3,12 @@
 //!
 //! Perf targets (EXPERIMENTS.md §Perf): a paper-scale SPASE solve (12
 //! tasks, 8 GPUs) reaches a good incumbent well under its timeout; the
-//! simplex solves the tiny-instance LPs in microseconds–milliseconds.
+//! simplex solves the tiny-instance LPs in microseconds–milliseconds;
+//! and on the scaling pass (64–256 synthetic-frontier tasks, 16–64 GPUs)
+//! the delta kernel sustains ≥ 5× the evals/sec of the retained
+//! full-replay path inside the same 50 ms budget — the headline
+//! `spase_solve_256tasks_64gpu` pair below, with `[info]` lines printing
+//! both throughputs for the EXPERIMENTS.md table.
 
 use saturn::cluster::Cluster;
 use saturn::costmodel::CostModel;
@@ -74,7 +79,69 @@ fn main() {
     // solver stats: evals/sec achieved inside a fixed 50ms budget
     let mut rng2 = DetRng::new(9);
     let (_, st) = opt.solve(&tasks, &c, &mut rng2);
-    println!("[info] solver evals in 50ms budget: {} ({:.0} evals/s)", st.evals, st.evals as f64 / st.elapsed_secs.max(1e-9));
+    println!("[info] solver evals in 50ms budget: {} ({:.0} evals/s)", st.evals, st.evals_per_sec);
+
+    // ---- scaling pass: delta kernel vs full replay (EXPERIMENTS.md §Perf)
+    // synthetic-frontier instances at 64/256 tasks; both evaluators get
+    // the same 50 ms budget, so evals/sec is the whole story
+    for &(n, nodes, gpn) in &[(64usize, 2usize, 8usize), (256, 8, 8)] {
+        let (stasks, scluster) = workloads::scaling_instance(n, nodes, gpn, 77);
+        let delta_opt = JointOptimizer {
+            timeout: Duration::from_millis(50),
+            restarts: 2,
+            iters_per_temp: 200,
+            ..Default::default()
+        };
+        let full_opt = JointOptimizer { full_replay: true, ..delta_opt.clone() };
+        let gpus = nodes * gpn;
+        let mut rng_d = DetRng::new(100 + n as u64);
+        b.bench(&format!("spase_solve_{n}tasks_{gpus}gpu"), || {
+            let (s, _) = delta_opt.solve(&stasks, &scluster, &mut rng_d);
+            black_box(s.makespan());
+        });
+        let mut rng_f = DetRng::new(100 + n as u64);
+        b.bench(&format!("spase_solve_{n}tasks_{gpus}gpu_fullreplay"), || {
+            let (s, _) = full_opt.solve(&stasks, &scluster, &mut rng_f);
+            black_box(s.makespan());
+        });
+        let (sched_d, stat_d) = delta_opt.solve(&stasks, &scluster, &mut DetRng::new(7));
+        let (sched_f, stat_f) = full_opt.solve(&stasks, &scluster, &mut DetRng::new(7));
+        let ratio = stat_d.evals_per_sec / stat_f.evals_per_sec.max(1e-9);
+        println!(
+            "[info] {n} tasks / {gpus} GPUs @ 50ms: delta {:.0} evals/s vs full-replay {:.0} evals/s \
+             ({ratio:.1}x); incumbent {:.0}s vs {:.0}s",
+            stat_d.evals_per_sec,
+            stat_f.evals_per_sec,
+            sched_d.makespan(),
+            sched_f.makespan()
+        );
+        // self-enforcing floor for the EXPERIMENTS.md §Perf contract (≥ 5x
+        // at 256 tasks): require a conservative 2x so the CI bench-smoke
+        // job goes red if the kernel regresses. Best-of-3 samples: runner
+        // noise must starve every delta run to false-positive, while a
+        // real regression drags all three down. SATURN_BENCH_NO_GATE=1
+        // demotes the panic to a warning (escape hatch for heavily loaded
+        // or throttled hosts where wall-clock ratios are meaningless).
+        if n >= 256 {
+            let best_ratio = (0..2u64)
+                .map(|s| {
+                    let (_, d) = delta_opt.solve(&stasks, &scluster, &mut DetRng::new(20 + s));
+                    let (_, f) = full_opt.solve(&stasks, &scluster, &mut DetRng::new(20 + s));
+                    d.evals_per_sec / f.evals_per_sec.max(1e-9)
+                })
+                .fold(ratio, f64::max);
+            if best_ratio < 2.0 {
+                let msg = format!(
+                    "delta kernel throughput regressed at {n} tasks: best of 3 only {best_ratio:.2}x full replay"
+                );
+                if std::env::var("SATURN_BENCH_NO_GATE").is_ok() {
+                    println!("[warn] {msg} (gate disabled by SATURN_BENCH_NO_GATE)");
+                } else {
+                    panic!("{msg}");
+                }
+            }
+        }
+    }
 
     // simplex: a 30-var LP with 60 rows
     let mut lp = LinProg::new(30);

@@ -193,7 +193,13 @@ pub fn list_schedule(choices: &[PlacementChoice], cluster: &Cluster) -> Schedule
 /// this to cap gang sizes to the largest node instead of discovering the
 /// loss later as a confusing "task N not scheduled" validate error.
 pub fn list_schedule_with_skips(choices: &[PlacementChoice], cluster: &Cluster) -> (Schedule, Vec<usize>) {
-    let mut free: Vec<Vec<f64>> = cluster.nodes.iter().map(|n| vec![0.0f64; n.gpus]).collect();
+    // per-node free list kept sorted by (free time, GPU index): the gang
+    // start on a node is a direct read of entry g-1 and the gang itself is
+    // the first g entries, instead of a clone + sort per candidate node
+    // per choice (which dominated planning cost on large workloads)
+    let mut free: Vec<Vec<(f64, usize)>> =
+        cluster.nodes.iter().map(|n| (0..n.gpus).map(|i| (0.0f64, i)).collect()).collect();
+    let sort_key = |a: &(f64, usize), b: &(f64, usize)| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1));
     let mut assignments = Vec::with_capacity(choices.len());
     let mut skipped = Vec::new();
     for c in choices {
@@ -208,9 +214,7 @@ pub fn list_schedule_with_skips(choices: &[PlacementChoice], cluster: &Cluster) 
             if ni >= free.len() || free[ni].len() < g {
                 continue;
             }
-            let mut f = free[ni].clone();
-            f.sort_by(f64::total_cmp);
-            let start = f[g - 1];
+            let start = free[ni][g - 1].0;
             if best.map_or(true, |(_, s)| start < s) {
                 best = Some((ni, start));
             }
@@ -222,12 +226,15 @@ pub fn list_schedule_with_skips(choices: &[PlacementChoice], cluster: &Cluster) 
                 continue;
             }
         };
-        let mut idx: Vec<usize> = (0..free[ni].len()).collect();
-        idx.sort_by(|&a, &b| free[ni][a].total_cmp(&free[ni][b]).then(a.cmp(&b)));
-        let gang: Vec<usize> = idx.into_iter().take(g).collect();
-        for &gi in &gang {
-            free[ni][gi] = start + c.duration;
+        // the g earliest-free GPUs (ties broken by index) are the sorted
+        // prefix; re-stamp their free time and restore the order (node
+        // widths are ≤ 16, one small sort beats anything clever)
+        let gang: Vec<usize> = free[ni][..g].iter().map(|&(_, gi)| gi).collect();
+        let end = start + c.duration;
+        for entry in &mut free[ni][..g] {
+            entry.0 = end;
         }
+        free[ni].sort_by(sort_key);
         assignments.push(Assignment {
             task_id: c.task_id,
             node: ni,
@@ -329,6 +336,86 @@ mod tests {
         let (s2, skipped2) = list_schedule_with_skips(&[ch], &c);
         assert!(s2.assignments.is_empty());
         assert_eq!(skipped2, vec![9]);
+    }
+
+    /// The sorted-free-list scheduler must reproduce the historical
+    /// clone+sort implementation exactly — same nodes, same gang GPU
+    /// indices (ties broken by index), same start times — over random
+    /// tie-heavy inputs.
+    #[test]
+    fn sorted_free_lists_match_reference_scheduler() {
+        use crate::util::rng::DetRng;
+
+        fn reference(choices: &[PlacementChoice], cluster: &Cluster) -> (Schedule, Vec<usize>) {
+            let mut free: Vec<Vec<f64>> = cluster.nodes.iter().map(|n| vec![0.0f64; n.gpus]).collect();
+            let mut assignments = Vec::new();
+            let mut skipped = Vec::new();
+            for c in choices {
+                let g = c.config.gpus;
+                let candidate_nodes: Vec<usize> = match c.node {
+                    Some(n) => vec![n],
+                    None => (0..cluster.nodes.len()).collect(),
+                };
+                let mut best: Option<(usize, f64)> = None;
+                for &ni in &candidate_nodes {
+                    if ni >= free.len() || free[ni].len() < g {
+                        continue;
+                    }
+                    let mut f = free[ni].clone();
+                    f.sort_by(f64::total_cmp);
+                    let start = f[g - 1];
+                    if best.map_or(true, |(_, s)| start < s) {
+                        best = Some((ni, start));
+                    }
+                }
+                let (ni, start) = match best {
+                    Some(x) => x,
+                    None => {
+                        skipped.push(c.task_id);
+                        continue;
+                    }
+                };
+                let mut idx: Vec<usize> = (0..free[ni].len()).collect();
+                idx.sort_by(|&a, &b| free[ni][a].total_cmp(&free[ni][b]).then(a.cmp(&b)));
+                let gang: Vec<usize> = idx.into_iter().take(g).collect();
+                for &gi in &gang {
+                    free[ni][gi] = start + c.duration;
+                }
+                assignments.push(Assignment {
+                    task_id: c.task_id,
+                    node: ni,
+                    gpus: gang,
+                    start,
+                    duration: c.duration,
+                    config: c.config.clone(),
+                });
+            }
+            (Schedule { assignments }, skipped)
+        }
+
+        let mut rng = DetRng::new(4242);
+        for case in 0..150u64 {
+            let mut crng = rng.fork(case);
+            let counts: Vec<usize> = (0..1 + crng.below(4)).map(|_| 1 + crng.below(8)).collect();
+            let c = Cluster::from_gpu_counts(&counts);
+            let maxg = c.max_gpus_per_node();
+            let choices: Vec<PlacementChoice> = (0..1 + crng.below(24))
+                .map(|i| {
+                    // integer durations force free-time ties, the regime
+                    // where tie-breaking bugs would show
+                    let dur = (1 + crng.below(40)) as f64;
+                    let mut ch = choice(i, 1 + crng.below(maxg + 1), dur);
+                    if crng.f64() < 0.3 {
+                        ch.node = Some(crng.below(c.nodes.len()));
+                    }
+                    ch
+                })
+                .collect();
+            let (got, got_skipped) = list_schedule_with_skips(&choices, &c);
+            let (want, want_skipped) = reference(&choices, &c);
+            assert_eq!(got_skipped, want_skipped, "case {case}: skip sets differ");
+            assert_eq!(got, want, "case {case}: schedules differ");
+        }
     }
 
     #[test]

@@ -1,0 +1,645 @@
+//! Delta evaluation for the annealing incumbent search.
+//!
+//! The joint optimizer's inner loop used to replay the *whole* gang list
+//! schedule for every candidate move (O(n·m) per move, plus three Vec
+//! clones per candidate in `neighbor`). Evals/sec — the currency of an
+//! anytime solver — collapsed as task count grew, which is exactly where
+//! the online `resolve_incremental` path lives (100+-task streams re-solve
+//! on every arrival). This module rebuilds the inner loop around three
+//! observations:
+//!
+//! 1. **Moves are local.** A change at order position `p` leaves the list
+//!    scheduler's decisions for positions `< p` untouched, so only the
+//!    suffix from `p` needs replaying. [`DeltaKernel`] keeps **block
+//!    checkpoints** of the per-node GPU free-time state every ~√n
+//!    positions and replays from the nearest checkpoint at or before `p`.
+//! 2. **Moves are cheap to undo.** [`Mover`] applies moves **in place**
+//!    on the search [`State`] with an undo log, replacing the
+//!    clone-3-Vecs-per-candidate `neighbor`. It draws from the RNG in
+//!    exactly the legacy pattern, so the delta path and the retained
+//!    full-replay path follow bit-identical search trajectories (the
+//!    kernel-parity tests assert this end to end).
+//! 3. **Free lists can stay sorted.** Each node's GPU free times are kept
+//!    as a sorted slice: the g-th smallest (the gang start) is a direct
+//!    index instead of a copy + sort, and occupying the g earliest GPUs is
+//!    one `copy_within` + fill instead of g linear min-scans.
+//!
+//! Correctness contract: [`DeltaKernel::eval_move`] returns **bit-identical
+//! makespans** to the full-replay evaluator for every candidate, including
+//! forced-node-infeasible candidates (`INFINITY`). The property tests in
+//! this module and the solver-level parity tests in `joint.rs` /
+//! `tests/prop_invariants.rs` enforce it over thousands of random move
+//! sequences. See EXPERIMENTS.md §Perf for the evals/sec impact.
+
+use crate::util::rng::DetRng;
+
+/// Search state: one candidate SPASE solution.
+#[derive(Debug, Clone)]
+pub(crate) struct State {
+    /// Per-task index into its configuration list.
+    pub(crate) cfg: Vec<usize>,
+    /// Scheduling order (indices into the task list).
+    pub(crate) order: Vec<usize>,
+    /// Optional forced node per task.
+    pub(crate) node: Vec<Option<usize>>,
+}
+
+/// Incremental evaluator: block-checkpointed gang list-scheduler replay
+/// over sorted per-node free lists.
+///
+/// The kernel tracks one *committed* state (the annealer's current
+/// solution). [`DeltaKernel::eval_move`] scores a candidate that differs
+/// from the committed state only at order positions `>= p0` by replaying
+/// from the nearest checkpoint; [`DeltaKernel::accept`] promotes the last
+/// evaluated candidate to committed (checkpoints staged during the replay
+/// are adopted), and a rejected candidate costs nothing beyond the replay.
+#[derive(Debug)]
+pub(crate) struct DeltaKernel {
+    /// Per-node GPU counts.
+    node_gpus: Vec<usize>,
+    /// Start offset of each node's segment in the flat free-time arrays
+    /// (length `node_gpus.len() + 1`; last entry is `total`).
+    offsets: Vec<usize>,
+    /// Total GPU count (flat array width).
+    total: usize,
+    /// Number of order positions (tasks).
+    n: usize,
+    /// Checkpoint spacing: ~√n positions per block.
+    block: usize,
+    /// Number of checkpoints (`ceil(n / block)`).
+    nblocks: usize,
+    /// Committed free-time state *before* position `b * block`, flattened
+    /// per block: `[node0 sorted | node1 sorted | ...]`.
+    ckpt: Vec<f64>,
+    /// Running makespan before position `b * block`, per block.
+    ckpt_ms: Vec<f64>,
+    /// Staging area written during `eval_move`, adopted by `accept`.
+    staged: Vec<f64>,
+    /// Staged running makespans.
+    staged_ms: Vec<f64>,
+    /// Working free-time state for the current replay.
+    free: Vec<f64>,
+    /// Makespan of the committed state (`INFINITY` if infeasible).
+    committed_ms: f64,
+    /// First infeasible position of the committed state (`n` if feasible):
+    /// checkpoints at positions `<= valid_upto` are trustworthy, and any
+    /// candidate whose first change lies strictly beyond it inherits the
+    /// committed prefix's infeasibility.
+    valid_upto: usize,
+}
+
+impl DeltaKernel {
+    /// Kernel for `n` order positions on nodes with the given GPU counts.
+    pub(crate) fn new(node_gpus: Vec<usize>, n: usize) -> Self {
+        let mut offsets = Vec::with_capacity(node_gpus.len() + 1);
+        let mut acc = 0usize;
+        offsets.push(0);
+        for &g in &node_gpus {
+            acc += g;
+            offsets.push(acc);
+        }
+        let total = acc;
+        let block = ((n as f64).sqrt().ceil() as usize).max(1);
+        let nblocks = n.div_ceil(block).max(1);
+        Self {
+            node_gpus,
+            offsets,
+            total,
+            n,
+            block,
+            nblocks,
+            ckpt: vec![0.0; nblocks * total],
+            ckpt_ms: vec![0.0; nblocks],
+            staged: vec![0.0; nblocks * total],
+            staged_ms: vec![0.0; nblocks],
+            free: vec![0.0; total],
+            committed_ms: 0.0,
+            valid_upto: 0,
+        }
+    }
+
+    /// Place one gang on the working free lists: pick the earliest-start
+    /// node (or the forced one), occupy the g earliest-free GPUs, return
+    /// the gang's end time. `None` when no candidate node is wide enough —
+    /// the same infeasibility the full-replay evaluator maps to INFINITY.
+    fn step(&mut self, g: usize, dur: f64, forced: Option<usize>) -> Option<f64> {
+        let (node, start) = match forced {
+            Some(ni) => {
+                if self.node_gpus[ni] < g {
+                    return None;
+                }
+                (ni, self.free[self.offsets[ni] + g - 1])
+            }
+            None => {
+                let mut best_node = usize::MAX;
+                let mut best_start = f64::INFINITY;
+                for ni in 0..self.node_gpus.len() {
+                    if self.node_gpus[ni] < g {
+                        continue;
+                    }
+                    // sorted segment: the g-th smallest free time is a
+                    // direct read, not a copy + sort
+                    let s = self.free[self.offsets[ni] + g - 1];
+                    if s < best_start {
+                        best_start = s;
+                        best_node = ni;
+                    }
+                }
+                if best_node == usize::MAX {
+                    return None;
+                }
+                (best_node, best_start)
+            }
+        };
+        let end = start + dur;
+        let off = self.offsets[node];
+        let width = self.node_gpus[node];
+        let seg = &mut self.free[off..off + width];
+        // occupy the g earliest-free GPUs: drop the first g entries, then
+        // splice g copies of `end` back in at their sorted position. The
+        // multiset evolves exactly as the full evaluator's g min-scans.
+        let hi = seg.partition_point(|&x| x <= end);
+        seg.copy_within(g..hi, 0);
+        for x in &mut seg[hi - g..hi] {
+            *x = end;
+        }
+        Some(end)
+    }
+
+    /// Full replay of `s`, refreshing every checkpoint. Returns the
+    /// makespan (INFINITY if infeasible) and commits it. O(n·m) — called
+    /// once per restart, not per move.
+    pub(crate) fn rebuild(&mut self, s: &State, durs: &[Vec<(usize, f64)>]) -> f64 {
+        self.free.fill(0.0);
+        let mut ms = 0.0f64;
+        self.valid_upto = self.n;
+        for pos in 0..self.n {
+            if pos % self.block == 0 {
+                let b = pos / self.block;
+                self.ckpt[b * self.total..(b + 1) * self.total].copy_from_slice(&self.free);
+                self.ckpt_ms[b] = ms;
+            }
+            let t = s.order[pos];
+            let (g, dur) = durs[t][s.cfg[t]];
+            match self.step(g, dur, s.node[t]) {
+                Some(end) => ms = ms.max(end),
+                None => {
+                    self.valid_upto = pos;
+                    self.committed_ms = f64::INFINITY;
+                    return f64::INFINITY;
+                }
+            }
+        }
+        self.committed_ms = ms;
+        ms
+    }
+
+    /// Makespan of candidate `s`, whose first difference from the
+    /// committed state is at order position `p0`: load the nearest
+    /// checkpoint at or before `p0` and replay only the suffix —
+    /// O((n − p0 + √n)·m̄) instead of O(n·m). Checkpoints crossed during
+    /// the replay are staged for a subsequent [`Self::accept`].
+    pub(crate) fn eval_move(&mut self, s: &State, durs: &[Vec<(usize, f64)>], p0: usize) -> f64 {
+        if p0 > self.valid_upto {
+            // the unchanged prefix already failed to place a gang
+            return f64::INFINITY;
+        }
+        if p0 >= self.n {
+            // no-op move: the candidate IS the committed state
+            return self.committed_ms;
+        }
+        let b0 = p0 / self.block;
+        let o0 = b0 * self.total;
+        self.free.copy_from_slice(&self.ckpt[o0..o0 + self.total]);
+        let mut ms = self.ckpt_ms[b0];
+        for pos in b0 * self.block..self.n {
+            if pos % self.block == 0 {
+                let b = pos / self.block;
+                if b > b0 {
+                    self.staged[b * self.total..(b + 1) * self.total].copy_from_slice(&self.free);
+                    self.staged_ms[b] = ms;
+                }
+            }
+            let t = s.order[pos];
+            let (g, dur) = durs[t][s.cfg[t]];
+            match self.step(g, dur, s.node[t]) {
+                Some(end) => ms = ms.max(end),
+                None => return f64::INFINITY,
+            }
+        }
+        ms
+    }
+
+    /// Promote the candidate last scored by [`Self::eval_move`]`(.., p0)`
+    /// to committed: adopt the checkpoints staged during its replay.
+    /// Only finite-makespan candidates are ever accepted by the annealer.
+    pub(crate) fn accept(&mut self, p0: usize, final_ms: f64) {
+        if p0 < self.n {
+            let b0 = p0 / self.block;
+            for b in b0 + 1..self.nblocks {
+                let o = b * self.total;
+                self.ckpt[o..o + self.total].copy_from_slice(&self.staged[o..o + self.total]);
+                self.ckpt_ms[b] = self.staged_ms[b];
+            }
+        }
+        self.committed_ms = final_ms;
+        self.valid_upto = self.n;
+    }
+}
+
+/// What [`Mover::undo`] needs to restore the pre-move state.
+#[derive(Debug)]
+pub(crate) enum UndoRec {
+    /// The move changed nothing (single-task order moves).
+    None,
+    /// Restore task `t`'s configuration index.
+    Cfg {
+        /// Task index.
+        t: usize,
+        /// Previous configuration index.
+        old: usize,
+    },
+    /// Restore task `t`'s forced node.
+    Node {
+        /// Task index.
+        t: usize,
+        /// Previous forced node.
+        old: Option<usize>,
+    },
+    /// Swap order positions `a` and `b` back.
+    Swap {
+        /// First order position.
+        a: usize,
+        /// Second order position.
+        b: usize,
+    },
+    /// Move the element shifted `from → to` back to `from`.
+    Shift {
+        /// Original position.
+        from: usize,
+        /// Destination position.
+        to: usize,
+    },
+    /// Restore the configuration changes recorded in the mover's buffer
+    /// (block move), in reverse order.
+    MultiCfg,
+}
+
+/// In-place move application with an undo log.
+///
+/// Replaces the clone-per-candidate `neighbor`: a rejected move costs an
+/// O(1)–O(|shift|) undo instead of three Vec allocations. The RNG draw
+/// pattern mirrors the legacy `neighbor` exactly, which is what lets the
+/// parity tests compare whole search trajectories between the delta and
+/// full-replay paths. Also maintains the order-position index `pos`
+/// (task → position) the delta kernel needs to locate a move's first
+/// affected position.
+#[derive(Debug)]
+pub(crate) struct Mover {
+    /// Inverse permutation of `State::order`: `pos[task] = position`.
+    pos: Vec<usize>,
+    /// Undo buffer for block configuration moves: `(task, old_cfg)`.
+    undo_buf: Vec<(usize, usize)>,
+}
+
+impl Mover {
+    /// Mover over `n` tasks.
+    pub(crate) fn new(n: usize) -> Self {
+        Self { pos: vec![0; n], undo_buf: Vec::new() }
+    }
+
+    /// Refresh the position index from an order permutation (after a
+    /// restart perturbation or a fresh seed).
+    pub(crate) fn rebuild_pos(&mut self, order: &[usize]) {
+        for (i, &t) in order.iter().enumerate() {
+            self.pos[t] = i;
+        }
+    }
+
+    /// Apply one random annealing move to `s` in place. Returns the undo
+    /// record and the first order position the move can affect (`n` for
+    /// no-ops, so the kernel returns the committed makespan untouched).
+    /// Configuration/node moves sample tasks from `movable` (every task in
+    /// a cold solve; the unlocked subset in an incremental re-solve);
+    /// order moves may touch any position.
+    pub(crate) fn propose(
+        &mut self,
+        s: &mut State,
+        durs: &[Vec<(usize, f64)>],
+        n_nodes: usize,
+        rng: &mut DetRng,
+        movable: &[usize],
+    ) -> (UndoRec, usize) {
+        let nt = s.order.len();
+        if movable.is_empty() {
+            // only ordering freedom remains
+            if nt > 1 {
+                let a = rng.below(nt);
+                let b = rng.below(nt);
+                self.swap(s, a, b);
+                return (UndoRec::Swap { a, b }, a.min(b));
+            }
+            return (UndoRec::None, nt);
+        }
+        match rng.below(6) {
+            0 => {
+                // nudge one task's configuration up/down the frontier
+                let t = movable[rng.below(movable.len())];
+                let k = durs[t].len();
+                let old = s.cfg[t];
+                if k > 1 {
+                    let cur = s.cfg[t] as isize;
+                    let delta = if rng.f64() < 0.5 { -1 } else { 1 };
+                    s.cfg[t] = (cur + delta).clamp(0, k as isize - 1) as usize;
+                }
+                (UndoRec::Cfg { t, old }, self.pos[t])
+            }
+            1 => {
+                // random configuration jump
+                let t = movable[rng.below(movable.len())];
+                let old = s.cfg[t];
+                s.cfg[t] = rng.below(durs[t].len());
+                (UndoRec::Cfg { t, old }, self.pos[t])
+            }
+            2 => {
+                // swap two order positions
+                if nt > 1 {
+                    let a = rng.below(nt);
+                    let b = rng.below(nt);
+                    self.swap(s, a, b);
+                    (UndoRec::Swap { a, b }, a.min(b))
+                } else {
+                    (UndoRec::None, nt)
+                }
+            }
+            3 => {
+                // move a task to a new position
+                if nt > 1 {
+                    let from = rng.below(nt);
+                    let to = rng.below(nt);
+                    self.shift(s, from, to);
+                    (UndoRec::Shift { from, to }, from.min(to))
+                } else {
+                    (UndoRec::None, nt)
+                }
+            }
+            4 => {
+                // toggle a forced node
+                let t = movable[rng.below(movable.len())];
+                let old = s.node[t];
+                s.node[t] =
+                    if s.node[t].is_some() || n_nodes == 1 { None } else { Some(rng.below(n_nodes)) };
+                (UndoRec::Node { t, old }, self.pos[t])
+            }
+            _ => {
+                // block move: re-randomize configs of a few tasks (LNS-ish)
+                self.undo_buf.clear();
+                let mut p0 = nt;
+                for _ in 0..(movable.len() / 4).max(1) {
+                    let t = movable[rng.below(movable.len())];
+                    self.undo_buf.push((t, s.cfg[t]));
+                    s.cfg[t] = rng.below(durs[t].len());
+                    p0 = p0.min(self.pos[t]);
+                }
+                (UndoRec::MultiCfg, p0)
+            }
+        }
+    }
+
+    /// Revert the last (un-accepted) move.
+    pub(crate) fn undo(&mut self, s: &mut State, rec: UndoRec) {
+        match rec {
+            UndoRec::None => {}
+            UndoRec::Cfg { t, old } => s.cfg[t] = old,
+            UndoRec::Node { t, old } => s.node[t] = old,
+            UndoRec::Swap { a, b } => self.swap(s, a, b),
+            UndoRec::Shift { from, to } => {
+                let v = s.order.remove(to);
+                s.order.insert(from, v);
+                let (lo, hi) = (from.min(to), from.max(to));
+                for i in lo..=hi {
+                    self.pos[s.order[i]] = i;
+                }
+            }
+            UndoRec::MultiCfg => {
+                for &(t, old) in self.undo_buf.iter().rev() {
+                    s.cfg[t] = old;
+                }
+            }
+        }
+    }
+
+    fn swap(&mut self, s: &mut State, a: usize, b: usize) {
+        s.order.swap(a, b);
+        self.pos[s.order[a]] = a;
+        self.pos[s.order[b]] = b;
+    }
+
+    fn shift(&mut self, s: &mut State, from: usize, to: usize) {
+        let v = s.order.remove(from);
+        s.order.insert(to, v);
+        let (lo, hi) = (from.min(to), from.max(to));
+        for i in lo..=hi {
+            self.pos[s.order[i]] = i;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reference evaluator: verbatim transliteration of the legacy
+    /// full-replay `eval_fast` (copy + sort for the gang start, g linear
+    /// min-scans to occupy). The delta kernel must match it bit for bit.
+    fn eval_reference(s: &State, durs: &[Vec<(usize, f64)>], node_gpus: &[usize]) -> f64 {
+        let mut free: Vec<Vec<f64>> = node_gpus.iter().map(|&n| vec![0.0; n]).collect();
+        let mut makespan = 0.0f64;
+        for &t in &s.order {
+            let (g, dur) = durs[t][s.cfg[t]];
+            let kth = |xs: &[f64]| {
+                let mut tmp = xs.to_vec();
+                tmp.sort_by(f64::total_cmp);
+                tmp[g - 1]
+            };
+            let mut best_node = usize::MAX;
+            let mut best_start = f64::INFINITY;
+            match s.node[t] {
+                Some(n) if node_gpus[n] >= g => {
+                    best_node = n;
+                    best_start = kth(&free[n]);
+                }
+                Some(_) => return f64::INFINITY,
+                None => {
+                    for n in 0..node_gpus.len() {
+                        if node_gpus[n] < g {
+                            continue;
+                        }
+                        let start = kth(&free[n]);
+                        if start < best_start {
+                            best_start = start;
+                            best_node = n;
+                        }
+                    }
+                    if best_node == usize::MAX {
+                        return f64::INFINITY;
+                    }
+                }
+            }
+            let end = best_start + dur;
+            let fr = &mut free[best_node];
+            for _ in 0..g {
+                let (mi, _) =
+                    fr.iter().enumerate().min_by(|a, b| a.1.total_cmp(b.1)).expect("non-empty");
+                fr[mi] = end;
+            }
+            makespan = makespan.max(end);
+        }
+        makespan
+    }
+
+    /// Random instance: 1–20 tasks with per-task frontiers on 1–4 nodes of
+    /// 1–8 GPUs. Quantized durations in some cases force float ties, the
+    /// regime where tie-breaking bugs would show.
+    fn random_instance(rng: &mut DetRng, quantize: bool) -> (Vec<Vec<(usize, f64)>>, Vec<usize>) {
+        let nt = 1 + rng.below(20);
+        let n_nodes = 1 + rng.below(4);
+        let node_gpus: Vec<usize> = (0..n_nodes).map(|_| 1 + rng.below(8)).collect();
+        let maxg = *node_gpus.iter().max().unwrap();
+        let durs = (0..nt)
+            .map(|_| {
+                let k = 1 + rng.below(maxg);
+                let base = rng.range_f64(50.0, 2000.0);
+                (1..=k)
+                    .map(|g| {
+                        let d = if quantize {
+                            (base / g as f64).floor() + 1.0
+                        } else {
+                            base / (0.3 + 0.7 * g as f64)
+                        };
+                        (g, d)
+                    })
+                    .collect()
+            })
+            .collect();
+        (durs, node_gpus)
+    }
+
+    fn random_state(rng: &mut DetRng, durs: &[Vec<(usize, f64)>], n_nodes: usize, forced: bool) -> State {
+        let nt = durs.len();
+        let cfg: Vec<usize> = (0..nt).map(|t| rng.below(durs[t].len())).collect();
+        let mut order: Vec<usize> = (0..nt).collect();
+        rng.shuffle(&mut order);
+        let node: Vec<Option<usize>> = (0..nt)
+            .map(|_| if forced && rng.f64() < 0.3 { Some(rng.below(n_nodes)) } else { None })
+            .collect();
+        State { cfg, order, node }
+    }
+
+    /// The tentpole's correctness contract: over random accepted/rejected
+    /// move sequences (forced-node-infeasible candidates included), the
+    /// delta evaluator returns bit-identical makespans to the full-replay
+    /// reference, undo restores the state exactly, and the committed
+    /// checkpoints always agree with a from-scratch rebuild.
+    #[test]
+    fn prop_delta_eval_matches_full_replay() {
+        let mut infeasible_seen = 0usize;
+        for case in 0..40u64 {
+            let mut rng = DetRng::new(1000 + case);
+            let (durs, node_gpus) = random_instance(&mut rng, case % 3 == 0);
+            let nt = durs.len();
+            let mut s = random_state(&mut rng, &durs, node_gpus.len(), true);
+            let mut kernel = DeltaKernel::new(node_gpus.clone(), nt);
+            let mut mover = Mover::new(nt);
+            mover.rebuild_pos(&s.order);
+            let ms0 = kernel.rebuild(&s, &durs);
+            assert_eq!(ms0, eval_reference(&s, &durs, &node_gpus), "case {case}: rebuild");
+            let movable: Vec<usize> = (0..nt).collect();
+            let mut committed = ms0;
+            for step in 0..300 {
+                let snapshot = s.clone();
+                let (undo, p0) = mover.propose(&mut s, &durs, node_gpus.len(), &mut rng, &movable);
+                let ms = kernel.eval_move(&s, &durs, p0);
+                let reference = eval_reference(&s, &durs, &node_gpus);
+                assert_eq!(ms, reference, "case {case} step {step}: delta != full replay (p0={p0})");
+                if ms.is_infinite() {
+                    infeasible_seen += 1;
+                }
+                if ms.is_finite() && rng.f64() < 0.4 {
+                    kernel.accept(p0, ms);
+                    committed = ms;
+                } else {
+                    mover.undo(&mut s, undo);
+                    assert_eq!(s.cfg, snapshot.cfg, "case {case} step {step}: undo cfg");
+                    assert_eq!(s.order, snapshot.order, "case {case} step {step}: undo order");
+                    assert_eq!(s.node, snapshot.node, "case {case} step {step}: undo node");
+                }
+            }
+            // committed checkpoints must agree with a cold rebuild
+            let mut fresh = DeltaKernel::new(node_gpus.clone(), nt);
+            assert_eq!(fresh.rebuild(&s, &durs), committed, "case {case}: final state drifted");
+        }
+        assert!(infeasible_seen > 50, "too few infeasible candidates exercised: {infeasible_seen}");
+    }
+
+    /// Starting from an infeasible committed state (forced node too small),
+    /// moves beyond the failure point stay INFINITY, moves at/before it can
+    /// repair the plan, and the kernel agrees with the reference throughout.
+    #[test]
+    fn prop_delta_eval_recovers_from_infeasible_seed() {
+        let mut exercised = 0usize;
+        for case in 0..30u64 {
+            let mut rng = DetRng::new(7000 + case);
+            let (durs, node_gpus) = random_instance(&mut rng, false);
+            let nt = durs.len();
+            let mut s = random_state(&mut rng, &durs, node_gpus.len(), false);
+            // force some task onto an undersized node if the instance has one
+            let small =
+                (0..node_gpus.len()).min_by_key(|&i| node_gpus[i]).expect("at least one node");
+            let Some((t, ci)) = (0..nt).find_map(|t| {
+                (0..durs[t].len()).find(|&ci| durs[t][ci].0 > node_gpus[small]).map(|ci| (t, ci))
+            }) else {
+                continue;
+            };
+            s.cfg[t] = ci;
+            s.node[t] = Some(small);
+            let mut kernel = DeltaKernel::new(node_gpus.clone(), nt);
+            let mut mover = Mover::new(nt);
+            mover.rebuild_pos(&s.order);
+            assert!(kernel.rebuild(&s, &durs).is_infinite(), "case {case}: seed must be infeasible");
+            let movable: Vec<usize> = (0..nt).collect();
+            for step in 0..200 {
+                let (undo, p0) = mover.propose(&mut s, &durs, node_gpus.len(), &mut rng, &movable);
+                let ms = kernel.eval_move(&s, &durs, p0);
+                assert_eq!(
+                    ms,
+                    eval_reference(&s, &durs, &node_gpus),
+                    "case {case} step {step}: delta != full replay from infeasible committed"
+                );
+                if ms.is_finite() && rng.f64() < 0.5 {
+                    kernel.accept(p0, ms);
+                } else {
+                    mover.undo(&mut s, undo);
+                }
+            }
+            exercised += 1;
+        }
+        assert!(exercised >= 10, "too few infeasible-seed cases: {exercised}");
+    }
+
+    /// Single-task and pinned-everything edge cases: no-op moves must
+    /// return the committed makespan without replaying anything.
+    #[test]
+    fn noop_moves_return_committed_makespan() {
+        let durs = vec![vec![(1usize, 100.0f64), (2, 60.0)]];
+        let node_gpus = vec![2usize];
+        let s = State { cfg: vec![1], order: vec![0], node: vec![None] };
+        let mut kernel = DeltaKernel::new(node_gpus, 1);
+        let ms = kernel.rebuild(&s, &durs);
+        assert_eq!(ms, 60.0);
+        // p0 == n signals "nothing changed"
+        assert_eq!(kernel.eval_move(&s, &durs, 1), 60.0);
+        kernel.accept(1, ms);
+        assert_eq!(kernel.eval_move(&s, &durs, 0), 60.0);
+    }
+}

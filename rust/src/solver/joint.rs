@@ -15,16 +15,26 @@
 //! - task order (the gang list scheduler turns an order into start times),
 //! - optional forced node per task,
 //!
-//! evaluated through [`crate::sched::list_schedule`]. Tests cross-validate
+//! evaluated through the **delta kernel** ([`super::delta`]): moves are
+//! applied in place with an undo log, candidates are scored by replaying
+//! only the schedule suffix a move can affect (block checkpoints every
+//! ~√n positions, sorted per-node free lists), and the wall-clock deadline
+//! is polled every few dozen iterations instead of per candidate. The
+//! legacy full-replay evaluator is retained behind
+//! [`JointOptimizer::full_replay`] for A/B benchmarking; both paths draw
+//! from the RNG identically and produce bit-identical trajectories, which
+//! the kernel-parity tests assert end to end. Evals/sec at 100+-task
+//! scale is the point — see EXPERIMENTS.md §Perf. Tests cross-validate
 //! against the exact MILP on tiny instances and against lower bounds on
 //! larger ones.
 
+use super::delta::{DeltaKernel, Mover, State};
 use super::policy::{PlanCtx, Policy};
 use super::spase::SpaseTask;
 use crate::cluster::Cluster;
 use crate::sched::{list_schedule, PlacementChoice, Schedule};
 use crate::util::rng::DetRng;
-use crate::util::Deadline;
+use crate::util::{Deadline, DeadlinePoll, DEADLINE_POLL_PERIOD};
 use std::time::Duration;
 
 /// Anytime SPASE optimizer (Saturn's Joint Optimizer).
@@ -43,26 +53,29 @@ pub struct JointOptimizer {
     /// node, only new and not-yet-started tasks are re-decided — instead
     /// of solving the full problem from scratch.
     pub incremental: bool,
+    /// Score annealing candidates with the legacy full-replay evaluator
+    /// (clone-per-candidate `neighbor` + whole-schedule replay) instead of
+    /// the delta kernel. Kept for A/B benchmarking and the kernel-parity
+    /// tests: both paths consume the RNG identically and return
+    /// bit-identical makespans, so with the same seed and an un-truncated
+    /// budget they land on the same incumbent — the delta kernel just gets
+    /// there orders of magnitude cheaper per move (EXPERIMENTS.md §Perf).
+    pub full_replay: bool,
 }
 
 impl Default for JointOptimizer {
     fn default() -> Self {
-        Self { timeout: Duration::from_millis(500), restarts: 4, iters_per_temp: 400, incremental: false }
+        Self {
+            timeout: Duration::from_millis(500),
+            restarts: 4,
+            iters_per_temp: 400,
+            incremental: false,
+            full_replay: false,
+        }
     }
 }
 
-/// Search state: one candidate SPASE solution.
-#[derive(Debug, Clone)]
-struct State {
-    /// Per-task index into its configuration list.
-    cfg: Vec<usize>,
-    /// Scheduling order (indices into the task list).
-    order: Vec<usize>,
-    /// Optional forced node per task.
-    node: Vec<Option<usize>>,
-}
-
-/// Reusable buffers for [`JointOptimizer::eval_fast`].
+/// Reusable buffers for the legacy full-replay evaluator.
 struct Scratch {
     node_gpus: Vec<usize>,
     free: Vec<Vec<f64>>,
@@ -71,7 +84,8 @@ struct Scratch {
 
 /// The g-th smallest value of `xs` (gang start time), using `tmp` as
 /// scratch. Node GPU counts are ≤ 8–16, so a copy + partial sort wins
-/// over anything clever.
+/// over anything clever. (Legacy path only: the delta kernel keeps each
+/// node's free list sorted and reads the g-th entry directly.)
 fn kth_smallest(xs: &[f64], g: usize, tmp: &mut Vec<f64>) -> f64 {
     tmp.clear();
     tmp.extend_from_slice(xs);
@@ -92,6 +106,10 @@ pub struct SolveStats {
     pub final_makespan: f64,
     /// Wall-clock seconds spent.
     pub elapsed_secs: f64,
+    /// Candidate evaluations per wall-clock second — the throughput an
+    /// anytime solver converts into plan quality under a fixed budget
+    /// (tracked across benches; see EXPERIMENTS.md §Perf).
+    pub evals_per_sec: f64,
 }
 
 /// Index of a task's minimum-GPU·seconds (most efficient) configuration.
@@ -103,6 +121,11 @@ fn min_area_index(task: &SpaseTask) -> usize {
             (ca.task_secs * ca.gpus as f64).total_cmp(&(cb.task_secs * cb.gpus as f64))
         })
         .unwrap_or(0)
+}
+
+/// Precomputed per-task (gpus, duration) tables for the hot loop.
+fn duration_table(tasks: &[SpaseTask]) -> Vec<Vec<(usize, f64)>> {
+    tasks.iter().map(|t| t.configs.iter().map(|c| (c.gpus, c.task_secs)).collect()).collect()
 }
 
 impl JointOptimizer {
@@ -118,6 +141,9 @@ impl JointOptimizer {
 
     /// Solve a SPASE instance, returning the plan and search statistics.
     pub fn solve(&self, tasks: &[SpaseTask], cluster: &Cluster, rng: &mut DetRng) -> (Schedule, SolveStats) {
+        if self.full_replay {
+            return self.solve_full_replay(tasks, cluster, rng);
+        }
         let mut stats = SolveStats::default();
         if tasks.is_empty() {
             return (Schedule::default(), stats);
@@ -125,12 +151,104 @@ impl JointOptimizer {
         let start = std::time::Instant::now();
         let deadline = Deadline::after(self.timeout);
         let nt = tasks.len();
+        let durs = duration_table(tasks);
 
-        // precomputed (gpus, duration) table + scratch for the fast path
-        let durs: Vec<Vec<(usize, f64)>> = tasks
-            .iter()
-            .map(|t| t.configs.iter().map(|c| (c.gpus, c.task_secs)).collect())
-            .collect();
+        // ---- warm starts -------------------------------------------------
+        let (mut best_state, mut best_sched, mut best_ms) =
+            self.warm_starts(tasks, cluster, rng, &mut stats);
+        stats.warm_makespan = best_ms;
+
+        // ---- annealing with restarts (delta kernel) ---------------------
+        let lb = Self::lower_bound(tasks, cluster);
+        let movable: Vec<usize> = (0..nt).collect();
+        let mut kernel = DeltaKernel::new(cluster.nodes.iter().map(|n| n.gpus).collect(), nt);
+        let mut mover = Mover::new(nt);
+        let mut poll = DeadlinePoll::new(deadline, DEADLINE_POLL_PERIOD);
+        'outer: for restart in 0..self.restarts.max(1) {
+            let mut cur = if restart == 0 {
+                best_state.clone()
+            } else {
+                let mut s = best_state.clone();
+                // perturb: shuffle a prefix and randomize some configs
+                rng.shuffle(&mut s.order);
+                for _ in 0..nt / 2 + 1 {
+                    let t = rng.below(nt);
+                    s.cfg[t] = rng.below(tasks[t].configs.len());
+                }
+                s
+            };
+            stats.evals += 1;
+            mover.rebuild_pos(&cur.order);
+            let mut cur_ms = kernel.rebuild(&cur, &durs);
+            let mut temp = 0.08 * cur_ms.max(1e-9);
+            let min_temp = 1e-4 * cur_ms.max(1e-9);
+            while temp > min_temp {
+                for _ in 0..self.iters_per_temp {
+                    if poll.expired() {
+                        break 'outer;
+                    }
+                    let (undo, p0) = mover.propose(&mut cur, &durs, cluster.nodes.len(), rng, &movable);
+                    stats.evals += 1;
+                    let ms = kernel.eval_move(&cur, &durs, p0);
+                    let accept = ms < cur_ms || rng.f64() < ((cur_ms - ms) / temp).exp();
+                    if accept {
+                        kernel.accept(p0, ms);
+                        cur_ms = ms;
+                        if ms < best_ms - 1e-9 {
+                            best_ms = ms;
+                            best_state = cur.clone();
+                            stats.improvements += 1;
+                        }
+                    } else {
+                        mover.undo(&mut cur, undo);
+                    }
+                }
+                if best_ms <= lb * (1.0 + 1e-6) {
+                    break 'outer; // provably optimal
+                }
+                temp *= 0.7;
+            }
+        }
+
+        // materialize the incumbent's full schedule once
+        let (sched, ms) = self.eval(&best_state, tasks, cluster, &mut stats);
+        if ms <= best_ms + 1e-9 {
+            best_sched = sched;
+            best_ms = ms;
+        }
+        stats.final_makespan = best_ms;
+        stats.elapsed_secs = start.elapsed().as_secs_f64();
+        stats.evals_per_sec = stats.evals as f64 / stats.elapsed_secs.max(1e-12);
+        (best_sched, stats)
+    }
+
+    /// Legacy solve path: identical search, but every candidate is a fresh
+    /// clone scored by a full schedule replay ([`Self::eval_fast`]) and the
+    /// deadline is polled per candidate. Retained behind
+    /// [`JointOptimizer::full_replay`] as the A/B baseline for the delta
+    /// kernel (EXPERIMENTS.md §Perf).
+    ///
+    /// LOCKSTEP CONTRACT: this loop and [`Self::solve`] (and likewise the
+    /// `resolve_incremental` pair) must stay draw-for-draw equivalent —
+    /// same RNG consumption, same acceptance rule, same temperature
+    /// schedule, same stats accounting. Any tweak to one must be mirrored
+    /// in the other or the A/B comparison silently becomes apples-to-
+    /// oranges; the `*_matches_full_replay_trajectory` and
+    /// `prop_*_agree` tests exist to catch exactly that.
+    fn solve_full_replay(
+        &self,
+        tasks: &[SpaseTask],
+        cluster: &Cluster,
+        rng: &mut DetRng,
+    ) -> (Schedule, SolveStats) {
+        let mut stats = SolveStats::default();
+        if tasks.is_empty() {
+            return (Schedule::default(), stats);
+        }
+        let start = std::time::Instant::now();
+        let deadline = Deadline::after(self.timeout);
+        let nt = tasks.len();
+        let durs = duration_table(tasks);
         let mut scratch = Scratch {
             node_gpus: cluster.nodes.iter().map(|n| n.gpus).collect(),
             free: cluster.nodes.iter().map(|n| Vec::with_capacity(n.gpus)).collect(),
@@ -138,8 +256,8 @@ impl JointOptimizer {
         };
 
         // ---- warm starts -------------------------------------------------
-        let mut best_state = self.warm_starts(tasks, cluster, rng, &mut stats);
-        let (mut best_sched, mut best_ms) = self.eval(&best_state, tasks, cluster, &mut stats);
+        let (mut best_state, mut best_sched, mut best_ms) =
+            self.warm_starts(tasks, cluster, rng, &mut stats);
         stats.warm_makespan = best_ms;
 
         // ---- annealing with restarts ------------------------------------
@@ -196,6 +314,7 @@ impl JointOptimizer {
         }
         stats.final_makespan = best_ms;
         stats.elapsed_secs = start.elapsed().as_secs_f64();
+        stats.evals_per_sec = stats.evals as f64 / stats.elapsed_secs.max(1e-12);
         (best_sched, stats)
     }
 
@@ -221,10 +340,12 @@ impl JointOptimizer {
         area.max(longest)
     }
 
-    /// Allocation-free candidate evaluation: replays the gang list
+    /// Legacy full-replay candidate evaluation: replays the gang list
     /// scheduler over precomputed (gpus, duration) pairs, reusing scratch
-    /// buffers. This is the annealing inner loop — see EXPERIMENTS.md
-    /// §Perf for the before/after against the Schedule-building path.
+    /// buffers. This was the annealing inner loop before the delta kernel
+    /// ([`super::delta::DeltaKernel`]) replaced it — see EXPERIMENTS.md
+    /// §Perf for the before/after — and it remains both the A/B baseline
+    /// and the reference the kernel's property tests compare against.
     fn eval_fast(s: &State, durs: &[Vec<(usize, f64)>], scratch: &mut Scratch) -> f64 {
         for (f, &n) in scratch.free.iter_mut().zip(&scratch.node_gpus) {
             f.clear();
@@ -295,32 +416,24 @@ impl JointOptimizer {
         (sched, ms)
     }
 
-    /// Incremental re-solve (online arrivals): seed the search from the
-    /// context's incumbent plan, keep pinned in-flight tasks' (config,
-    /// node) fixed, and run a single short annealing pass over the new
-    /// and not-yet-started decisions. Falls back to a cold [`Self::solve`]
-    /// when the incumbent cannot seat a feasible schedule.
-    pub fn resolve_incremental(&self, ctx: &PlanCtx, rng: &mut DetRng) -> (Schedule, SolveStats) {
-        let tasks = ctx.spase_tasks();
-        let cluster = ctx.cluster;
-        let mut stats = SolveStats::default();
-        if tasks.is_empty() {
-            return (Schedule::default(), stats);
-        }
-        let start = std::time::Instant::now();
-        // a fraction of the cold budget: the point of warm-starting
-        let deadline = Deadline::after(self.timeout / 4);
+    /// Seed an incremental re-solve from the context's incumbent plan:
+    /// per-task (config, node, locked) plus an order that replays the
+    /// incumbent first and appends new arrivals by (arrival, id). Uses the
+    /// context's bulk id→index maps — the per-task linear scans this
+    /// replaces were O(n²) at 100+-task stream scale.
+    fn incremental_seed(&self, ctx: &PlanCtx, tasks: &[SpaseTask]) -> (State, Vec<bool>) {
         let nt = tasks.len();
-
-        // seed (config, node, lock) per task from the incumbent
+        let widx = ctx.id_index_map();
+        let pidx = ctx.prior_index_map();
         let mut cfg = vec![0usize; nt];
         let mut node: Vec<Option<usize>> = vec![None; nt];
         let mut locked = vec![false; nt];
         let mut prior_pos: Vec<Option<usize>> = vec![None; nt];
         for (t, st) in tasks.iter().enumerate() {
-            match ctx.prior_for(st.id) {
-                Some(p) => {
-                    prior_pos[t] = ctx.prior.iter().position(|q| q.task_id == st.id);
+            match pidx.get(&st.id) {
+                Some(&pi) => {
+                    let p = &ctx.prior[pi];
+                    prior_pos[t] = Some(pi);
                     node[t] = p.node;
                     let matched = st
                         .configs
@@ -329,8 +442,7 @@ impl JointOptimizer {
                     match matched {
                         Some(ci) => {
                             cfg[t] = ci;
-                            let wi = ctx.index_of(st.id);
-                            locked[t] = wi.map_or(false, |i| ctx.pinned[i]);
+                            locked[t] = widx.get(&st.id).map_or(false, |&i| ctx.pinned[i]);
                         }
                         None => cfg[t] = min_area_index(st),
                     }
@@ -342,9 +454,8 @@ impl JointOptimizer {
             }
         }
         // order: incumbent order first, then new tasks by (arrival, id)
-        let arrival_of = |t: usize| -> f64 {
-            ctx.index_of(tasks[t].id).map_or(f64::MAX, |i| ctx.workload[i].arrival)
-        };
+        let arrival_of =
+            |t: usize| widx.get(&tasks[t].id).map_or(f64::MAX, |&i| ctx.workload[i].arrival);
         let mut order: Vec<usize> = (0..nt).collect();
         order.sort_by(|&a, &b| match (prior_pos[a], prior_pos[b]) {
             (Some(x), Some(y)) => x.cmp(&y),
@@ -352,12 +463,104 @@ impl JointOptimizer {
             (None, Some(_)) => std::cmp::Ordering::Greater,
             (None, None) => arrival_of(a).total_cmp(&arrival_of(b)).then(tasks[a].id.cmp(&tasks[b].id)),
         });
-        let seed = State { cfg, order, node };
+        (State { cfg, order, node }, locked)
+    }
 
-        let durs: Vec<Vec<(usize, f64)>> = tasks
-            .iter()
-            .map(|t| t.configs.iter().map(|c| (c.gpus, c.task_secs)).collect())
-            .collect();
+    /// Incremental re-solve (online arrivals): seed the search from the
+    /// context's incumbent plan, keep pinned in-flight tasks' (config,
+    /// node) fixed, and run a single short annealing pass — through the
+    /// delta kernel, which is what keeps per-arrival re-planning affordable
+    /// on 100+-task streams — over the new and not-yet-started decisions.
+    /// Falls back to a cold [`Self::solve`] when the incumbent cannot seat
+    /// a feasible schedule.
+    pub fn resolve_incremental(&self, ctx: &PlanCtx, rng: &mut DetRng) -> (Schedule, SolveStats) {
+        if self.full_replay {
+            return self.resolve_incremental_full_replay(ctx, rng);
+        }
+        let tasks = ctx.spase_tasks();
+        let cluster = ctx.cluster;
+        let mut stats = SolveStats::default();
+        if tasks.is_empty() {
+            return (Schedule::default(), stats);
+        }
+        let start = std::time::Instant::now();
+        // a fraction of the cold budget: the point of warm-starting
+        let deadline = Deadline::after(self.timeout / 4);
+        let nt = tasks.len();
+        let (seed, locked) = self.incremental_seed(ctx, &tasks);
+        let durs = duration_table(&tasks);
+
+        let mut kernel = DeltaKernel::new(cluster.nodes.iter().map(|n| n.gpus).collect(), nt);
+        let mut mover = Mover::new(nt);
+        stats.evals += 1;
+        let mut best_state = seed.clone();
+        mover.rebuild_pos(&seed.order);
+        let mut best_ms = kernel.rebuild(&seed, &durs);
+        stats.warm_makespan = best_ms;
+        if !best_ms.is_finite() {
+            // incumbent cannot seat the current task set: cold-solve
+            return self.solve(&tasks, cluster, rng);
+        }
+
+        // one short annealing pass; locked tasks keep (config, node)
+        let lb = Self::lower_bound(&tasks, cluster);
+        let movable: Vec<usize> = (0..nt).filter(|&t| !locked[t]).collect();
+        let iters = (self.iters_per_temp / 2).max(50);
+        let mut cur = seed;
+        let mut cur_ms = best_ms;
+        let mut temp = 0.05 * cur_ms.max(1e-9);
+        let min_temp = 1e-4 * cur_ms.max(1e-9);
+        let mut poll = DeadlinePoll::new(deadline, DEADLINE_POLL_PERIOD);
+        'outer: while temp > min_temp {
+            for _ in 0..iters {
+                if poll.expired() {
+                    break 'outer;
+                }
+                let (undo, p0) = mover.propose(&mut cur, &durs, cluster.nodes.len(), rng, &movable);
+                stats.evals += 1;
+                let ms = kernel.eval_move(&cur, &durs, p0);
+                let accept = ms < cur_ms || rng.f64() < ((cur_ms - ms) / temp).exp();
+                if accept {
+                    kernel.accept(p0, ms);
+                    cur_ms = ms;
+                    if ms < best_ms - 1e-9 {
+                        best_ms = ms;
+                        best_state = cur.clone();
+                        stats.improvements += 1;
+                    }
+                } else {
+                    mover.undo(&mut cur, undo);
+                }
+            }
+            if best_ms <= lb * (1.0 + 1e-6) {
+                break; // provably optimal
+            }
+            temp *= 0.7;
+        }
+
+        let (sched, ms) = self.eval(&best_state, &tasks, cluster, &mut stats);
+        stats.final_makespan = if ms.is_finite() { ms } else { best_ms };
+        stats.elapsed_secs = start.elapsed().as_secs_f64();
+        stats.evals_per_sec = stats.evals as f64 / stats.elapsed_secs.max(1e-12);
+        (sched, stats)
+    }
+
+    /// Legacy incremental path (full-replay evaluator, per-candidate
+    /// deadline polls). A/B baseline for `bench_online`. Subject to the
+    /// same LOCKSTEP CONTRACT as [`Self::solve_full_replay`]: keep this
+    /// loop draw-for-draw equivalent to [`Self::resolve_incremental`].
+    fn resolve_incremental_full_replay(&self, ctx: &PlanCtx, rng: &mut DetRng) -> (Schedule, SolveStats) {
+        let tasks = ctx.spase_tasks();
+        let cluster = ctx.cluster;
+        let mut stats = SolveStats::default();
+        if tasks.is_empty() {
+            return (Schedule::default(), stats);
+        }
+        let start = std::time::Instant::now();
+        let deadline = Deadline::after(self.timeout / 4);
+        let nt = tasks.len();
+        let (seed, locked) = self.incremental_seed(ctx, &tasks);
+        let durs = duration_table(&tasks);
         let mut scratch = Scratch {
             node_gpus: cluster.nodes.iter().map(|n| n.gpus).collect(),
             free: cluster.nodes.iter().map(|n| Vec::with_capacity(n.gpus)).collect(),
@@ -372,7 +575,6 @@ impl JointOptimizer {
             return self.solve(&tasks, cluster, rng);
         }
 
-        // one short annealing pass; locked tasks keep (config, node)
         let lb = Self::lower_bound(&tasks, cluster);
         let movable: Vec<usize> = (0..nt).filter(|&t| !locked[t]).collect();
         let iters = (self.iters_per_temp / 2).max(50);
@@ -408,13 +610,17 @@ impl JointOptimizer {
         let (sched, ms) = self.eval(&best_state, &tasks, cluster, &mut stats);
         stats.final_makespan = if ms.is_finite() { ms } else { best_ms };
         stats.elapsed_secs = start.elapsed().as_secs_f64();
+        stats.evals_per_sec = stats.evals as f64 / stats.elapsed_secs.max(1e-12);
         (sched, stats)
     }
 
-    /// One annealing move. Configuration/node moves sample tasks from
-    /// `movable` (every task in a cold solve; the unlocked subset in an
-    /// incremental re-solve — pinned in-flight tasks keep their
-    /// placement); order moves may touch any task.
+    /// One annealing move, legacy style: clone the state and mutate the
+    /// clone. The delta path's [`super::delta::Mover`] applies the same
+    /// move distribution in place (same RNG draws) with an undo log.
+    /// Configuration/node moves sample tasks from `movable` (every task in
+    /// a cold solve; the unlocked subset in an incremental re-solve —
+    /// pinned in-flight tasks keep their placement); order moves may touch
+    /// any task.
     fn neighbor(
         &self,
         s: &State,
@@ -488,25 +694,24 @@ impl JointOptimizer {
         n
     }
 
-    /// Construct warm-start states and return the best one.
-    fn warm_starts(&self, tasks: &[SpaseTask], cluster: &Cluster, rng: &mut DetRng, stats: &mut SolveStats) -> State {
+    /// Construct warm-start states, evaluate each candidate **exactly
+    /// once**, and return the best with its cached schedule and makespan.
+    /// (The previous `min_by` comparator re-scheduled both sides of every
+    /// comparison, so each warm start was built O(k) times — inflating
+    /// `stats.evals` and wasting Schedule builds for zero information.)
+    fn warm_starts(
+        &self,
+        tasks: &[SpaseTask],
+        cluster: &Cluster,
+        rng: &mut DetRng,
+        stats: &mut SolveStats,
+    ) -> (State, Schedule, f64) {
         let nt = tasks.len();
         let mut candidates: Vec<State> = Vec::new();
 
         // (a) efficiency packing: each task at its min GPU·seconds config,
         // longest first.
-        let eff_cfg: Vec<usize> = tasks
-            .iter()
-            .map(|t| {
-                (0..t.configs.len())
-                    .min_by(|&a, &b| {
-                        let ca = &t.configs[a];
-                        let cb = &t.configs[b];
-                        (ca.task_secs * ca.gpus as f64).total_cmp(&(cb.task_secs * cb.gpus as f64))
-                    })
-                    .unwrap()
-            })
-            .collect();
+        let eff_cfg: Vec<usize> = tasks.iter().map(min_area_index).collect();
         let mut order: Vec<usize> = (0..nt).collect();
         order.sort_by(|&a, &b| {
             tasks[b].configs[eff_cfg[b]].task_secs.total_cmp(&tasks[a].configs[eff_cfg[a]].task_secs)
@@ -539,19 +744,27 @@ impl JointOptimizer {
             candidates.push(State { cfg, order: ord, node: vec![None; nt] });
         }
 
-        candidates
-            .into_iter()
-            .min_by(|a, b| {
-                let (_, ma) = self.eval(a, tasks, cluster, stats);
-                let (_, mb) = self.eval(b, tasks, cluster, stats);
-                ma.total_cmp(&mb)
-            })
-            .unwrap()
+        let mut best: Option<(State, Schedule, f64)> = None;
+        for cand in candidates {
+            let (sched, ms) = self.eval(&cand, tasks, cluster, stats);
+            if best.as_ref().map_or(true, |(_, _, bms)| ms < *bms) {
+                best = Some((cand, sched, ms));
+            }
+        }
+        best.expect("at least one warm-start candidate")
     }
 
     /// Optimus-style greedy: start every task at its smallest config, then
     /// repeatedly grant a GPU to the task with the best marginal gain.
     fn greedy_rescale(&self, tasks: &[SpaseTask], cluster: &Cluster) -> State {
+        // the marginal-gain walk below reads configs[i] and configs[i + 1]
+        // as "current" and "one step up the GPU frontier" — a profile grid
+        // that is not sorted by GPU count would silently produce a
+        // nonsense warm start, so fail loudly instead
+        debug_assert!(
+            tasks.iter().all(|t| t.configs.windows(2).all(|w| w[0].gpus <= w[1].gpus)),
+            "greedy_rescale assumes each task's configs are sorted by GPU count ascending"
+        );
         let nt = tasks.len();
         let mut cfg: Vec<usize> = vec![0; nt]; // configs sorted by gpus asc
         let budget: isize = cluster.total_gpus() as isize;
@@ -711,6 +924,88 @@ mod tests {
         assert!(stats.final_makespan >= JointOptimizer::lower_bound(&tasks, &cluster) - 1e-9);
     }
 
+    /// The delta kernel and the legacy full-replay evaluator draw from the
+    /// RNG identically and return bit-identical makespans, so with the same
+    /// seed and an un-truncatable budget the two paths must walk the same
+    /// trajectory: same eval/improvement counts, same incumbent. This is
+    /// the "before/after the refactor" determinism contract.
+    #[test]
+    fn delta_kernel_matches_full_replay_trajectory() {
+        let tasks: Vec<SpaseTask> = (0..12)
+            .map(|i| SpaseTask {
+                id: i,
+                configs: frontier(&[700.0 + 13.0 * i as f64, 390.0, 265.0, 210.0]),
+            })
+            .collect();
+        let cluster = Cluster::heterogeneous_12gpu();
+        let opt_delta = JointOptimizer {
+            timeout: Duration::from_secs(600),
+            restarts: 2,
+            iters_per_temp: 120,
+            ..Default::default()
+        };
+        let opt_full = JointOptimizer { full_replay: true, ..opt_delta.clone() };
+        let mut rng_d = DetRng::new(33);
+        let mut rng_f = DetRng::new(33);
+        let (sched_d, stats_d) = opt_delta.solve(&tasks, &cluster, &mut rng_d);
+        let (sched_f, stats_f) = opt_full.solve(&tasks, &cluster, &mut rng_f);
+        assert_eq!(stats_d.evals, stats_f.evals, "paths diverged: different eval counts");
+        assert_eq!(stats_d.improvements, stats_f.improvements);
+        assert_eq!(stats_d.final_makespan, stats_f.final_makespan);
+        assert_eq!(sched_d.makespan(), sched_f.makespan());
+    }
+
+    /// Same seed ⇒ same incumbent, run to run, at a fixed (never-expiring)
+    /// eval budget — the delta kernel introduces no hidden nondeterminism.
+    #[test]
+    fn solve_is_deterministic_for_fixed_seed() {
+        let tasks: Vec<SpaseTask> = (0..9)
+            .map(|i| SpaseTask { id: i, configs: frontier(&[640.0, 340.0, 240.0, 190.0]) })
+            .collect();
+        let cluster = Cluster::single_node_8gpu();
+        let opt = JointOptimizer {
+            timeout: Duration::from_secs(600),
+            restarts: 2,
+            iters_per_temp: 100,
+            ..Default::default()
+        };
+        let (a, sa) = opt.solve(&tasks, &cluster, &mut DetRng::new(77));
+        let (b, sb) = opt.solve(&tasks, &cluster, &mut DetRng::new(77));
+        assert_eq!(a.makespan(), b.makespan());
+        assert_eq!(sa.evals, sb.evals);
+        assert_eq!(sa.improvements, sb.improvements);
+        assert_eq!(sa.final_makespan, sb.final_makespan);
+    }
+
+    /// Each warm-start candidate is scheduled exactly once (the old
+    /// `min_by` comparator evaluated both sides of every comparison, so 5
+    /// candidates cost 8 schedule builds instead of 5).
+    #[test]
+    fn warm_starts_evaluate_each_candidate_once() {
+        let tasks: Vec<SpaseTask> = (0..4)
+            .map(|i| SpaseTask { id: i, configs: frontier(&[300.0, 170.0, 120.0]) })
+            .collect();
+        let cluster = Cluster::single_node_8gpu();
+        let opt = JointOptimizer::default();
+        let mut stats = SolveStats::default();
+        let mut rng = DetRng::new(11);
+        let (_, sched, ms) = opt.warm_starts(&tasks, &cluster, &mut rng, &mut stats);
+        assert_eq!(stats.evals, 5, "5 candidates ⇒ exactly 5 evaluations");
+        assert!(ms.is_finite());
+        assert_eq!(sched.assignments.len(), 4);
+    }
+
+    #[test]
+    fn evals_per_sec_reported() {
+        let tasks: Vec<SpaseTask> =
+            (0..6).map(|i| SpaseTask { id: i, configs: frontier(&[200.0, 110.0]) }).collect();
+        let cluster = Cluster::single_node_8gpu();
+        let mut rng = DetRng::new(21);
+        let (_, stats) = JointOptimizer::default().solve(&tasks, &cluster, &mut rng);
+        assert!(stats.evals_per_sec > 0.0);
+        assert!(stats.evals_per_sec <= stats.evals as f64 / stats.elapsed_secs.max(1e-12) + 1.0);
+    }
+
     #[test]
     fn incremental_resolve_pins_in_flight_tasks() {
         use crate::costmodel::CostModel;
@@ -768,6 +1063,56 @@ mod tests {
         assert_eq!(via_plan.makespan(), warm.makespan());
     }
 
+    /// The incremental re-solve follows the same trajectory through the
+    /// delta kernel as through the legacy full-replay evaluator.
+    #[test]
+    fn incremental_delta_matches_full_replay_trajectory() {
+        use crate::costmodel::CostModel;
+        use crate::parallelism::UppRegistry;
+        use crate::profiler::TrialRunner;
+        use crate::solver::policy::PriorDecision;
+        use crate::trainer::workloads;
+        use std::sync::Arc;
+
+        let mut w = workloads::txt_workload();
+        w.truncate(10);
+        for t in w.iter_mut().skip(7) {
+            t.arrival = 3000.0;
+        }
+        let c = Cluster::single_node_8gpu();
+        let runner = TrialRunner::new(UppRegistry::default_library(Arc::new(CostModel::default())));
+        let (grid, _) = runner.profile(&w, &c);
+        let mut ctx = PlanCtx::fresh(&w, &grid, &c);
+        ctx.available[7] = false;
+        ctx.available[8] = false;
+        ctx.available[9] = false;
+        let mut rng = DetRng::new(51);
+        let incumbent = JointOptimizer::default().plan(&ctx, &mut rng);
+        ctx.prior = incumbent
+            .assignments
+            .iter()
+            .map(|a| PriorDecision { task_id: a.task_id, config: a.config.clone(), node: Some(a.node) })
+            .collect();
+        for i in 0..3 {
+            ctx.pinned[i] = true;
+        }
+        for i in 7..10 {
+            ctx.available[i] = true;
+        }
+        // timeout/4 is the incremental budget: 40 min ⇒ never truncates
+        let opt_delta = JointOptimizer {
+            timeout: Duration::from_secs(2400),
+            incremental: true,
+            ..Default::default()
+        };
+        let opt_full = JointOptimizer { full_replay: true, ..opt_delta.clone() };
+        let (wd, sd) = opt_delta.resolve_incremental(&ctx, &mut DetRng::new(52));
+        let (wf, sf) = opt_full.resolve_incremental(&ctx, &mut DetRng::new(52));
+        assert_eq!(sd.evals, sf.evals, "incremental paths diverged");
+        assert_eq!(sd.improvements, sf.improvements);
+        assert_eq!(wd.makespan(), wf.makespan());
+    }
+
     #[test]
     fn incremental_appends_new_arrivals() {
         use crate::costmodel::CostModel;
@@ -818,5 +1163,18 @@ mod tests {
         let s = opt.greedy_rescale(&tasks, &cluster);
         let used: usize = s.cfg.iter().enumerate().map(|(t, &c)| tasks[t].configs[c].gpus).sum();
         assert!(used <= 4, "used={used}");
+    }
+
+    /// A profile grid violating the sorted-by-GPU-count assumption must
+    /// fail loudly (debug builds) instead of producing a nonsense warm
+    /// start.
+    #[test]
+    #[should_panic(expected = "sorted by GPU count")]
+    #[cfg(debug_assertions)]
+    fn greedy_rescale_rejects_unsorted_configs() {
+        let tasks =
+            vec![SpaseTask { id: 0, configs: vec![cfg(4, 40.0), cfg(1, 100.0), cfg(2, 60.0)] }];
+        let cluster = Cluster::single_node_8gpu();
+        JointOptimizer::default().greedy_rescale(&tasks, &cluster);
     }
 }

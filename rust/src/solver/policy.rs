@@ -13,6 +13,7 @@ use crate::sched::Schedule;
 use crate::solver::spase::SpaseTask;
 use crate::trainer::Workload;
 use crate::util::rng::DetRng;
+use std::collections::HashMap;
 
 /// One task's decision in an incumbent plan: what it runs as and where.
 /// The incremental re-solver warm-starts from these instead of solving
@@ -83,6 +84,28 @@ impl<'a> PlanCtx<'a> {
     /// The incumbent decision for a task id, if any.
     pub fn prior_for(&self, task_id: usize) -> Option<&PriorDecision> {
         self.prior.iter().find(|p| p.task_id == task_id)
+    }
+
+    /// Bulk task-id → workload-index map (first occurrence, matching
+    /// [`Self::index_of`]). Incremental re-solve seeding does one lookup
+    /// per task; per-task `index_of` scans made that O(n²) on 100+-task
+    /// online streams.
+    pub fn id_index_map(&self) -> HashMap<usize, usize> {
+        let mut m = HashMap::with_capacity(self.workload.len());
+        for (i, t) in self.workload.iter().enumerate() {
+            m.entry(t.id).or_insert(i);
+        }
+        m
+    }
+
+    /// Bulk task-id → position-in-[`Self::prior`] map (first occurrence,
+    /// matching [`Self::prior_for`]).
+    pub fn prior_index_map(&self) -> HashMap<usize, usize> {
+        let mut m = HashMap::with_capacity(self.prior.len());
+        for (i, p) in self.prior.iter().enumerate() {
+            m.entry(p.task_id).or_insert(i);
+        }
+        m
     }
 
     /// The most GPU-efficient configuration (minimum GPU·seconds area)
@@ -247,6 +270,33 @@ mod tests {
         let cfg = ctx.min_area_config(0).unwrap();
         ctx.prior = vec![PriorDecision { task_id: w[0].id, config: cfg, node: Some(0) }];
         assert_eq!(ctx.prior_for(w[0].id).unwrap().node, Some(0));
+    }
+
+    #[test]
+    fn index_maps_match_linear_scans() {
+        let (w, grid, c) = setup();
+        let mut ctx = PlanCtx::fresh(&w, &grid, &c);
+        // prior with a duplicate entry: maps must keep the first, exactly
+        // like the linear scans they replace
+        let cfg = ctx.min_area_config(0).unwrap();
+        ctx.prior = vec![
+            PriorDecision { task_id: w[2].id, config: cfg.clone(), node: Some(0) },
+            PriorDecision { task_id: w[0].id, config: cfg.clone(), node: None },
+            PriorDecision { task_id: w[2].id, config: cfg, node: Some(1) },
+        ];
+        let widx = ctx.id_index_map();
+        let pidx = ctx.prior_index_map();
+        for t in w.iter() {
+            assert_eq!(widx.get(&t.id).copied(), ctx.index_of(t.id));
+            assert_eq!(
+                pidx.get(&t.id).copied(),
+                ctx.prior.iter().position(|p| p.task_id == t.id),
+                "prior map diverged for task {}",
+                t.id
+            );
+        }
+        assert_eq!(pidx.get(&w[2].id).copied(), Some(0), "duplicate must resolve to first");
+        assert!(widx.get(&999_999).is_none());
     }
 
     #[test]

@@ -2,7 +2,11 @@
 //! and generic grid / random search constructors.
 
 use super::{HParams, Optimizer, Task, Workload};
+use crate::cluster::Cluster;
+use crate::costmodel::{Knobs, ParallelismKind};
 use crate::model::ModelDesc;
+use crate::profiler::TaskConfig;
+use crate::solver::spase::SpaseTask;
 use crate::util::rng::DetRng;
 
 /// Dataset sizes. The scheduler only consumes examples-per-epoch; these
@@ -176,6 +180,63 @@ pub fn online_mixed_workload(n: usize, mean_gap_secs: f64, rng: &mut DetRng) -> 
     with_poisson_arrivals(w, mean_gap_secs, rng)
 }
 
+// ---- solver scaling workloads ---------------------------------------------
+//
+// The delta-kernel scale pass (EXPERIMENTS.md §Perf) needs SPASE instances
+// far beyond the paper's 12-task grids: 64/128/256/512 tasks on 8–64-GPU
+// clusters. Profiling real model families at that count is pure setup cost,
+// so these build synthetic runtime-vs-GPU frontiers directly.
+
+/// `n` synthetic SPASE tasks with Amdahl-style scaling frontiers: task `t`
+/// at `g` GPUs runs in `base·(serial + (1−serial)/g)·(1 + comm·(g−1))`
+/// seconds, with per-task base runtime, serial fraction, and communication
+/// overhead drawn from `rng`. Configurations cover 1..=`max_gang` GPUs in
+/// ascending order (the contract `greedy_rescale` asserts), and every
+/// frontier is strictly beneficial at 2 GPUs so solvers face a real
+/// apportionment decision.
+pub fn synthetic_frontier_tasks(n: usize, max_gang: usize, rng: &mut DetRng) -> Vec<SpaseTask> {
+    assert!(max_gang >= 1, "need at least 1-GPU configurations");
+    (0..n)
+        .map(|id| {
+            let base = rng.range_f64(600.0, 7200.0);
+            let serial = rng.range_f64(0.02, 0.35);
+            let comm = rng.range_f64(0.005, 0.03);
+            let configs = (1..=max_gang)
+                .map(|g| {
+                    let gf = g as f64;
+                    let secs = base * (serial + (1.0 - serial) / gf) * (1.0 + comm * (gf - 1.0));
+                    TaskConfig {
+                        gpus: g,
+                        upp: "synthetic-fsdp".into(),
+                        kind: ParallelismKind::Fsdp,
+                        knobs: Knobs::default(),
+                        minibatch_secs: secs / 100.0,
+                        task_secs: secs,
+                    }
+                })
+                .collect();
+            SpaseTask { id, configs }
+        })
+        .collect()
+}
+
+/// A standard scaling-study instance for the solver benches: `n_tasks`
+/// synthetic-frontier tasks on a homogeneous `nodes` × `gpus_per_node`
+/// cluster, deterministically derived from `seed`. Canonical points are
+/// 64/128/256/512 tasks on 8–64 GPUs (`scaling_instance(256, 8, 8, ..)`
+/// is the EXPERIMENTS.md §Perf headline configuration).
+pub fn scaling_instance(
+    n_tasks: usize,
+    nodes: usize,
+    gpus_per_node: usize,
+    seed: u64,
+) -> (Vec<SpaseTask>, Cluster) {
+    let mut rng = DetRng::new(seed);
+    let cluster = Cluster::homogeneous(nodes, gpus_per_node);
+    let tasks = synthetic_frontier_tasks(n_tasks, gpus_per_node, &mut rng);
+    (tasks, cluster)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -271,6 +332,46 @@ mod tests {
         assert_eq!(w[3].arrival, 0.0);
         assert_eq!(w[4].arrival, 500.0);
         assert_eq!(w[11].arrival, 1000.0);
+    }
+
+    #[test]
+    fn synthetic_frontiers_well_formed() {
+        let mut rng = DetRng::new(5);
+        let tasks = synthetic_frontier_tasks(64, 8, &mut rng);
+        assert_eq!(tasks.len(), 64);
+        for t in &tasks {
+            assert_eq!(t.configs.len(), 8);
+            // GPU counts ascending (the greedy_rescale contract), runtimes
+            // positive, and scaling to 2 GPUs always beneficial
+            for w in t.configs.windows(2) {
+                assert!(w[0].gpus < w[1].gpus);
+            }
+            assert!(t.configs.iter().all(|c| c.task_secs > 0.0));
+            assert!(t.configs[1].task_secs < t.configs[0].task_secs);
+        }
+        // dense unique ids
+        let mut ids: Vec<_> = tasks.iter().map(|t| t.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scaling_instance_deterministic() {
+        let (a, ca) = scaling_instance(128, 4, 8, 9);
+        let (b, cb) = scaling_instance(128, 4, 8, 9);
+        assert_eq!(a.len(), 128);
+        assert_eq!(ca, cb);
+        assert_eq!(ca.total_gpus(), 32);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            for (cx, cy) in x.configs.iter().zip(&y.configs) {
+                assert_eq!(cx.task_secs, cy.task_secs);
+                assert_eq!(cx.gpus, cy.gpus);
+            }
+        }
+        // different seeds give different frontiers
+        let (c, _) = scaling_instance(128, 4, 8, 10);
+        assert!(a[0].configs[0].task_secs != c[0].configs[0].task_secs);
     }
 
     #[test]

@@ -38,9 +38,51 @@ impl Deadline {
         self.budget.saturating_sub(self.start.elapsed())
     }
 
-    /// Fraction of the budget consumed, clamped to [0, 1].
+    /// Fraction of the budget consumed, clamped to [0, 1]. A zero-duration
+    /// budget reports 1.0 (already expired), not the NaN of 0.0/0.0 — the
+    /// introspection loop reads this for pacing and NaN poisons every
+    /// comparison downstream.
     pub fn progress(&self) -> f64 {
+        if self.budget.is_zero() {
+            return 1.0;
+        }
         (self.start.elapsed().as_secs_f64() / self.budget.as_secs_f64()).min(1.0)
+    }
+}
+
+/// How many iterations hot solver loops run between wall-clock reads.
+/// `Instant::now` per candidate was noise while candidate evaluation cost
+/// O(n·m); once the delta kernel made moves cheap it became a measurable
+/// fixed tax, so the annealers poll through [`DeadlinePoll`] instead.
+pub const DEADLINE_POLL_PERIOD: u32 = 64;
+
+/// Amortized deadline polling for hot loops: reads the clock on the first
+/// call and then only every `period`-th call, so an anytime search pays
+/// one `Instant::now` per batch of candidate evaluations. Worst-case
+/// budget overshoot is `period - 1` iterations.
+#[derive(Debug, Clone)]
+pub struct DeadlinePoll {
+    deadline: Deadline,
+    period: u32,
+    count: u32,
+}
+
+impl DeadlinePoll {
+    /// Poll `deadline` every `period` calls (first call always polls).
+    pub fn new(deadline: Deadline, period: u32) -> Self {
+        assert!(period > 0, "poll period must be positive");
+        Self { deadline, period, count: period - 1 }
+    }
+
+    /// True once the underlying deadline has expired, checked on the
+    /// first and then every `period`-th call.
+    pub fn expired(&mut self) -> bool {
+        self.count += 1;
+        if self.count >= self.period {
+            self.count = 0;
+            return self.deadline.expired();
+        }
+        false
     }
 }
 
@@ -80,6 +122,33 @@ mod tests {
         assert!(!d.expired());
         assert!(d.remaining() > Duration::from_secs(59));
         assert!(d.progress() < 0.1);
+    }
+
+    #[test]
+    fn zero_budget_progress_is_one() {
+        // 0.0 / 0.0 used to surface as NaN, poisoning pacing comparisons
+        let d = Deadline::after(Duration::ZERO);
+        assert_eq!(d.progress(), 1.0);
+        assert!(d.expired());
+        assert_eq!(d.remaining(), Duration::ZERO);
+    }
+
+    #[test]
+    fn deadline_poll_amortizes_clock_reads() {
+        // expired deadline: noticed on the very first call
+        let mut p = DeadlinePoll::new(Deadline::after(Duration::ZERO), 8);
+        assert!(p.expired());
+        // live deadline: the off-cycle calls never read the clock and the
+        // on-cycle ones report not-expired
+        let mut q = DeadlinePoll::new(Deadline::after(Duration::from_secs(60)), 8);
+        for _ in 0..64 {
+            assert!(!q.expired());
+        }
+        // once the underlying deadline passes, a poll within one period sees it
+        let mut r = DeadlinePoll::new(Deadline::after(Duration::from_millis(1)), 4);
+        std::thread::sleep(Duration::from_millis(5));
+        let fired = (0..4).any(|_| r.expired());
+        assert!(fired, "poll must fire within one period of expiry");
     }
 
     #[test]

@@ -374,6 +374,102 @@ fn prop_warm_resolve_within_threshold_of_cold() {
     }
 }
 
+/// Delta kernel ≡ full replay at the public-API level: for random
+/// instances, the same seed and an un-truncatable budget, `solve` through
+/// the delta kernel and through the legacy full-replay evaluator must walk
+/// bit-identical trajectories — same eval/improvement counts, same final
+/// incumbent makespan. (The kernel's per-move property tests live next to
+/// it in `solver::delta`; this closes the loop end to end.)
+#[test]
+fn prop_delta_and_full_replay_solvers_agree() {
+    let registry = UppRegistry::default_library(Arc::new(CostModel::default()));
+    let mut rng = DetRng::new(808);
+    let mut checked = 0;
+    for case in 0..16 {
+        if checked >= 4 {
+            break; // enough evidence; keep debug-build runtime bounded
+        }
+        let mut crng = rng.fork(case);
+        let w = random_workload(&mut crng);
+        let c = random_cluster(&mut crng);
+        let (grid, _) = TrialRunner::new(registry.clone()).profile(&w, &c);
+        if w.iter().any(|t| grid.configs(t).is_empty()) {
+            continue;
+        }
+        let ctx = PlanCtx::fresh(&w, &grid, &c);
+        let tasks = ctx.spase_tasks();
+        let opt_delta = JointOptimizer {
+            timeout: std::time::Duration::from_secs(600),
+            restarts: 2,
+            iters_per_temp: 80,
+            ..Default::default()
+        };
+        let opt_full = JointOptimizer { full_replay: true, ..opt_delta.clone() };
+        let (sched_d, stats_d) = opt_delta.solve(&tasks, &c, &mut DetRng::new(900 + case));
+        let (sched_f, stats_f) = opt_full.solve(&tasks, &c, &mut DetRng::new(900 + case));
+        assert_eq!(stats_d.evals, stats_f.evals, "case {case}: trajectories diverged");
+        assert_eq!(stats_d.improvements, stats_f.improvements, "case {case}");
+        assert_eq!(stats_d.final_makespan, stats_f.final_makespan, "case {case}");
+        assert_eq!(sched_d.makespan(), sched_f.makespan(), "case {case}");
+        checked += 1;
+    }
+    assert!(checked >= 3, "too few parity cases: {checked}");
+}
+
+/// The same parity contract on the online path: an incremental re-solve
+/// seeded from an incumbent (pinned in-flight tasks included) lands on the
+/// same plan through either evaluator.
+#[test]
+fn prop_incremental_delta_and_full_replay_agree() {
+    let registry = UppRegistry::default_library(Arc::new(CostModel::default()));
+    let mut rng = DetRng::new(909);
+    let mut checked = 0;
+    for case in 0..16 {
+        if checked >= 3 {
+            break; // enough evidence; keep debug-build runtime bounded
+        }
+        let mut crng = rng.fork(case);
+        let w = random_workload(&mut crng);
+        let c = random_cluster(&mut crng);
+        let (grid, _) = TrialRunner::new(registry.clone()).profile(&w, &c);
+        if w.len() < 2 || w.iter().any(|t| grid.configs(t).is_empty()) {
+            continue;
+        }
+        // incumbent over a prefix, remainder arrives afterwards
+        let split = 1 + w.len() / 2;
+        let mut ctx = PlanCtx::fresh(&w, &grid, &c);
+        for i in split..w.len() {
+            ctx.available[i] = false;
+        }
+        let incumbent = JointOptimizer::default().plan(&ctx, &mut crng);
+        ctx.prior = incumbent
+            .assignments
+            .iter()
+            .map(|a| PriorDecision { task_id: a.task_id, config: a.config.clone(), node: Some(a.node) })
+            .collect();
+        for i in 0..split.min(2) {
+            ctx.pinned[i] = ctx.prior.iter().any(|p| p.task_id == w[i].id);
+        }
+        for i in split..w.len() {
+            ctx.available[i] = true;
+        }
+        // timeout/4 is the incremental budget: 40 min ⇒ never truncates
+        let opt_delta = JointOptimizer {
+            timeout: std::time::Duration::from_secs(2400),
+            incremental: true,
+            ..Default::default()
+        };
+        let opt_full = JointOptimizer { full_replay: true, ..opt_delta.clone() };
+        let (sched_d, stats_d) = opt_delta.resolve_incremental(&ctx, &mut DetRng::new(300 + case));
+        let (sched_f, stats_f) = opt_full.resolve_incremental(&ctx, &mut DetRng::new(300 + case));
+        assert_eq!(stats_d.evals, stats_f.evals, "case {case}: trajectories diverged");
+        assert_eq!(stats_d.improvements, stats_f.improvements, "case {case}");
+        assert_eq!(sched_d.makespan(), sched_f.makespan(), "case {case}");
+        checked += 1;
+    }
+    assert!(checked >= 2, "too few incremental parity cases: {checked}");
+}
+
 /// The Optimus allocator never exceeds its budget and never starves a
 /// task below one GPU.
 #[test]
