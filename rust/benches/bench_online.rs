@@ -4,7 +4,9 @@
 //!
 //! Perf target: warm-start must be measurably faster than cold — it is
 //! what makes per-arrival re-planning affordable at high submission
-//! rates. The speedup factor is printed at the end.
+//! rates. The speedup factor is printed at the end. The 120-task stream
+//! also runs through the speculative parallel engine (auto threads,
+//! bit-identical trajectory) to track the threads dimension.
 
 use saturn::cluster::Cluster;
 use saturn::costmodel::CostModel;
@@ -47,8 +49,11 @@ fn main() {
         ctx.available[i] = true; // the arrivals fire
     }
 
-    let cold = JointOptimizer::default();
-    let warm = JointOptimizer::incremental();
+    // pinned to one thread: these benches track the warm-start and
+    // delta-kernel wins in isolation; the speculative engine's threads
+    // dimension is measured by the `_parallel` twin below
+    let cold = JointOptimizer { threads: 1, ..JointOptimizer::default() };
+    let warm = JointOptimizer { threads: 1, ..JointOptimizer::incremental() };
 
     let mut rng_c = DetRng::new(3);
     let cold_mean = b
@@ -111,7 +116,7 @@ fn main() {
     for i in 100..w2.len() {
         ctx2.available[i] = true; // the queued arrivals fire
     }
-    let warm_full = JointOptimizer { full_replay: true, ..JointOptimizer::incremental() };
+    let warm_full = JointOptimizer { full_replay: true, threads: 1, ..JointOptimizer::incremental() };
     let mut rng_w2 = DetRng::new(13);
     let warm120 = b
         .bench("warm_incremental_resolve_120tasks_32gpu", || {
@@ -138,6 +143,28 @@ fn main() {
         s_f.makespan(),
         warm120 * 1e3,
         warm120_full * 1e3
+    );
+
+    // ---- speculative parallel engine on the same 120-task re-solve:
+    // auto thread count, bit-identical trajectory, pure wall-clock win
+    let warm_par = JointOptimizer::incremental(); // threads: 0 = auto
+    let mut rng_wp = DetRng::new(13);
+    let warm120_par = b
+        .bench("warm_incremental_resolve_120tasks_32gpu_parallel", || {
+            let (s, _) = warm_par.resolve_incremental(&ctx2, &mut rng_wp);
+            black_box(s.makespan());
+        })
+        .mean;
+    let (_, st_p) = warm_par.resolve_incremental(&ctx2, &mut DetRng::new(14));
+    println!(
+        "[info] 120-task stream re-solve, speculative engine at {} threads: \
+         {:.0} evals/s vs single-thread {:.0} evals/s ({:.2}x); mean latency {:.1}ms vs {:.1}ms",
+        warm_par.resolved_threads(),
+        st_p.evals_per_sec,
+        st_d.evals_per_sec,
+        st_p.evals_per_sec / st_d.evals_per_sec.max(1e-9),
+        warm120_par * 1e3,
+        warm120 * 1e3
     );
 
     b.write_csv().ok();

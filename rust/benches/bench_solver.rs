@@ -4,11 +4,14 @@
 //! Perf targets (EXPERIMENTS.md §Perf): a paper-scale SPASE solve (12
 //! tasks, 8 GPUs) reaches a good incumbent well under its timeout; the
 //! simplex solves the tiny-instance LPs in microseconds–milliseconds;
-//! and on the scaling pass (64–256 synthetic-frontier tasks, 16–64 GPUs)
+//! on the scaling pass (64–256 synthetic-frontier tasks, 16–64 GPUs)
 //! the delta kernel sustains ≥ 5× the evals/sec of the retained
-//! full-replay path inside the same 50 ms budget — the headline
-//! `spase_solve_256tasks_64gpu` pair below, with `[info]` lines printing
-//! both throughputs for the EXPERIMENTS.md table.
+//! full-replay path inside the same 50 ms budget — the
+//! `spase_solve_256tasks_64gpu` pair below; and the speculative parallel
+//! engine (`spase_solve_256tasks_64gpu_parallel`) reaches ≥ 2× the
+//! single-thread evals/sec on a ≥ 4-core runner, walking a bit-identical
+//! trajectory. `[info]` lines print the throughputs for the
+//! EXPERIMENTS.md tables.
 
 use saturn::cluster::Cluster;
 use saturn::costmodel::CostModel;
@@ -83,13 +86,16 @@ fn main() {
 
     // ---- scaling pass: delta kernel vs full replay (EXPERIMENTS.md §Perf)
     // synthetic-frontier instances at 64/256 tasks; both evaluators get
-    // the same 50 ms budget, so evals/sec is the whole story
+    // the same 50 ms budget, so evals/sec is the whole story. Pinned to
+    // one thread: this pair isolates the *evaluator* win; the threads
+    // dimension is measured separately below.
     for &(n, nodes, gpn) in &[(64usize, 2usize, 8usize), (256, 8, 8)] {
         let (stasks, scluster) = workloads::scaling_instance(n, nodes, gpn, 77);
         let delta_opt = JointOptimizer {
             timeout: Duration::from_millis(50),
             restarts: 2,
             iters_per_temp: 200,
+            threads: 1,
             ..Default::default()
         };
         let full_opt = JointOptimizer { full_replay: true, ..delta_opt.clone() };
@@ -140,6 +146,56 @@ fn main() {
                     panic!("{msg}");
                 }
             }
+        }
+    }
+
+    // ---- speculative parallel engine: threads scaling at the 256-task
+    // headline point (EXPERIMENTS.md §Perf). Auto thread count
+    // (SATURN_THREADS honored); the trajectory is bit-identical to the
+    // single-thread run, so evals/sec is pure wall-clock speedup.
+    let (ptasks, pcluster) = workloads::scaling_instance(256, 8, 8, 77);
+    let par_opt = JointOptimizer {
+        timeout: Duration::from_millis(50),
+        restarts: 2,
+        iters_per_temp: 200,
+        ..Default::default() // threads: 0 = auto
+    };
+    let solo_opt = JointOptimizer { threads: 1, ..par_opt.clone() };
+    let mut rng_p = DetRng::new(300);
+    b.bench("spase_solve_256tasks_64gpu_parallel", || {
+        let (s, _) = par_opt.solve(&ptasks, &pcluster, &mut rng_p);
+        black_box(s.makespan());
+    });
+    let threads = par_opt.resolved_threads();
+    let mut best_solo = 0.0f64;
+    let mut best_par = 0.0f64;
+    let mut best_ratio = 0.0f64;
+    for s in 0..3u64 {
+        let (_, st_solo) = solo_opt.solve(&ptasks, &pcluster, &mut DetRng::new(320 + s));
+        let (_, st_par) = par_opt.solve(&ptasks, &pcluster, &mut DetRng::new(320 + s));
+        best_solo = best_solo.max(st_solo.evals_per_sec);
+        best_par = best_par.max(st_par.evals_per_sec);
+        best_ratio = best_ratio.max(st_par.evals_per_sec / st_solo.evals_per_sec.max(1e-9));
+    }
+    println!(
+        "[info] 256 tasks / 64 GPUs @ 50ms: speculative engine at {threads} threads \
+         {best_par:.0} evals/s vs single-thread {best_solo:.0} evals/s (best-of-3 ratio {best_ratio:.2}x)"
+    );
+    // acceptance bar: ≥ 2× single-thread evals/sec on a ≥ 4-core runner,
+    // best of 3 (below 4 cores — physical parallelism, not the configured
+    // thread count — the ratio cannot be promised, so the gate
+    // self-disables). SATURN_BENCH_NO_GATE=1 demotes the panic to a
+    // warning, same as the delta-kernel floor above.
+    let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+    if cores >= 4 && threads >= 4 && best_ratio < 2.0 {
+        let msg = format!(
+            "speculative parallel engine below 2x single-thread at {threads} threads: \
+             best of 3 only {best_ratio:.2}x"
+        );
+        if std::env::var("SATURN_BENCH_NO_GATE").is_ok() {
+            println!("[warn] {msg} (gate disabled by SATURN_BENCH_NO_GATE)");
+        } else {
+            panic!("{msg}");
         }
     }
 

@@ -23,6 +23,7 @@
 use crate::runtime::{literal_f32, literal_i32, Runtime};
 use crate::sched::Schedule;
 use anyhow::{anyhow, Result};
+use std::collections::HashMap;
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 
@@ -274,11 +275,24 @@ pub fn run_plan(
     schedule: &Schedule,
     jobs: &[JobSpec],
 ) -> Result<Vec<JobReport>> {
-    let mut order: Vec<_> = schedule.assignments.clone();
-    order.sort_by(|a, b| a.start.total_cmp(&b.start).then(a.task_id.cmp(&b.task_id)));
+    // launch in plan start order without cloning assignments (index
+    // sort), looking jobs up through a first-occurrence map — the linear
+    // scan this replaces rescanned `jobs` once per assignment, O(n²) at
+    // plan scale (see also `Schedule::id_index` for the schedule-keyed
+    // direction).
+    let mut order: Vec<usize> = (0..schedule.assignments.len()).collect();
+    order.sort_by(|&x, &y| {
+        let (a, b) = (&schedule.assignments[x], &schedule.assignments[y]);
+        a.start.total_cmp(&b.start).then(a.task_id.cmp(&b.task_id))
+    });
+    let mut job_by_id: HashMap<usize, &JobSpec> = HashMap::with_capacity(jobs.len());
+    for j in jobs {
+        job_by_id.entry(j.task_id).or_insert(j);
+    }
     let mut handles = Vec::new();
-    for a in order {
-        let Some(job) = jobs.iter().find(|j| j.task_id == a.task_id).cloned() else {
+    for &i in &order {
+        let a = &schedule.assignments[i];
+        let Some(job) = job_by_id.get(&a.task_id).map(|j| (*j).clone()) else {
             continue;
         };
         let gang_size = a.config.gpus;

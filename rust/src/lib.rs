@@ -17,7 +17,8 @@
 //! - [`profiler`] — the Trial Runner: plan enumeration + runtime estimation.
 //! - [`solver`] — the SPASE joint optimizer: simplex LP, branch-and-bound
 //!   MILP (paper eqs. 1–11), and the anytime incumbent search used under a
-//!   wall-clock timeout.
+//!   wall-clock timeout — a speculative parallel annealing engine whose
+//!   trajectories are bit-identical for every thread count.
 //! - [`sched`] — execution-plan representation and validity checking.
 //! - [`baselines`] — Max/Min heuristics, Optimus-Greedy, Randomized, and the
 //!   dynamic Optimus variants from the paper's evaluation.

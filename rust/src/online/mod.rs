@@ -54,7 +54,15 @@ pub struct OnlineCoordinator {
     /// Parallelism library used to profile submissions.
     pub registry: UppRegistry,
     /// Planner invoked at every arrival/introspection event. Defaults to
-    /// the incremental (warm-start) joint optimizer.
+    /// the incremental (warm-start) joint optimizer. Tune
+    /// [`JointOptimizer::warm_frac`] here to trade per-arrival re-solve
+    /// latency against plan quality (the default grants a re-solve a
+    /// quarter of the cold budget; a smaller fraction truncates the
+    /// anneal earlier and can change the plan — that trade is the knob's
+    /// purpose), and [`JointOptimizer::threads`] to pick the speculative
+    /// engine's parallelism, which never changes the trajectory — at any
+    /// fixed budget the search path is bit-identical across thread
+    /// counts.
     pub optimizer: JointOptimizer,
     /// Simulation knobs; introspection defaults on (the online path
     /// shares its re-plan machinery).
@@ -172,5 +180,26 @@ mod tests {
             oc.run(11).result.makespan
         };
         assert_eq!(mk(), mk());
+    }
+
+    /// The coordinator can tune the incremental warm budget (satellite:
+    /// `timeout / 4` used to be hardcoded). The fraction only moves the
+    /// wall-clock cap, so with an un-truncatable timeout any fraction
+    /// executes the identical stream.
+    #[test]
+    fn warm_budget_tunable_without_changing_plans() {
+        let run_with = |frac: f64| {
+            let mut oc = OnlineCoordinator::new(Cluster::single_node_8gpu());
+            oc.optimizer.timeout = std::time::Duration::from_secs(240);
+            oc.optimizer.warm_frac = frac;
+            for i in 0..4 {
+                oc.submit(small_task(i as f64 * 400.0));
+            }
+            oc.run(13).result
+        };
+        let quarter = run_with(0.25);
+        let half = run_with(0.5);
+        assert_eq!(quarter, half, "untruncated budgets must yield identical streams");
+        assert_eq!(quarter.completions.len(), 4);
     }
 }

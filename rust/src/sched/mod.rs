@@ -54,9 +54,25 @@ impl Schedule {
         self.assignments.iter().map(Assignment::end).fold(0.0, f64::max)
     }
 
-    /// Find the assignment for a task.
+    /// Find the assignment for a task. O(n) linear scan — fine for
+    /// one-off lookups; anything doing a lookup per task (the executor's
+    /// plan-order launch, per-task pin verification) should build
+    /// [`Self::id_index`] once instead, or the scan turns O(n²) at online
+    /// stream scale. (The simulator's hot scans were *workload*-keyed and
+    /// use their own id→workload-index map.)
     pub fn assignment_for(&self, task_id: usize) -> Option<&Assignment> {
         self.assignments.iter().find(|a| a.task_id == task_id)
+    }
+
+    /// Task-id → assignment-index map, built in one pass. First
+    /// occurrence wins, matching [`Self::assignment_for`] exactly (a
+    /// valid schedule has unique ids; `validate` rejects duplicates).
+    pub fn id_index(&self) -> HashMap<usize, usize> {
+        let mut m = HashMap::with_capacity(self.assignments.len());
+        for (i, a) in self.assignments.iter().enumerate() {
+            m.entry(a.task_id).or_insert(i);
+        }
+        m
     }
 
     /// Validate against the MILP's feasibility constraints.
@@ -416,6 +432,30 @@ mod tests {
             assert_eq!(got_skipped, want_skipped, "case {case}: skip sets differ");
             assert_eq!(got, want, "case {case}: schedules differ");
         }
+    }
+
+    /// The id→index map must agree with the linear scan it replaces for
+    /// every id — including duplicate-id (invalid) schedules, where both
+    /// resolve to the first occurrence, and missing ids.
+    #[test]
+    fn id_index_matches_linear_scan() {
+        let c = Cluster::from_gpu_counts(&[4, 8]);
+        let choices: Vec<_> = [3usize, 11, 7, 0, 5].iter().map(|&id| choice(id, 2, 10.0)).collect();
+        let mut s = list_schedule(&choices, &c);
+        // inject a duplicate id to pin first-occurrence semantics
+        let mut dup = s.assignments[3].clone();
+        dup.start += 1000.0;
+        s.assignments.push(dup);
+        let idx = s.id_index();
+        assert_eq!(idx.len(), 5);
+        for id in [3usize, 11, 7, 0, 5] {
+            let via_scan = s.assignment_for(id).unwrap();
+            let via_index = &s.assignments[idx[&id]];
+            assert!(std::ptr::eq(via_scan, via_index), "id {id}: index diverged from scan");
+        }
+        assert!(!idx.contains_key(&999));
+        assert!(s.assignment_for(999).is_none());
+        assert!(Schedule::default().id_index().is_empty());
     }
 
     #[test]

@@ -24,6 +24,7 @@ use crate::sched::{list_schedule, PlacementChoice, Schedule};
 use crate::solver::policy::{PlanCtx, Policy};
 use crate::trainer::Workload;
 use crate::util::rng::DetRng;
+use std::collections::HashMap;
 
 /// Introspection knobs (paper §4.4: interval 1000 s, threshold 500 s).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -77,7 +78,7 @@ pub struct BusySpan {
 }
 
 /// Simulation outcome.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct SimResult {
     /// End-to-end makespan (absolute completion of the last task).
     pub makespan: f64,
@@ -136,7 +137,7 @@ impl SimResult {
 }
 
 /// Internal per-task execution state.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 struct TaskState {
     /// Fraction of minibatches still to run.
     remaining: f64,
@@ -144,6 +145,26 @@ struct TaskState {
     noise: f64,
     /// Pending one-time relaunch penalty (after a plan switch), seconds.
     penalty: f64,
+}
+
+/// Reusable buffers for the simulator's re-plan path. Every introspection
+/// round and arrival event used to clone the whole plan and task-state
+/// vectors (plus one choice list per replay) just to evaluate a proposal;
+/// on 100+-task online streams that allocation churn ran once per arrival.
+/// The buffers live for the whole simulation and are swapped in on accept.
+#[derive(Debug, Default)]
+struct ReplanScratch {
+    /// What-if task states carrying proposed switch penalties.
+    switch_states: Vec<TaskState>,
+    /// The keep-alternative: incumbent plan minus finished tasks (plus
+    /// appended arrivals on the arrival path).
+    keep: Vec<PlacementChoice>,
+    /// The planner's proposal as an ordered choice list.
+    proposal: Vec<PlacementChoice>,
+    /// Replay working set (actual-duration choices fed to the scheduler).
+    replay_choices: Vec<PlacementChoice>,
+    /// Index sort buffer for [`ordered_choices_into`].
+    order: Vec<usize>,
 }
 
 /// Simulate `policy` executing `workload` on `cluster`.
@@ -187,18 +208,23 @@ pub fn simulate_with_controller(
         .collect();
     let mut result = SimResult::default();
     let mut now = cfg.start_latency;
+    let mut scratch = ReplanScratch::default();
 
     // initial plan over the tasks that have already been submitted;
     // later arrivals are injected at their event times below
     let mut ctx = PlanCtx::fresh(workload, grid, cluster);
+    // task-id → workload-index map, built once per simulation (first
+    // occurrence, exactly like the per-task linear `position` scans it
+    // replaces — those made every replay O(n²) at online stream scale)
+    let id2idx = ctx.id_index_map();
     for i in 0..n {
         ctx.available[i] = workload[i].arrival <= now + 1e-9;
     }
-    let mut plan: Vec<PlacementChoice> = if ctx.active().is_empty() {
-        Vec::new()
-    } else {
-        ordered_choices(&policy.plan(&ctx, rng))
-    };
+    let mut plan: Vec<PlacementChoice> = Vec::new();
+    if !ctx.active().is_empty() {
+        let first = policy.plan(&ctx, rng);
+        ordered_choices_into(&first, &mut scratch.order, &mut plan);
+    }
     let mut started = vec![false; n];
     // the next introspection boundary is anchored to the last round, NOT
     // reset by arrival events — otherwise a sustained arrival stream with
@@ -209,7 +235,7 @@ pub fn simulate_with_controller(
     loop {
         // replay the current plan over the remaining work, with actual
         // (noised) durations and pending relaunch penalties
-        let trace = replay(&plan, &states, workload, cluster);
+        let trace = replay_into(&plan, &states, workload, cluster, &id2idx, &mut scratch.replay_choices);
         let seg_makespan = trace.makespan();
         // the next event cutting this segment short: an introspection
         // boundary or the next pending arrival, whichever is sooner
@@ -223,7 +249,7 @@ pub fn simulate_with_controller(
 
         if seg_makespan <= horizon {
             // everything currently planned finishes before the next event
-            commit_segment(&trace, f64::INFINITY, now, &mut states, &mut started, workload, &mut result);
+            commit_segment(&trace, f64::INFINITY, now, &mut states, &mut started, &id2idx, &mut result);
             if !next_arrival.is_finite() {
                 result.makespan = now + seg_makespan;
                 break;
@@ -234,19 +260,16 @@ pub fn simulate_with_controller(
             // there is nothing left to introspect over the idle gap:
             // restart the interval clock from the arrival
             next_intro = cfg.introspect.map(|ic| now + ic.interval);
-            plan.retain(|c| {
-                let idx = workload.iter().position(|t| t.id == c.task_id).unwrap();
-                states[idx].remaining > 1e-12
-            });
+            plan.retain(|c| states[id2idx[&c.task_id]].remaining > 1e-12);
             arrival_replan(
                 policy, workload, cluster, &cfg, rng, &mut ctx, &mut states, &mut plan, &started, now,
-                &mut result,
+                &mut result, &id2idx, &mut scratch,
             );
             continue;
         }
 
         // commit only [0, horizon) of the trace
-        commit_segment(&trace, horizon, now, &mut states, &mut started, workload, &mut result);
+        commit_segment(&trace, horizon, now, &mut states, &mut started, &id2idx, &mut result);
         now += horizon;
 
         if arr_h <= intro_h {
@@ -257,7 +280,7 @@ pub fn simulate_with_controller(
             // zero-length segment), now seeing the injected tasks.
             arrival_replan(
                 policy, workload, cluster, &cfg, rng, &mut ctx, &mut states, &mut plan, &started, now,
-                &mut result,
+                &mut result, &id2idx, &mut scratch,
             );
             continue;
         }
@@ -285,23 +308,30 @@ pub fn simulate_with_controller(
             continue;
         }
         let proposal = policy.plan(&ctx, rng);
-        let proposal_choices = ordered_choices(&proposal);
+        ordered_choices_into(&proposal, &mut scratch.order, &mut scratch.proposal);
         // remaining makespan of the current plan if we keep going
         let keep_ms = seg_makespan - horizon;
         // proposed remaining makespan (planner estimates + switch costs)
-        let mut switch_states = states.clone();
-        let switched = mark_switches(&plan, &proposal_choices, &mut switch_states, cfg.switch_cost, workload);
-        let prop_ms = replay(&proposal_choices, &switch_states, workload, cluster).makespan();
+        scratch.switch_states.clear();
+        scratch.switch_states.extend_from_slice(&states);
+        let switched =
+            mark_switches(&plan, &scratch.proposal, &mut scratch.switch_states, cfg.switch_cost, &id2idx);
+        let prop_ms = replay_into(
+            &scratch.proposal,
+            &scratch.switch_states,
+            workload,
+            cluster,
+            &id2idx,
+            &mut scratch.replay_choices,
+        )
+        .makespan();
         if prop_ms <= keep_ms - ic.threshold {
-            plan = proposal_choices;
-            states = switch_states;
+            std::mem::swap(&mut plan, &mut scratch.proposal);
+            std::mem::swap(&mut states, &mut scratch.switch_states);
             result.switches += switched;
         } else {
             // keep the current plan: drop completed tasks from the order
-            plan.retain(|c| {
-                let idx = workload.iter().position(|t| t.id == c.task_id).unwrap();
-                states[idx].remaining > 1e-12
-            });
+            plan.retain(|c| states[id2idx[&c.task_id]].remaining > 1e-12);
         }
         if plan.is_empty() && !has_pending(&ctx, workload) {
             result.makespan = now;
@@ -351,6 +381,8 @@ fn arrival_replan(
     started: &[bool],
     now: f64,
     result: &mut SimResult,
+    id2idx: &HashMap<usize, usize>,
+    scratch: &mut ReplanScratch,
 ) {
     let n = workload.len();
     let mut newly: Vec<usize> = Vec::new();
@@ -370,25 +402,35 @@ fn arrival_replan(
         plan.clear();
         return;
     }
-    let proposal_choices = ordered_choices(&policy.plan(ctx, rng));
+    let proposal = policy.plan(ctx, rng);
+    ordered_choices_into(&proposal, &mut scratch.order, &mut scratch.proposal);
     // keep-alternative: the incumbent plan minus finished tasks...
-    let mut keep: Vec<PlacementChoice> = plan.clone();
-    keep.retain(|c| {
-        let idx = workload.iter().position(|t| t.id == c.task_id).unwrap();
-        states[idx].remaining > 1e-12
-    });
+    scratch.keep.clear();
+    scratch
+        .keep
+        .extend(plan.iter().filter(|c| states[id2idx[&c.task_id]].remaining > 1e-12).cloned());
     // switch costs are charged against the pre-append incumbent, so a
     // brand-new task is never billed for "moving"
-    let mut switch_states = states.clone();
-    let switched = mark_switches(&keep, &proposal_choices, &mut switch_states, cfg.switch_cost, workload);
-    let prop_ms = replay(&proposal_choices, &switch_states, workload, cluster).makespan();
+    scratch.switch_states.clear();
+    scratch.switch_states.extend_from_slice(states);
+    let switched =
+        mark_switches(&scratch.keep, &scratch.proposal, &mut scratch.switch_states, cfg.switch_cost, id2idx);
+    let prop_ms = replay_into(
+        &scratch.proposal,
+        &scratch.switch_states,
+        workload,
+        cluster,
+        id2idx,
+        &mut scratch.replay_choices,
+    )
+    .makespan();
     // ...with the new arrivals appended at their min-area configuration
     for &i in &newly {
         if states[i].remaining <= 1e-12 {
             continue;
         }
         if let Some(c) = ctx.min_area_config(i) {
-            keep.push(PlacementChoice {
+            scratch.keep.push(PlacementChoice {
                 task_id: workload[i].id,
                 duration: c.task_secs,
                 config: c,
@@ -396,53 +438,78 @@ fn arrival_replan(
             });
         }
     }
-    let keep_sched = replay(&keep, states, workload, cluster);
+    let keep_sched =
+        replay_into(&scratch.keep, states, workload, cluster, id2idx, &mut scratch.replay_choices);
     let keep_ms = keep_sched.makespan();
     let threshold = cfg.introspect.map_or(0.0, |ic| ic.threshold);
     let accept = prop_ms <= keep_ms - threshold
         || (switched == 0 && prop_ms <= keep_ms)
-        || keep.is_empty();
+        || scratch.keep.is_empty();
     if accept {
-        *plan = proposal_choices;
-        *states = switch_states;
+        std::mem::swap(plan, &mut scratch.proposal);
+        std::mem::swap(states, &mut scratch.switch_states);
         result.switches += switched;
     } else {
         // materialize concrete nodes for the appended arrivals — leaving
         // them node-less would let an in-flight gang silently migrate
         // between nodes (cost-free) on every later replay
-        *plan = ordered_choices(&keep_sched);
+        ordered_choices_into(&keep_sched, &mut scratch.order, plan);
     }
 }
 
-/// Extract a plan as an ordered choice list (by start time).
-fn ordered_choices(plan: &Schedule) -> Vec<PlacementChoice> {
-    let mut assigns = plan.assignments.clone();
-    assigns.sort_by(|a, b| a.start.total_cmp(&b.start).then(a.task_id.cmp(&b.task_id)));
-    assigns
-        .into_iter()
-        .map(|a| PlacementChoice { task_id: a.task_id, duration: a.duration, config: a.config, node: Some(a.node) })
-        .collect()
+/// Extract a plan as an ordered choice list (by start time) into `out`.
+/// Sorts indices instead of cloning the assignments: an `Assignment`
+/// clone carries a gang Vec and a TaskConfig, which the historical
+/// clone-then-sort paid once per assignment per re-plan.
+fn ordered_choices_into(plan: &Schedule, order: &mut Vec<usize>, out: &mut Vec<PlacementChoice>) {
+    order.clear();
+    order.extend(0..plan.assignments.len());
+    order.sort_by(|&x, &y| {
+        let (a, b) = (&plan.assignments[x], &plan.assignments[y]);
+        a.start.total_cmp(&b.start).then(a.task_id.cmp(&b.task_id))
+    });
+    out.clear();
+    out.extend(order.iter().map(|&i| {
+        let a = &plan.assignments[i];
+        PlacementChoice {
+            task_id: a.task_id,
+            duration: a.duration,
+            config: a.config.clone(),
+            node: Some(a.node),
+        }
+    }));
 }
 
-/// Re-schedule the plan's order with *actual* remaining durations.
-fn replay(plan: &[PlacementChoice], states: &[TaskState], workload: &Workload, cluster: &Cluster) -> Schedule {
-    let choices: Vec<PlacementChoice> = plan
-        .iter()
-        .filter_map(|c| {
-            let idx = workload.iter().position(|t| t.id == c.task_id)?;
-            let st = &states[idx];
-            if st.remaining <= 1e-12 {
-                return None;
-            }
-            // the plan's duration was estimated at plan-time remaining; the
-            // per-minibatch estimate is duration-invariant, so recompute
-            // from the config's full-task estimate
-            let full_est = workload[idx].total_runtime(c.config.minibatch_secs);
-            let actual = full_est * st.remaining * st.noise + st.penalty;
-            Some(PlacementChoice { task_id: c.task_id, duration: actual, config: c.config.clone(), node: c.node })
-        })
-        .collect();
-    list_schedule(&choices, cluster)
+/// Re-schedule the plan's order with *actual* remaining durations,
+/// building the choice list in `buf` (reused across calls).
+fn replay_into(
+    plan: &[PlacementChoice],
+    states: &[TaskState],
+    workload: &Workload,
+    cluster: &Cluster,
+    id2idx: &HashMap<usize, usize>,
+    buf: &mut Vec<PlacementChoice>,
+) -> Schedule {
+    buf.clear();
+    for c in plan {
+        let Some(&idx) = id2idx.get(&c.task_id) else { continue };
+        let st = &states[idx];
+        if st.remaining <= 1e-12 {
+            continue;
+        }
+        // the plan's duration was estimated at plan-time remaining; the
+        // per-minibatch estimate is duration-invariant, so recompute
+        // from the config's full-task estimate
+        let full_est = workload[idx].total_runtime(c.config.minibatch_secs);
+        let actual = full_est * st.remaining * st.noise + st.penalty;
+        buf.push(PlacementChoice {
+            task_id: c.task_id,
+            duration: actual,
+            config: c.config.clone(),
+            node: c.node,
+        });
+    }
+    list_schedule(buf, cluster)
 }
 
 /// Apply the executed portion of `trace` (relative times, cut at
@@ -453,11 +520,11 @@ fn commit_segment(
     now: f64,
     states: &mut [TaskState],
     started: &mut [bool],
-    workload: &Workload,
+    id2idx: &HashMap<usize, usize>,
     result: &mut SimResult,
 ) {
     for a in &trace.assignments {
-        let idx = workload.iter().position(|t| t.id == a.task_id).unwrap();
+        let idx = id2idx[&a.task_id];
         if a.start >= horizon {
             continue; // not started this segment
         }
@@ -504,17 +571,22 @@ fn mark_switches(
     new: &[PlacementChoice],
     states: &mut [TaskState],
     switch_cost: f64,
-    workload: &Workload,
+    id2idx: &HashMap<usize, usize>,
 ) -> usize {
+    // first-occurrence index of the old plan, matching the linear scan
+    // this replaces (O(n²) per re-plan on big online streams)
+    let mut old_by_id: HashMap<usize, &PlacementChoice> = HashMap::with_capacity(old.len());
+    for o in old {
+        old_by_id.entry(o.task_id).or_insert(o);
+    }
     let mut switched = 0;
     for c in new {
-        let prev = old.iter().find(|o| o.task_id == c.task_id);
-        let changed = match prev {
+        let changed = match old_by_id.get(&c.task_id) {
             Some(p) => p.config.gpus != c.config.gpus || p.config.upp != c.config.upp || p.node != c.node,
             None => false,
         };
         if changed {
-            if let Some(idx) = workload.iter().position(|t| t.id == c.task_id) {
+            if let Some(&idx) = id2idx.get(&c.task_id) {
                 states[idx].penalty += switch_cost;
             }
             switched += 1;
@@ -726,6 +798,78 @@ mod tests {
         assert!(r.makespan > 1e7, "makespan {} should extend past the arrival", r.makespan);
         let (_, start1) = r.starts.iter().find(|(id, _)| *id == w[1].id).unwrap();
         assert!(*start1 >= 1e7);
+    }
+
+    /// The scratch-reusing replay must reproduce the historical
+    /// fresh-allocation implementation exactly, across remaining/noise/
+    /// penalty combinations, including on a dirty reused buffer.
+    #[test]
+    fn replay_scratch_matches_fresh_alloc_reference() {
+        let c = Cluster::single_node_8gpu();
+        let (w, grid) = setup(&c);
+        let ctx = PlanCtx::fresh(&w, &grid, &c);
+        let mut prng = DetRng::new(40);
+        let plan_sched = JointOptimizer::default().plan(&ctx, &mut prng);
+        let mut order = Vec::new();
+        let mut plan = Vec::new();
+        ordered_choices_into(&plan_sched, &mut order, &mut plan);
+        let mut srng = DetRng::new(41);
+        let states: Vec<TaskState> = (0..w.len())
+            .map(|_| TaskState {
+                remaining: if srng.f64() < 0.2 { 0.0 } else { srng.f64() },
+                noise: srng.noise_factor(0.1),
+                penalty: if srng.f64() < 0.5 { 30.0 } else { 0.0 },
+            })
+            .collect();
+        let id2idx = ctx.id_index_map();
+        // the historical implementation: fresh Vec + linear id scans
+        let choices: Vec<PlacementChoice> = plan
+            .iter()
+            .filter_map(|ch| {
+                let idx = w.iter().position(|t| t.id == ch.task_id)?;
+                let st = &states[idx];
+                if st.remaining <= 1e-12 {
+                    return None;
+                }
+                let full_est = w[idx].total_runtime(ch.config.minibatch_secs);
+                let actual = full_est * st.remaining * st.noise + st.penalty;
+                Some(PlacementChoice {
+                    task_id: ch.task_id,
+                    duration: actual,
+                    config: ch.config.clone(),
+                    node: ch.node,
+                })
+            })
+            .collect();
+        let want = list_schedule(&choices, &c);
+        let mut buf = Vec::new();
+        let got = replay_into(&plan, &states, &w, &c, &id2idx, &mut buf);
+        assert_eq!(got, want, "scratch replay diverged from reference");
+        // second call on the now-dirty buffer must be byte-identical too
+        let again = replay_into(&plan, &states, &w, &c, &id2idx, &mut buf);
+        assert_eq!(again, want, "dirty-buffer replay diverged");
+    }
+
+    /// Scratch reuse must not leak state across rounds or arrival events:
+    /// two identical arrival-heavy introspection runs produce
+    /// byte-identical `SimResult`s — the full struct, spans included.
+    #[test]
+    fn sim_result_byte_identical_across_runs() {
+        let c = Cluster::single_node_8gpu();
+        let (mut w, grid) = setup(&c);
+        for (i, t) in w.iter_mut().enumerate() {
+            t.arrival = (i as f64) * 900.0; // sustained arrival stream
+        }
+        let cfg = SimConfig {
+            introspect: Some(IntrospectCfg { interval: 1500.0, threshold: 200.0 }),
+            ..Default::default()
+        };
+        let a = simulate(&JointOptimizer::default(), &w, &grid, &c, cfg, &mut DetRng::new(77));
+        let b = simulate(&JointOptimizer::default(), &w, &grid, &c, cfg, &mut DetRng::new(77));
+        assert_eq!(a, b, "SimResult must be byte-identical run to run");
+        assert_eq!(a.completions.len(), w.len());
+        assert!(a.arrival_events > 0, "stream must exercise the arrival path");
+        assert!(a.rounds > 0, "stream must exercise introspection rounds");
     }
 
     #[test]

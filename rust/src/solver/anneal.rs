@@ -1,0 +1,588 @@
+//! Speculative parallel annealing engine: the one generic loop behind
+//! every `JointOptimizer` search mode.
+//!
+//! Before this module, `solver/joint.rs` carried four copy-pasted
+//! annealing loops (delta/full-replay × cold/incremental) whose lockstep
+//! was enforced by a comment contract plus parity tests. They are now one
+//! loop, parameterized by [`AnnealParams`] (restart count, temperature
+//! schedule, movable set, evaluator backend) — and that one loop
+//! batch-evaluates candidate moves across worker threads:
+//!
+//! 1. **Draft.** A batch of K candidate moves is drawn *sequentially*
+//!    from the single [`DetRng`] stream (exactly the draw order a
+//!    sequential annealer would use), each captured as a forward
+//!    [`CandMove`] against the committed state and immediately undone.
+//! 2. **Speculate.** The K makespan evaluations — pure functions of the
+//!    committed state — fan out across a persistent worker pool
+//!    (`std::thread::scope` + channels). Each worker replays candidates
+//!    on a private state copy with its own scratch
+//!    ([`DeltaKernel::eval_move_readonly`], or [`FullScratch`] for the
+//!    A/B baseline), so nothing is shared mutably.
+//! 3. **Resolve.** Metropolis acceptance runs sequentially in draw
+//!    order; the first accepted move commits (the coordinator replays it
+//!    once through the kernel to refresh checkpoints) and later
+//!    speculated evaluations in the batch are discarded as stale.
+//!
+//! Because the RNG draw order, the acceptance draws, and every makespan
+//! are independent of how step 2 is scheduled, the trajectory — every
+//! incumbent, every eval/improvement count — is **bit-identical for
+//! every thread count** (`SATURN_THREADS` ∈ {1, 2, 4, 8, …}), which the
+//! thread-parity property tests assert end to end. Batch size adapts to
+//! the observed acceptance rate ([`Pacer`]): near 1 while accepts are
+//! frequent (early, hot temperatures — speculation would mostly be
+//! discarded), ramping toward [`BATCH_MAX`] at the low acceptance rates
+//! that dominate late annealing, where throughput approaches
+//! min(K, threads)× the sequential engine. See EXPERIMENTS.md §Perf.
+
+use super::delta::{apply_cand, undo_cand, CandMove, DeltaKernel, FullScratch, Mover, State};
+use super::joint::SolveStats;
+use crate::util::rng::DetRng;
+use crate::util::{Deadline, DeadlinePoll, DEADLINE_POLL_PERIOD};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+/// Hard cap on the speculative batch size (and thus on useful threads).
+pub(crate) const BATCH_MAX: usize = 64;
+
+/// Smallest batch worth shipping to the worker pool; below this the
+/// coordinator evaluates inline (channel round-trips would dominate).
+const PAR_MIN_BATCH: usize = 4;
+
+/// Smallest instance worth running the pool for at all: per-candidate
+/// evaluation on small instances is ~1 µs, under the cost of waking a
+/// worker.
+const PAR_MIN_TASKS: usize = 64;
+
+/// Everything one annealing run needs besides the seed state. The four
+/// historical loops differ only in these knobs:
+/// cold solve = `{restarts, iters_per_temp, init_temp_frac: 0.08}`,
+/// incremental re-solve = `{restarts: 1, iters_per_temp/2, 0.05}` over
+/// the unlocked `movable` subset; `full_replay` swaps the evaluator.
+pub(crate) struct AnnealParams<'a> {
+    /// Per-task (gpus, duration) tables.
+    pub durs: &'a [Vec<(usize, f64)>],
+    /// Per-node GPU counts.
+    pub node_gpus: &'a [usize],
+    /// Tasks whose configuration/node may change (order moves may touch
+    /// any position regardless — pinned tasks keep placement, not rank).
+    pub movable: &'a [usize],
+    /// Provable lower bound: reaching it ends the search.
+    pub lower_bound: f64,
+    /// Wall-clock budget (polled every [`DEADLINE_POLL_PERIOD`] evals).
+    pub deadline: Deadline,
+    /// Worker thread count (≥ 1, already resolved). Affects wall-clock
+    /// only, never the trajectory.
+    pub threads: usize,
+    /// Score with the legacy full-replay evaluator instead of the delta
+    /// kernel (A/B baseline; bit-identical trajectories either way).
+    pub full_replay: bool,
+    /// Annealing restarts (≥ 1); restarts > 0 perturb the incumbent.
+    pub restarts: usize,
+    /// Candidate evaluations per temperature level.
+    pub iters_per_temp: usize,
+    /// Initial temperature as a fraction of the seed makespan.
+    pub init_temp_frac: f64,
+}
+
+/// What an annealing run hands back to the caller.
+pub(crate) struct AnnealOutcome {
+    /// Best state found (the seed if nothing improved).
+    pub best: State,
+    /// Its makespan.
+    pub best_ms: f64,
+    /// Makespan of the seed state itself (`INFINITY` when the seed
+    /// cannot seat a feasible schedule — incremental re-solves fall back
+    /// to a cold solve on that signal).
+    pub seed_ms: f64,
+}
+
+/// Resolve a worker thread count: an explicit configuration pins it (the
+/// thread-parity tests compare counts in-process), `SATURN_THREADS`
+/// overrides the automatic default, otherwise all available cores —
+/// capped at [`BATCH_MAX`], the engine's maximum useful width, so the
+/// reported count always matches what actually runs.
+pub(crate) fn resolve_threads(cfg: usize) -> usize {
+    let auto = std::thread::available_parallelism().map_or(1, |n| n.get());
+    threads_from(cfg, std::env::var("SATURN_THREADS").ok().as_deref(), auto).min(BATCH_MAX)
+}
+
+/// Pure resolution order behind [`resolve_threads`]: config > env > auto.
+fn threads_from(cfg: usize, env: Option<&str>, auto: usize) -> usize {
+    if cfg > 0 {
+        return cfg;
+    }
+    if let Some(v) = env {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    auto.max(1)
+}
+
+/// Adaptive speculation depth: batch size tracks the expected number of
+/// candidates examined before an accept (≈ 1/acceptance-rate) over a
+/// decaying window, so speculation stays shallow while accepts are
+/// frequent and deepens as the search cools. Pure integer arithmetic on
+/// trajectory-determined counts — identical for every thread count.
+#[derive(Debug, Default)]
+struct Pacer {
+    /// Candidates examined in the current window.
+    evals: u32,
+    /// Accepts in the current window.
+    accepts: u32,
+}
+
+impl Pacer {
+    /// Next batch size.
+    fn next_k(&self) -> usize {
+        (self.evals / (self.accepts + 1) + 1).min(BATCH_MAX as u32) as usize
+    }
+
+    /// Record a batch: `examined` candidates were consumed up to (and
+    /// including) the first accept, if any.
+    fn record(&mut self, examined: usize, accepted: bool) {
+        self.evals += examined as u32;
+        self.accepts += u32::from(accepted);
+        if self.evals >= 256 {
+            // halve the window so the estimate tracks the current
+            // temperature level, not the whole run
+            self.evals /= 2;
+            self.accepts /= 2;
+        }
+    }
+}
+
+/// One speculative batch shipped to the pool: the committed base state,
+/// the kernel whose checkpoints candidates replay against, and the
+/// drafted moves. Wrapped in an `Arc` per batch; the coordinator
+/// reclaims the buffers afterwards, so steady state allocates nothing.
+struct BatchShared {
+    base: State,
+    kernel: Arc<DeltaKernel>,
+    cands: Vec<CandMove>,
+    multi: Vec<(usize, usize, usize)>,
+}
+
+/// A worker's slice of one batch. `out` is a recycled result buffer the
+/// worker fills and ships back — result Vecs round-trip through the pool
+/// just like the batch buffers, so the speculation loop's steady state
+/// really allocates nothing.
+struct Job {
+    shared: Arc<BatchShared>,
+    lo: usize,
+    hi: usize,
+    out: Vec<f64>,
+}
+
+/// The persistent worker pool (alive for one `anneal` call).
+struct Pool {
+    job_txs: Vec<mpsc::Sender<Job>>,
+    res_rx: mpsc::Receiver<(usize, Vec<f64>)>,
+    /// Result buffers reclaimed from completed jobs, reissued with the
+    /// next batch's jobs.
+    spare_results: Vec<Vec<f64>>,
+}
+
+/// Reusable coordinator-side buffers for drafting and scoring batches.
+#[derive(Default)]
+struct DraftBufs {
+    cands: Vec<CandMove>,
+    multi: Vec<(usize, usize, usize)>,
+    ms: Vec<f64>,
+    spare_base: Option<State>,
+}
+
+/// Per-thread evaluation scratch: a free-list replay buffer for the
+/// delta kernel's read-only suffix replay, or a [`FullScratch`] for the
+/// legacy evaluator.
+enum EvalScratch {
+    Delta { free: Vec<f64> },
+    Full(FullScratch),
+}
+
+impl EvalScratch {
+    fn new(full_replay: bool, node_gpus: &[usize]) -> Self {
+        if full_replay {
+            EvalScratch::Full(FullScratch::new(node_gpus))
+        } else {
+            EvalScratch::Delta { free: Vec::new() }
+        }
+    }
+
+    /// Score one candidate state (first difference from the committed
+    /// state at `p0`). Pure: identical results on every thread.
+    fn eval(
+        &mut self,
+        kernel: &DeltaKernel,
+        s: &State,
+        p0: usize,
+        durs: &[Vec<(usize, f64)>],
+    ) -> f64 {
+        match self {
+            EvalScratch::Delta { free } => kernel.eval_move_readonly(s, durs, p0, free),
+            EvalScratch::Full(fs) => fs.eval(s, durs),
+        }
+    }
+}
+
+/// Run one annealing search. Spawns the worker pool only when it can pay
+/// for itself (threads > 1 and a large enough instance); the trajectory
+/// is the same either way.
+pub(crate) fn anneal(
+    p: &AnnealParams,
+    seed: &State,
+    best_ms_init: f64,
+    rng: &mut DetRng,
+    stats: &mut SolveStats,
+) -> AnnealOutcome {
+    let nw = p.threads.max(1).min(BATCH_MAX);
+    if nw == 1 || seed.order.len() < PAR_MIN_TASKS {
+        return run(p, seed, best_ms_init, rng, stats, None);
+    }
+    std::thread::scope(|sc| {
+        let (res_tx, res_rx) = mpsc::channel::<(usize, Vec<f64>)>();
+        let mut job_txs = Vec::with_capacity(nw - 1);
+        for _ in 0..nw - 1 {
+            let (jtx, jrx) = mpsc::channel::<Job>();
+            job_txs.push(jtx);
+            let rtx = res_tx.clone();
+            let full_replay = p.full_replay;
+            let node_gpus = p.node_gpus;
+            let durs = p.durs;
+            sc.spawn(move || worker_loop(jrx, rtx, full_replay, node_gpus, durs));
+        }
+        // the coordinator holds no result sender: if every worker dies,
+        // recv reports it instead of blocking forever
+        drop(res_tx);
+        let mut pool = Pool { job_txs, res_rx, spare_results: Vec::new() };
+        run(p, seed, best_ms_init, rng, stats, Some(&mut pool))
+        // scope end drops `pool` (closing the job channels, so workers
+        // exit their recv loops) and then joins them
+    })
+}
+
+/// Worker: score assigned batch slices until the job channel closes.
+fn worker_loop(
+    jobs: mpsc::Receiver<Job>,
+    results: mpsc::Sender<(usize, Vec<f64>)>,
+    full_replay: bool,
+    node_gpus: &[usize],
+    durs: &[Vec<(usize, f64)>],
+) {
+    let mut scratch = EvalScratch::new(full_replay, node_gpus);
+    let mut local = State::default();
+    while let Ok(job) = jobs.recv() {
+        let Job { shared, lo, hi, mut out } = job;
+        out.clear();
+        {
+            let shared = &*shared;
+            // private copy of the committed state (capacity reused)
+            local.clone_from(&shared.base);
+            for c in &shared.cands[lo..hi] {
+                apply_cand(&mut local, c, &shared.multi);
+                out.push(scratch.eval(&shared.kernel, &local, c.p0, durs));
+                undo_cand(&mut local, c, &shared.multi);
+            }
+        }
+        // release the Arc before signalling so the coordinator can
+        // reclaim the batch buffers without a copy
+        drop(shared);
+        if results.send((lo, out)).is_err() {
+            return;
+        }
+    }
+}
+
+/// The generic annealing loop (see module docs). `pool: None` means the
+/// coordinator scores every batch inline — same trajectory, one thread.
+fn run(
+    p: &AnnealParams,
+    seed: &State,
+    best_ms_init: f64,
+    rng: &mut DetRng,
+    stats: &mut SolveStats,
+    mut pool: Option<&mut Pool>,
+) -> AnnealOutcome {
+    let n = seed.order.len();
+    let n_nodes = p.node_gpus.len();
+    let mut kernel = Arc::new(DeltaKernel::new(p.node_gpus.to_vec(), n));
+    let mut scratch = EvalScratch::new(p.full_replay, p.node_gpus);
+    let mut mover = Mover::new(n);
+    let mut poll = DeadlinePoll::new(p.deadline, DEADLINE_POLL_PERIOD);
+    let mut best = seed.clone();
+    let mut best_ms = best_ms_init;
+    let mut seed_ms = f64::INFINITY;
+    let mut bufs = DraftBufs::default();
+    let mut pacer = Pacer::default();
+    'outer: for restart in 0..p.restarts.max(1) {
+        let mut cur = if restart == 0 {
+            seed.clone()
+        } else {
+            // perturb: shuffle the order and randomize some configs
+            let mut s = best.clone();
+            rng.shuffle(&mut s.order);
+            for _ in 0..n / 2 + 1 {
+                let t = rng.below(n);
+                s.cfg[t] = rng.below(p.durs[t].len());
+            }
+            s
+        };
+        stats.evals += 1;
+        mover.rebuild_pos(&cur.order);
+        let mut cur_ms = if p.full_replay {
+            // p0 is ignored by the full evaluator: always a whole replay
+            scratch.eval(&kernel, &cur, 0, p.durs)
+        } else {
+            Arc::make_mut(&mut kernel).rebuild(&cur, p.durs)
+        };
+        if restart == 0 {
+            seed_ms = cur_ms;
+            if cur_ms < best_ms {
+                best_ms = cur_ms;
+            }
+        }
+        let mut temp = p.init_temp_frac * cur_ms.max(1e-9);
+        let min_temp = 1e-4 * cur_ms.max(1e-9);
+        while temp > min_temp {
+            let mut left = p.iters_per_temp;
+            while left > 0 {
+                let k = pacer.next_k().min(left);
+                if poll.expired_batch(k as u32) {
+                    break 'outer;
+                }
+                if k == 1 {
+                    // no speculation while accepts are likely: propose in
+                    // place, score, accept or undo — the classic loop
+                    let (undo, p0) = mover.propose(&mut cur, p.durs, n_nodes, rng, p.movable);
+                    stats.evals += 1;
+                    let ms = if p.full_replay {
+                        scratch.eval(&kernel, &cur, p0, p.durs)
+                    } else {
+                        Arc::make_mut(&mut kernel).eval_move(&cur, p.durs, p0)
+                    };
+                    let accepted = rng.metropolis(cur_ms, ms, temp);
+                    if accepted {
+                        if !p.full_replay {
+                            Arc::make_mut(&mut kernel).accept(p0, ms);
+                        }
+                        cur_ms = ms;
+                        if ms < best_ms - 1e-9 {
+                            best_ms = ms;
+                            best = cur.clone();
+                            stats.improvements += 1;
+                        }
+                    } else {
+                        mover.undo(&mut cur, undo);
+                    }
+                    pacer.record(1, accepted);
+                } else {
+                    draft(&mut bufs, k, &mut cur, &mut mover, p, rng);
+                    stats.evals += k;
+                    evaluate(&mut bufs, &mut cur, &kernel, &mut scratch, p, pool.as_deref_mut());
+                    // sequential Metropolis resolution in draw order: the
+                    // first accept commits, the rest of the batch is stale
+                    let mut examined = k;
+                    let mut accepted = false;
+                    for i in 0..k {
+                        let ms = bufs.ms[i];
+                        if rng.metropolis(cur_ms, ms, temp) {
+                            mover.apply_cand(&mut cur, &bufs.cands[i], &bufs.multi);
+                            if p.full_replay {
+                                cur_ms = ms;
+                            } else {
+                                // one committed replay refreshes the
+                                // kernel's checkpoints for the new state
+                                let kr = Arc::make_mut(&mut kernel);
+                                let committed = kr.eval_move(&cur, p.durs, bufs.cands[i].p0);
+                                debug_assert_eq!(
+                                    committed, ms,
+                                    "speculative eval diverged from committed replay"
+                                );
+                                kr.accept(bufs.cands[i].p0, committed);
+                                cur_ms = committed;
+                            }
+                            if cur_ms < best_ms - 1e-9 {
+                                best_ms = cur_ms;
+                                best = cur.clone();
+                                stats.improvements += 1;
+                            }
+                            examined = i + 1;
+                            accepted = true;
+                            break;
+                        }
+                    }
+                    pacer.record(examined, accepted);
+                }
+                left -= k;
+            }
+            if best_ms <= p.lower_bound * (1.0 + 1e-6) {
+                break 'outer; // provably optimal
+            }
+            temp *= 0.7;
+        }
+    }
+    AnnealOutcome { best, best_ms, seed_ms }
+}
+
+/// Draft `k` candidate moves sequentially from the RNG stream, capturing
+/// each as a forward record against the committed state.
+fn draft(
+    bufs: &mut DraftBufs,
+    k: usize,
+    cur: &mut State,
+    mover: &mut Mover,
+    p: &AnnealParams,
+    rng: &mut DetRng,
+) {
+    bufs.cands.clear();
+    bufs.multi.clear();
+    bufs.ms.clear();
+    bufs.ms.resize(k, 0.0);
+    for _ in 0..k {
+        let (undo, p0) = mover.propose(cur, p.durs, p.node_gpus.len(), rng, p.movable);
+        let cand = mover.capture(cur, &undo, p0, &mut bufs.multi);
+        mover.undo(cur, undo);
+        bufs.cands.push(cand);
+    }
+}
+
+/// Score a drafted batch into `bufs.ms`: fanned out across the pool when
+/// the batch is big enough to pay for the hand-off, inline otherwise.
+/// `cur` is used as replay scratch and always restored.
+fn evaluate(
+    bufs: &mut DraftBufs,
+    cur: &mut State,
+    kernel: &Arc<DeltaKernel>,
+    scratch: &mut EvalScratch,
+    p: &AnnealParams,
+    pool: Option<&mut Pool>,
+) {
+    let DraftBufs { cands, multi, ms, spare_base } = bufs;
+    let k = cands.len();
+    let pool = match pool {
+        Some(pl) if k >= PAR_MIN_BATCH && !pl.job_txs.is_empty() => pl,
+        _ => {
+            for (c, slot) in cands.iter().zip(ms.iter_mut()) {
+                apply_cand(cur, c, multi);
+                *slot = scratch.eval(kernel, cur, c.p0, p.durs);
+                undo_cand(cur, c, multi);
+            }
+            return;
+        }
+    };
+    let nw = (pool.job_txs.len() + 1).min(k);
+    let mut base = spare_base.take().unwrap_or_default();
+    base.clone_from(cur);
+    let shared = Arc::new(BatchShared {
+        base,
+        kernel: kernel.clone(),
+        cands: std::mem::take(cands),
+        multi: std::mem::take(multi),
+    });
+    // balanced split; the coordinator scores chunk 0 itself
+    let per = k / nw;
+    let rem = k % nw;
+    let c0 = per + usize::from(rem > 0);
+    let mut lo = c0;
+    let mut sent = 0usize;
+    for (w, jtx) in pool.job_txs.iter().enumerate().take(nw - 1) {
+        let len = per + usize::from(w + 1 < rem);
+        if len == 0 {
+            break;
+        }
+        let out = pool.spare_results.pop().unwrap_or_default();
+        jtx.send(Job { shared: shared.clone(), lo, hi: lo + len, out })
+            .expect("annealing worker channel closed");
+        sent += 1;
+        lo += len;
+    }
+    debug_assert_eq!(lo, k, "batch chunks must cover all candidates");
+    for i in 0..c0 {
+        let c = &shared.cands[i];
+        apply_cand(cur, c, &shared.multi);
+        ms[i] = scratch.eval(kernel, cur, c.p0, p.durs);
+        undo_cand(cur, c, &shared.multi);
+    }
+    for _ in 0..sent {
+        let (rlo, vals) = pool
+            .res_rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("annealing worker died mid-batch");
+        ms[rlo..rlo + vals.len()].copy_from_slice(&vals);
+        pool.spare_results.push(vals);
+    }
+    // reclaim the batch buffers (workers dropped their Arcs before
+    // reporting, so this is normally copy-free)
+    match Arc::try_unwrap(shared) {
+        Ok(sh) => {
+            *cands = sh.cands;
+            *multi = sh.multi;
+            *spare_base = Some(sh.base);
+        }
+        Err(arc) => {
+            cands.clone_from(&arc.cands);
+            multi.clone_from(&arc.multi);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pacer_stays_sequential_while_accepting() {
+        let mut p = Pacer::default();
+        for _ in 0..100 {
+            let k = p.next_k();
+            assert!(k <= 2, "k={k} while every move accepts");
+            p.record(k, true);
+        }
+    }
+
+    #[test]
+    fn pacer_ramps_to_cap_when_rejecting() {
+        let mut p = Pacer::default();
+        for _ in 0..100 {
+            let k = p.next_k();
+            p.record(k, false);
+        }
+        assert_eq!(p.next_k(), BATCH_MAX, "all-reject phase must reach the cap");
+        // an accept pulls speculation back in
+        p.record(1, true);
+        p.record(1, true);
+        p.record(1, true);
+        assert!(p.next_k() < BATCH_MAX);
+    }
+
+    #[test]
+    fn pacer_window_decays() {
+        let mut p = Pacer::default();
+        // a long accept-heavy phase...
+        for _ in 0..300 {
+            p.record(2, true);
+        }
+        assert!(p.next_k() <= 4);
+        // ...must be forgotten within a few hundred rejected evals
+        for _ in 0..40 {
+            p.record(8, false);
+        }
+        assert!(p.next_k() >= 8, "stale accepts kept k at {}", p.next_k());
+    }
+
+    #[test]
+    fn thread_resolution_precedence() {
+        // explicit config pins
+        assert_eq!(threads_from(3, Some("8"), 16), 3);
+        // env overrides the auto default
+        assert_eq!(threads_from(0, Some("8"), 16), 8);
+        assert_eq!(threads_from(0, Some(" 2 "), 16), 2);
+        // malformed or zero env falls through to auto
+        assert_eq!(threads_from(0, Some("zero"), 16), 16);
+        assert_eq!(threads_from(0, Some("0"), 16), 16);
+        assert_eq!(threads_from(0, None, 16), 16);
+        assert_eq!(threads_from(0, None, 0), 1);
+    }
+}

@@ -30,11 +30,27 @@
 //! this module and the solver-level parity tests in `joint.rs` /
 //! `tests/prop_invariants.rs` enforce it over thousands of random move
 //! sequences. See EXPERIMENTS.md §Perf for the evals/sec impact.
+//!
+//! The speculative parallel engine ([`super::anneal`]) adds a second
+//! consumer of this machinery: worker threads score whole *batches* of
+//! candidate moves against one committed state. To that end the module
+//! also provides
+//!
+//! - [`CandMove`]: a compact forward move record captured at draft time
+//!   ([`Mover::capture`]), applied/undone on a worker's private [`State`]
+//!   copy by [`apply_cand`] / [`undo_cand`] without a position index;
+//! - [`DeltaKernel::eval_move_readonly`]: the same suffix replay as
+//!   [`DeltaKernel::eval_move`] but side-effect free (`&self`, caller
+//!   scratch, no checkpoint staging), so any number of workers can score
+//!   candidates against one shared kernel concurrently;
+//! - [`FullScratch`]: the legacy full-replay evaluator (formerly
+//!   `joint.rs`'s private `Scratch`/`eval_fast`), now reusable per worker
+//!   so the A/B baseline parallelizes identically.
 
 use crate::util::rng::DetRng;
 
 /// Search state: one candidate SPASE solution.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub(crate) struct State {
     /// Per-task index into its configuration list.
     pub(crate) cfg: Vec<usize>,
@@ -53,7 +69,7 @@ pub(crate) struct State {
 /// from the nearest checkpoint; [`DeltaKernel::accept`] promotes the last
 /// evaluated candidate to committed (checkpoints staged during the replay
 /// are adopted), and a rejected candidate costs nothing beyond the replay.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub(crate) struct DeltaKernel {
     /// Per-node GPU counts.
     node_gpus: Vec<usize>,
@@ -123,47 +139,7 @@ impl DeltaKernel {
     /// the gang's end time. `None` when no candidate node is wide enough —
     /// the same infeasibility the full-replay evaluator maps to INFINITY.
     fn step(&mut self, g: usize, dur: f64, forced: Option<usize>) -> Option<f64> {
-        let (node, start) = match forced {
-            Some(ni) => {
-                if self.node_gpus[ni] < g {
-                    return None;
-                }
-                (ni, self.free[self.offsets[ni] + g - 1])
-            }
-            None => {
-                let mut best_node = usize::MAX;
-                let mut best_start = f64::INFINITY;
-                for ni in 0..self.node_gpus.len() {
-                    if self.node_gpus[ni] < g {
-                        continue;
-                    }
-                    // sorted segment: the g-th smallest free time is a
-                    // direct read, not a copy + sort
-                    let s = self.free[self.offsets[ni] + g - 1];
-                    if s < best_start {
-                        best_start = s;
-                        best_node = ni;
-                    }
-                }
-                if best_node == usize::MAX {
-                    return None;
-                }
-                (best_node, best_start)
-            }
-        };
-        let end = start + dur;
-        let off = self.offsets[node];
-        let width = self.node_gpus[node];
-        let seg = &mut self.free[off..off + width];
-        // occupy the g earliest-free GPUs: drop the first g entries, then
-        // splice g copies of `end` back in at their sorted position. The
-        // multiset evolves exactly as the full evaluator's g min-scans.
-        let hi = seg.partition_point(|&x| x <= end);
-        seg.copy_within(g..hi, 0);
-        for x in &mut seg[hi - g..hi] {
-            *x = end;
-        }
-        Some(end)
+        place_gang(&mut self.free, &self.node_gpus, &self.offsets, g, dur, forced)
     }
 
     /// Full replay of `s`, refreshing every checkpoint. Returns the
@@ -245,6 +221,187 @@ impl DeltaKernel {
         self.committed_ms = final_ms;
         self.valid_upto = self.n;
     }
+
+    /// Side-effect-free twin of [`Self::eval_move`] for speculative
+    /// workers: scores a candidate against the committed checkpoints
+    /// through `&self` and a caller-owned `free` scratch, staging nothing.
+    /// Returns makespans bit-identical to [`Self::eval_move`] — the
+    /// speculative engine relies on that to keep trajectories independent
+    /// of which thread scored a move (and asserts it on every accept in
+    /// debug builds).
+    pub(crate) fn eval_move_readonly(
+        &self,
+        s: &State,
+        durs: &[Vec<(usize, f64)>],
+        p0: usize,
+        free: &mut Vec<f64>,
+    ) -> f64 {
+        if p0 > self.valid_upto {
+            // the unchanged prefix already failed to place a gang
+            return f64::INFINITY;
+        }
+        if p0 >= self.n {
+            // no-op move: the candidate IS the committed state
+            return self.committed_ms;
+        }
+        let b0 = p0 / self.block;
+        let o0 = b0 * self.total;
+        free.clear();
+        free.extend_from_slice(&self.ckpt[o0..o0 + self.total]);
+        let mut ms = self.ckpt_ms[b0];
+        for pos in b0 * self.block..self.n {
+            let t = s.order[pos];
+            let (g, dur) = durs[t][s.cfg[t]];
+            match place_gang(free, &self.node_gpus, &self.offsets, g, dur, s.node[t]) {
+                Some(end) => ms = ms.max(end),
+                None => return f64::INFINITY,
+            }
+        }
+        ms
+    }
+}
+
+/// Place one gang on flat sorted free lists (shared by the kernel's
+/// committed replay and the workers' read-only replays): pick the
+/// earliest-start node (or the forced one), occupy the g earliest-free
+/// GPUs, return the gang's end time. `None` when no candidate node is
+/// wide enough.
+fn place_gang(
+    free: &mut [f64],
+    node_gpus: &[usize],
+    offsets: &[usize],
+    g: usize,
+    dur: f64,
+    forced: Option<usize>,
+) -> Option<f64> {
+    let (node, start) = match forced {
+        Some(ni) => {
+            if node_gpus[ni] < g {
+                return None;
+            }
+            (ni, free[offsets[ni] + g - 1])
+        }
+        None => {
+            let mut best_node = usize::MAX;
+            let mut best_start = f64::INFINITY;
+            for ni in 0..node_gpus.len() {
+                if node_gpus[ni] < g {
+                    continue;
+                }
+                // sorted segment: the g-th smallest free time is a
+                // direct read, not a copy + sort
+                let s = free[offsets[ni] + g - 1];
+                if s < best_start {
+                    best_start = s;
+                    best_node = ni;
+                }
+            }
+            if best_node == usize::MAX {
+                return None;
+            }
+            (best_node, best_start)
+        }
+    };
+    let end = start + dur;
+    let off = offsets[node];
+    let width = node_gpus[node];
+    let seg = &mut free[off..off + width];
+    // occupy the g earliest-free GPUs: drop the first g entries, then
+    // splice g copies of `end` back in at their sorted position. The
+    // multiset evolves exactly as the full evaluator's g min-scans.
+    let hi = seg.partition_point(|&x| x <= end);
+    seg.copy_within(g..hi, 0);
+    for x in &mut seg[hi - g..hi] {
+        *x = end;
+    }
+    Some(end)
+}
+
+/// Reusable buffers for the legacy full-replay evaluator (the annealing
+/// inner loop before the delta kernel, retained behind
+/// `JointOptimizer::full_replay` as the A/B baseline). One per worker in
+/// the speculative engine — evaluation is a pure function of the
+/// candidate state, so the baseline parallelizes exactly like the kernel.
+#[derive(Debug)]
+pub(crate) struct FullScratch {
+    node_gpus: Vec<usize>,
+    free: Vec<Vec<f64>>,
+    tmp: Vec<f64>,
+}
+
+/// The g-th smallest value of `xs` (gang start time), using `tmp` as
+/// scratch. Node GPU counts are ≤ 8–16, so a copy + partial sort wins
+/// over anything clever. (Legacy path only: the delta kernel keeps each
+/// node's free list sorted and reads the g-th entry directly.)
+fn kth_smallest(xs: &[f64], g: usize, tmp: &mut Vec<f64>) -> f64 {
+    tmp.clear();
+    tmp.extend_from_slice(xs);
+    tmp.sort_by(f64::total_cmp);
+    tmp[g - 1]
+}
+
+impl FullScratch {
+    /// Scratch for nodes with the given GPU counts.
+    pub(crate) fn new(node_gpus: &[usize]) -> Self {
+        Self {
+            node_gpus: node_gpus.to_vec(),
+            free: node_gpus.iter().map(|&n| Vec::with_capacity(n)).collect(),
+            tmp: Vec::new(),
+        }
+    }
+
+    /// Full-replay candidate evaluation: replays the gang list scheduler
+    /// over precomputed (gpus, duration) pairs, reusing this scratch.
+    /// Bit-identical to the delta kernel for every candidate (the
+    /// kernel-parity property tests assert it).
+    pub(crate) fn eval(&mut self, s: &State, durs: &[Vec<(usize, f64)>]) -> f64 {
+        for (f, &n) in self.free.iter_mut().zip(&self.node_gpus) {
+            f.clear();
+            f.resize(n, 0.0);
+        }
+        let mut makespan = 0.0f64;
+        for &t in &s.order {
+            let (g, dur) = durs[t][s.cfg[t]];
+            // earliest gang start across candidate nodes
+            let mut best_node = usize::MAX;
+            let mut best_start = f64::INFINITY;
+            match s.node[t] {
+                Some(n) if self.node_gpus[n] >= g => {
+                    best_node = n;
+                    best_start = kth_smallest(&self.free[n], g, &mut self.tmp);
+                }
+                Some(_) => return f64::INFINITY, // forced node too small
+                None => {
+                    for n in 0..self.node_gpus.len() {
+                        if self.node_gpus[n] < g {
+                            continue;
+                        }
+                        let start = kth_smallest(&self.free[n], g, &mut self.tmp);
+                        if start < best_start {
+                            best_start = start;
+                            best_node = n;
+                        }
+                    }
+                    if best_node == usize::MAX {
+                        return f64::INFINITY;
+                    }
+                }
+            }
+            let end = best_start + dur;
+            // occupy the g earliest-free GPUs on that node
+            let free = &mut self.free[best_node];
+            for _ in 0..g {
+                let (mi, _) = free
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1.total_cmp(b.1))
+                    .expect("non-empty");
+                free[mi] = end;
+            }
+            makespan = makespan.max(end);
+        }
+        makespan
+    }
 }
 
 /// What [`Mover::undo`] needs to restore the pre-move state.
@@ -285,6 +442,108 @@ pub(crate) enum UndoRec {
     MultiCfg,
 }
 
+/// One annealing move in forward form: enough to reconstruct the
+/// candidate from the committed base state on any thread (and to revert
+/// it), plus the first order position the move can affect. Captured by
+/// [`Mover::capture`] at draft time; block-move configuration changes
+/// live in a shared side buffer addressed by range so a whole batch of
+/// candidates stays allocation-free.
+#[derive(Debug, Clone)]
+pub(crate) struct CandMove {
+    /// The move itself.
+    pub(crate) kind: CandKind,
+    /// First order position the move can affect (`n` for no-ops).
+    pub(crate) p0: usize,
+}
+
+/// Forward move payload of a [`CandMove`].
+#[derive(Debug, Clone)]
+pub(crate) enum CandKind {
+    /// The move changed nothing.
+    Noop,
+    /// Task `t`'s configuration index `old` → `new`.
+    Cfg {
+        /// Task index.
+        t: usize,
+        /// Configuration index before the move.
+        old: usize,
+        /// Configuration index after the move.
+        new: usize,
+    },
+    /// Task `t`'s forced node `old` → `new`.
+    Node {
+        /// Task index.
+        t: usize,
+        /// Forced node before the move.
+        old: Option<usize>,
+        /// Forced node after the move.
+        new: Option<usize>,
+    },
+    /// Swap order positions `a` and `b` (self-inverse).
+    Swap {
+        /// First order position.
+        a: usize,
+        /// Second order position.
+        b: usize,
+    },
+    /// Move the element at `from` to `to`.
+    Shift {
+        /// Source position.
+        from: usize,
+        /// Destination position.
+        to: usize,
+    },
+    /// Block configuration move: `(task, old, new)` triples in the batch's
+    /// shared `multi` buffer, applied in order / reverted in reverse (the
+    /// same task can be drawn more than once).
+    MultiCfg {
+        /// Start of this move's triples in the shared buffer.
+        lo: usize,
+        /// One past the end of this move's triples.
+        hi: usize,
+    },
+}
+
+/// Apply a captured move to a state that equals the committed base. No
+/// position index is maintained — speculative workers only need the
+/// candidate's (cfg, order, node) for replay.
+pub(crate) fn apply_cand(s: &mut State, c: &CandMove, multi: &[(usize, usize, usize)]) {
+    match c.kind {
+        CandKind::Noop => {}
+        CandKind::Cfg { t, new, .. } => s.cfg[t] = new,
+        CandKind::Node { t, new, .. } => s.node[t] = new,
+        CandKind::Swap { a, b } => s.order.swap(a, b),
+        CandKind::Shift { from, to } => {
+            let v = s.order.remove(from);
+            s.order.insert(to, v);
+        }
+        CandKind::MultiCfg { lo, hi } => {
+            for &(t, _, new) in &multi[lo..hi] {
+                s.cfg[t] = new;
+            }
+        }
+    }
+}
+
+/// Revert [`apply_cand`], restoring the committed base exactly.
+pub(crate) fn undo_cand(s: &mut State, c: &CandMove, multi: &[(usize, usize, usize)]) {
+    match c.kind {
+        CandKind::Noop => {}
+        CandKind::Cfg { t, old, .. } => s.cfg[t] = old,
+        CandKind::Node { t, old, .. } => s.node[t] = old,
+        CandKind::Swap { a, b } => s.order.swap(a, b),
+        CandKind::Shift { from, to } => {
+            let v = s.order.remove(to);
+            s.order.insert(from, v);
+        }
+        CandKind::MultiCfg { lo, hi } => {
+            for &(t, old, _) in multi[lo..hi].iter().rev() {
+                s.cfg[t] = old;
+            }
+        }
+    }
+}
+
 /// In-place move application with an undo log.
 ///
 /// Replaces the clone-per-candidate `neighbor`: a rejected move costs an
@@ -298,8 +557,9 @@ pub(crate) enum UndoRec {
 pub(crate) struct Mover {
     /// Inverse permutation of `State::order`: `pos[task] = position`.
     pos: Vec<usize>,
-    /// Undo buffer for block configuration moves: `(task, old_cfg)`.
-    undo_buf: Vec<(usize, usize)>,
+    /// Undo buffer for block configuration moves:
+    /// `(task, old_cfg, new_cfg)` in draw order.
+    undo_buf: Vec<(usize, usize, usize)>,
 }
 
 impl Mover {
@@ -397,8 +657,9 @@ impl Mover {
                 let mut p0 = nt;
                 for _ in 0..(movable.len() / 4).max(1) {
                     let t = movable[rng.below(movable.len())];
-                    self.undo_buf.push((t, s.cfg[t]));
+                    let old = s.cfg[t];
                     s.cfg[t] = rng.below(durs[t].len());
+                    self.undo_buf.push((t, old, s.cfg[t]));
                     p0 = p0.min(self.pos[t]);
                 }
                 (UndoRec::MultiCfg, p0)
@@ -422,10 +683,54 @@ impl Mover {
                 }
             }
             UndoRec::MultiCfg => {
-                for &(t, old) in self.undo_buf.iter().rev() {
+                for &(t, old, _) in self.undo_buf.iter().rev() {
                     s.cfg[t] = old;
                 }
             }
+        }
+    }
+
+    /// Snapshot the move just applied by [`Self::propose`] (before it is
+    /// undone) as a forward [`CandMove`] for speculative evaluation. Must
+    /// be called while the move is still applied to `s` and before the
+    /// next `propose` (block moves read the mover's undo buffer, which the
+    /// next draft overwrites). Block-move triples are appended to `multi`,
+    /// the batch-shared side buffer.
+    pub(crate) fn capture(
+        &self,
+        s: &State,
+        rec: &UndoRec,
+        p0: usize,
+        multi: &mut Vec<(usize, usize, usize)>,
+    ) -> CandMove {
+        let kind = match *rec {
+            UndoRec::None => CandKind::Noop,
+            UndoRec::Cfg { t, old } => CandKind::Cfg { t, old, new: s.cfg[t] },
+            UndoRec::Node { t, old } => CandKind::Node { t, old, new: s.node[t] },
+            UndoRec::Swap { a, b } => CandKind::Swap { a, b },
+            UndoRec::Shift { from, to } => CandKind::Shift { from, to },
+            UndoRec::MultiCfg => {
+                let lo = multi.len();
+                multi.extend_from_slice(&self.undo_buf);
+                CandKind::MultiCfg { lo, hi: multi.len() }
+            }
+        };
+        CandMove { kind, p0 }
+    }
+
+    /// Commit a captured move to the coordinator's state, maintaining the
+    /// position index (unlike the free-function [`apply_cand`], which
+    /// speculative workers use on private copies).
+    pub(crate) fn apply_cand(
+        &mut self,
+        s: &mut State,
+        c: &CandMove,
+        multi: &[(usize, usize, usize)],
+    ) {
+        match c.kind {
+            CandKind::Swap { a, b } => self.swap(s, a, b),
+            CandKind::Shift { from, to } => self.shift(s, from, to),
+            _ => apply_cand(s, c, multi),
         }
     }
 
@@ -551,17 +856,43 @@ mod tests {
             let mut s = random_state(&mut rng, &durs, node_gpus.len(), true);
             let mut kernel = DeltaKernel::new(node_gpus.clone(), nt);
             let mut mover = Mover::new(nt);
+            let mut full = FullScratch::new(&node_gpus);
             mover.rebuild_pos(&s.order);
             let ms0 = kernel.rebuild(&s, &durs);
             assert_eq!(ms0, eval_reference(&s, &durs, &node_gpus), "case {case}: rebuild");
             let movable: Vec<usize> = (0..nt).collect();
             let mut committed = ms0;
+            let mut multi: Vec<(usize, usize, usize)> = Vec::new();
+            let mut ro_free: Vec<f64> = Vec::new();
             for step in 0..300 {
                 let snapshot = s.clone();
                 let (undo, p0) = mover.propose(&mut s, &durs, node_gpus.len(), &mut rng, &movable);
+                // forward capture: applying the record to the pre-move base
+                // must reproduce the moved state, and undoing it must
+                // restore the base — the speculative workers' contract
+                multi.clear();
+                let cand = mover.capture(&s, &undo, p0, &mut multi);
+                let mut rebuilt = snapshot.clone();
+                apply_cand(&mut rebuilt, &cand, &multi);
+                assert_eq!(rebuilt.cfg, s.cfg, "case {case} step {step}: cand apply cfg");
+                assert_eq!(rebuilt.order, s.order, "case {case} step {step}: cand apply order");
+                assert_eq!(rebuilt.node, s.node, "case {case} step {step}: cand apply node");
+                undo_cand(&mut rebuilt, &cand, &multi);
+                assert_eq!(rebuilt.cfg, snapshot.cfg, "case {case} step {step}: cand undo cfg");
+                assert_eq!(rebuilt.order, snapshot.order, "case {case} step {step}: cand undo order");
+                assert_eq!(rebuilt.node, snapshot.node, "case {case} step {step}: cand undo node");
+                // the read-only (worker) replay must agree bit for bit with
+                // the staging replay before the latter runs
+                let ms_ro = kernel.eval_move_readonly(&s, &durs, p0, &mut ro_free);
                 let ms = kernel.eval_move(&s, &durs, p0);
+                assert_eq!(ms, ms_ro, "case {case} step {step}: readonly eval diverged (p0={p0})");
                 let reference = eval_reference(&s, &durs, &node_gpus);
                 assert_eq!(ms, reference, "case {case} step {step}: delta != full replay (p0={p0})");
+                assert_eq!(
+                    full.eval(&s, &durs),
+                    reference,
+                    "case {case} step {step}: FullScratch != reference"
+                );
                 if ms.is_infinite() {
                     infeasible_seen += 1;
                 }

@@ -15,26 +15,31 @@
 //! - task order (the gang list scheduler turns an order into start times),
 //! - optional forced node per task,
 //!
-//! evaluated through the **delta kernel** ([`super::delta`]): moves are
-//! applied in place with an undo log, candidates are scored by replaying
-//! only the schedule suffix a move can affect (block checkpoints every
-//! ~√n positions, sorted per-node free lists), and the wall-clock deadline
-//! is polled every few dozen iterations instead of per candidate. The
-//! legacy full-replay evaluator is retained behind
-//! [`JointOptimizer::full_replay`] for A/B benchmarking; both paths draw
-//! from the RNG identically and produce bit-identical trajectories, which
-//! the kernel-parity tests assert end to end. Evals/sec at 100+-task
+//! run through the **speculative parallel annealing engine**
+//! ([`super::anneal`]): one generic loop serves every mode (cold solve and
+//! incremental re-solve, delta kernel and full-replay A/B baseline),
+//! drafting batches of candidate moves from the single RNG stream,
+//! fanning their evaluations across worker threads, and resolving
+//! Metropolis acceptance sequentially in draw order. Candidates are
+//! scored by the **delta kernel** ([`super::delta`]) — suffix-only
+//! replay from ~√n block checkpoints over sorted per-node free lists —
+//! or by the retained full-replay evaluator behind
+//! [`JointOptimizer::full_replay`]; both produce bit-identical
+//! trajectories, as does **every thread count**
+//! ([`JointOptimizer::threads`] / `SATURN_THREADS`), which the parity and
+//! thread-determinism tests assert end to end. Evals/sec at 100+-task
 //! scale is the point — see EXPERIMENTS.md §Perf. Tests cross-validate
 //! against the exact MILP on tiny instances and against lower bounds on
 //! larger ones.
 
-use super::delta::{DeltaKernel, Mover, State};
+use super::anneal::{self, AnnealParams};
+use super::delta::State;
 use super::policy::{PlanCtx, Policy};
 use super::spase::SpaseTask;
 use crate::cluster::Cluster;
 use crate::sched::{list_schedule, PlacementChoice, Schedule};
 use crate::util::rng::DetRng;
-use crate::util::{Deadline, DeadlinePoll, DEADLINE_POLL_PERIOD};
+use crate::util::Deadline;
 use std::time::Duration;
 
 /// Anytime SPASE optimizer (Saturn's Joint Optimizer).
@@ -54,13 +59,27 @@ pub struct JointOptimizer {
     /// of solving the full problem from scratch.
     pub incremental: bool,
     /// Score annealing candidates with the legacy full-replay evaluator
-    /// (clone-per-candidate `neighbor` + whole-schedule replay) instead of
-    /// the delta kernel. Kept for A/B benchmarking and the kernel-parity
-    /// tests: both paths consume the RNG identically and return
-    /// bit-identical makespans, so with the same seed and an un-truncated
-    /// budget they land on the same incumbent — the delta kernel just gets
-    /// there orders of magnitude cheaper per move (EXPERIMENTS.md §Perf).
+    /// (whole-schedule replay per candidate) instead of the delta kernel.
+    /// Kept for A/B benchmarking and the kernel-parity tests: both
+    /// evaluators run through the same engine loop, consume the RNG
+    /// identically, and return bit-identical makespans, so with the same
+    /// seed and an un-truncated budget they land on the same incumbent —
+    /// the delta kernel just gets there orders of magnitude cheaper per
+    /// move (EXPERIMENTS.md §Perf).
     pub full_replay: bool,
+    /// Worker threads for speculative batch evaluation. `0` = automatic:
+    /// the `SATURN_THREADS` environment variable if set, else all
+    /// available cores. An explicit value pins the count (the
+    /// thread-determinism tests compare counts in-process); resolution is
+    /// capped at the engine's maximum useful width (the 64-wide batch
+    /// limit). Thread count affects wall-clock only — the search
+    /// trajectory is bit-identical for every value.
+    pub threads: usize,
+    /// Fraction of [`Self::timeout`] granted to an incremental re-solve
+    /// (the point of warm-starting is a much smaller budget than a cold
+    /// solve). The online coordinator tunes this against its arrival
+    /// rate; the historical hardcoded `timeout / 4` is the default.
+    pub warm_frac: f64,
 }
 
 impl Default for JointOptimizer {
@@ -71,26 +90,10 @@ impl Default for JointOptimizer {
             iters_per_temp: 400,
             incremental: false,
             full_replay: false,
+            threads: 0,
+            warm_frac: 0.25,
         }
     }
-}
-
-/// Reusable buffers for the legacy full-replay evaluator.
-struct Scratch {
-    node_gpus: Vec<usize>,
-    free: Vec<Vec<f64>>,
-    tmp: Vec<f64>,
-}
-
-/// The g-th smallest value of `xs` (gang start time), using `tmp` as
-/// scratch. Node GPU counts are ≤ 8–16, so a copy + partial sort wins
-/// over anything clever. (Legacy path only: the delta kernel keeps each
-/// node's free list sorted and reads the g-th entry directly.)
-fn kth_smallest(xs: &[f64], g: usize, tmp: &mut Vec<f64>) -> f64 {
-    tmp.clear();
-    tmp.extend_from_slice(xs);
-    tmp.sort_by(f64::total_cmp);
-    tmp[g - 1]
 }
 
 /// Solve statistics (reported in experiment output).
@@ -139,175 +142,63 @@ impl JointOptimizer {
         Self { incremental: true, ..Self::default() }
     }
 
-    /// Solve a SPASE instance, returning the plan and search statistics.
-    pub fn solve(&self, tasks: &[SpaseTask], cluster: &Cluster, rng: &mut DetRng) -> (Schedule, SolveStats) {
-        if self.full_replay {
-            return self.solve_full_replay(tasks, cluster, rng);
-        }
-        let mut stats = SolveStats::default();
-        if tasks.is_empty() {
-            return (Schedule::default(), stats);
-        }
-        let start = std::time::Instant::now();
-        let deadline = Deadline::after(self.timeout);
-        let nt = tasks.len();
-        let durs = duration_table(tasks);
-
-        // ---- warm starts -------------------------------------------------
-        let (mut best_state, mut best_sched, mut best_ms) =
-            self.warm_starts(tasks, cluster, rng, &mut stats);
-        stats.warm_makespan = best_ms;
-
-        // ---- annealing with restarts (delta kernel) ---------------------
-        let lb = Self::lower_bound(tasks, cluster);
-        let movable: Vec<usize> = (0..nt).collect();
-        let mut kernel = DeltaKernel::new(cluster.nodes.iter().map(|n| n.gpus).collect(), nt);
-        let mut mover = Mover::new(nt);
-        let mut poll = DeadlinePoll::new(deadline, DEADLINE_POLL_PERIOD);
-        'outer: for restart in 0..self.restarts.max(1) {
-            let mut cur = if restart == 0 {
-                best_state.clone()
-            } else {
-                let mut s = best_state.clone();
-                // perturb: shuffle a prefix and randomize some configs
-                rng.shuffle(&mut s.order);
-                for _ in 0..nt / 2 + 1 {
-                    let t = rng.below(nt);
-                    s.cfg[t] = rng.below(tasks[t].configs.len());
-                }
-                s
-            };
-            stats.evals += 1;
-            mover.rebuild_pos(&cur.order);
-            let mut cur_ms = kernel.rebuild(&cur, &durs);
-            let mut temp = 0.08 * cur_ms.max(1e-9);
-            let min_temp = 1e-4 * cur_ms.max(1e-9);
-            while temp > min_temp {
-                for _ in 0..self.iters_per_temp {
-                    if poll.expired() {
-                        break 'outer;
-                    }
-                    let (undo, p0) = mover.propose(&mut cur, &durs, cluster.nodes.len(), rng, &movable);
-                    stats.evals += 1;
-                    let ms = kernel.eval_move(&cur, &durs, p0);
-                    let accept = ms < cur_ms || rng.f64() < ((cur_ms - ms) / temp).exp();
-                    if accept {
-                        kernel.accept(p0, ms);
-                        cur_ms = ms;
-                        if ms < best_ms - 1e-9 {
-                            best_ms = ms;
-                            best_state = cur.clone();
-                            stats.improvements += 1;
-                        }
-                    } else {
-                        mover.undo(&mut cur, undo);
-                    }
-                }
-                if best_ms <= lb * (1.0 + 1e-6) {
-                    break 'outer; // provably optimal
-                }
-                temp *= 0.7;
-            }
-        }
-
-        // materialize the incumbent's full schedule once
-        let (sched, ms) = self.eval(&best_state, tasks, cluster, &mut stats);
-        if ms <= best_ms + 1e-9 {
-            best_sched = sched;
-            best_ms = ms;
-        }
-        stats.final_makespan = best_ms;
-        stats.elapsed_secs = start.elapsed().as_secs_f64();
-        stats.evals_per_sec = stats.evals as f64 / stats.elapsed_secs.max(1e-12);
-        (best_sched, stats)
+    /// The worker thread count this configuration resolves to
+    /// (config > `SATURN_THREADS` > available cores).
+    pub fn resolved_threads(&self) -> usize {
+        anneal::resolve_threads(self.threads)
     }
 
-    /// Legacy solve path: identical search, but every candidate is a fresh
-    /// clone scored by a full schedule replay ([`Self::eval_fast`]) and the
-    /// deadline is polled per candidate. Retained behind
-    /// [`JointOptimizer::full_replay`] as the A/B baseline for the delta
-    /// kernel (EXPERIMENTS.md §Perf).
+    /// The wall-clock budget of an incremental re-solve:
+    /// `timeout × warm_frac`, guarding against nonsensical fractions.
+    fn warm_budget(&self) -> Duration {
+        let frac = if self.warm_frac.is_finite() && self.warm_frac > 0.0 {
+            self.warm_frac.min(1.0)
+        } else {
+            0.25
+        };
+        self.timeout.mul_f64(frac)
+    }
+
+    /// Solve a SPASE instance, returning the plan and search statistics.
     ///
-    /// LOCKSTEP CONTRACT: this loop and [`Self::solve`] (and likewise the
-    /// `resolve_incremental` pair) must stay draw-for-draw equivalent —
-    /// same RNG consumption, same acceptance rule, same temperature
-    /// schedule, same stats accounting. Any tweak to one must be mirrored
-    /// in the other or the A/B comparison silently becomes apples-to-
-    /// oranges; the `*_matches_full_replay_trajectory` and
-    /// `prop_*_agree` tests exist to catch exactly that.
-    fn solve_full_replay(
-        &self,
-        tasks: &[SpaseTask],
-        cluster: &Cluster,
-        rng: &mut DetRng,
-    ) -> (Schedule, SolveStats) {
+    /// Warm starts seed the speculative annealing engine
+    /// ([`super::anneal`]); the evaluator backend follows
+    /// [`Self::full_replay`] and the thread count [`Self::threads`] —
+    /// neither changes the trajectory, only the wall-clock.
+    pub fn solve(&self, tasks: &[SpaseTask], cluster: &Cluster, rng: &mut DetRng) -> (Schedule, SolveStats) {
         let mut stats = SolveStats::default();
         if tasks.is_empty() {
             return (Schedule::default(), stats);
         }
         let start = std::time::Instant::now();
         let deadline = Deadline::after(self.timeout);
-        let nt = tasks.len();
         let durs = duration_table(tasks);
-        let mut scratch = Scratch {
-            node_gpus: cluster.nodes.iter().map(|n| n.gpus).collect(),
-            free: cluster.nodes.iter().map(|n| Vec::with_capacity(n.gpus)).collect(),
-            tmp: Vec::new(),
-        };
+        let node_gpus: Vec<usize> = cluster.nodes.iter().map(|n| n.gpus).collect();
 
         // ---- warm starts -------------------------------------------------
-        let (mut best_state, mut best_sched, mut best_ms) =
+        let (best_state, mut best_sched, mut best_ms) =
             self.warm_starts(tasks, cluster, rng, &mut stats);
         stats.warm_makespan = best_ms;
 
-        // ---- annealing with restarts ------------------------------------
-        let lb = Self::lower_bound(tasks, cluster);
-        let movable: Vec<usize> = (0..nt).collect();
-        'outer: for restart in 0..self.restarts.max(1) {
-            let mut cur = if restart == 0 {
-                best_state.clone()
-            } else {
-                let mut s = best_state.clone();
-                // perturb: shuffle a prefix and randomize some configs
-                rng.shuffle(&mut s.order);
-                for _ in 0..nt / 2 + 1 {
-                    let t = rng.below(nt);
-                    s.cfg[t] = rng.below(tasks[t].configs.len());
-                }
-                s
-            };
-            stats.evals += 1;
-            let mut cur_ms = Self::eval_fast(&cur, &durs, &mut scratch);
-            let mut temp = 0.08 * cur_ms.max(1e-9);
-            let min_temp = 1e-4 * cur_ms.max(1e-9);
-            while temp > min_temp {
-                for _ in 0..self.iters_per_temp {
-                    if deadline.expired() {
-                        break 'outer;
-                    }
-                    let cand = self.neighbor(&cur, tasks, cluster, rng, &movable);
-                    stats.evals += 1;
-                    let ms = Self::eval_fast(&cand, &durs, &mut scratch);
-                    let accept = ms < cur_ms || rng.f64() < ((cur_ms - ms) / temp).exp();
-                    if accept {
-                        cur = cand;
-                        cur_ms = ms;
-                        if ms < best_ms - 1e-9 {
-                            best_ms = ms;
-                            best_state = cur.clone();
-                            stats.improvements += 1;
-                        }
-                    }
-                }
-                if best_ms <= lb * (1.0 + 1e-6) {
-                    break 'outer; // provably optimal
-                }
-                temp *= 0.7;
-            }
-        }
+        // ---- speculative annealing with restarts ------------------------
+        let movable: Vec<usize> = (0..tasks.len()).collect();
+        let params = AnnealParams {
+            durs: &durs,
+            node_gpus: &node_gpus,
+            movable: &movable,
+            lower_bound: Self::lower_bound(tasks, cluster),
+            deadline,
+            threads: self.resolved_threads(),
+            full_replay: self.full_replay,
+            restarts: self.restarts.max(1),
+            iters_per_temp: self.iters_per_temp,
+            init_temp_frac: 0.08,
+        };
+        let out = anneal::anneal(&params, &best_state, best_ms, rng, &mut stats);
+        best_ms = out.best_ms;
 
         // materialize the incumbent's full schedule once
-        let (sched, ms) = self.eval(&best_state, tasks, cluster, &mut stats);
+        let (sched, ms) = self.eval(&out.best, tasks, cluster, &mut stats);
         if ms <= best_ms + 1e-9 {
             best_sched = sched;
             best_ms = ms;
@@ -338,61 +229,6 @@ impl JointOptimizer {
             .map(|t| t.configs.iter().map(|c| c.task_secs).fold(f64::INFINITY, f64::min))
             .fold(0.0, f64::max);
         area.max(longest)
-    }
-
-    /// Legacy full-replay candidate evaluation: replays the gang list
-    /// scheduler over precomputed (gpus, duration) pairs, reusing scratch
-    /// buffers. This was the annealing inner loop before the delta kernel
-    /// ([`super::delta::DeltaKernel`]) replaced it — see EXPERIMENTS.md
-    /// §Perf for the before/after — and it remains both the A/B baseline
-    /// and the reference the kernel's property tests compare against.
-    fn eval_fast(s: &State, durs: &[Vec<(usize, f64)>], scratch: &mut Scratch) -> f64 {
-        for (f, &n) in scratch.free.iter_mut().zip(&scratch.node_gpus) {
-            f.clear();
-            f.resize(n, 0.0);
-        }
-        let mut makespan = 0.0f64;
-        for &t in &s.order {
-            let (g, dur) = durs[t][s.cfg[t]];
-            // earliest gang start across candidate nodes
-            let mut best_node = usize::MAX;
-            let mut best_start = f64::INFINITY;
-            match s.node[t] {
-                Some(n) if scratch.node_gpus[n] >= g => {
-                    best_node = n;
-                    best_start = kth_smallest(&scratch.free[n], g, &mut scratch.tmp);
-                }
-                Some(_) => return f64::INFINITY, // forced node too small
-                None => {
-                    for n in 0..scratch.node_gpus.len() {
-                        if scratch.node_gpus[n] < g {
-                            continue;
-                        }
-                        let start = kth_smallest(&scratch.free[n], g, &mut scratch.tmp);
-                        if start < best_start {
-                            best_start = start;
-                            best_node = n;
-                        }
-                    }
-                    if best_node == usize::MAX {
-                        return f64::INFINITY;
-                    }
-                }
-            }
-            let end = best_start + dur;
-            // occupy the g earliest-free GPUs on that node
-            let free = &mut scratch.free[best_node];
-            for _ in 0..g {
-                let (mi, _) = free
-                    .iter()
-                    .enumerate()
-                    .min_by(|a, b| a.1.total_cmp(b.1))
-                    .expect("non-empty");
-                free[mi] = end;
-            }
-            makespan = makespan.max(end);
-        }
-        makespan
     }
 
     fn eval(&self, s: &State, tasks: &[SpaseTask], cluster: &Cluster, stats: &mut SolveStats) -> (Schedule, f64) {
@@ -468,15 +304,11 @@ impl JointOptimizer {
 
     /// Incremental re-solve (online arrivals): seed the search from the
     /// context's incumbent plan, keep pinned in-flight tasks' (config,
-    /// node) fixed, and run a single short annealing pass — through the
-    /// delta kernel, which is what keeps per-arrival re-planning affordable
-    /// on 100+-task streams — over the new and not-yet-started decisions.
-    /// Falls back to a cold [`Self::solve`] when the incumbent cannot seat
-    /// a feasible schedule.
+    /// node) fixed, and run a single short engine pass — [`Self::warm_frac`]
+    /// of the cold budget, half the iterations, a cooler start — over the
+    /// new and not-yet-started decisions. Falls back to a cold
+    /// [`Self::solve`] when the incumbent cannot seat a feasible schedule.
     pub fn resolve_incremental(&self, ctx: &PlanCtx, rng: &mut DetRng) -> (Schedule, SolveStats) {
-        if self.full_replay {
-            return self.resolve_incremental_full_replay(ctx, rng);
-        }
         let tasks = ctx.spase_tasks();
         let cluster = ctx.cluster;
         let mut stats = SolveStats::default();
@@ -485,213 +317,40 @@ impl JointOptimizer {
         }
         let start = std::time::Instant::now();
         // a fraction of the cold budget: the point of warm-starting
-        let deadline = Deadline::after(self.timeout / 4);
+        let deadline = Deadline::after(self.warm_budget());
         let nt = tasks.len();
         let (seed, locked) = self.incremental_seed(ctx, &tasks);
         let durs = duration_table(&tasks);
-
-        let mut kernel = DeltaKernel::new(cluster.nodes.iter().map(|n| n.gpus).collect(), nt);
-        let mut mover = Mover::new(nt);
-        stats.evals += 1;
-        let mut best_state = seed.clone();
-        mover.rebuild_pos(&seed.order);
-        let mut best_ms = kernel.rebuild(&seed, &durs);
-        stats.warm_makespan = best_ms;
-        if !best_ms.is_finite() {
-            // incumbent cannot seat the current task set: cold-solve
-            return self.solve(&tasks, cluster, rng);
-        }
+        let node_gpus: Vec<usize> = cluster.nodes.iter().map(|n| n.gpus).collect();
 
         // one short annealing pass; locked tasks keep (config, node)
-        let lb = Self::lower_bound(&tasks, cluster);
         let movable: Vec<usize> = (0..nt).filter(|&t| !locked[t]).collect();
-        let iters = (self.iters_per_temp / 2).max(50);
-        let mut cur = seed;
-        let mut cur_ms = best_ms;
-        let mut temp = 0.05 * cur_ms.max(1e-9);
-        let min_temp = 1e-4 * cur_ms.max(1e-9);
-        let mut poll = DeadlinePoll::new(deadline, DEADLINE_POLL_PERIOD);
-        'outer: while temp > min_temp {
-            for _ in 0..iters {
-                if poll.expired() {
-                    break 'outer;
-                }
-                let (undo, p0) = mover.propose(&mut cur, &durs, cluster.nodes.len(), rng, &movable);
-                stats.evals += 1;
-                let ms = kernel.eval_move(&cur, &durs, p0);
-                let accept = ms < cur_ms || rng.f64() < ((cur_ms - ms) / temp).exp();
-                if accept {
-                    kernel.accept(p0, ms);
-                    cur_ms = ms;
-                    if ms < best_ms - 1e-9 {
-                        best_ms = ms;
-                        best_state = cur.clone();
-                        stats.improvements += 1;
-                    }
-                } else {
-                    mover.undo(&mut cur, undo);
-                }
-            }
-            if best_ms <= lb * (1.0 + 1e-6) {
-                break; // provably optimal
-            }
-            temp *= 0.7;
-        }
-
-        let (sched, ms) = self.eval(&best_state, &tasks, cluster, &mut stats);
-        stats.final_makespan = if ms.is_finite() { ms } else { best_ms };
-        stats.elapsed_secs = start.elapsed().as_secs_f64();
-        stats.evals_per_sec = stats.evals as f64 / stats.elapsed_secs.max(1e-12);
-        (sched, stats)
-    }
-
-    /// Legacy incremental path (full-replay evaluator, per-candidate
-    /// deadline polls). A/B baseline for `bench_online`. Subject to the
-    /// same LOCKSTEP CONTRACT as [`Self::solve_full_replay`]: keep this
-    /// loop draw-for-draw equivalent to [`Self::resolve_incremental`].
-    fn resolve_incremental_full_replay(&self, ctx: &PlanCtx, rng: &mut DetRng) -> (Schedule, SolveStats) {
-        let tasks = ctx.spase_tasks();
-        let cluster = ctx.cluster;
-        let mut stats = SolveStats::default();
-        if tasks.is_empty() {
-            return (Schedule::default(), stats);
-        }
-        let start = std::time::Instant::now();
-        let deadline = Deadline::after(self.timeout / 4);
-        let nt = tasks.len();
-        let (seed, locked) = self.incremental_seed(ctx, &tasks);
-        let durs = duration_table(&tasks);
-        let mut scratch = Scratch {
-            node_gpus: cluster.nodes.iter().map(|n| n.gpus).collect(),
-            free: cluster.nodes.iter().map(|n| Vec::with_capacity(n.gpus)).collect(),
-            tmp: Vec::new(),
+        let params = AnnealParams {
+            durs: &durs,
+            node_gpus: &node_gpus,
+            movable: &movable,
+            lower_bound: Self::lower_bound(&tasks, cluster),
+            deadline,
+            threads: self.resolved_threads(),
+            full_replay: self.full_replay,
+            restarts: 1,
+            iters_per_temp: (self.iters_per_temp / 2).max(50),
+            init_temp_frac: 0.05,
         };
-        stats.evals += 1;
-        let mut best_state = seed.clone();
-        let mut best_ms = Self::eval_fast(&seed, &durs, &mut scratch);
-        stats.warm_makespan = best_ms;
-        if !best_ms.is_finite() {
+        let out = anneal::anneal(&params, &seed, f64::INFINITY, rng, &mut stats);
+        stats.warm_makespan = out.seed_ms;
+        if !out.seed_ms.is_finite() {
             // incumbent cannot seat the current task set: cold-solve
+            // (the engine consumed no randomness — with one restart and an
+            // infeasible seed the annealing loop never starts)
             return self.solve(&tasks, cluster, rng);
         }
 
-        let lb = Self::lower_bound(&tasks, cluster);
-        let movable: Vec<usize> = (0..nt).filter(|&t| !locked[t]).collect();
-        let iters = (self.iters_per_temp / 2).max(50);
-        let mut cur = seed;
-        let mut cur_ms = best_ms;
-        let mut temp = 0.05 * cur_ms.max(1e-9);
-        let min_temp = 1e-4 * cur_ms.max(1e-9);
-        'outer: while temp > min_temp {
-            for _ in 0..iters {
-                if deadline.expired() {
-                    break 'outer;
-                }
-                let cand = self.neighbor(&cur, &tasks, cluster, rng, &movable);
-                stats.evals += 1;
-                let ms = Self::eval_fast(&cand, &durs, &mut scratch);
-                let accept = ms < cur_ms || rng.f64() < ((cur_ms - ms) / temp).exp();
-                if accept {
-                    cur = cand;
-                    cur_ms = ms;
-                    if ms < best_ms - 1e-9 {
-                        best_ms = ms;
-                        best_state = cur.clone();
-                        stats.improvements += 1;
-                    }
-                }
-            }
-            if best_ms <= lb * (1.0 + 1e-6) {
-                break; // provably optimal
-            }
-            temp *= 0.7;
-        }
-
-        let (sched, ms) = self.eval(&best_state, &tasks, cluster, &mut stats);
-        stats.final_makespan = if ms.is_finite() { ms } else { best_ms };
+        let (sched, ms) = self.eval(&out.best, &tasks, cluster, &mut stats);
+        stats.final_makespan = if ms.is_finite() { ms } else { out.best_ms };
         stats.elapsed_secs = start.elapsed().as_secs_f64();
         stats.evals_per_sec = stats.evals as f64 / stats.elapsed_secs.max(1e-12);
         (sched, stats)
-    }
-
-    /// One annealing move, legacy style: clone the state and mutate the
-    /// clone. The delta path's [`super::delta::Mover`] applies the same
-    /// move distribution in place (same RNG draws) with an undo log.
-    /// Configuration/node moves sample tasks from `movable` (every task in
-    /// a cold solve; the unlocked subset in an incremental re-solve —
-    /// pinned in-flight tasks keep their placement); order moves may touch
-    /// any task.
-    fn neighbor(
-        &self,
-        s: &State,
-        tasks: &[SpaseTask],
-        cluster: &Cluster,
-        rng: &mut DetRng,
-        movable: &[usize],
-    ) -> State {
-        let nt = tasks.len();
-        if movable.is_empty() {
-            // only ordering freedom remains
-            let mut n = s.clone();
-            if nt > 1 {
-                let a = rng.below(nt);
-                let b = rng.below(nt);
-                n.order.swap(a, b);
-            }
-            return n;
-        }
-        let mut n = s.clone();
-        match rng.below(6) {
-            0 => {
-                // nudge one task's configuration up/down the frontier
-                let t = movable[rng.below(movable.len())];
-                let k = tasks[t].configs.len();
-                if k > 1 {
-                    let cur = n.cfg[t] as isize;
-                    let delta = if rng.f64() < 0.5 { -1 } else { 1 };
-                    n.cfg[t] = (cur + delta).clamp(0, k as isize - 1) as usize;
-                }
-            }
-            1 => {
-                // random configuration jump
-                let t = movable[rng.below(movable.len())];
-                n.cfg[t] = rng.below(tasks[t].configs.len());
-            }
-            2 => {
-                // swap two order positions
-                if nt > 1 {
-                    let a = rng.below(nt);
-                    let b = rng.below(nt);
-                    n.order.swap(a, b);
-                }
-            }
-            3 => {
-                // move a task to a new position
-                if nt > 1 {
-                    let from = rng.below(nt);
-                    let to = rng.below(nt);
-                    let v = n.order.remove(from);
-                    n.order.insert(to, v);
-                }
-            }
-            4 => {
-                // toggle a forced node
-                let t = movable[rng.below(movable.len())];
-                n.node[t] = if n.node[t].is_some() || cluster.nodes.len() == 1 {
-                    None
-                } else {
-                    Some(rng.below(cluster.nodes.len()))
-                };
-            }
-            _ => {
-                // block move: re-randomize configs of a few tasks (LNS-ish)
-                for _ in 0..(movable.len() / 4).max(1) {
-                    let t = movable[rng.below(movable.len())];
-                    n.cfg[t] = rng.below(tasks[t].configs.len());
-                }
-            }
-        }
-        n
     }
 
     /// Construct warm-start states, evaluate each candidate **exactly
@@ -955,6 +614,51 @@ mod tests {
         assert_eq!(sched_d.makespan(), sched_f.makespan());
     }
 
+    /// Thread count is a wall-clock knob, not a semantics knob: with an
+    /// un-truncatable budget, 1 and 4 worker threads walk bit-identical
+    /// trajectories to the same incumbent. (The instance is ≥ 64 tasks so
+    /// the 4-thread run actually exercises the worker pool; the
+    /// prop_invariants twin covers 64–256 tasks, cold and incremental.)
+    #[test]
+    fn solve_threads_do_not_change_trajectory() {
+        use crate::trainer::workloads;
+        let (tasks, cluster) = workloads::scaling_instance(64, 2, 8, 5);
+        let mk = |threads: usize| JointOptimizer {
+            timeout: Duration::from_secs(600),
+            restarts: 1,
+            iters_per_temp: 80,
+            threads,
+            ..Default::default()
+        };
+        let (s1, st1) = mk(1).solve(&tasks, &cluster, &mut DetRng::new(91));
+        let (s4, st4) = mk(4).solve(&tasks, &cluster, &mut DetRng::new(91));
+        assert_eq!(st1.evals, st4.evals, "thread counts diverged");
+        assert_eq!(st1.improvements, st4.improvements);
+        assert_eq!(st1.final_makespan, st4.final_makespan);
+        assert_eq!(s1, s4, "plans must be identical for every thread count");
+    }
+
+    /// The incremental budget fraction is configurable (the online
+    /// coordinator tunes it against its arrival rate) with the historical
+    /// hardcoded `timeout / 4` as the unchanged default; degenerate
+    /// fractions fall back to the default instead of panicking.
+    #[test]
+    fn warm_budget_fraction_tunable_default_unchanged() {
+        let opt = JointOptimizer::default();
+        assert_eq!(opt.warm_frac, 0.25);
+        assert_eq!(opt.warm_budget(), Duration::from_millis(125), "default must stay timeout / 4");
+        let tuned = JointOptimizer { warm_frac: 0.5, ..Default::default() };
+        assert_eq!(tuned.warm_budget(), Duration::from_millis(250));
+        // NaN / zero / negative fractions: default, not panic
+        for bad in [f64::NAN, 0.0, -3.0] {
+            let opt = JointOptimizer { warm_frac: bad, ..Default::default() };
+            assert_eq!(opt.warm_budget(), Duration::from_millis(125), "warm_frac {bad}");
+        }
+        // over-1 fractions clamp to the full timeout
+        let big = JointOptimizer { warm_frac: 7.5, ..Default::default() };
+        assert_eq!(big.warm_budget(), Duration::from_millis(500));
+    }
+
     /// Same seed ⇒ same incumbent, run to run, at a fixed (never-expiring)
     /// eval budget — the delta kernel introduces no hidden nondeterminism.
     #[test]
@@ -1044,8 +748,10 @@ mod tests {
         let (warm, stats) = opt.resolve_incremental(&ctx, &mut rng2);
         warm.validate(&c, &w).unwrap();
         // pinned in-flight tasks keep their configuration and node
+        // (per-task schedule lookups go through the id→index map)
+        let warm_idx = warm.id_index();
         for a in assigns.iter().take(3) {
-            let wa = warm.assignment_for(a.task_id).unwrap();
+            let wa = &warm.assignments[warm_idx[&a.task_id]];
             assert_eq!(wa.node, a.node, "pinned task {} moved node", a.task_id);
             assert_eq!(wa.config.gpus, a.config.gpus, "pinned task {} re-scaled", a.task_id);
             assert_eq!(wa.config.upp, a.config.upp, "pinned task {} re-parallelized", a.task_id);
@@ -1061,6 +767,12 @@ mod tests {
         let mut rng3 = DetRng::new(42);
         let via_plan = opt.plan(&ctx, &mut rng3);
         assert_eq!(via_plan.makespan(), warm.makespan());
+        // warm_frac only moves the wall-clock budget: any un-truncatable
+        // fraction walks the identical trajectory
+        let opt_frac = JointOptimizer { warm_frac: 0.9, ..opt.clone() };
+        let (warm2, stats2) = opt_frac.resolve_incremental(&ctx, &mut DetRng::new(42));
+        assert_eq!(warm2.makespan(), warm.makespan());
+        assert_eq!(stats2.evals, stats.evals);
     }
 
     /// The incremental re-solve follows the same trajectory through the

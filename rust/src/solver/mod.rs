@@ -8,6 +8,11 @@
 //!   simulated-annealing / large-neighborhood incumbent search over
 //!   (configuration, order, node) decisions, evaluated through the gang
 //!   list scheduler. Cross-validated against [`spase`] on tiny instances.
+//! - `anneal` (internal): the speculative parallel annealing engine — the
+//!   one generic loop behind every `JointOptimizer` search mode. Drafts
+//!   candidate batches from the single RNG stream, fans evaluations out
+//!   across worker threads, resolves Metropolis acceptance sequentially;
+//!   trajectories are bit-identical for every thread count.
 //! - `delta` (internal): the delta-evaluation kernel behind the annealer —
 //!   in-place moves with an undo log, block-checkpointed suffix replay,
 //!   sorted per-node free lists. Bit-identical to full replay, orders of
@@ -16,6 +21,7 @@
 //!   implement, so the simulator and introspection loop can drive any of
 //!   them interchangeably.
 
+mod anneal;
 mod delta;
 pub mod joint;
 pub mod lp;

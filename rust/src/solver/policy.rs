@@ -177,6 +177,16 @@ impl<'a> PlanCtx<'a> {
 }
 
 /// A planner: Saturn's joint optimizer or any baseline.
+///
+/// **Determinism contract:** a planner must be a pure function of
+/// `(ctx, rng)` — same context and RNG state ⇒ the same plan, bit for
+/// bit, regardless of execution resources. In particular the joint
+/// optimizer's speculative parallel engine guarantees identical
+/// trajectories for every worker thread count (`SATURN_THREADS`), so
+/// simulations, experiment tables, and the online coordinator's re-solve
+/// decisions are reproducible across machines; planners added later must
+/// preserve that property (the thread-parity property tests in
+/// `tests/prop_invariants.rs` are the template for checking it).
 pub trait Policy {
     /// Display name (matches the paper's baseline labels).
     fn name(&self) -> &str;

@@ -77,9 +77,24 @@ impl DeadlinePoll {
     /// True once the underlying deadline has expired, checked on the
     /// first and then every `period`-th call.
     pub fn expired(&mut self) -> bool {
-        self.count += 1;
+        self.expired_batch(1)
+    }
+
+    /// Batch variant for speculative solvers: advance the iteration count
+    /// by `n` (one call covers a whole batch of candidate evaluations)
+    /// and poll the clock whenever a period boundary is crossed. The
+    /// residual count carries across the boundary, so batches cross
+    /// boundaries exactly as `n` single calls would and the worst-case
+    /// overshoot bound stays `period - 1` iterations (plus the batch in
+    /// flight). A coordinator scoring batches of K keeps the same ~1
+    /// clock read per `period` evaluations as the sequential loop;
+    /// workers never touch the clock at all — mid-batch aborts would make
+    /// the trajectory depend on wall-clock timing, so batches always run
+    /// to completion and only batch *boundaries* are deadline-checked.
+    pub fn expired_batch(&mut self, n: u32) -> bool {
+        self.count = self.count.saturating_add(n);
         if self.count >= self.period {
-            self.count = 0;
+            self.count %= self.period;
             return self.deadline.expired();
         }
         false
@@ -149,6 +164,26 @@ mod tests {
         std::thread::sleep(Duration::from_millis(5));
         let fired = (0..4).any(|_| r.expired());
         assert!(fired, "poll must fire within one period of expiry");
+    }
+
+    #[test]
+    fn deadline_poll_batches_count_like_singles() {
+        // advancing by n must cross period boundaries exactly like n
+        // single calls would: 8-period poll, batches of 3 → the clock is
+        // read on calls 1, 3 (count 9 ≥ 8) and then every ~3rd call
+        let mut p = DeadlinePoll::new(Deadline::after(Duration::from_secs(60)), 8);
+        for _ in 0..100 {
+            assert!(!p.expired_batch(3));
+        }
+        // an expired deadline is noticed on the first batch regardless of
+        // batch size (the constructor pre-loads the counter)
+        let mut q = DeadlinePoll::new(Deadline::after(Duration::ZERO), 64);
+        assert!(q.expired_batch(5));
+        // and within one period's worth of iterations afterwards
+        let mut r = DeadlinePoll::new(Deadline::after(Duration::from_millis(1)), 16);
+        std::thread::sleep(Duration::from_millis(5));
+        let fired = (0..4).any(|_| r.expired_batch(7));
+        assert!(fired, "batch poll must fire within one period of expiry");
     }
 
     #[test]

@@ -96,6 +96,20 @@ impl DetRng {
     pub fn noise_factor(&mut self, sigma: f64) -> f64 {
         (self.normal() * sigma - 0.5 * sigma * sigma).exp()
     }
+
+    /// One Metropolis acceptance test at temperature `temp`: a strictly
+    /// improving candidate (`cand < cur`) is accepted **without consuming
+    /// randomness**; anything else draws exactly one uniform and accepts
+    /// with probability `exp((cur − cand) / temp)`.
+    ///
+    /// The conditional draw is part of the annealing determinism
+    /// contract: the speculative batch engine and the sequential loop
+    /// (`solver::anneal`) must consume the stream identically move for
+    /// move, so the acceptance rule lives here in one place instead of
+    /// being copy-pasted per loop.
+    pub fn metropolis(&mut self, cur: f64, cand: f64, temp: f64) -> bool {
+        cand < cur || self.f64() < ((cur - cand) / temp).exp()
+    }
 }
 
 #[cfg(test)]
@@ -173,6 +187,28 @@ mod tests {
         let mut c2 = root.fork(2);
         let same = (0..32).filter(|_| c1.u64() == c2.u64()).count();
         assert!(same < 4);
+    }
+
+    #[test]
+    fn metropolis_draw_discipline() {
+        // improving candidates consume nothing: the stream stays aligned
+        let mut a = DetRng::new(31);
+        let mut b = DetRng::new(31);
+        assert!(a.metropolis(100.0, 50.0, 10.0));
+        assert_eq!(a.u64(), b.u64(), "improving accept must not draw");
+        // non-improving candidates consume exactly one uniform
+        let mut c = DetRng::new(32);
+        let mut d = DetRng::new(32);
+        c.metropolis(100.0, 120.0, 10.0);
+        let _ = d.f64();
+        assert_eq!(c.u64(), d.u64(), "worse candidate must draw exactly once");
+        // equal makespans accept with probability 1 (plateau exploration)
+        let mut e = DetRng::new(33);
+        assert!(e.metropolis(100.0, 100.0, 1e-9));
+        // a hopeless candidate at tiny temperature is (almost surely)
+        // rejected: exp of a hugely negative number underflows to 0
+        let mut f = DetRng::new(34);
+        assert!(!f.metropolis(100.0, 1e9, 1e-9));
     }
 
     #[test]

@@ -470,6 +470,89 @@ fn prop_incremental_delta_and_full_replay_agree() {
     assert!(checked >= 2, "too few incremental parity cases: {checked}");
 }
 
+/// Thread-count determinism (the speculative engine's core contract):
+/// `SATURN_THREADS=1` and `SATURN_THREADS=8` — pinned here through the
+/// equivalent `JointOptimizer::threads` so the comparison can run inside
+/// one process — must produce identical incumbents and `SolveStats` on
+/// random 64–256-task synthetic-frontier instances, for cold solves and
+/// incremental re-solves, with the delta kernel and the full-replay
+/// baseline. Budgets are un-truncatable so wall-clock can't fork the
+/// trajectories.
+#[test]
+fn prop_thread_count_preserves_trajectory() {
+    use saturn::trainer::workloads;
+
+    // ---- cold solves on 64–256-task instances -------------------------
+    for &(n, nodes, gpn, seed) in
+        &[(64usize, 2usize, 8usize, 131u64), (128, 4, 8, 132), (256, 8, 8, 133)]
+    {
+        let (tasks, cluster) = workloads::scaling_instance(n, nodes, gpn, seed);
+        let mk = |threads: usize, full_replay: bool| JointOptimizer {
+            timeout: std::time::Duration::from_secs(3600),
+            restarts: 1,
+            iters_per_temp: 60,
+            threads,
+            full_replay,
+            ..Default::default()
+        };
+        let (s1, st1) = mk(1, false).solve(&tasks, &cluster, &mut DetRng::new(seed));
+        let (s8, st8) = mk(8, false).solve(&tasks, &cluster, &mut DetRng::new(seed));
+        assert_eq!(st1.evals, st8.evals, "{n} tasks: eval counts diverged across threads");
+        assert_eq!(st1.improvements, st8.improvements, "{n} tasks");
+        assert_eq!(st1.warm_makespan, st8.warm_makespan, "{n} tasks");
+        assert_eq!(st1.final_makespan, st8.final_makespan, "{n} tasks");
+        assert_eq!(s1, s8, "{n} tasks: plans diverged across thread counts");
+        // the A/B full-replay baseline must parallelize identically
+        if n == 64 {
+            let (f1, sf1) = mk(1, true).solve(&tasks, &cluster, &mut DetRng::new(seed));
+            let (f8, sf8) = mk(8, true).solve(&tasks, &cluster, &mut DetRng::new(seed));
+            assert_eq!(sf1.evals, sf8.evals, "full-replay eval counts diverged");
+            assert_eq!(sf1.final_makespan, sf8.final_makespan);
+            assert_eq!(f1, f8, "full-replay plans diverged across thread counts");
+            // and both evaluators walk one trajectory (kernel parity)
+            assert_eq!(st1.evals, sf1.evals, "delta vs full replay diverged");
+            assert_eq!(st1.final_makespan, sf1.final_makespan);
+        }
+    }
+
+    // ---- incremental re-solve on a 64-task stream ---------------------
+    let registry = UppRegistry::default_library(Arc::new(CostModel::default()));
+    let mut wrng = DetRng::new(555);
+    let w = workloads::online_mixed_workload(64, 200.0, &mut wrng);
+    let c = Cluster::four_node_32gpu();
+    let (grid, _) = TrialRunner::new(registry).profile(&w, &c);
+    let mut ctx = PlanCtx::fresh(&w, &grid, &c);
+    for i in 48..w.len() {
+        ctx.available[i] = false;
+    }
+    let incumbent = JointOptimizer::default().plan(&ctx, &mut DetRng::new(556));
+    ctx.prior = incumbent
+        .assignments
+        .iter()
+        .map(|a| PriorDecision { task_id: a.task_id, config: a.config.clone(), node: Some(a.node) })
+        .collect();
+    for a in incumbent.assignments.iter().take(24) {
+        let i = ctx.index_of(a.task_id).unwrap();
+        ctx.pinned[i] = true;
+    }
+    for i in 48..w.len() {
+        ctx.available[i] = true;
+    }
+    let mk_inc = |threads: usize| JointOptimizer {
+        timeout: std::time::Duration::from_secs(14400),
+        incremental: true,
+        threads,
+        ..Default::default()
+    };
+    let (w1, si1) = mk_inc(1).resolve_incremental(&ctx, &mut DetRng::new(557));
+    let (w8, si8) = mk_inc(8).resolve_incremental(&ctx, &mut DetRng::new(557));
+    assert_eq!(si1.evals, si8.evals, "incremental eval counts diverged across threads");
+    assert_eq!(si1.improvements, si8.improvements);
+    assert_eq!(si1.warm_makespan, si8.warm_makespan);
+    assert_eq!(si1.final_makespan, si8.final_makespan);
+    assert_eq!(w1, w8, "incremental plans diverged across thread counts");
+}
+
 /// The Optimus allocator never exceeds its budget and never starves a
 /// task below one GPU.
 #[test]
