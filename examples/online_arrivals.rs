@@ -45,8 +45,15 @@ fn main() {
     // cold path: same stream, full from-scratch solve at every event
     let mut oc_cold = OnlineCoordinator::new(Cluster::single_node_8gpu());
     oc_cold.optimizer = JointOptimizer::default();
-    oc_cold.submit_all(stream);
+    oc_cold.submit_all(stream.clone());
     let cold = oc_cold.run(42);
+
+    // preemption path: incremental re-solve with checkpoint-and-shrink of
+    // in-flight gangs enabled (churn = the simulator's switch cost)
+    let mut oc_pre = OnlineCoordinator::new(Cluster::single_node_8gpu());
+    oc_pre.sim.preempt = true;
+    oc_pre.submit_all(stream);
+    let pre = oc_pre.run(42);
 
     let mut table = TextTable::new(vec!["task", "arrival", "start", "done", "queue delay"]);
     for task in &warm.workload {
@@ -78,12 +85,17 @@ fn main() {
     println!("{}", table.render());
 
     let mut report = String::new();
-    for (label, r) in [("warm (incremental)", &warm), ("cold (from scratch)", &cold)] {
+    for (label, r) in [
+        ("warm (incremental)", &warm),
+        ("cold (from scratch)", &cold),
+        ("warm + preemption", &pre),
+    ] {
         let line = format!(
-            "{label:<20} makespan {} | arrivals {} | switches {} | mean queue {:.0}s (max {:.0}s) | mean turnaround {:.0}s | {:.1} tasks/h",
+            "{label:<20} makespan {} | arrivals {} | switches {} (preempt {}) | mean queue {:.0}s (max {:.0}s) | mean turnaround {:.0}s | {:.1} tasks/h",
             saturn::util::fmt_hms(r.result.makespan),
             r.result.arrival_events,
             r.result.switches,
+            r.result.preemptions,
             r.stats.mean_queue_delay,
             r.stats.max_queue_delay,
             r.stats.mean_turnaround,
@@ -92,6 +104,17 @@ fn main() {
         println!("{line}");
         report.push_str(&line);
         report.push('\n');
+    }
+    // the online invariant holds under preemption too
+    for task in &pre.workload {
+        let start = pre
+            .result
+            .starts
+            .iter()
+            .find(|(id, _)| *id == task.id)
+            .map(|(_, s)| *s)
+            .expect("every task starts under preemption");
+        assert!(start >= task.arrival - 1e-6, "task {} started before submission", task.id);
     }
     println!(
         "\nevery completion respected its arrival; warm/cold makespan ratio {:.3} \

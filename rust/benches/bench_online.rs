@@ -41,9 +41,9 @@ fn main() {
         .iter()
         .map(|a| PriorDecision { task_id: a.task_id, config: a.config.clone(), node: Some(a.node) })
         .collect();
+    let widx = ctx.id_index_map();
     for a in incumbent.assignments.iter().take(6) {
-        let i = ctx.index_of(a.task_id).unwrap();
-        ctx.pinned[i] = true;
+        ctx.pinned[widx[&a.task_id]] = true;
     }
     for i in 12..w.len() {
         ctx.available[i] = true; // the arrivals fire
@@ -109,9 +109,9 @@ fn main() {
         .iter()
         .map(|a| PriorDecision { task_id: a.task_id, config: a.config.clone(), node: Some(a.node) })
         .collect();
+    let widx2 = ctx2.id_index_map();
     for a in incumbent2.assignments.iter().take(60) {
-        let i = ctx2.index_of(a.task_id).unwrap();
-        ctx2.pinned[i] = true;
+        ctx2.pinned[widx2[&a.task_id]] = true;
     }
     for i in 100..w2.len() {
         ctx2.available[i] = true; // the queued arrivals fire
@@ -143,6 +143,31 @@ fn main() {
         s_f.makespan(),
         warm120 * 1e3,
         warm120_full * 1e3
+    );
+
+    // ---- preemption twin: the same 120-task mid-stream re-solve with
+    // the churn-cost model on (60 in-flight gangs become legal move
+    // targets at 30 s checkpoint/restore each). Measures what opening the
+    // full decision space costs per arrival at stream scale; the CSV row
+    // rides the same bench-smoke artifact as its pinned sibling.
+    let mut ctx2p = ctx2.clone();
+    ctx2p.preempt_cost = Some(30.0);
+    let mut rng_pp = DetRng::new(13);
+    let warm120_pre = b
+        .bench("warm_incremental_resolve_120tasks_32gpu_preempt", || {
+            let (s, _) = warm.resolve_incremental(&ctx2p, &mut rng_pp);
+            black_box(s.makespan());
+        })
+        .mean;
+    let (s_pre, st_pre) = warm.resolve_incremental(&ctx2p, &mut DetRng::new(14));
+    println!(
+        "[info] 120-task stream re-solve with preemption: {:.0} evals/s, makespan {:.0}s \
+         vs pinned {:.0}s; mean latency {:.1}ms vs pinned {:.1}ms",
+        st_pre.evals_per_sec,
+        s_pre.makespan(),
+        s_d.makespan(),
+        warm120_pre * 1e3,
+        warm120 * 1e3
     );
 
     // ---- speculative parallel engine on the same 120-task re-solve:

@@ -63,9 +63,25 @@ pub struct OnlineCoordinator {
     /// engine's parallelism, which never changes the trajectory — at any
     /// fixed budget the search path is bit-identical across thread
     /// counts.
+    ///
+    /// **Preemption × warm budget.** Turn on checkpoint-and-shrink of
+    /// in-flight gangs via [`SimConfig::preempt`] on [`Self::sim`] — the
+    /// simulator then hands the re-solver a churn cost equal to its
+    /// `switch_cost` ([`JointOptimizer::preempt`] is the same knob for
+    /// driving the solver outside a simulation; the context's value
+    /// wins). Preemption widens the incremental search space from "new +
+    /// not-yet-started" to *every* live task, so at a fixed
+    /// [`JointOptimizer::warm_frac`] each re-solve spreads its budget
+    /// over more decisions; streams that enable `preempt` under tight
+    /// arrival rates usually want a correspondingly larger `warm_frac`
+    /// (or more `threads`) so the anneal still converges before the
+    /// budget truncates it. With `preempt` off the re-solve trajectory is
+    /// bit-identical to the historical pinning behavior.
     pub optimizer: JointOptimizer,
     /// Simulation knobs; introspection defaults on (the online path
-    /// shares its re-plan machinery).
+    /// shares its re-plan machinery). [`SimConfig::preempt`] lives here —
+    /// see [`Self::optimizer`] for how it interacts with the warm-budget
+    /// fraction.
     pub sim: SimConfig,
     queue: Vec<Task>,
     next_id: usize,
@@ -201,5 +217,38 @@ mod tests {
         let half = run_with(0.5);
         assert_eq!(quarter, half, "untruncated budgets must yield identical streams");
         assert_eq!(quarter.completions.len(), 4);
+    }
+
+    /// The preemption knob is surfaced through the coordinator's
+    /// `SimConfig`: streams run deterministically with it on, every task
+    /// still completes at or after its arrival, and with it off the
+    /// stream is byte-identical to the default configuration (which IS
+    /// preempt-off — pinning unchanged).
+    #[test]
+    fn preempt_knob_surfaced_and_off_by_default() {
+        let run_with = |preempt: bool| {
+            let mut oc = OnlineCoordinator::new(Cluster::single_node_8gpu());
+            oc.optimizer.timeout = std::time::Duration::from_secs(240);
+            assert!(!oc.sim.preempt, "preemption must default off");
+            oc.sim.preempt = preempt;
+            for i in 0..5 {
+                oc.submit(small_task(i as f64 * 300.0));
+            }
+            oc.run(17)
+        };
+        let off = run_with(false);
+        let off2 = run_with(false);
+        assert_eq!(off.result, off2.result, "preempt-off stream must be deterministic");
+        assert_eq!(off.result.preemptions, 0, "no preemptions while pinning");
+        assert_eq!(off.stats.preemptions, 0);
+        let on = run_with(true);
+        let on2 = run_with(true);
+        assert_eq!(on.result, on2.result, "preempt-on stream must be deterministic");
+        assert_eq!(on.result.completions.len(), 5);
+        for t in &on.workload {
+            let (_, start) = on.result.starts.iter().find(|(id, _)| *id == t.id).unwrap();
+            assert!(*start >= t.arrival - 1e-6, "task {} jumped its arrival", t.id);
+        }
+        assert_eq!(on.stats.preemptions, on.result.preemptions);
     }
 }

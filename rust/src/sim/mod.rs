@@ -54,11 +54,27 @@ pub struct SimConfig {
     /// Introspection rounds overlap solving with execution (paper §4.4),
     /// so only the initial solve is charged.
     pub start_latency: f64,
+    /// Online preemption: allow incremental re-solvers to checkpoint and
+    /// shrink/relocate in-flight gangs. When on, the planning context
+    /// carries [`crate::solver::policy::PlanCtx::preempt_cost`] =
+    /// [`Self::switch_cost`], so the planner charges a deviating
+    /// in-flight task exactly the checkpoint/relaunch penalty this
+    /// simulator will bill through its switch accounting — planner
+    /// estimate and simulated reality agree. Off (the default), pinned
+    /// in-flight tasks keep their (config, node) across re-solves exactly
+    /// as before this knob existed.
+    pub preempt: bool,
 }
 
 impl Default for SimConfig {
     fn default() -> Self {
-        Self { noise_sigma: 0.08, switch_cost: 30.0, introspect: None, start_latency: 0.0 }
+        Self {
+            noise_sigma: 0.08,
+            switch_cost: 30.0,
+            introspect: None,
+            start_latency: 0.0,
+            preempt: false,
+        }
     }
 }
 
@@ -97,6 +113,11 @@ pub struct SimResult {
     pub starts: Vec<(usize, f64)>,
     /// Arrival events processed (tasks injected mid-simulation).
     pub arrival_events: usize,
+    /// In-flight gangs whose placement an accepted re-plan changed
+    /// (checkpoint-and-shrink/relocate events). A subset of
+    /// [`Self::switches`]; always 0 while [`SimConfig::preempt`] is off
+    /// and the planner honors its pins.
+    pub preemptions: usize,
 }
 
 impl SimResult {
@@ -213,6 +234,9 @@ pub fn simulate_with_controller(
     // initial plan over the tasks that have already been submitted;
     // later arrivals are injected at their event times below
     let mut ctx = PlanCtx::fresh(workload, grid, cluster);
+    // online preemption: let incremental re-solvers checkpoint-and-shrink
+    // in-flight gangs, charging exactly the switch penalty billed below
+    ctx.preempt_cost = cfg.preempt.then_some(cfg.switch_cost);
     // task-id → workload-index map, built once per simulation (first
     // occurrence, exactly like the per-task linear `position` scans it
     // replaces — those made every replay O(n²) at online stream scale)
@@ -314,8 +338,14 @@ pub fn simulate_with_controller(
         // proposed remaining makespan (planner estimates + switch costs)
         scratch.switch_states.clear();
         scratch.switch_states.extend_from_slice(&states);
-        let switched =
-            mark_switches(&plan, &scratch.proposal, &mut scratch.switch_states, cfg.switch_cost, &id2idx);
+        let (switched, preempted) = mark_switches(
+            &plan,
+            &scratch.proposal,
+            &mut scratch.switch_states,
+            &started,
+            cfg.switch_cost,
+            &id2idx,
+        );
         let prop_ms = replay_into(
             &scratch.proposal,
             &scratch.switch_states,
@@ -329,6 +359,7 @@ pub fn simulate_with_controller(
             std::mem::swap(&mut plan, &mut scratch.proposal);
             std::mem::swap(&mut states, &mut scratch.switch_states);
             result.switches += switched;
+            result.preemptions += preempted;
         } else {
             // keep the current plan: drop completed tasks from the order
             plan.retain(|c| states[id2idx[&c.task_id]].remaining > 1e-12);
@@ -413,8 +444,14 @@ fn arrival_replan(
     // brand-new task is never billed for "moving"
     scratch.switch_states.clear();
     scratch.switch_states.extend_from_slice(states);
-    let switched =
-        mark_switches(&scratch.keep, &scratch.proposal, &mut scratch.switch_states, cfg.switch_cost, id2idx);
+    let (switched, preempted) = mark_switches(
+        &scratch.keep,
+        &scratch.proposal,
+        &mut scratch.switch_states,
+        started,
+        cfg.switch_cost,
+        id2idx,
+    );
     let prop_ms = replay_into(
         &scratch.proposal,
         &scratch.switch_states,
@@ -449,6 +486,7 @@ fn arrival_replan(
         std::mem::swap(plan, &mut scratch.proposal);
         std::mem::swap(states, &mut scratch.switch_states);
         result.switches += switched;
+        result.preemptions += preempted;
     } else {
         // materialize concrete nodes for the appended arrivals — leaving
         // them node-less would let an in-flight gang silently migrate
@@ -565,14 +603,20 @@ fn commit_segment(
 }
 
 /// Charge `switch_cost` to every task whose placement changed between the
-/// old and new plans; returns how many switched.
+/// old and new plans; returns `(switched, preempted)` — how many tasks
+/// changed placement, and how many of those were already running
+/// (checkpoint-and-shrink/relocate of an in-flight gang). The penalty is
+/// the same one the preemption-aware planner charges as
+/// `PlanCtx::preempt_cost`, which is what keeps its churn-inclusive
+/// makespan estimates aligned with the replay below.
 fn mark_switches(
     old: &[PlacementChoice],
     new: &[PlacementChoice],
     states: &mut [TaskState],
+    started: &[bool],
     switch_cost: f64,
     id2idx: &HashMap<usize, usize>,
-) -> usize {
+) -> (usize, usize) {
     // first-occurrence index of the old plan, matching the linear scan
     // this replaces (O(n²) per re-plan on big online streams)
     let mut old_by_id: HashMap<usize, &PlacementChoice> = HashMap::with_capacity(old.len());
@@ -580,6 +624,7 @@ fn mark_switches(
         old_by_id.entry(o.task_id).or_insert(o);
     }
     let mut switched = 0;
+    let mut preempted = 0;
     for c in new {
         let changed = match old_by_id.get(&c.task_id) {
             Some(p) => p.config.gpus != c.config.gpus || p.config.upp != c.config.upp || p.node != c.node,
@@ -588,11 +633,14 @@ fn mark_switches(
         if changed {
             if let Some(&idx) = id2idx.get(&c.task_id) {
                 states[idx].penalty += switch_cost;
+                if started[idx] {
+                    preempted += 1;
+                }
             }
             switched += 1;
         }
     }
-    switched
+    (switched, preempted)
 }
 
 #[cfg(test)]
@@ -870,6 +918,124 @@ mod tests {
         assert_eq!(a.completions.len(), w.len());
         assert!(a.arrival_events > 0, "stream must exercise the arrival path");
         assert!(a.rounds > 0, "stream must exercise introspection rounds");
+    }
+
+    /// Default-off parity: an arrival-heavy introspection stream driven
+    /// by the *incremental* re-solver (the exact path the preemption
+    /// tentpole modified) is byte-identical run to run with `preempt`
+    /// off, and never preempts — pinned in-flight gangs keep their
+    /// placement exactly as before the churn model existed.
+    #[test]
+    fn preempt_off_incremental_stream_pins_and_is_byte_identical() {
+        let c = Cluster::single_node_8gpu();
+        let (mut w, grid) = setup(&c);
+        for (i, t) in w.iter_mut().enumerate() {
+            t.arrival = (i as f64) * 900.0; // sustained arrival stream
+        }
+        let cfg = SimConfig {
+            introspect: Some(IntrospectCfg { interval: 1500.0, threshold: 200.0 }),
+            ..Default::default()
+        };
+        assert!(!cfg.preempt, "preemption must default off");
+        let policy = JointOptimizer {
+            timeout: std::time::Duration::from_secs(120),
+            incremental: true,
+            ..Default::default()
+        };
+        let a = simulate(&policy, &w, &grid, &c, cfg, &mut DetRng::new(78));
+        let b = simulate(&policy, &w, &grid, &c, cfg, &mut DetRng::new(78));
+        assert_eq!(a, b, "preempt-off incremental stream must be byte-identical");
+        assert_eq!(a.preemptions, 0, "pinning must never preempt");
+        assert_eq!(a.completions.len(), w.len());
+        assert!(a.arrival_events > 0, "stream must exercise the arrival path");
+        assert!(a.rounds > 0, "stream must exercise introspection rounds");
+    }
+
+    /// End-to-end tentpole acceptance, on the shared blocked-queue
+    /// instance ([`workloads::blocked_queue_instance`]): the
+    /// preemption-enabled simulation checkpoint-and-shrinks the in-flight
+    /// gang and strictly beats pinning on makespan AND mean turnaround,
+    /// while the pinned run pays the full 2000 s queue-behind-the-gang
+    /// schedule and preempts nothing.
+    #[test]
+    fn preemption_unblocks_queued_burst() {
+        use crate::metrics::online_stats;
+        let (w, grid, c) = workloads::blocked_queue_instance();
+        let run = |preempt: bool| {
+            // noiseless + generous solver budget: exact, deterministic
+            let cfg = SimConfig { noise_sigma: 0.0, switch_cost: 30.0, preempt, ..Default::default() };
+            let policy = JointOptimizer {
+                timeout: std::time::Duration::from_secs(120),
+                incremental: true,
+                ..Default::default()
+            };
+            let mut rng = DetRng::new(99);
+            simulate(&policy, &w, &grid, &c, cfg, &mut rng)
+        };
+        let pinned = run(false);
+        let pre = run(true);
+        assert_eq!(pinned.completions.len(), 15);
+        assert_eq!(pre.completions.len(), 15);
+
+        // pinned: the burst queues behind the 8-GPU gang — 100 s head
+        // start + 900 s drain + two 500 s waves = 2000 s, provably
+        // optimal under pinning; nothing in flight ever moves
+        assert!((pinned.makespan - 2000.0).abs() < 1e-6, "pinned {}", pinned.makespan);
+        assert_eq!(pinned.preemptions, 0, "pinning must not preempt");
+
+        // preemption: the re-solver shrinks the gang (one checkpoint,
+        // charged by planner and simulator alike) — optimum is the 2-GPU
+        // shrink finishing everything at 1600 s; even the 4-GPU shrink
+        // lands at 1665 s
+        assert!(pre.preemptions >= 1, "the in-flight gang must be checkpointed");
+        assert!(
+            pre.makespan <= pinned.makespan - 250.0,
+            "preempt {} vs pinned {}",
+            pre.makespan,
+            pinned.makespan
+        );
+        assert!(pre.makespan >= 1600.0 - 1e-6, "beat the churn-inclusive optimum");
+
+        let stats_pin = online_stats(&w, &pinned);
+        let stats_pre = online_stats(&w, &pre);
+        assert!(
+            stats_pre.mean_turnaround <= stats_pin.mean_turnaround - 250.0,
+            "turnaround: preempt {} vs pinned {}",
+            stats_pre.mean_turnaround,
+            stats_pin.mean_turnaround
+        );
+        assert_eq!(stats_pre.preemptions, pre.preemptions);
+
+        // determinism with preemption on: byte-identical re-runs
+        let pre2 = run(true);
+        assert_eq!(pre, pre2, "preempt-on SimResult must be byte-identical run to run");
+    }
+
+    /// Sparse-stream throughput regression (the
+    /// `late_arrival_extends_makespan_past_idle_gap` scenario): with a
+    /// 10⁷ s pre-arrival idle gap, throughput is measured over the busy
+    /// window, not the makespan — the old full-makespan denominator
+    /// reported ~0.0007 tasks/h here.
+    #[test]
+    fn sparse_stream_throughput_measured_over_busy_window() {
+        use crate::metrics::online_stats;
+        let c = Cluster::single_node_8gpu();
+        let (mut w, grid) = setup(&c);
+        w.truncate(2);
+        w[1].arrival = 1e7;
+        let cfg = SimConfig { noise_sigma: 0.0, ..Default::default() };
+        let mut rng = DetRng::new(23);
+        let r = simulate(&JointOptimizer::default(), &w, &grid, &c, cfg, &mut rng);
+        let s = online_stats(&w, &r);
+        assert_eq!(s.finished, 2);
+        let old_buggy = s.finished as f64 * 3600.0 / r.makespan;
+        assert!(
+            s.throughput_per_hour >= 10.0 * old_buggy,
+            "busy-window throughput {} vs makespan-diluted {}",
+            s.throughput_per_hour,
+            old_buggy
+        );
+        assert!(s.throughput_per_hour > 0.0);
     }
 
     #[test]

@@ -34,7 +34,7 @@
 //! that dominate late annealing, where throughput approaches
 //! min(K, threads)× the sequential engine. See EXPERIMENTS.md §Perf.
 
-use super::delta::{apply_cand, undo_cand, CandMove, DeltaKernel, FullScratch, Mover, State};
+use super::delta::{apply_cand, undo_cand, CandMove, Churn, DeltaKernel, FullScratch, Mover, State};
 use super::joint::SolveStats;
 use crate::util::rng::DetRng;
 use crate::util::{Deadline, DeadlinePoll, DEADLINE_POLL_PERIOD};
@@ -76,6 +76,13 @@ pub(crate) struct AnnealParams<'a> {
     /// Score with the legacy full-replay evaluator instead of the delta
     /// kernel (A/B baseline; bit-identical trajectories either way).
     pub full_replay: bool,
+    /// Online-preemption churn model: when present, every evaluator adds
+    /// the per-task checkpoint/restore cost for decisions deviating from
+    /// the incumbent (see [`Churn`]). A pure per-task function of the
+    /// candidate state, applied identically by the delta kernel, the
+    /// read-only worker replays, and the full-replay baseline — so the
+    /// thread-count and evaluator parity contracts are untouched.
+    pub churn: Option<&'a Churn>,
     /// Annealing restarts (≥ 1); restarts > 0 perturb the incumbent.
     pub restarts: usize,
     /// Candidate evaluations per temperature level.
@@ -219,10 +226,11 @@ impl EvalScratch {
         s: &State,
         p0: usize,
         durs: &[Vec<(usize, f64)>],
+        churn: Option<&Churn>,
     ) -> f64 {
         match self {
-            EvalScratch::Delta { free } => kernel.eval_move_readonly(s, durs, p0, free),
-            EvalScratch::Full(fs) => fs.eval(s, durs),
+            EvalScratch::Delta { free } => kernel.eval_move_readonly(s, durs, p0, free, churn),
+            EvalScratch::Full(fs) => fs.eval(s, durs, churn),
         }
     }
 }
@@ -251,7 +259,8 @@ pub(crate) fn anneal(
             let full_replay = p.full_replay;
             let node_gpus = p.node_gpus;
             let durs = p.durs;
-            sc.spawn(move || worker_loop(jrx, rtx, full_replay, node_gpus, durs));
+            let churn = p.churn;
+            sc.spawn(move || worker_loop(jrx, rtx, full_replay, node_gpus, durs, churn));
         }
         // the coordinator holds no result sender: if every worker dies,
         // recv reports it instead of blocking forever
@@ -270,6 +279,7 @@ fn worker_loop(
     full_replay: bool,
     node_gpus: &[usize],
     durs: &[Vec<(usize, f64)>],
+    churn: Option<&Churn>,
 ) {
     let mut scratch = EvalScratch::new(full_replay, node_gpus);
     let mut local = State::default();
@@ -282,7 +292,7 @@ fn worker_loop(
             local.clone_from(&shared.base);
             for c in &shared.cands[lo..hi] {
                 apply_cand(&mut local, c, &shared.multi);
-                out.push(scratch.eval(&shared.kernel, &local, c.p0, durs));
+                out.push(scratch.eval(&shared.kernel, &local, c.p0, durs, churn));
                 undo_cand(&mut local, c, &shared.multi);
             }
         }
@@ -333,9 +343,9 @@ fn run(
         mover.rebuild_pos(&cur.order);
         let mut cur_ms = if p.full_replay {
             // p0 is ignored by the full evaluator: always a whole replay
-            scratch.eval(&kernel, &cur, 0, p.durs)
+            scratch.eval(&kernel, &cur, 0, p.durs, p.churn)
         } else {
-            Arc::make_mut(&mut kernel).rebuild(&cur, p.durs)
+            Arc::make_mut(&mut kernel).rebuild(&cur, p.durs, p.churn)
         };
         if restart == 0 {
             seed_ms = cur_ms;
@@ -358,9 +368,9 @@ fn run(
                     let (undo, p0) = mover.propose(&mut cur, p.durs, n_nodes, rng, p.movable);
                     stats.evals += 1;
                     let ms = if p.full_replay {
-                        scratch.eval(&kernel, &cur, p0, p.durs)
+                        scratch.eval(&kernel, &cur, p0, p.durs, p.churn)
                     } else {
-                        Arc::make_mut(&mut kernel).eval_move(&cur, p.durs, p0)
+                        Arc::make_mut(&mut kernel).eval_move(&cur, p.durs, p0, p.churn)
                     };
                     let accepted = rng.metropolis(cur_ms, ms, temp);
                     if accepted {
@@ -395,7 +405,7 @@ fn run(
                                 // one committed replay refreshes the
                                 // kernel's checkpoints for the new state
                                 let kr = Arc::make_mut(&mut kernel);
-                                let committed = kr.eval_move(&cur, p.durs, bufs.cands[i].p0);
+                                let committed = kr.eval_move(&cur, p.durs, bufs.cands[i].p0, p.churn);
                                 debug_assert_eq!(
                                     committed, ms,
                                     "speculative eval diverged from committed replay"
@@ -466,7 +476,7 @@ fn evaluate(
         _ => {
             for (c, slot) in cands.iter().zip(ms.iter_mut()) {
                 apply_cand(cur, c, multi);
-                *slot = scratch.eval(kernel, cur, c.p0, p.durs);
+                *slot = scratch.eval(kernel, cur, c.p0, p.durs, p.churn);
                 undo_cand(cur, c, multi);
             }
             return;
@@ -502,7 +512,7 @@ fn evaluate(
     for i in 0..c0 {
         let c = &shared.cands[i];
         apply_cand(cur, c, &shared.multi);
-        ms[i] = scratch.eval(kernel, cur, c.p0, p.durs);
+        ms[i] = scratch.eval(kernel, cur, c.p0, p.durs, p.churn);
         undo_cand(cur, c, &shared.multi);
     }
     for _ in 0..sent {

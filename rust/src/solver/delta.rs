@@ -49,6 +49,57 @@
 
 use crate::util::rng::DetRng;
 
+/// Churn-cost model for online preemption: in-flight (pinned) tasks are
+/// legal move targets, but a candidate decision that differs from a
+/// task's incumbent (configuration index or forced node) adds `cost`
+/// seconds — the checkpoint/restore churn — to that task's duration
+/// inside every evaluator. Both the delta kernel and the full-replay
+/// evaluator read the same table through [`Churn::extra`], and the term
+/// is a pure per-task function of the candidate state, so the
+/// delta ≡ full-replay and thread-count parity contracts hold with
+/// preemption exactly as without it.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct Churn {
+    /// Checkpoint/restore cost, seconds (the simulator's `switch_cost`).
+    pub(crate) cost: f64,
+    /// Per-task incumbent configuration index. `None` = task is not
+    /// preemptible (new, not yet started, or its incumbent config is no
+    /// longer on the frontier — the legacy re-decidable cases) and never
+    /// pays churn.
+    pub(crate) prior_cfg: Vec<Option<usize>>,
+    /// Per-task incumbent forced node (meaningful where `prior_cfg` is
+    /// `Some`). A candidate that releases the forced node (`None`) counts
+    /// as a relocation: the scheduler may then seat the gang anywhere,
+    /// so the conservative estimate charges the churn.
+    pub(crate) prior_node: Vec<Option<usize>>,
+}
+
+impl Churn {
+    /// Extra seconds task `t` pays under candidate decision (cfg, node).
+    #[inline]
+    pub(crate) fn extra(&self, t: usize, cfg: usize, node: Option<usize>) -> f64 {
+        match self.prior_cfg[t] {
+            Some(pc) if pc == cfg && self.prior_node[t] == node => 0.0,
+            Some(_) => self.cost,
+            None => 0.0,
+        }
+    }
+}
+
+/// Duration of the gang at order position holding task `t` under state
+/// `s`: the config's runtime plus any preemption churn. The one place
+/// every evaluator (committed replay, read-only replay, full replay)
+/// turns a decision into seconds — keeping them bit-identical by
+/// construction.
+#[inline]
+fn gang_dur(durs: &[Vec<(usize, f64)>], churn: Option<&Churn>, s: &State, t: usize) -> (usize, f64) {
+    let (g, dur) = durs[t][s.cfg[t]];
+    match churn {
+        Some(ch) => (g, dur + ch.extra(t, s.cfg[t], s.node[t])),
+        None => (g, dur),
+    }
+}
+
 /// Search state: one candidate SPASE solution.
 #[derive(Debug, Clone, Default)]
 pub(crate) struct State {
@@ -145,7 +196,7 @@ impl DeltaKernel {
     /// Full replay of `s`, refreshing every checkpoint. Returns the
     /// makespan (INFINITY if infeasible) and commits it. O(n·m) — called
     /// once per restart, not per move.
-    pub(crate) fn rebuild(&mut self, s: &State, durs: &[Vec<(usize, f64)>]) -> f64 {
+    pub(crate) fn rebuild(&mut self, s: &State, durs: &[Vec<(usize, f64)>], churn: Option<&Churn>) -> f64 {
         self.free.fill(0.0);
         let mut ms = 0.0f64;
         self.valid_upto = self.n;
@@ -156,7 +207,7 @@ impl DeltaKernel {
                 self.ckpt_ms[b] = ms;
             }
             let t = s.order[pos];
-            let (g, dur) = durs[t][s.cfg[t]];
+            let (g, dur) = gang_dur(durs, churn, s, t);
             match self.step(g, dur, s.node[t]) {
                 Some(end) => ms = ms.max(end),
                 None => {
@@ -175,7 +226,13 @@ impl DeltaKernel {
     /// checkpoint at or before `p0` and replay only the suffix —
     /// O((n − p0 + √n)·m̄) instead of O(n·m). Checkpoints crossed during
     /// the replay are staged for a subsequent [`Self::accept`].
-    pub(crate) fn eval_move(&mut self, s: &State, durs: &[Vec<(usize, f64)>], p0: usize) -> f64 {
+    pub(crate) fn eval_move(
+        &mut self,
+        s: &State,
+        durs: &[Vec<(usize, f64)>],
+        p0: usize,
+        churn: Option<&Churn>,
+    ) -> f64 {
         if p0 > self.valid_upto {
             // the unchanged prefix already failed to place a gang
             return f64::INFINITY;
@@ -197,7 +254,7 @@ impl DeltaKernel {
                 }
             }
             let t = s.order[pos];
-            let (g, dur) = durs[t][s.cfg[t]];
+            let (g, dur) = gang_dur(durs, churn, s, t);
             match self.step(g, dur, s.node[t]) {
                 Some(end) => ms = ms.max(end),
                 None => return f64::INFINITY,
@@ -235,6 +292,7 @@ impl DeltaKernel {
         durs: &[Vec<(usize, f64)>],
         p0: usize,
         free: &mut Vec<f64>,
+        churn: Option<&Churn>,
     ) -> f64 {
         if p0 > self.valid_upto {
             // the unchanged prefix already failed to place a gang
@@ -251,7 +309,7 @@ impl DeltaKernel {
         let mut ms = self.ckpt_ms[b0];
         for pos in b0 * self.block..self.n {
             let t = s.order[pos];
-            let (g, dur) = durs[t][s.cfg[t]];
+            let (g, dur) = gang_dur(durs, churn, s, t);
             match place_gang(free, &self.node_gpus, &self.offsets, g, dur, s.node[t]) {
                 Some(end) => ms = ms.max(end),
                 None => return f64::INFINITY,
@@ -354,14 +412,14 @@ impl FullScratch {
     /// over precomputed (gpus, duration) pairs, reusing this scratch.
     /// Bit-identical to the delta kernel for every candidate (the
     /// kernel-parity property tests assert it).
-    pub(crate) fn eval(&mut self, s: &State, durs: &[Vec<(usize, f64)>]) -> f64 {
+    pub(crate) fn eval(&mut self, s: &State, durs: &[Vec<(usize, f64)>], churn: Option<&Churn>) -> f64 {
         for (f, &n) in self.free.iter_mut().zip(&self.node_gpus) {
             f.clear();
             f.resize(n, 0.0);
         }
         let mut makespan = 0.0f64;
         for &t in &s.order {
-            let (g, dur) = durs[t][s.cfg[t]];
+            let (g, dur) = gang_dur(durs, churn, s, t);
             // earliest gang start across candidate nodes
             let mut best_node = usize::MAX;
             let mut best_start = f64::INFINITY;
@@ -756,12 +814,19 @@ mod tests {
 
     /// Reference evaluator: verbatim transliteration of the legacy
     /// full-replay `eval_fast` (copy + sort for the gang start, g linear
-    /// min-scans to occupy). The delta kernel must match it bit for bit.
-    fn eval_reference(s: &State, durs: &[Vec<(usize, f64)>], node_gpus: &[usize]) -> f64 {
+    /// min-scans to occupy), with the churn term applied the only way the
+    /// model defines it — per task, on the gang duration. The delta
+    /// kernel must match it bit for bit.
+    fn eval_reference(
+        s: &State,
+        durs: &[Vec<(usize, f64)>],
+        node_gpus: &[usize],
+        churn: Option<&Churn>,
+    ) -> f64 {
         let mut free: Vec<Vec<f64>> = node_gpus.iter().map(|&n| vec![0.0; n]).collect();
         let mut makespan = 0.0f64;
         for &t in &s.order {
-            let (g, dur) = durs[t][s.cfg[t]];
+            let (g, dur) = gang_dur(durs, churn, s, t);
             let kth = |xs: &[f64]| {
                 let mut tmp = xs.to_vec();
                 tmp.sort_by(f64::total_cmp);
@@ -858,8 +923,8 @@ mod tests {
             let mut mover = Mover::new(nt);
             let mut full = FullScratch::new(&node_gpus);
             mover.rebuild_pos(&s.order);
-            let ms0 = kernel.rebuild(&s, &durs);
-            assert_eq!(ms0, eval_reference(&s, &durs, &node_gpus), "case {case}: rebuild");
+            let ms0 = kernel.rebuild(&s, &durs, None);
+            assert_eq!(ms0, eval_reference(&s, &durs, &node_gpus, None), "case {case}: rebuild");
             let movable: Vec<usize> = (0..nt).collect();
             let mut committed = ms0;
             let mut multi: Vec<(usize, usize, usize)> = Vec::new();
@@ -883,13 +948,13 @@ mod tests {
                 assert_eq!(rebuilt.node, snapshot.node, "case {case} step {step}: cand undo node");
                 // the read-only (worker) replay must agree bit for bit with
                 // the staging replay before the latter runs
-                let ms_ro = kernel.eval_move_readonly(&s, &durs, p0, &mut ro_free);
-                let ms = kernel.eval_move(&s, &durs, p0);
+                let ms_ro = kernel.eval_move_readonly(&s, &durs, p0, &mut ro_free, None);
+                let ms = kernel.eval_move(&s, &durs, p0, None);
                 assert_eq!(ms, ms_ro, "case {case} step {step}: readonly eval diverged (p0={p0})");
-                let reference = eval_reference(&s, &durs, &node_gpus);
+                let reference = eval_reference(&s, &durs, &node_gpus, None);
                 assert_eq!(ms, reference, "case {case} step {step}: delta != full replay (p0={p0})");
                 assert_eq!(
-                    full.eval(&s, &durs),
+                    full.eval(&s, &durs, None),
                     reference,
                     "case {case} step {step}: FullScratch != reference"
                 );
@@ -908,7 +973,7 @@ mod tests {
             }
             // committed checkpoints must agree with a cold rebuild
             let mut fresh = DeltaKernel::new(node_gpus.clone(), nt);
-            assert_eq!(fresh.rebuild(&s, &durs), committed, "case {case}: final state drifted");
+            assert_eq!(fresh.rebuild(&s, &durs, None), committed, "case {case}: final state drifted");
         }
         assert!(infeasible_seen > 50, "too few infeasible candidates exercised: {infeasible_seen}");
     }
@@ -937,14 +1002,17 @@ mod tests {
             let mut kernel = DeltaKernel::new(node_gpus.clone(), nt);
             let mut mover = Mover::new(nt);
             mover.rebuild_pos(&s.order);
-            assert!(kernel.rebuild(&s, &durs).is_infinite(), "case {case}: seed must be infeasible");
+            assert!(
+                kernel.rebuild(&s, &durs, None).is_infinite(),
+                "case {case}: seed must be infeasible"
+            );
             let movable: Vec<usize> = (0..nt).collect();
             for step in 0..200 {
                 let (undo, p0) = mover.propose(&mut s, &durs, node_gpus.len(), &mut rng, &movable);
-                let ms = kernel.eval_move(&s, &durs, p0);
+                let ms = kernel.eval_move(&s, &durs, p0, None);
                 assert_eq!(
                     ms,
-                    eval_reference(&s, &durs, &node_gpus),
+                    eval_reference(&s, &durs, &node_gpus, None),
                     "case {case} step {step}: delta != full replay from infeasible committed"
                 );
                 if ms.is_finite() && rng.f64() < 0.5 {
@@ -966,11 +1034,84 @@ mod tests {
         let node_gpus = vec![2usize];
         let s = State { cfg: vec![1], order: vec![0], node: vec![None] };
         let mut kernel = DeltaKernel::new(node_gpus, 1);
-        let ms = kernel.rebuild(&s, &durs);
+        let ms = kernel.rebuild(&s, &durs, None);
         assert_eq!(ms, 60.0);
         // p0 == n signals "nothing changed"
-        assert_eq!(kernel.eval_move(&s, &durs, 1), 60.0);
+        assert_eq!(kernel.eval_move(&s, &durs, 1, None), 60.0);
         kernel.accept(1, ms);
-        assert_eq!(kernel.eval_move(&s, &durs, 0), 60.0);
+        assert_eq!(kernel.eval_move(&s, &durs, 0, None), 60.0);
+    }
+
+    /// The preemption churn term preserves the kernel parity contract:
+    /// over random move sequences with a random churn model attached
+    /// (some tasks preemptible, deviating decisions pay the cost), the
+    /// delta evaluator, the read-only worker replay, the FullScratch
+    /// evaluator, and the transliterated reference agree bit for bit —
+    /// and a state matching its incumbent exactly pays nothing.
+    #[test]
+    fn prop_churn_delta_eval_matches_full_replay() {
+        let mut charged_seen = 0usize;
+        for case in 0..30u64 {
+            let mut rng = DetRng::new(4000 + case);
+            let (durs, node_gpus) = random_instance(&mut rng, case % 3 == 0);
+            let nt = durs.len();
+            let mut s = random_state(&mut rng, &durs, node_gpus.len(), true);
+            // churn model: roughly half the tasks are preemptible, with
+            // their incumbent decision drawn at random
+            let churn = Churn {
+                cost: rng.range_f64(10.0, 200.0),
+                prior_cfg: (0..nt)
+                    .map(|t| (rng.f64() < 0.5).then(|| rng.below(durs[t].len())))
+                    .collect(),
+                prior_node: (0..nt)
+                    .map(|_| {
+                        if rng.f64() < 0.5 { Some(rng.below(node_gpus.len())) } else { None }
+                    })
+                    .collect(),
+            };
+            // zero-churn sanity: a state that IS its incumbent pays 0
+            for t in 0..nt {
+                if let Some(pc) = churn.prior_cfg[t] {
+                    assert_eq!(churn.extra(t, pc, churn.prior_node[t]), 0.0);
+                    assert_eq!(churn.extra(t, pc, Some(usize::MAX)), churn.cost);
+                }
+            }
+            let mut kernel = DeltaKernel::new(node_gpus.clone(), nt);
+            let mut mover = Mover::new(nt);
+            let mut full = FullScratch::new(&node_gpus);
+            mover.rebuild_pos(&s.order);
+            let ms0 = kernel.rebuild(&s, &durs, Some(&churn));
+            assert_eq!(
+                ms0,
+                eval_reference(&s, &durs, &node_gpus, Some(&churn)),
+                "case {case}: churn rebuild"
+            );
+            let movable: Vec<usize> = (0..nt).collect();
+            let mut ro_free: Vec<f64> = Vec::new();
+            for step in 0..200 {
+                let (undo, p0) = mover.propose(&mut s, &durs, node_gpus.len(), &mut rng, &movable);
+                let ms_ro = kernel.eval_move_readonly(&s, &durs, p0, &mut ro_free, Some(&churn));
+                let ms = kernel.eval_move(&s, &durs, p0, Some(&churn));
+                assert_eq!(ms, ms_ro, "case {case} step {step}: churn readonly diverged");
+                let reference = eval_reference(&s, &durs, &node_gpus, Some(&churn));
+                assert_eq!(ms, reference, "case {case} step {step}: churn delta != reference");
+                assert_eq!(
+                    full.eval(&s, &durs, Some(&churn)),
+                    reference,
+                    "case {case} step {step}: churn FullScratch != reference"
+                );
+                // the churn-free score differs whenever some preemptible
+                // task deviates — count that the model actually bites
+                if ms.is_finite() && ms != eval_reference(&s, &durs, &node_gpus, None) {
+                    charged_seen += 1;
+                }
+                if ms.is_finite() && rng.f64() < 0.4 {
+                    kernel.accept(p0, ms);
+                } else {
+                    mover.undo(&mut s, undo);
+                }
+            }
+        }
+        assert!(charged_seen > 200, "churn term rarely exercised: {charged_seen}");
     }
 }

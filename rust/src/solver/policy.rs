@@ -52,6 +52,19 @@ pub struct PlanCtx<'a> {
     /// The incumbent plan's decisions in schedule order. Empty = cold
     /// solve (no incumbent to warm-start from).
     pub prior: Vec<PriorDecision>,
+    /// Online preemption: the checkpoint/restore churn cost, in seconds,
+    /// of moving an in-flight (pinned) gang. `None` (the default) keeps
+    /// the historical hard pin — an incremental re-solve must preserve
+    /// pinned tasks' (config, node) exactly. `Some(cost)` makes pinned
+    /// tasks legal move targets: any candidate decision that differs from
+    /// the task's [`PriorDecision`] (GPU count, parallelism, or node)
+    /// carries `cost` extra seconds on its remaining duration inside the
+    /// solver's evaluators, so an in-flight gang is relocated or shrunk
+    /// only when the makespan gain beats the churn. The simulator sets
+    /// this to its `switch_cost` (the penalty it actually charges through
+    /// `mark_switches`), keeping planner estimates and simulated reality
+    /// in agreement.
+    pub preempt_cost: Option<f64>,
 }
 
 impl<'a> PlanCtx<'a> {
@@ -66,6 +79,7 @@ impl<'a> PlanCtx<'a> {
             available: vec![true; n],
             pinned: vec![false; n],
             prior: Vec::new(),
+            preempt_cost: None,
         }
     }
 
@@ -76,12 +90,22 @@ impl<'a> PlanCtx<'a> {
             .collect()
     }
 
-    /// Workload index of a task id.
+    /// Workload index of a task id — an O(n) linear scan kept only as the
+    /// reference the map-equivalence test compares against. Anything that
+    /// looks up more than one task must use [`Self::id_index_map`]; a
+    /// per-task scan is O(n²) at online stream scale, which is exactly
+    /// the regression this deprecation fences off.
+    #[doc(hidden)]
+    #[deprecated(note = "O(n) scan: build `id_index_map()` once instead")]
     pub fn index_of(&self, task_id: usize) -> Option<usize> {
         self.workload.iter().position(|t| t.id == task_id)
     }
 
-    /// The incumbent decision for a task id, if any.
+    /// The incumbent decision for a task id — O(n) linear scan, kept only
+    /// as the reference for the map-equivalence test. Use
+    /// [`Self::prior_index_map`] for anything repeated.
+    #[doc(hidden)]
+    #[deprecated(note = "O(n) scan: build `prior_index_map()` once instead")]
     pub fn prior_for(&self, task_id: usize) -> Option<&PriorDecision> {
         self.prior.iter().find(|p| p.task_id == task_id)
     }
@@ -271,6 +295,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)] // exercising the deprecated scans on purpose
     fn index_and_prior_lookup() {
         let (w, grid, c) = setup();
         let mut ctx = PlanCtx::fresh(&w, &grid, &c);
@@ -283,6 +308,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)] // the maps' contract is "first occurrence, like the scans"
     fn index_maps_match_linear_scans() {
         let (w, grid, c) = setup();
         let mut ctx = PlanCtx::fresh(&w, &grid, &c);

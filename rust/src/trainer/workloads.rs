@@ -180,6 +180,50 @@ pub fn online_mixed_workload(n: usize, mean_gap_secs: f64, rng: &mut DetRng) -> 
     with_poisson_arrivals(w, mean_gap_secs, rng)
 }
 
+/// The canonical **blocked-queue** preemption instance: task 0 has a
+/// diminishing-returns frontier (1 GPU → 3000 s, 2 → 1600 s, 4 → 1150 s,
+/// 8 → 1000 s), is alone at t = 0 (so a makespan-minimizing solver grabs
+/// all 8 GPUs), and a 14-task burst of 1-GPU 500 s jobs lands at
+/// t = 100 s. With in-flight tasks hard-pinned the burst queues behind
+/// the gang (provable optimum 2000 s end to end); with the churn-cost
+/// preemption model (cost 30 s) the optimum checkpoints the gang down to
+/// 2 GPUs (solver-level optimum 1630 s; 1600 s end to end). The grid is
+/// hand-built so these economics are exact: every task runs exactly 100
+/// minibatches, hence `task_secs = 100 × minibatch_secs`. Used by the
+/// solver-level and simulator-level preemption acceptance tests.
+pub fn blocked_queue_instance() -> (Workload, crate::profiler::ProfileGrid, Cluster) {
+    use crate::profiler::{PlanEstimate, ProfileGrid};
+    // dataset 100 examples at batch 1 over 1 epoch → exactly 100 batches
+    let mut w: Workload = (0..15)
+        .map(|id| {
+            Task::new(id, ModelDesc::resnet_200m(), HParams::new(1, 1e-4, 1, Optimizer::Sgd), 100)
+        })
+        .collect();
+    for t in w.iter_mut().skip(1) {
+        t.arrival = 100.0;
+    }
+    let mut grid = ProfileGrid::default();
+    let mut put = |id: usize, gpus: usize, secs: f64| {
+        grid.insert(PlanEstimate {
+            task_id: id,
+            upp: "pytorch-ddp".into(),
+            kind: ParallelismKind::Ddp,
+            gpus,
+            knobs: Knobs::default(),
+            minibatch_secs: secs / 100.0,
+            mem_per_gpu_gib: 1.0,
+            dram_gib: 1.0,
+        });
+    };
+    for &(g, secs) in &[(1usize, 3000.0), (2, 1600.0), (4, 1150.0), (8, 1000.0)] {
+        put(0, g, secs);
+    }
+    for id in 1..15 {
+        put(id, 1, 500.0);
+    }
+    (w, grid, Cluster::single_node_8gpu())
+}
+
 // ---- solver scaling workloads ---------------------------------------------
 //
 // The delta-kernel scale pass (EXPERIMENTS.md §Perf) needs SPASE instances
@@ -372,6 +416,23 @@ mod tests {
         // different seeds give different frontiers
         let (c, _) = scaling_instance(128, 4, 8, 10);
         assert!(a[0].configs[0].task_secs != c[0].configs[0].task_secs);
+    }
+
+    #[test]
+    fn blocked_queue_instance_exact_economics() {
+        let (w, grid, c) = blocked_queue_instance();
+        assert_eq!(w.len(), 15);
+        assert_eq!(c.total_gpus(), 8);
+        assert_eq!(w[0].arrival, 0.0);
+        assert!(w[1..].iter().all(|t| t.arrival == 100.0));
+        // the frontier the preemption acceptance tests reason about,
+        // bit-exact (100 minibatches ⇒ task_secs = 100 × minibatch_secs)
+        let secs: Vec<(usize, f64)> =
+            grid.configs(&w[0]).iter().map(|cfg| (cfg.gpus, cfg.task_secs)).collect();
+        assert_eq!(secs, vec![(1, 3000.0), (2, 1600.0), (4, 1150.0), (8, 1000.0)]);
+        let small = grid.configs(&w[1]);
+        assert_eq!(small.len(), 1);
+        assert_eq!((small[0].gpus, small[0].task_secs), (1, 500.0));
     }
 
     #[test]

@@ -531,9 +531,9 @@ fn prop_thread_count_preserves_trajectory() {
         .iter()
         .map(|a| PriorDecision { task_id: a.task_id, config: a.config.clone(), node: Some(a.node) })
         .collect();
+    let widx = ctx.id_index_map();
     for a in incumbent.assignments.iter().take(24) {
-        let i = ctx.index_of(a.task_id).unwrap();
-        ctx.pinned[i] = true;
+        ctx.pinned[widx[&a.task_id]] = true;
     }
     for i in 48..w.len() {
         ctx.available[i] = true;
@@ -551,6 +551,79 @@ fn prop_thread_count_preserves_trajectory() {
     assert_eq!(si1.warm_makespan, si8.warm_makespan);
     assert_eq!(si1.final_makespan, si8.final_makespan);
     assert_eq!(w1, w8, "incremental plans diverged across thread counts");
+}
+
+/// Preemption parity (the tentpole's determinism contract, run
+/// explicitly in release by CI alongside
+/// `prop_thread_count_preserves_trajectory`): with the churn-cost model
+/// enabled on a 64-task mid-stream re-solve — pinned in-flight gangs now
+/// legal move targets — the trajectory must remain bit-identical across
+/// worker thread counts AND across the delta/full-replay evaluators, and
+/// must genuinely differ from the pinning trajectory (the churn model
+/// actually re-decides in-flight tasks). Budgets are un-truncatable so
+/// wall-clock cannot fork the comparison.
+#[test]
+fn prop_preempt_resolve_thread_and_evaluator_parity() {
+    use saturn::trainer::workloads;
+
+    let registry = UppRegistry::default_library(Arc::new(CostModel::default()));
+    let mut wrng = DetRng::new(777);
+    let w = workloads::online_mixed_workload(64, 200.0, &mut wrng);
+    let c = Cluster::four_node_32gpu();
+    let (grid, _) = TrialRunner::new(registry).profile(&w, &c);
+    let mut ctx = PlanCtx::fresh(&w, &grid, &c);
+    for i in 48..w.len() {
+        ctx.available[i] = false;
+    }
+    let incumbent = JointOptimizer::default().plan(&ctx, &mut DetRng::new(778));
+    ctx.prior = incumbent
+        .assignments
+        .iter()
+        .map(|a| PriorDecision { task_id: a.task_id, config: a.config.clone(), node: Some(a.node) })
+        .collect();
+    let widx = ctx.id_index_map();
+    for a in incumbent.assignments.iter().take(24) {
+        ctx.pinned[widx[&a.task_id]] = true;
+    }
+    for i in 48..w.len() {
+        ctx.available[i] = true;
+    }
+    // preemption on: the simulator would set this to its switch_cost
+    ctx.preempt_cost = Some(30.0);
+    let mk = |threads: usize, full_replay: bool| JointOptimizer {
+        timeout: std::time::Duration::from_secs(14400),
+        incremental: true,
+        threads,
+        full_replay,
+        ..Default::default()
+    };
+    let (p1, s1) = mk(1, false).resolve_incremental(&ctx, &mut DetRng::new(779));
+    let (p8, s8) = mk(8, false).resolve_incremental(&ctx, &mut DetRng::new(779));
+    assert_eq!(s1.evals, s8.evals, "preempt eval counts diverged across threads");
+    assert_eq!(s1.improvements, s8.improvements);
+    assert_eq!(s1.warm_makespan, s8.warm_makespan);
+    assert_eq!(s1.final_makespan, s8.final_makespan);
+    assert_eq!(p1, p8, "preempt plans diverged across thread counts");
+    // the full-replay A/B evaluator charges the identical churn term
+    let (f1, sf1) = mk(1, true).resolve_incremental(&ctx, &mut DetRng::new(779));
+    let (f8, sf8) = mk(8, true).resolve_incremental(&ctx, &mut DetRng::new(779));
+    assert_eq!(sf1.evals, sf8.evals, "full-replay preempt eval counts diverged");
+    assert_eq!(sf1.final_makespan, sf8.final_makespan);
+    assert_eq!(f1, f8, "full-replay preempt plans diverged across thread counts");
+    assert_eq!(s1.evals, sf1.evals, "delta vs full replay diverged under preemption");
+    assert_eq!(s1.improvements, sf1.improvements);
+    assert_eq!(s1.final_makespan, sf1.final_makespan);
+    assert_eq!(p1, f1, "delta and full-replay preempt plans must be identical");
+    // and the churn model really widens the search: the pinning
+    // trajectory (preempt off) samples a different movable set, so the
+    // two runs consume the RNG differently from the very first move
+    let mut ctx_off = ctx.clone();
+    ctx_off.preempt_cost = None;
+    let (p_off, s_off) = mk(1, false).resolve_incremental(&ctx_off, &mut DetRng::new(779));
+    assert!(
+        p_off != p1 || s_off.final_makespan != s1.final_makespan,
+        "preemption had no effect on a stream with 24 pinned in-flight gangs"
+    );
 }
 
 /// The Optimus allocator never exceeds its budget and never starves a
