@@ -46,10 +46,26 @@ fn main() {
             let mut rng = DetRng::new(2718);
             let r = if use_asha {
                 let mut ctl = SuccessiveHalving::new(vec![1.0 / 9.0, 1.0 / 3.0], 3.0, score);
-                simulate_with_controller(policy.as_ref(), &workload, &grid, &cluster, cfg, &mut rng, &mut ctl)
+                simulate_with_controller(
+                    policy.as_ref(),
+                    &workload,
+                    &grid,
+                    &cluster,
+                    cfg.clone(),
+                    &mut rng,
+                    &mut ctl,
+                )
             } else {
                 let mut ctl = NoController;
-                simulate_with_controller(policy.as_ref(), &workload, &grid, &cluster, cfg, &mut rng, &mut ctl)
+                simulate_with_controller(
+                    policy.as_ref(),
+                    &workload,
+                    &grid,
+                    &cluster,
+                    cfg.clone(),
+                    &mut rng,
+                    &mut ctl,
+                )
             };
             t.row(vec![
                 pname.to_string(),

@@ -32,8 +32,8 @@ fn main() {
 
     let intervals = [500.0, 1000.0, 2000.0, 4000.0, 8000.0];
     let mut t = TextTable::new(vec!["interval (s)", "Saturn (h)", "rounds", "switches", "Optimus-Dyn (h)"]);
-    let s_pts = interval_sweep(&saturn, &workload, &grid, &cluster, &intervals, 500.0, base, 7);
-    let o_pts = interval_sweep(&optimus, &workload, &grid, &cluster, &intervals, 500.0, base, 7);
+    let s_pts = interval_sweep(&saturn, &workload, &grid, &cluster, &intervals, 500.0, base.clone(), 7);
+    let o_pts = interval_sweep(&optimus, &workload, &grid, &cluster, &intervals, 500.0, base.clone(), 7);
     for (s, o) in s_pts.iter().zip(&o_pts) {
         t.row(vec![
             format!("{:.0}", s.knob),
@@ -49,7 +49,7 @@ fn main() {
 
     let thresholds = [100.0, 250.0, 500.0, 1000.0, 2000.0];
     let mut t = TextTable::new(vec!["threshold (s)", "Saturn (h)", "switches", "Optimus-Dyn (h)"]);
-    let s_pts = threshold_sweep(&saturn, &workload, &grid, &cluster, &thresholds, 1000.0, base, 7);
+    let s_pts = threshold_sweep(&saturn, &workload, &grid, &cluster, &thresholds, 1000.0, base.clone(), 7);
     let o_pts = threshold_sweep(&optimus, &workload, &grid, &cluster, &thresholds, 1000.0, base, 7);
     for (s, o) in s_pts.iter().zip(&o_pts) {
         t.row(vec![

@@ -141,7 +141,7 @@ fn main() {
         let ms: f64 = (0..trials)
             .map(|k| {
                 let mut rng = DetRng::new(900 + k as u64);
-                simulate(policy.as_ref(), &workload, &grid, &cluster, cfg, &mut rng).makespan
+                simulate(policy.as_ref(), &workload, &grid, &cluster, cfg.clone(), &mut rng).makespan
             })
             .sum::<f64>()
             / trials as f64;

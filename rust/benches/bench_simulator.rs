@@ -48,7 +48,7 @@ fn main() {
     };
     b.bench("sim_introspective_saturn_30ms_solver", || {
         let mut rng = DetRng::new(3);
-        let r = simulate(&fast, &w, &grid, &c, cfg, &mut rng);
+        let r = simulate(&fast, &w, &grid, &c, cfg.clone(), &mut rng);
         black_box(r.makespan);
     });
 

@@ -41,7 +41,8 @@ pub fn interval_sweep(
     intervals
         .iter()
         .map(|&interval| {
-            let cfg = SimConfig { introspect: Some(IntrospectCfg { interval, threshold }), ..base };
+            let cfg =
+                SimConfig { introspect: Some(IntrospectCfg { interval, threshold }), ..base.clone() };
             let mut rng = DetRng::new(seed);
             let r = simulate(policy, workload, grid, cluster, cfg, &mut rng);
             SweepPoint { knob: interval, makespan: r.makespan, rounds: r.rounds, switches: r.switches }
@@ -63,7 +64,8 @@ pub fn threshold_sweep(
     thresholds
         .iter()
         .map(|&threshold| {
-            let cfg = SimConfig { introspect: Some(IntrospectCfg { interval, threshold }), ..base };
+            let cfg =
+                SimConfig { introspect: Some(IntrospectCfg { interval, threshold }), ..base.clone() };
             let mut rng = DetRng::new(seed);
             let r = simulate(policy, workload, grid, cluster, cfg, &mut rng);
             SweepPoint { knob: threshold, makespan: r.makespan, rounds: r.rounds, switches: r.switches }
@@ -83,7 +85,8 @@ pub fn oneshot_vs_introspective(
     seed: u64,
 ) -> (SimResult, SimResult) {
     let mut r1 = DetRng::new(seed);
-    let one = simulate(policy, workload, grid, cluster, SimConfig { introspect: None, ..base }, &mut r1);
+    let one =
+        simulate(policy, workload, grid, cluster, SimConfig { introspect: None, ..base.clone() }, &mut r1);
     let mut r2 = DetRng::new(seed);
     let two = simulate(policy, workload, grid, cluster, SimConfig { introspect: Some(ic), ..base }, &mut r2);
     (one, two)

@@ -18,7 +18,10 @@
 //! - [`solver`] — the SPASE joint optimizer: simplex LP, branch-and-bound
 //!   MILP (paper eqs. 1–11), and the anytime incumbent search used under a
 //!   wall-clock timeout — a speculative parallel annealing engine whose
-//!   trajectories are bit-identical for every thread count.
+//!   trajectories are bit-identical for every thread count, scoring
+//!   candidates under pluggable objectives (makespan by default;
+//!   mean/weighted turnaround and a smoothed-p95 tail surrogate for
+//!   SLO-aware online streams).
 //! - [`sched`] — execution-plan representation and validity checking.
 //! - [`baselines`] — Max/Min heuristics, Optimus-Greedy, Randomized, and the
 //!   dynamic Optimus variants from the paper's evaluation.

@@ -198,7 +198,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         let ms: Vec<f64> = (0..trials)
             .map(|k| {
                 let mut rng = DetRng::new(seed + k as u64);
-                simulate(policy.as_ref(), &w, grid, &c, cfg, &mut rng).makespan + overhead
+                simulate(policy.as_ref(), &w, grid, &c, cfg.clone(), &mut rng).makespan + overhead
             })
             .collect();
         let st = trial_stats(&ms);
@@ -240,7 +240,7 @@ fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
         let ms: Vec<f64> = (0..spec.trials)
             .map(|k| {
                 let mut rng = DetRng::new(spec.seed + k as u64);
-                simulate(policy.as_ref(), &w, grid, &c, cfg, &mut rng).makespan + overhead
+                simulate(policy.as_ref(), &w, grid, &c, cfg.clone(), &mut rng).makespan + overhead
             })
             .collect();
         let st = trial_stats(&ms);

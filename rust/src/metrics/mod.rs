@@ -97,6 +97,29 @@ pub fn geomean(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
 }
 
+/// Linearly interpolated sample quantile (numpy's default / R type 7):
+/// on the ascending-sorted sample, rank `h = (n−1)·q` interpolates
+/// between the neighboring order statistics,
+/// `x[⌊h⌋] + (h − ⌊h⌋)·(x[⌊h⌋+1] − x[⌊h⌋])`. `q` is clamped to [0, 1];
+/// an empty sample returns 0.0. Feeds the p95 fields on
+/// [`OnlineStats`].
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    let q = if q.is_finite() { q.clamp(0.0, 1.0) } else { 1.0 };
+    let h = (sorted.len() - 1) as f64 * q;
+    let lo = h.floor() as usize;
+    let frac = h - lo as f64;
+    if lo + 1 < sorted.len() {
+        sorted[lo] + frac * (sorted[lo + 1] - sorted[lo])
+    } else {
+        sorted[lo]
+    }
+}
+
 /// Per-workload online scheduling statistics: queueing delay (submission
 /// → first GPU) and turnaround (submission → completion), the natural
 /// companions to makespan once tasks arrive over time.
@@ -108,10 +131,17 @@ pub struct OnlineStats {
     pub mean_queue_delay: f64,
     /// Worst queueing delay.
     pub max_queue_delay: f64,
+    /// Interpolated 95th-percentile queueing delay ([`quantile`] at
+    /// q = 0.95) — the tail statistic the SLO-aware objectives target,
+    /// previously reported only as mean/max.
+    pub p95_queueing_delay: f64,
     /// Mean seconds between arrival and completion.
     pub mean_turnaround: f64,
     /// Worst turnaround.
     pub max_turnaround: f64,
+    /// Interpolated 95th-percentile turnaround ([`quantile`] at
+    /// q = 0.95).
+    pub p95_turnaround: f64,
     /// Completed tasks per hour of *busy* time — the union of the busy
     /// spans, so pre-arrival idle gaps, `start_latency`, and sparse
     /// inter-arrival lulls don't dilute it. (Dividing by the full
@@ -179,8 +209,10 @@ pub fn online_stats(workload: &Workload, result: &SimResult) -> OnlineStats {
         finished,
         mean_queue_delay: mean(&queue),
         max_queue_delay: max(&queue),
+        p95_queueing_delay: quantile(&queue, 0.95),
         mean_turnaround: mean(&turn),
         max_turnaround: max(&turn),
+        p95_turnaround: quantile(&turn, 0.95),
         throughput_per_hour: if window > 0.0 { finished as f64 * 3600.0 / window } else { 0.0 },
         preemptions: result.preemptions,
     }
@@ -284,9 +316,12 @@ mod tests {
         // queue delays: 10-0 = 10, 150-100 = 50
         assert!((s.mean_queue_delay - 30.0).abs() < 1e-9);
         assert!((s.max_queue_delay - 50.0).abs() < 1e-9);
+        // interpolated p95 of {10, 50}: 10 + 0.95·40 = 48
+        assert!((s.p95_queueing_delay - 48.0).abs() < 1e-9);
         // turnarounds: 500, 600
         assert!((s.mean_turnaround - 550.0).abs() < 1e-9);
         assert!((s.max_turnaround - 600.0).abs() < 1e-9);
+        assert!((s.p95_turnaround - 595.0).abs() < 1e-9);
         // no spans recorded: the window falls back to first start (10) →
         // last completion (700), not the 3600 s makespan
         assert!((s.throughput_per_hour - 2.0 * 3600.0 / 690.0).abs() < 1e-9);
@@ -339,6 +374,34 @@ mod tests {
         let s = online_stats(&Vec::new(), &SimResult::default());
         assert_eq!(s.finished, 0);
         assert_eq!(s.mean_queue_delay, 0.0);
+        assert_eq!(s.p95_queueing_delay, 0.0);
+        assert_eq!(s.p95_turnaround, 0.0);
+    }
+
+    /// Hand-computed regression for the interpolated-quantile helper and
+    /// the p95 fields (ROADMAP names p95 queueing delay; `online_stats`
+    /// used to report only mean/max).
+    #[test]
+    fn quantile_interpolates_hand_computed() {
+        // n = 5: rank h = 4·0.95 = 3.8 → 30 + 0.8·(100 − 30) = 86
+        let xs = [20.0, 0.0, 100.0, 10.0, 30.0]; // unsorted on purpose
+        assert!((quantile(&xs, 0.95) - 86.0).abs() < 1e-12);
+        // medians: even n interpolates halfway
+        assert!((quantile(&[1.0, 2.0, 3.0, 4.0], 0.5) - 2.5).abs() < 1e-12);
+        assert!((quantile(&[3.0, 1.0, 2.0], 0.5) - 2.0).abs() < 1e-12);
+        // extremes and clamping
+        assert_eq!(quantile(&xs, 0.0), 0.0);
+        assert_eq!(quantile(&xs, 1.0), 100.0);
+        assert_eq!(quantile(&xs, 7.0), 100.0);
+        assert_eq!(quantile(&xs, -1.0), 0.0);
+        assert_eq!(quantile(&xs, f64::NAN), 100.0);
+        // degenerate inputs
+        assert_eq!(quantile(&[], 0.95), 0.0);
+        assert_eq!(quantile(&[42.0], 0.95), 42.0);
+        // the six-task flow-burst turnaround set the sim test pins:
+        // h = 5·0.95 = 4.75 → 500 + 0.75·(1000 − 500) = 875
+        let turns = [100.0, 200.0, 300.0, 400.0, 500.0, 1000.0];
+        assert!((quantile(&turns, 0.95) - 875.0).abs() < 1e-12);
     }
 
     #[test]

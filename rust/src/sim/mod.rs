@@ -21,6 +21,7 @@
 use crate::cluster::Cluster;
 use crate::profiler::ProfileGrid;
 use crate::sched::{list_schedule, PlacementChoice, Schedule};
+use crate::solver::objective::Objective;
 use crate::solver::policy::{PlanCtx, Policy};
 use crate::trainer::Workload;
 use crate::util::rng::DetRng;
@@ -42,7 +43,7 @@ impl Default for IntrospectCfg {
 }
 
 /// Simulation parameters.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct SimConfig {
     /// Log-normal sigma of actual-vs-estimated runtime (per task).
     pub noise_sigma: f64,
@@ -64,6 +65,21 @@ pub struct SimConfig {
     /// in-flight tasks keep their (config, node) across re-solves exactly
     /// as before this knob existed.
     pub preempt: bool,
+    /// The scheduling objective this stream optimizes. The simulator
+    /// threads it into every planning context
+    /// ([`crate::solver::policy::PlanCtx::objective`], which wins over
+    /// the planner's own knob) **and** uses it for the re-plan acceptance
+    /// comparison: a proposal is adopted when it improves the configured
+    /// objective — not raw makespan — by more than the introspection
+    /// threshold. [`Objective::Makespan`] (the default) is bit-identical
+    /// to the historical behavior, including the exact
+    /// `remaining-segment − horizon` keep-side arithmetic; flow
+    /// objectives score a replay of the kept plan at the event time
+    /// instead. Caveat (inherited): re-queuing a started gang without
+    /// changing its (config, node) pays no churn — only placement
+    /// deviations are priced — so flow objectives may delay a running
+    /// gang's resumption for free; see the ROADMAP's pause-churn item.
+    pub objective: Objective,
 }
 
 impl Default for SimConfig {
@@ -74,6 +90,7 @@ impl Default for SimConfig {
             introspect: None,
             start_latency: 0.0,
             preempt: false,
+            objective: Objective::Makespan,
         }
     }
 }
@@ -237,6 +254,10 @@ pub fn simulate_with_controller(
     // online preemption: let incremental re-solvers checkpoint-and-shrink
     // in-flight gangs, charging exactly the switch penalty billed below
     ctx.preempt_cost = cfg.preempt.then_some(cfg.switch_cost);
+    // the planner optimizes the same scalar the acceptance threshold
+    // below compares (the context's objective wins over the planner knob)
+    ctx.objective = Some(cfg.objective.clone());
+    ctx.now = now;
     // task-id → workload-index map, built once per simulation (first
     // occurrence, exactly like the per-task linear `position` scans it
     // replaces — those made every replay O(n²) at online stream scale)
@@ -322,6 +343,7 @@ pub fn simulate_with_controller(
             }
         }
         ctx.remaining = states.iter().map(|s| s.remaining).collect();
+        ctx.now = now;
         refresh_prior(&mut ctx, &plan, &started);
         if ctx.active().is_empty() {
             if !has_pending(&ctx, workload) {
@@ -333,9 +355,17 @@ pub fn simulate_with_controller(
         }
         let proposal = policy.plan(&ctx, rng);
         ordered_choices_into(&proposal, &mut scratch.order, &mut scratch.proposal);
-        // remaining makespan of the current plan if we keep going
-        let keep_ms = seg_makespan - horizon;
-        // proposed remaining makespan (planner estimates + switch costs)
+        // remaining score of the current plan if we keep going: makespan
+        // keeps the exact historical segment arithmetic; flow objectives
+        // score a replay of the kept plan at the event time
+        let keep_ms = if cfg.objective.is_makespan() {
+            seg_makespan - horizon
+        } else {
+            let keep_sched =
+                replay_into(&plan, &states, workload, cluster, &id2idx, &mut scratch.replay_choices);
+            score_remaining(&cfg.objective, &keep_sched, now, workload, &id2idx)
+        };
+        // proposed remaining score (planner estimates + switch costs)
         scratch.switch_states.clear();
         scratch.switch_states.extend_from_slice(&states);
         let (switched, preempted) = mark_switches(
@@ -346,15 +376,15 @@ pub fn simulate_with_controller(
             cfg.switch_cost,
             &id2idx,
         );
-        let prop_ms = replay_into(
+        let prop_sched = replay_into(
             &scratch.proposal,
             &scratch.switch_states,
             workload,
             cluster,
             &id2idx,
             &mut scratch.replay_choices,
-        )
-        .makespan();
+        );
+        let prop_ms = score_remaining(&cfg.objective, &prop_sched, now, workload, &id2idx);
         if prop_ms <= keep_ms - ic.threshold {
             std::mem::swap(&mut plan, &mut scratch.proposal);
             std::mem::swap(&mut states, &mut scratch.switch_states);
@@ -375,6 +405,21 @@ pub fn simulate_with_controller(
 /// True if any task has been submitted but not yet injected.
 fn has_pending(ctx: &PlanCtx, workload: &Workload) -> bool {
     (0..workload.len()).any(|i| !ctx.available[i])
+}
+
+/// Score a replayed (relative-time) schedule of the remaining tasks
+/// under the configured objective at absolute time `now` — the scalar
+/// both sides of the re-plan acceptance threshold compare. For
+/// [`Objective::Makespan`] this is exactly `sched.makespan()`, the
+/// historical comparison.
+fn score_remaining(
+    objective: &Objective,
+    sched: &Schedule,
+    now: f64,
+    workload: &Workload,
+    id2idx: &HashMap<usize, usize>,
+) -> f64 {
+    objective.score_schedule(sched, now, |tid| workload[id2idx[&tid]].arrival)
 }
 
 /// Rebuild the context's incumbent-plan view (prior decisions + in-flight
@@ -428,6 +473,7 @@ fn arrival_replan(
     }
     result.arrival_events += 1;
     ctx.remaining = states.iter().map(|s| s.remaining).collect();
+    ctx.now = now;
     refresh_prior(ctx, plan, started);
     if ctx.active().is_empty() {
         plan.clear();
@@ -452,15 +498,15 @@ fn arrival_replan(
         cfg.switch_cost,
         id2idx,
     );
-    let prop_ms = replay_into(
+    let prop_sched = replay_into(
         &scratch.proposal,
         &scratch.switch_states,
         workload,
         cluster,
         id2idx,
         &mut scratch.replay_choices,
-    )
-    .makespan();
+    );
+    let prop_ms = score_remaining(&cfg.objective, &prop_sched, now, workload, id2idx);
     // ...with the new arrivals appended at their min-area configuration
     for &i in &newly {
         if states[i].remaining <= 1e-12 {
@@ -477,7 +523,7 @@ fn arrival_replan(
     }
     let keep_sched =
         replay_into(&scratch.keep, states, workload, cluster, id2idx, &mut scratch.replay_choices);
-    let keep_ms = keep_sched.makespan();
+    let keep_ms = score_remaining(&cfg.objective, &keep_sched, now, workload, id2idx);
     let threshold = cfg.introspect.map_or(0.0, |ic| ic.threshold);
     let accept = prop_ms <= keep_ms - threshold
         || (switched == 0 && prop_ms <= keep_ms)
@@ -708,7 +754,7 @@ mod tests {
         let base = SimConfig { noise_sigma: 0.10, ..Default::default() };
         let intro = SimConfig {
             introspect: Some(IntrospectCfg { interval: 1000.0, threshold: 500.0 }),
-            ..base
+            ..base.clone()
         };
         let mut r1 = DetRng::new(4);
         let mut r2 = DetRng::new(4);
@@ -912,7 +958,7 @@ mod tests {
             introspect: Some(IntrospectCfg { interval: 1500.0, threshold: 200.0 }),
             ..Default::default()
         };
-        let a = simulate(&JointOptimizer::default(), &w, &grid, &c, cfg, &mut DetRng::new(77));
+        let a = simulate(&JointOptimizer::default(), &w, &grid, &c, cfg.clone(), &mut DetRng::new(77));
         let b = simulate(&JointOptimizer::default(), &w, &grid, &c, cfg, &mut DetRng::new(77));
         assert_eq!(a, b, "SimResult must be byte-identical run to run");
         assert_eq!(a.completions.len(), w.len());
@@ -942,7 +988,7 @@ mod tests {
             incremental: true,
             ..Default::default()
         };
-        let a = simulate(&policy, &w, &grid, &c, cfg, &mut DetRng::new(78));
+        let a = simulate(&policy, &w, &grid, &c, cfg.clone(), &mut DetRng::new(78));
         let b = simulate(&policy, &w, &grid, &c, cfg, &mut DetRng::new(78));
         assert_eq!(a, b, "preempt-off incremental stream must be byte-identical");
         assert_eq!(a.preemptions, 0, "pinning must never preempt");
@@ -1009,6 +1055,96 @@ mod tests {
         // determinism with preemption on: byte-identical re-runs
         let pre2 = run(true);
         assert_eq!(pre, pre2, "preempt-on SimResult must be byte-identical run to run");
+    }
+
+    /// The tentpole's end-to-end win condition, on the shared flow-burst
+    /// instance ([`workloads::flow_burst_instance`]): with the objective
+    /// knob at its `Makespan` default the stream provably executes
+    /// longest-first (makespan 1000 s, mean turnaround 2500/6 ≈ 416.7 s,
+    /// p95 turnaround 875 s by hand), while `MeanTurnaround` re-plans the
+    /// t = 50 s burst shortest-first — strictly better mean turnaround at
+    /// a strictly worse makespan, the exact trade the objective exists to
+    /// make. Both runs are noiseless and byte-identical run to run.
+    #[test]
+    fn turnaround_objective_beats_makespan_on_flow_burst_stream() {
+        use crate::metrics::online_stats;
+        use crate::solver::objective::Objective;
+        let (w, grid, c) = workloads::flow_burst_instance();
+        let run = |objective: Objective| {
+            let cfg = SimConfig { noise_sigma: 0.0, objective, ..Default::default() };
+            let policy = JointOptimizer {
+                timeout: std::time::Duration::from_secs(120),
+                incremental: true,
+                ..Default::default()
+            };
+            let mut rng = DetRng::new(61);
+            simulate(&policy, &w, &grid, &c, cfg, &mut rng)
+        };
+        let by_ms = run(Objective::Makespan);
+        let by_turn = run(Objective::MeanTurnaround);
+        assert_eq!(by_ms.completions.len(), 6);
+        assert_eq!(by_turn.completions.len(), 6);
+
+        // makespan objective: the long gang keeps GPU 0, the burst
+        // serializes on GPU 1 — completions 1000 / 150..550 s exactly
+        let stats_ms = online_stats(&w, &by_ms);
+        assert!((by_ms.makespan - 1000.0).abs() < 1e-6, "makespan run: {}", by_ms.makespan);
+        assert!(
+            (stats_ms.mean_turnaround - 2500.0 / 6.0).abs() < 1e-6,
+            "makespan-run mean turnaround {} != 2500/6",
+            stats_ms.mean_turnaround
+        );
+        // hand-computed interpolated p95 of {100,200,300,400,500,1000}
+        assert!(
+            (stats_ms.p95_turnaround - 875.0).abs() < 1e-6,
+            "p95 turnaround {} != 875",
+            stats_ms.p95_turnaround
+        );
+
+        // turnaround objective: the burst overtakes the long gang — the
+        // SPT optimum has mean 350 s; even a single order swap reaches
+        // ≈ 366.7 s, so demand a ≥ 25 s win — at a worse makespan
+        let stats_turn = online_stats(&w, &by_turn);
+        assert!(
+            stats_turn.mean_turnaround < stats_ms.mean_turnaround - 25.0,
+            "turnaround objective failed end-to-end: {} vs {}",
+            stats_turn.mean_turnaround,
+            stats_ms.mean_turnaround
+        );
+        assert!(
+            by_turn.makespan > by_ms.makespan + 1e-6,
+            "flow must trade makespan away: {} vs {}",
+            by_turn.makespan,
+            by_ms.makespan
+        );
+
+        // determinism: objective runs are byte-identical run to run, and
+        // the keep path under a flow objective (huge threshold ⇒ never
+        // switch) leaves the executed stream intact
+        let by_turn2 = run(Objective::MeanTurnaround);
+        assert_eq!(by_turn, by_turn2, "objective run must be byte-identical");
+        let intro = {
+            let cfg = SimConfig {
+                noise_sigma: 0.0,
+                objective: Objective::MeanTurnaround,
+                introspect: Some(IntrospectCfg { interval: 400.0, threshold: 1e9 }),
+                ..Default::default()
+            };
+            let policy = JointOptimizer {
+                timeout: std::time::Duration::from_secs(120),
+                incremental: true,
+                ..Default::default()
+            };
+            simulate(&policy, &w, &grid, &c, cfg, &mut DetRng::new(61))
+        };
+        assert!(intro.rounds > 0, "introspection rounds must fire");
+        assert_eq!(intro.completions.len(), 6);
+        let stats_intro = online_stats(&w, &intro);
+        assert!(
+            stats_intro.mean_turnaround < stats_ms.mean_turnaround - 25.0,
+            "flow keep-path broke the stream: {}",
+            stats_intro.mean_turnaround
+        );
     }
 
     /// Sparse-stream throughput regression (the

@@ -12,7 +12,8 @@
 //!    from the single [`DetRng`] stream (exactly the draw order a
 //!    sequential annealer would use), each captured as a forward
 //!    [`CandMove`] against the committed state and immediately undone.
-//! 2. **Speculate.** The K makespan evaluations — pure functions of the
+//! 2. **Speculate.** The K score evaluations (makespan by default; any
+//!    [`ScoreSpec`] objective) — pure functions of the
 //!    committed state — fan out across a persistent worker pool
 //!    (`std::thread::scope` + channels). Each worker replays candidates
 //!    on a private state copy with its own scratch
@@ -36,6 +37,7 @@
 
 use super::delta::{apply_cand, undo_cand, CandMove, Churn, DeltaKernel, FullScratch, Mover, State};
 use super::joint::SolveStats;
+use super::objective::ScoreSpec;
 use crate::util::rng::DetRng;
 use crate::util::{Deadline, DeadlinePoll, DEADLINE_POLL_PERIOD};
 use std::sync::{mpsc, Arc};
@@ -83,6 +85,12 @@ pub(crate) struct AnnealParams<'a> {
     /// read-only worker replays, and the full-replay baseline — so the
     /// thread-count and evaluator parity contracts are untouched.
     pub churn: Option<&'a Churn>,
+    /// The resolved scheduling objective every evaluator scores with
+    /// ([`ScoreSpec::makespan`] = the historical behavior, bit for bit).
+    /// Shipped to the workers inside [`BatchShared`]'s kernel; like the
+    /// churn term it is a pure per-task function of the candidate state,
+    /// so thread-count and evaluator parity are preserved per objective.
+    pub objective: &'a ScoreSpec,
     /// Annealing restarts (≥ 1); restarts > 0 perturb the incumbent.
     pub restarts: usize,
     /// Candidate evaluations per temperature level.
@@ -162,9 +170,10 @@ impl Pacer {
 }
 
 /// One speculative batch shipped to the pool: the committed base state,
-/// the kernel whose checkpoints candidates replay against, and the
-/// drafted moves. Wrapped in an `Arc` per batch; the coordinator
-/// reclaims the buffers afterwards, so steady state allocates nothing.
+/// the kernel whose checkpoints candidates replay against (carrying the
+/// objective spec the workers score with), and the drafted moves.
+/// Wrapped in an `Arc` per batch; the coordinator reclaims the buffers
+/// afterwards, so steady state allocates nothing.
 struct BatchShared {
     base: State,
     kernel: Arc<DeltaKernel>,
@@ -201,11 +210,11 @@ struct DraftBufs {
     spare_base: Option<State>,
 }
 
-/// Per-thread evaluation scratch: a free-list replay buffer for the
-/// delta kernel's read-only suffix replay, or a [`FullScratch`] for the
-/// legacy evaluator.
+/// Per-thread evaluation scratch: free-list + tail-buffer replay scratch
+/// for the delta kernel's read-only suffix replay, or a [`FullScratch`]
+/// for the legacy evaluator.
 enum EvalScratch {
-    Delta { free: Vec<f64> },
+    Delta { free: Vec<f64>, tail: Vec<f64> },
     Full(FullScratch),
 }
 
@@ -214,12 +223,13 @@ impl EvalScratch {
         if full_replay {
             EvalScratch::Full(FullScratch::new(node_gpus))
         } else {
-            EvalScratch::Delta { free: Vec::new() }
+            EvalScratch::Delta { free: Vec::new(), tail: Vec::new() }
         }
     }
 
     /// Score one candidate state (first difference from the committed
-    /// state at `p0`). Pure: identical results on every thread.
+    /// state at `p0`) under the kernel's objective. Pure: identical
+    /// results on every thread.
     fn eval(
         &mut self,
         kernel: &DeltaKernel,
@@ -229,8 +239,10 @@ impl EvalScratch {
         churn: Option<&Churn>,
     ) -> f64 {
         match self {
-            EvalScratch::Delta { free } => kernel.eval_move_readonly(s, durs, p0, free, churn),
-            EvalScratch::Full(fs) => fs.eval(s, durs, churn),
+            EvalScratch::Delta { free, tail } => {
+                kernel.eval_move_readonly(s, durs, p0, free, tail, churn)
+            }
+            EvalScratch::Full(fs) => fs.eval(s, durs, churn, kernel.spec()),
         }
     }
 }
@@ -317,7 +329,7 @@ fn run(
 ) -> AnnealOutcome {
     let n = seed.order.len();
     let n_nodes = p.node_gpus.len();
-    let mut kernel = Arc::new(DeltaKernel::new(p.node_gpus.to_vec(), n));
+    let mut kernel = Arc::new(DeltaKernel::new(p.node_gpus.to_vec(), n, p.objective.clone()));
     let mut scratch = EvalScratch::new(p.full_replay, p.node_gpus);
     let mut mover = Mover::new(n);
     let mut poll = DeadlinePoll::new(p.deadline, DEADLINE_POLL_PERIOD);

@@ -47,6 +47,7 @@
 //!   `joint.rs`'s private `Scratch`/`eval_fast`), now reusable per worker
 //!   so the A/B baseline parallelizes identically.
 
+use super::objective::{tail_push, tail_score, ScoreKind, ScoreSpec};
 use crate::util::rng::DetRng;
 
 /// Churn-cost model for online preemption: in-flight (pinned) tasks are
@@ -120,6 +121,18 @@ pub(crate) struct State {
 /// from the nearest checkpoint; [`DeltaKernel::accept`] promotes the last
 /// evaluated candidate to committed (checkpoints staged during the replay
 /// are adopted), and a rejected candidate costs nothing beyond the replay.
+///
+/// The score is the kernel's [`ScoreSpec`] objective, not necessarily
+/// makespan: alongside the free-time state, each block checkpoint carries
+/// the *prefix score aggregates* the objective needs — the running
+/// weighted turnaround sum for flow objectives, an ascending top-k
+/// turnaround buffer for the tail surrogate — so a suffix-only replay
+/// still prices a move without rescanning the prefix. Makespan keeps the
+/// historical running-max arithmetic bit for bit (the aggregates are
+/// never touched), and every objective preserves the delta ≡ full-replay
+/// contract because prefix sums are exactly the left-fold partials the
+/// full replay computes and the top-k multiset is insertion-order
+/// independent.
 #[derive(Debug, Clone)]
 pub(crate) struct DeltaKernel {
     /// Per-node GPU counts.
@@ -146,7 +159,27 @@ pub(crate) struct DeltaKernel {
     staged_ms: Vec<f64>,
     /// Working free-time state for the current replay.
     free: Vec<f64>,
-    /// Makespan of the committed state (`INFINITY` if infeasible).
+    /// The objective this kernel scores with. [`ScoreKind::Makespan`]
+    /// leaves every auxiliary aggregate below untouched — that path is
+    /// bit-identical to the pre-objective kernel.
+    spec: ScoreSpec,
+    /// Committed prefix weighted-turnaround sums per block (flow).
+    ckpt_sum: Vec<f64>,
+    /// Staged flow sums.
+    staged_sum: Vec<f64>,
+    /// Committed prefix top-k turnaround buffers per block (tail), flat
+    /// with stride `spec.k`: block `b` holds `ckpt_tail_len[b]` ascending
+    /// values at `[b·k, b·k + len)`.
+    ckpt_tail: Vec<f64>,
+    /// Staged tail buffers.
+    staged_tail: Vec<f64>,
+    /// Committed tail buffer lengths per block.
+    ckpt_tail_len: Vec<usize>,
+    /// Staged tail buffer lengths.
+    staged_tail_len: Vec<usize>,
+    /// Working tail buffer for the committed replay.
+    tail: Vec<f64>,
+    /// Score of the committed state (`INFINITY` if infeasible).
     committed_ms: f64,
     /// First infeasible position of the committed state (`n` if feasible):
     /// checkpoints at positions `<= valid_upto` are trustworthy, and any
@@ -156,8 +189,9 @@ pub(crate) struct DeltaKernel {
 }
 
 impl DeltaKernel {
-    /// Kernel for `n` order positions on nodes with the given GPU counts.
-    pub(crate) fn new(node_gpus: Vec<usize>, n: usize) -> Self {
+    /// Kernel for `n` order positions on nodes with the given GPU counts,
+    /// scoring candidates under `spec`.
+    pub(crate) fn new(node_gpus: Vec<usize>, n: usize, spec: ScoreSpec) -> Self {
         let mut offsets = Vec::with_capacity(node_gpus.len() + 1);
         let mut acc = 0usize;
         offsets.push(0);
@@ -180,9 +214,22 @@ impl DeltaKernel {
             staged: vec![0.0; nblocks * total],
             staged_ms: vec![0.0; nblocks],
             free: vec![0.0; total],
+            ckpt_sum: vec![0.0; nblocks],
+            staged_sum: vec![0.0; nblocks],
+            ckpt_tail: vec![0.0; nblocks * spec.k],
+            staged_tail: vec![0.0; nblocks * spec.k],
+            ckpt_tail_len: vec![0; nblocks],
+            staged_tail_len: vec![0; nblocks],
+            tail: Vec::with_capacity(spec.k),
+            spec,
             committed_ms: 0.0,
             valid_upto: 0,
         }
+    }
+
+    /// The objective this kernel scores with.
+    pub(crate) fn spec(&self) -> &ScoreSpec {
+        &self.spec
     }
 
     /// Place one gang on the working free lists: pick the earliest-start
@@ -194,22 +241,39 @@ impl DeltaKernel {
     }
 
     /// Full replay of `s`, refreshing every checkpoint. Returns the
-    /// makespan (INFINITY if infeasible) and commits it. O(n·m) — called
+    /// score (INFINITY if infeasible) and commits it. O(n·m) — called
     /// once per restart, not per move.
     pub(crate) fn rebuild(&mut self, s: &State, durs: &[Vec<(usize, f64)>], churn: Option<&Churn>) -> f64 {
         self.free.fill(0.0);
         let mut ms = 0.0f64;
+        let mut sum = 0.0f64;
+        self.tail.clear();
         self.valid_upto = self.n;
         for pos in 0..self.n {
             if pos % self.block == 0 {
                 let b = pos / self.block;
                 self.ckpt[b * self.total..(b + 1) * self.total].copy_from_slice(&self.free);
                 self.ckpt_ms[b] = ms;
+                match self.spec.kind {
+                    ScoreKind::Makespan => {}
+                    ScoreKind::Flow => self.ckpt_sum[b] = sum,
+                    ScoreKind::Tail => {
+                        let o = b * self.spec.k;
+                        self.ckpt_tail[o..o + self.tail.len()].copy_from_slice(&self.tail);
+                        self.ckpt_tail_len[b] = self.tail.len();
+                    }
+                }
             }
             let t = s.order[pos];
             let (g, dur) = gang_dur(durs, churn, s, t);
             match self.step(g, dur, s.node[t]) {
-                Some(end) => ms = ms.max(end),
+                Some(end) => match self.spec.kind {
+                    ScoreKind::Makespan => ms = ms.max(end),
+                    ScoreKind::Flow => sum += self.spec.flow_term(t, end),
+                    ScoreKind::Tail => {
+                        tail_push(&mut self.tail, self.spec.k, self.spec.turnaround(t, end))
+                    }
+                },
                 None => {
                     self.valid_upto = pos;
                     self.committed_ms = f64::INFINITY;
@@ -217,15 +281,21 @@ impl DeltaKernel {
                 }
             }
         }
-        self.committed_ms = ms;
-        ms
+        let score = match self.spec.kind {
+            ScoreKind::Makespan => ms,
+            ScoreKind::Flow => self.spec.flow_score(sum),
+            ScoreKind::Tail => tail_score(&self.tail),
+        };
+        self.committed_ms = score;
+        score
     }
 
-    /// Makespan of candidate `s`, whose first difference from the
+    /// Score of candidate `s`, whose first difference from the
     /// committed state is at order position `p0`: load the nearest
-    /// checkpoint at or before `p0` and replay only the suffix —
-    /// O((n − p0 + √n)·m̄) instead of O(n·m). Checkpoints crossed during
-    /// the replay are staged for a subsequent [`Self::accept`].
+    /// checkpoint at or before `p0` — free-time state *and* the prefix
+    /// score aggregates — and replay only the suffix, O((n − p0 + √n)·m̄)
+    /// instead of O(n·m). Checkpoints crossed during the replay are
+    /// staged for a subsequent [`Self::accept`].
     pub(crate) fn eval_move(
         &mut self,
         s: &State,
@@ -245,27 +315,57 @@ impl DeltaKernel {
         let o0 = b0 * self.total;
         self.free.copy_from_slice(&self.ckpt[o0..o0 + self.total]);
         let mut ms = self.ckpt_ms[b0];
+        let mut sum = 0.0f64;
+        match self.spec.kind {
+            ScoreKind::Makespan => {}
+            ScoreKind::Flow => sum = self.ckpt_sum[b0],
+            ScoreKind::Tail => {
+                let o = b0 * self.spec.k;
+                self.tail.clear();
+                self.tail.extend_from_slice(&self.ckpt_tail[o..o + self.ckpt_tail_len[b0]]);
+            }
+        }
         for pos in b0 * self.block..self.n {
             if pos % self.block == 0 {
                 let b = pos / self.block;
                 if b > b0 {
                     self.staged[b * self.total..(b + 1) * self.total].copy_from_slice(&self.free);
                     self.staged_ms[b] = ms;
+                    match self.spec.kind {
+                        ScoreKind::Makespan => {}
+                        ScoreKind::Flow => self.staged_sum[b] = sum,
+                        ScoreKind::Tail => {
+                            let o = b * self.spec.k;
+                            self.staged_tail[o..o + self.tail.len()].copy_from_slice(&self.tail);
+                            self.staged_tail_len[b] = self.tail.len();
+                        }
+                    }
                 }
             }
             let t = s.order[pos];
             let (g, dur) = gang_dur(durs, churn, s, t);
             match self.step(g, dur, s.node[t]) {
-                Some(end) => ms = ms.max(end),
+                Some(end) => match self.spec.kind {
+                    ScoreKind::Makespan => ms = ms.max(end),
+                    ScoreKind::Flow => sum += self.spec.flow_term(t, end),
+                    ScoreKind::Tail => {
+                        tail_push(&mut self.tail, self.spec.k, self.spec.turnaround(t, end))
+                    }
+                },
                 None => return f64::INFINITY,
             }
         }
-        ms
+        match self.spec.kind {
+            ScoreKind::Makespan => ms,
+            ScoreKind::Flow => self.spec.flow_score(sum),
+            ScoreKind::Tail => tail_score(&self.tail),
+        }
     }
 
     /// Promote the candidate last scored by [`Self::eval_move`]`(.., p0)`
-    /// to committed: adopt the checkpoints staged during its replay.
-    /// Only finite-makespan candidates are ever accepted by the annealer.
+    /// to committed: adopt the checkpoints staged during its replay
+    /// (free-time state and prefix score aggregates alike). Only
+    /// finite-score candidates are ever accepted by the annealer.
     pub(crate) fn accept(&mut self, p0: usize, final_ms: f64) {
         if p0 < self.n {
             let b0 = p0 / self.block;
@@ -273,6 +373,16 @@ impl DeltaKernel {
                 let o = b * self.total;
                 self.ckpt[o..o + self.total].copy_from_slice(&self.staged[o..o + self.total]);
                 self.ckpt_ms[b] = self.staged_ms[b];
+                match self.spec.kind {
+                    ScoreKind::Makespan => {}
+                    ScoreKind::Flow => self.ckpt_sum[b] = self.staged_sum[b],
+                    ScoreKind::Tail => {
+                        let ot = b * self.spec.k;
+                        let len = self.staged_tail_len[b];
+                        self.ckpt_tail[ot..ot + len].copy_from_slice(&self.staged_tail[ot..ot + len]);
+                        self.ckpt_tail_len[b] = len;
+                    }
+                }
             }
         }
         self.committed_ms = final_ms;
@@ -281,8 +391,8 @@ impl DeltaKernel {
 
     /// Side-effect-free twin of [`Self::eval_move`] for speculative
     /// workers: scores a candidate against the committed checkpoints
-    /// through `&self` and a caller-owned `free` scratch, staging nothing.
-    /// Returns makespans bit-identical to [`Self::eval_move`] — the
+    /// through `&self` and caller-owned `free`/`tail` scratch, staging
+    /// nothing. Returns scores bit-identical to [`Self::eval_move`] — the
     /// speculative engine relies on that to keep trajectories independent
     /// of which thread scored a move (and asserts it on every accept in
     /// debug builds).
@@ -292,6 +402,7 @@ impl DeltaKernel {
         durs: &[Vec<(usize, f64)>],
         p0: usize,
         free: &mut Vec<f64>,
+        tail: &mut Vec<f64>,
         churn: Option<&Churn>,
     ) -> f64 {
         if p0 > self.valid_upto {
@@ -307,15 +418,33 @@ impl DeltaKernel {
         free.clear();
         free.extend_from_slice(&self.ckpt[o0..o0 + self.total]);
         let mut ms = self.ckpt_ms[b0];
+        let mut sum = 0.0f64;
+        match self.spec.kind {
+            ScoreKind::Makespan => {}
+            ScoreKind::Flow => sum = self.ckpt_sum[b0],
+            ScoreKind::Tail => {
+                let o = b0 * self.spec.k;
+                tail.clear();
+                tail.extend_from_slice(&self.ckpt_tail[o..o + self.ckpt_tail_len[b0]]);
+            }
+        }
         for pos in b0 * self.block..self.n {
             let t = s.order[pos];
             let (g, dur) = gang_dur(durs, churn, s, t);
             match place_gang(free, &self.node_gpus, &self.offsets, g, dur, s.node[t]) {
-                Some(end) => ms = ms.max(end),
+                Some(end) => match self.spec.kind {
+                    ScoreKind::Makespan => ms = ms.max(end),
+                    ScoreKind::Flow => sum += self.spec.flow_term(t, end),
+                    ScoreKind::Tail => tail_push(tail, self.spec.k, self.spec.turnaround(t, end)),
+                },
                 None => return f64::INFINITY,
             }
         }
-        ms
+        match self.spec.kind {
+            ScoreKind::Makespan => ms,
+            ScoreKind::Flow => self.spec.flow_score(sum),
+            ScoreKind::Tail => tail_score(tail),
+        }
     }
 }
 
@@ -385,6 +514,8 @@ pub(crate) struct FullScratch {
     node_gpus: Vec<usize>,
     free: Vec<Vec<f64>>,
     tmp: Vec<f64>,
+    /// Top-k turnaround buffer for the tail objective.
+    tailbuf: Vec<f64>,
 }
 
 /// The g-th smallest value of `xs` (gang start time), using `tmp` as
@@ -405,19 +536,29 @@ impl FullScratch {
             node_gpus: node_gpus.to_vec(),
             free: node_gpus.iter().map(|&n| Vec::with_capacity(n)).collect(),
             tmp: Vec::new(),
+            tailbuf: Vec::new(),
         }
     }
 
     /// Full-replay candidate evaluation: replays the gang list scheduler
-    /// over precomputed (gpus, duration) pairs, reusing this scratch.
-    /// Bit-identical to the delta kernel for every candidate (the
-    /// kernel-parity property tests assert it).
-    pub(crate) fn eval(&mut self, s: &State, durs: &[Vec<(usize, f64)>], churn: Option<&Churn>) -> f64 {
+    /// over precomputed (gpus, duration) pairs, reusing this scratch, and
+    /// aggregates the score per `spec`. Bit-identical to the delta kernel
+    /// for every candidate and objective (the kernel-parity property
+    /// tests assert it).
+    pub(crate) fn eval(
+        &mut self,
+        s: &State,
+        durs: &[Vec<(usize, f64)>],
+        churn: Option<&Churn>,
+        spec: &ScoreSpec,
+    ) -> f64 {
         for (f, &n) in self.free.iter_mut().zip(&self.node_gpus) {
             f.clear();
             f.resize(n, 0.0);
         }
         let mut makespan = 0.0f64;
+        let mut sum = 0.0f64;
+        self.tailbuf.clear();
         for &t in &s.order {
             let (g, dur) = gang_dur(durs, churn, s, t);
             // earliest gang start across candidate nodes
@@ -456,9 +597,17 @@ impl FullScratch {
                     .expect("non-empty");
                 free[mi] = end;
             }
-            makespan = makespan.max(end);
+            match spec.kind {
+                ScoreKind::Makespan => makespan = makespan.max(end),
+                ScoreKind::Flow => sum += spec.flow_term(t, end),
+                ScoreKind::Tail => tail_push(&mut self.tailbuf, spec.k, spec.turnaround(t, end)),
+            }
         }
-        makespan
+        match spec.kind {
+            ScoreKind::Makespan => makespan,
+            ScoreKind::Flow => spec.flow_score(sum),
+            ScoreKind::Tail => tail_score(&self.tailbuf),
+        }
     }
 }
 
@@ -919,7 +1068,7 @@ mod tests {
             let (durs, node_gpus) = random_instance(&mut rng, case % 3 == 0);
             let nt = durs.len();
             let mut s = random_state(&mut rng, &durs, node_gpus.len(), true);
-            let mut kernel = DeltaKernel::new(node_gpus.clone(), nt);
+            let mut kernel = DeltaKernel::new(node_gpus.clone(), nt, ScoreSpec::makespan());
             let mut mover = Mover::new(nt);
             let mut full = FullScratch::new(&node_gpus);
             mover.rebuild_pos(&s.order);
@@ -929,6 +1078,7 @@ mod tests {
             let mut committed = ms0;
             let mut multi: Vec<(usize, usize, usize)> = Vec::new();
             let mut ro_free: Vec<f64> = Vec::new();
+            let mut ro_tail: Vec<f64> = Vec::new();
             for step in 0..300 {
                 let snapshot = s.clone();
                 let (undo, p0) = mover.propose(&mut s, &durs, node_gpus.len(), &mut rng, &movable);
@@ -948,13 +1098,13 @@ mod tests {
                 assert_eq!(rebuilt.node, snapshot.node, "case {case} step {step}: cand undo node");
                 // the read-only (worker) replay must agree bit for bit with
                 // the staging replay before the latter runs
-                let ms_ro = kernel.eval_move_readonly(&s, &durs, p0, &mut ro_free, None);
+                let ms_ro = kernel.eval_move_readonly(&s, &durs, p0, &mut ro_free, &mut ro_tail, None);
                 let ms = kernel.eval_move(&s, &durs, p0, None);
                 assert_eq!(ms, ms_ro, "case {case} step {step}: readonly eval diverged (p0={p0})");
                 let reference = eval_reference(&s, &durs, &node_gpus, None);
                 assert_eq!(ms, reference, "case {case} step {step}: delta != full replay (p0={p0})");
                 assert_eq!(
-                    full.eval(&s, &durs, None),
+                    full.eval(&s, &durs, None, kernel.spec()),
                     reference,
                     "case {case} step {step}: FullScratch != reference"
                 );
@@ -972,7 +1122,7 @@ mod tests {
                 }
             }
             // committed checkpoints must agree with a cold rebuild
-            let mut fresh = DeltaKernel::new(node_gpus.clone(), nt);
+            let mut fresh = DeltaKernel::new(node_gpus.clone(), nt, ScoreSpec::makespan());
             assert_eq!(fresh.rebuild(&s, &durs, None), committed, "case {case}: final state drifted");
         }
         assert!(infeasible_seen > 50, "too few infeasible candidates exercised: {infeasible_seen}");
@@ -999,7 +1149,7 @@ mod tests {
             };
             s.cfg[t] = ci;
             s.node[t] = Some(small);
-            let mut kernel = DeltaKernel::new(node_gpus.clone(), nt);
+            let mut kernel = DeltaKernel::new(node_gpus.clone(), nt, ScoreSpec::makespan());
             let mut mover = Mover::new(nt);
             mover.rebuild_pos(&s.order);
             assert!(
@@ -1033,7 +1183,7 @@ mod tests {
         let durs = vec![vec![(1usize, 100.0f64), (2, 60.0)]];
         let node_gpus = vec![2usize];
         let s = State { cfg: vec![1], order: vec![0], node: vec![None] };
-        let mut kernel = DeltaKernel::new(node_gpus, 1);
+        let mut kernel = DeltaKernel::new(node_gpus, 1, ScoreSpec::makespan());
         let ms = kernel.rebuild(&s, &durs, None);
         assert_eq!(ms, 60.0);
         // p0 == n signals "nothing changed"
@@ -1076,7 +1226,7 @@ mod tests {
                     assert_eq!(churn.extra(t, pc, Some(usize::MAX)), churn.cost);
                 }
             }
-            let mut kernel = DeltaKernel::new(node_gpus.clone(), nt);
+            let mut kernel = DeltaKernel::new(node_gpus.clone(), nt, ScoreSpec::makespan());
             let mut mover = Mover::new(nt);
             let mut full = FullScratch::new(&node_gpus);
             mover.rebuild_pos(&s.order);
@@ -1088,15 +1238,17 @@ mod tests {
             );
             let movable: Vec<usize> = (0..nt).collect();
             let mut ro_free: Vec<f64> = Vec::new();
+            let mut ro_tail: Vec<f64> = Vec::new();
             for step in 0..200 {
                 let (undo, p0) = mover.propose(&mut s, &durs, node_gpus.len(), &mut rng, &movable);
-                let ms_ro = kernel.eval_move_readonly(&s, &durs, p0, &mut ro_free, Some(&churn));
+                let ms_ro =
+                    kernel.eval_move_readonly(&s, &durs, p0, &mut ro_free, &mut ro_tail, Some(&churn));
                 let ms = kernel.eval_move(&s, &durs, p0, Some(&churn));
                 assert_eq!(ms, ms_ro, "case {case} step {step}: churn readonly diverged");
                 let reference = eval_reference(&s, &durs, &node_gpus, Some(&churn));
                 assert_eq!(ms, reference, "case {case} step {step}: churn delta != reference");
                 assert_eq!(
-                    full.eval(&s, &durs, Some(&churn)),
+                    full.eval(&s, &durs, Some(&churn), kernel.spec()),
                     reference,
                     "case {case} step {step}: churn FullScratch != reference"
                 );
@@ -1113,5 +1265,159 @@ mod tests {
             }
         }
         assert!(charged_seen > 200, "churn term rarely exercised: {charged_seen}");
+    }
+
+    /// Reference scorer for arbitrary objectives: the verbatim naive
+    /// replay of [`eval_reference`], collecting each task's completion in
+    /// order position and aggregating with the spec's own primitives (the
+    /// same position-order left fold and ascending top-k sum), so any
+    /// divergence is the kernel's fault, not the reference's.
+    fn score_reference(
+        s: &State,
+        durs: &[Vec<(usize, f64)>],
+        node_gpus: &[usize],
+        churn: Option<&Churn>,
+        spec: &ScoreSpec,
+    ) -> f64 {
+        let mut free: Vec<Vec<f64>> = node_gpus.iter().map(|&n| vec![0.0; n]).collect();
+        let mut ms = 0.0f64;
+        let mut sum = 0.0f64;
+        let mut tail: Vec<f64> = Vec::new();
+        for &t in &s.order {
+            let (g, dur) = gang_dur(durs, churn, s, t);
+            let kth = |xs: &[f64]| {
+                let mut tmp = xs.to_vec();
+                tmp.sort_by(f64::total_cmp);
+                tmp[g - 1]
+            };
+            let mut best_node = usize::MAX;
+            let mut best_start = f64::INFINITY;
+            match s.node[t] {
+                Some(n) if node_gpus[n] >= g => {
+                    best_node = n;
+                    best_start = kth(&free[n]);
+                }
+                Some(_) => return f64::INFINITY,
+                None => {
+                    for n in 0..node_gpus.len() {
+                        if node_gpus[n] < g {
+                            continue;
+                        }
+                        let start = kth(&free[n]);
+                        if start < best_start {
+                            best_start = start;
+                            best_node = n;
+                        }
+                    }
+                    if best_node == usize::MAX {
+                        return f64::INFINITY;
+                    }
+                }
+            }
+            let end = best_start + dur;
+            let fr = &mut free[best_node];
+            for _ in 0..g {
+                let (mi, _) =
+                    fr.iter().enumerate().min_by(|a, b| a.1.total_cmp(b.1)).expect("non-empty");
+                fr[mi] = end;
+            }
+            match spec.kind {
+                ScoreKind::Makespan => ms = ms.max(end),
+                ScoreKind::Flow => sum += spec.flow_term(t, end),
+                ScoreKind::Tail => tail_push(&mut tail, spec.k, spec.turnaround(t, end)),
+            }
+        }
+        match spec.kind {
+            ScoreKind::Makespan => ms,
+            ScoreKind::Flow => spec.flow_score(sum),
+            ScoreKind::Tail => tail_score(&tail),
+        }
+    }
+
+    /// The tentpole's kernel-level contract: for every objective variant
+    /// — weighted flow with random weights/offsets and the top-k tail
+    /// surrogate included — the delta evaluator's prefix-aggregated
+    /// suffix replay, the read-only worker replay, the FullScratch
+    /// evaluator, and the transliterated reference agree bit for bit over
+    /// random accepted/rejected move sequences (with and without the
+    /// preemption churn model), and the committed aggregates never drift
+    /// from a cold rebuild.
+    #[test]
+    fn prop_objective_delta_eval_matches_full_replay() {
+        let mut tail_cases = 0usize;
+        for case in 0..36u64 {
+            let mut rng = DetRng::new(9000 + case);
+            let (durs, node_gpus) = random_instance(&mut rng, case % 3 == 0);
+            let nt = durs.len();
+            let mut s = random_state(&mut rng, &durs, node_gpus.len(), true);
+            // offsets (task ages) and weights drawn at random: the score
+            // must be exact for any mixture, not just the resolve() shapes
+            let offsets: Vec<f64> = (0..nt).map(|_| rng.range_f64(0.0, 800.0)).collect();
+            let spec = match case % 3 {
+                0 => ScoreSpec::flow(vec![1.0; nt], offsets),
+                1 => ScoreSpec::flow((0..nt).map(|_| rng.range_f64(0.25, 4.0)).collect(), offsets),
+                _ => {
+                    tail_cases += 1;
+                    ScoreSpec::tail(1 + rng.below(nt), offsets)
+                }
+            };
+            let churn = (case % 2 == 0).then(|| Churn {
+                cost: rng.range_f64(10.0, 200.0),
+                prior_cfg: (0..nt)
+                    .map(|t| (rng.f64() < 0.5).then(|| rng.below(durs[t].len())))
+                    .collect(),
+                prior_node: (0..nt)
+                    .map(|_| if rng.f64() < 0.5 { Some(rng.below(node_gpus.len())) } else { None })
+                    .collect(),
+            });
+            let mut kernel = DeltaKernel::new(node_gpus.clone(), nt, spec.clone());
+            let mut mover = Mover::new(nt);
+            let mut full = FullScratch::new(&node_gpus);
+            mover.rebuild_pos(&s.order);
+            let ms0 = kernel.rebuild(&s, &durs, churn.as_ref());
+            assert_eq!(
+                ms0,
+                score_reference(&s, &durs, &node_gpus, churn.as_ref(), &spec),
+                "case {case}: objective rebuild"
+            );
+            let movable: Vec<usize> = (0..nt).collect();
+            let mut committed = ms0;
+            let mut ro_free: Vec<f64> = Vec::new();
+            let mut ro_tail: Vec<f64> = Vec::new();
+            for step in 0..220 {
+                let (undo, p0) = mover.propose(&mut s, &durs, node_gpus.len(), &mut rng, &movable);
+                let ms_ro = kernel.eval_move_readonly(
+                    &s,
+                    &durs,
+                    p0,
+                    &mut ro_free,
+                    &mut ro_tail,
+                    churn.as_ref(),
+                );
+                let ms = kernel.eval_move(&s, &durs, p0, churn.as_ref());
+                assert_eq!(ms, ms_ro, "case {case} step {step}: objective readonly diverged");
+                let reference = score_reference(&s, &durs, &node_gpus, churn.as_ref(), &spec);
+                assert_eq!(ms, reference, "case {case} step {step}: objective delta != reference");
+                assert_eq!(
+                    full.eval(&s, &durs, churn.as_ref(), &spec),
+                    reference,
+                    "case {case} step {step}: objective FullScratch != reference"
+                );
+                if ms.is_finite() && rng.f64() < 0.4 {
+                    kernel.accept(p0, ms);
+                    committed = ms;
+                } else {
+                    mover.undo(&mut s, undo);
+                }
+            }
+            // committed prefix aggregates must agree with a cold rebuild
+            let mut fresh = DeltaKernel::new(node_gpus.clone(), nt, spec.clone());
+            assert_eq!(
+                fresh.rebuild(&s, &durs, churn.as_ref()),
+                committed,
+                "case {case}: objective aggregates drifted"
+            );
+        }
+        assert!(tail_cases >= 10, "too few tail-objective cases: {tail_cases}");
     }
 }

@@ -34,6 +34,7 @@
 
 use super::anneal::{self, AnnealParams};
 use super::delta::{Churn, State};
+use super::objective::{Objective, ScoreKind, ScoreSpec};
 use super::policy::{PlanCtx, Policy};
 use super::spase::SpaseTask;
 use crate::cluster::Cluster;
@@ -91,6 +92,18 @@ pub struct JointOptimizer {
     /// value wins; this knob covers direct solver use (benches, tests,
     /// hand-driven re-solves).
     pub preempt: Option<f64>,
+    /// The scheduling objective every evaluator scores candidates with.
+    /// [`Objective::Makespan`] (the default) is bit-identical to the
+    /// historical behavior; the flow/tail variants minimize per-task
+    /// turnaround aggregates instead (see [`crate::solver::objective`]).
+    /// When the planning context carries its own [`PlanCtx::objective`]
+    /// (the simulator sets it from `SimConfig::objective` so planner and
+    /// re-plan acceptance agree), the context's value wins; this knob
+    /// covers direct solver use. Turnarounds measure against
+    /// [`crate::trainer::Task::arrival`] through the context's task ages
+    /// ([`PlanCtx::now`]); direct `solve` calls treat every task as
+    /// arriving at the solve instant.
+    pub objective: Objective,
 }
 
 impl Default for JointOptimizer {
@@ -104,6 +117,7 @@ impl Default for JointOptimizer {
             threads: 0,
             warm_frac: 0.25,
             preempt: None,
+            objective: Objective::Makespan,
         }
     }
 }
@@ -115,9 +129,10 @@ pub struct SolveStats {
     pub evals: usize,
     /// Incumbent improvements.
     pub improvements: usize,
-    /// Makespan of the best warm start.
+    /// Score of the best warm start under the configured objective
+    /// (makespan by default — the field name keeps the historical term).
     pub warm_makespan: f64,
-    /// Final incumbent makespan.
+    /// Final incumbent score under the configured objective.
     pub final_makespan: f64,
     /// Wall-clock seconds spent.
     pub elapsed_secs: f64,
@@ -173,11 +188,26 @@ impl JointOptimizer {
 
     /// Solve a SPASE instance, returning the plan and search statistics.
     ///
-    /// Warm starts seed the speculative annealing engine
-    /// ([`super::anneal`]); the evaluator backend follows
-    /// [`Self::full_replay`] and the thread count [`Self::threads`] —
-    /// neither changes the trajectory, only the wall-clock.
+    /// Scores candidates with [`Self::objective`], treating every task as
+    /// arriving at the solve instant (the context-aware [`Policy::plan`]
+    /// path derives real task ages instead). Warm starts seed the
+    /// speculative annealing engine ([`super::anneal`]); the evaluator
+    /// backend follows [`Self::full_replay`] and the thread count
+    /// [`Self::threads`] — neither changes the trajectory, only the
+    /// wall-clock.
     pub fn solve(&self, tasks: &[SpaseTask], cluster: &Cluster, rng: &mut DetRng) -> (Schedule, SolveStats) {
+        let spec = self.objective.resolve(tasks, &[]);
+        self.solve_with(tasks, cluster, &spec, rng)
+    }
+
+    /// [`Self::solve`] against an already-resolved objective spec.
+    fn solve_with(
+        &self,
+        tasks: &[SpaseTask],
+        cluster: &Cluster,
+        spec: &ScoreSpec,
+        rng: &mut DetRng,
+    ) -> (Schedule, SolveStats) {
         let mut stats = SolveStats::default();
         if tasks.is_empty() {
             return (Schedule::default(), stats);
@@ -189,7 +219,7 @@ impl JointOptimizer {
 
         // ---- warm starts -------------------------------------------------
         let (best_state, mut best_sched, mut best_ms) =
-            self.warm_starts(tasks, cluster, rng, &mut stats);
+            self.warm_starts(tasks, cluster, spec, rng, &mut stats);
         stats.warm_makespan = best_ms;
 
         // ---- speculative annealing with restarts ------------------------
@@ -198,11 +228,12 @@ impl JointOptimizer {
             durs: &durs,
             node_gpus: &node_gpus,
             movable: &movable,
-            lower_bound: Self::lower_bound(tasks, cluster),
+            lower_bound: Self::objective_lower_bound(spec, tasks, cluster),
             deadline,
             threads: self.resolved_threads(),
             full_replay: self.full_replay,
             churn: None,
+            objective: spec,
             restarts: self.restarts.max(1),
             iters_per_temp: self.iters_per_temp,
             init_temp_frac: 0.08,
@@ -211,7 +242,7 @@ impl JointOptimizer {
         best_ms = out.best_ms;
 
         // materialize the incumbent's full schedule once
-        let (sched, ms) = self.eval(&out.best, tasks, cluster, None, &mut stats);
+        let (sched, ms) = self.eval(&out.best, tasks, cluster, None, spec, &mut stats);
         if ms <= best_ms + 1e-9 {
             best_sched = sched;
             best_ms = ms;
@@ -220,6 +251,34 @@ impl JointOptimizer {
         stats.elapsed_secs = start.elapsed().as_secs_f64();
         stats.evals_per_sec = stats.evals as f64 / stats.elapsed_secs.max(1e-12);
         (best_sched, stats)
+    }
+
+    /// The effective objective for a planning context (the context's
+    /// value wins over the optimizer knob), resolved against the active
+    /// task set with per-task ages `now − arrival`.
+    fn ctx_spec(&self, ctx: &PlanCtx, tasks: &[SpaseTask]) -> ScoreSpec {
+        let objective = ctx.objective.as_ref().unwrap_or(&self.objective);
+        if objective.is_makespan() {
+            return ScoreSpec::makespan();
+        }
+        let offsets: Vec<f64> = ctx
+            .active()
+            .into_iter()
+            .map(|i| (ctx.now - ctx.workload[i].arrival).max(0.0))
+            .collect();
+        objective.resolve(tasks, &offsets)
+    }
+
+    /// A provable lower bound on the configured objective, for the
+    /// annealer's early exit: the historical area/longest-task bound for
+    /// makespan, the contention-free per-task bound for flow/tail
+    /// objectives (valid, deliberately not tight — see
+    /// [`ScoreSpec::lower_bound_hint`]).
+    fn objective_lower_bound(spec: &ScoreSpec, tasks: &[SpaseTask], cluster: &Cluster) -> f64 {
+        match spec.kind {
+            ScoreKind::Makespan => Self::lower_bound(tasks, cluster),
+            _ => spec.lower_bound_hint(tasks),
+        }
     }
 
     /// A simple lower bound: max(area bound, longest-min-runtime bound).
@@ -246,14 +305,17 @@ impl JointOptimizer {
 
     /// Materialize a search state as a full schedule. `churn` (set on the
     /// preemption-enabled incremental path) pads a deviating in-flight
-    /// task's duration with its checkpoint/restore cost, so the returned
-    /// schedule's makespan matches the annealed score exactly.
+    /// task's duration with its checkpoint/restore cost, and the returned
+    /// scalar is the state's score under `spec` — both computed exactly
+    /// as the annealing evaluators compute them, so the materialized
+    /// schedule's score matches the annealed incumbent's.
     fn eval(
         &self,
         s: &State,
         tasks: &[SpaseTask],
         cluster: &Cluster,
         churn: Option<&Churn>,
+        spec: &ScoreSpec,
         stats: &mut SolveStats,
     ) -> (Schedule, f64) {
         stats.evals += 1;
@@ -273,7 +335,11 @@ impl JointOptimizer {
             .collect();
         let sched = list_schedule(&choices, cluster);
         // unplaceable tasks (forced node too small) poison the candidate
-        let ms = if sched.assignments.len() == tasks.len() { sched.makespan() } else { f64::INFINITY };
+        let ms = if sched.assignments.len() == tasks.len() {
+            spec.score_assignments(&s.order, &sched)
+        } else {
+            f64::INFINITY
+        };
         (sched, ms)
     }
 
@@ -376,6 +442,7 @@ impl JointOptimizer {
         let deadline = Deadline::after(self.warm_budget());
         let nt = tasks.len();
         let preempt = ctx.preempt_cost.or(self.preempt);
+        let spec = self.ctx_spec(ctx, &tasks);
         let (seed, locked, churn) = self.incremental_seed(ctx, &tasks, preempt);
         let durs = duration_table(&tasks);
         let node_gpus: Vec<usize> = cluster.nodes.iter().map(|n| n.gpus).collect();
@@ -386,11 +453,12 @@ impl JointOptimizer {
             durs: &durs,
             node_gpus: &node_gpus,
             movable: &movable,
-            lower_bound: Self::lower_bound(&tasks, cluster),
+            lower_bound: Self::objective_lower_bound(&spec, &tasks, cluster),
             deadline,
             threads: self.resolved_threads(),
             full_replay: self.full_replay,
             churn: churn.as_ref(),
+            objective: &spec,
             restarts: 1,
             iters_per_temp: (self.iters_per_temp / 2).max(50),
             init_temp_frac: 0.05,
@@ -400,11 +468,12 @@ impl JointOptimizer {
         if !out.seed_ms.is_finite() {
             // incumbent cannot seat the current task set: cold-solve
             // (the engine consumed no randomness — with one restart and an
-            // infeasible seed the annealing loop never starts)
-            return self.solve(&tasks, cluster, rng);
+            // infeasible seed the annealing loop never starts), keeping
+            // the context's objective and task ages
+            return self.solve_with(&tasks, cluster, &spec, rng);
         }
 
-        let (sched, ms) = self.eval(&out.best, &tasks, cluster, churn.as_ref(), &mut stats);
+        let (sched, ms) = self.eval(&out.best, &tasks, cluster, churn.as_ref(), &spec, &mut stats);
         stats.final_makespan = if ms.is_finite() { ms } else { out.best_ms };
         stats.elapsed_secs = start.elapsed().as_secs_f64();
         stats.evals_per_sec = stats.evals as f64 / stats.elapsed_secs.max(1e-12);
@@ -420,6 +489,7 @@ impl JointOptimizer {
         &self,
         tasks: &[SpaseTask],
         cluster: &Cluster,
+        spec: &ScoreSpec,
         rng: &mut DetRng,
         stats: &mut SolveStats,
     ) -> (State, Schedule, f64) {
@@ -463,7 +533,7 @@ impl JointOptimizer {
 
         let mut best: Option<(State, Schedule, f64)> = None;
         for cand in candidates {
-            let (sched, ms) = self.eval(&cand, tasks, cluster, None, stats);
+            let (sched, ms) = self.eval(&cand, tasks, cluster, None, spec, stats);
             if best.as_ref().map_or(true, |(_, _, bms)| ms < *bms) {
                 best = Some((cand, sched, ms));
             }
@@ -521,7 +591,8 @@ impl Policy for JointOptimizer {
             return self.resolve_incremental(ctx, rng).0;
         }
         let tasks = ctx.spase_tasks();
-        self.solve(&tasks, ctx.cluster, rng).0
+        let spec = self.ctx_spec(ctx, &tasks);
+        self.solve_with(&tasks, ctx.cluster, &spec, rng).0
     }
 }
 
@@ -751,7 +822,8 @@ mod tests {
         let opt = JointOptimizer::default();
         let mut stats = SolveStats::default();
         let mut rng = DetRng::new(11);
-        let (_, sched, ms) = opt.warm_starts(&tasks, &cluster, &mut rng, &mut stats);
+        let spec = opt.objective.resolve(&tasks, &[]);
+        let (_, sched, ms) = opt.warm_starts(&tasks, &cluster, &spec, &mut rng, &mut stats);
         assert_eq!(stats.evals, 5, "5 candidates ⇒ exactly 5 evaluations");
         assert!(ms.is_finite());
         assert_eq!(sched.assignments.len(), 4);
@@ -1023,6 +1095,62 @@ mod tests {
         assert_eq!(off.improvements, on.improvements);
         assert_eq!(off.final_makespan, on.final_makespan);
         assert_eq!(off_sched, on_sched);
+    }
+
+    /// The tentpole's solver-level win condition, on the shared
+    /// flow-burst instance
+    /// ([`crate::trainer::workloads::flow_burst_instance`]): under the
+    /// default makespan objective the solver provably returns a
+    /// longest-first plan (makespan 1000 s — the area/longest bound — at
+    /// mean completion 2500/6 ≈ 416.7 s), while `MeanTurnaround` trades
+    /// makespan away to finish the five short jobs first (optimum: SPT,
+    /// mean 350 s). The two surfaces — `JointOptimizer::objective` and
+    /// `PlanCtx::objective` — must walk bit-identical trajectories.
+    #[test]
+    fn turnaround_objective_beats_makespan_on_flow_burst() {
+        let (w, grid, c) = crate::trainer::workloads::flow_burst_instance();
+        let ctx = PlanCtx::fresh(&w, &grid, &c);
+        let tasks = ctx.spase_tasks();
+        let mean_completion = |sched: &Schedule| {
+            sched.assignments.iter().map(|a| a.end()).sum::<f64>() / sched.assignments.len() as f64
+        };
+        let opt_ms = JointOptimizer { timeout: Duration::from_secs(600), ..Default::default() };
+        let (make_sched, make_stats) = opt_ms.solve(&tasks, &c, &mut DetRng::new(81));
+        // makespan path: every warm start already sits on the provable
+        // 1000 s bound, so the plan is the longest-first warm start
+        assert!((make_stats.final_makespan - 1000.0).abs() < 1e-9, "{}", make_stats.final_makespan);
+        assert!(
+            (mean_completion(&make_sched) - 2500.0 / 6.0).abs() < 1e-6,
+            "makespan plan drifted from longest-first: mean {}",
+            mean_completion(&make_sched)
+        );
+        let opt_turn =
+            JointOptimizer { objective: Objective::MeanTurnaround, ..opt_ms.clone() };
+        let (turn_sched, turn_stats) = opt_turn.solve(&tasks, &c, &mut DetRng::new(81));
+        // the reported score IS the schedule's mean completion (offsets 0)
+        assert!(
+            (turn_stats.final_makespan - mean_completion(&turn_sched)).abs() < 1e-6,
+            "score {} != schedule mean {}",
+            turn_stats.final_makespan,
+            mean_completion(&turn_sched)
+        );
+        // the objective must bite: ≥ 25 s better than the makespan plan's
+        // mean (the SPT optimum is 350 s; even a single order swap of the
+        // long gang reaches ≈ 366.7 s), and above the provable 250 s bound
+        assert!(
+            mean_completion(&turn_sched) < 2500.0 / 6.0 - 25.0,
+            "turnaround objective failed to beat makespan: {} vs {}",
+            mean_completion(&turn_sched),
+            2500.0 / 6.0
+        );
+        assert!(turn_stats.final_makespan >= 250.0 - 1e-9, "beat the provable flow bound");
+        // trading makespan for flow is visible: the long gang is delayed
+        assert!(turn_sched.makespan() > make_sched.makespan() + 1e-9);
+        // context surface ≡ knob surface: same seed, same spec, same plan
+        let mut ctx_obj = PlanCtx::fresh(&w, &grid, &c);
+        ctx_obj.objective = Some(Objective::MeanTurnaround);
+        let via_ctx = opt_ms.plan(&ctx_obj, &mut DetRng::new(81));
+        assert_eq!(via_ctx, turn_sched, "PlanCtx::objective diverged from the optimizer knob");
     }
 
     #[test]

@@ -17,6 +17,9 @@
 //!   in-place moves with an undo log, block-checkpointed suffix replay,
 //!   sorted per-node free lists. Bit-identical to full replay, orders of
 //!   magnitude cheaper per move at 100+-task scale.
+//! - [`objective`]: pluggable scheduling objectives — makespan (default),
+//!   mean/weighted turnaround, and a smoothed-p95 tail surrogate — the
+//!   scalar every evaluator layer scores candidates with.
 //! - [`policy`]: the common interface all planners (Saturn + baselines)
 //!   implement, so the simulator and introspection loop can drive any of
 //!   them interchangeably.
@@ -26,7 +29,9 @@ mod delta;
 pub mod joint;
 pub mod lp;
 pub mod milp;
+pub mod objective;
 pub mod policy;
 pub mod spase;
 
+pub use objective::Objective;
 pub use policy::{PlanCtx, Policy};

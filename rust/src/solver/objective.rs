@@ -1,0 +1,442 @@
+//! Pluggable scheduling objectives: the scalar every evaluator optimizes.
+//!
+//! The joint formulation historically hardwired *makespan* — the right
+//! objective for the paper's offline model-selection setting, but the
+//! wrong one for online streams, where per-job latency is what users
+//! feel (the Hydra lineage, arXiv 2110.08633, and the Saturn follow-up,
+//! arXiv 2311.02840, both frame multi-tenant efficiency in flow-time
+//! terms). [`Objective`] un-hardwires the score:
+//!
+//! - [`Objective::Makespan`] — the historical max completion time. The
+//!   default, bit-identical to the pre-objective code path (the parity
+//!   tests pin this).
+//! - [`Objective::MeanTurnaround`] — mean of per-task *turnaround*
+//!   (completion − arrival): the canonical online flow-time objective.
+//! - [`Objective::WeightedFlow`] — weighted mean turnaround, weights by
+//!   task id (missing / non-positive / non-finite weights default to 1);
+//!   lets a stream prioritize, e.g., interactive jobs over batch refits.
+//! - [`Objective::TailTurnaround`] — a smoothed p95 surrogate: the mean
+//!   of the top-⌈α·n⌉ turnarounds. A true quantile is a step function
+//!   (bad annealing gradient) and is not prefix-aggregatable; the top-k
+//!   mean is both, and upper-bounds the (1−α)-quantile.
+//!
+//! Every objective stays an O(1)-comparable `f64`, so the annealing
+//! engine, the Metropolis rule, and the simulator's re-plan threshold
+//! are untouched. Internally an `Objective` is resolved per solve into a
+//! [`ScoreSpec`] — per-task-index weights and arrival offsets plus the
+//! tail size — which all four evaluator layers (delta kernel committed
+//! replay, read-only worker replay, full replay, schedule
+//! materialization) consume through the same accumulation primitives, in
+//! the same order, so delta ≡ full-replay and thread-count bit-identity
+//! hold for every variant exactly as they do for makespan.
+//!
+//! Turnaround inside a solve is `completion + offset`, where `offset =
+//! now − arrival ≥ 0` is the task's age at planning time: the solver
+//! plans in relative time, so a task's final turnaround is its relative
+//! completion plus how long it has already waited.
+
+use crate::sched::{Assignment, Schedule};
+use crate::solver::spase::SpaseTask;
+
+/// The scheduling objective a solve minimizes. See the module docs for
+/// the catalog; [`Objective::Makespan`] is the default and preserves the
+/// historical behavior bit for bit.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum Objective {
+    /// Maximum completion time (the paper's SPASE objective).
+    #[default]
+    Makespan,
+    /// Mean turnaround (completion − arrival) across tasks.
+    MeanTurnaround,
+    /// Turnaround mean weighted per task.
+    WeightedFlow {
+        /// Weight of task id `i` at index `i`; missing, non-positive, or
+        /// non-finite entries count as 1.0.
+        weights: Vec<f64>,
+    },
+    /// Mean of the top-⌈α·n⌉ turnarounds — a smooth p95 surrogate at
+    /// α = 0.05 (α is clamped to (0, 1]; degenerate values fall back to
+    /// α → 0, i.e. the single worst turnaround).
+    TailTurnaround {
+        /// Tail fraction (0 < α ≤ 1); 0.05 approximates p95.
+        alpha: f64,
+    },
+}
+
+impl Objective {
+    /// True for the default (historical) makespan objective — the fast
+    /// paths that must stay bit-identical key off this.
+    pub fn is_makespan(&self) -> bool {
+        matches!(self, Objective::Makespan)
+    }
+
+    /// Resolve this objective against a concrete SPASE instance:
+    /// per-task-index weights/offsets and the tail size. `offsets[i]` is
+    /// task `i`'s age (`now − arrival`, clamped at 0); pass `&[]` when
+    /// every task is new (all offsets zero).
+    pub(crate) fn resolve(&self, tasks: &[SpaseTask], offsets: &[f64]) -> ScoreSpec {
+        if self.is_makespan() {
+            return ScoreSpec::makespan();
+        }
+        let n = tasks.len();
+        debug_assert!(offsets.is_empty() || offsets.len() == n, "offsets must match the task list");
+        let off: Vec<f64> = if offsets.is_empty() {
+            vec![0.0; n]
+        } else {
+            offsets.iter().map(|o| o.max(0.0)).collect()
+        };
+        match self {
+            Objective::Makespan => unreachable!("handled above"),
+            Objective::MeanTurnaround => ScoreSpec::flow(vec![1.0; n], off),
+            Objective::WeightedFlow { weights } => {
+                let w = tasks.iter().map(|t| sanitize_weight(weights.get(t.id))).collect();
+                ScoreSpec::flow(w, off)
+            }
+            Objective::TailTurnaround { alpha } => ScoreSpec::tail(tail_k(*alpha, n), off),
+        }
+    }
+
+    /// Score a materialized (relative-time) schedule at absolute time
+    /// `now`, with `arrival` mapping a task id to its submission time.
+    /// Used by the simulator's re-plan acceptance: for makespan this is
+    /// exactly [`Schedule::makespan`] (the historical comparison); flow
+    /// objectives aggregate `(now − arrival) + relative completion` over
+    /// the scheduled tasks with the same primitives the solver uses.
+    pub fn score_schedule<F: Fn(usize) -> f64>(&self, sched: &Schedule, now: f64, arrival: F) -> f64 {
+        if self.is_makespan() {
+            return sched.makespan();
+        }
+        let n = sched.assignments.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let turn = |a: &Assignment| (now - arrival(a.task_id)).max(0.0) + a.end();
+        match self {
+            Objective::Makespan => unreachable!("handled above"),
+            Objective::MeanTurnaround => {
+                sched.assignments.iter().map(turn).sum::<f64>() / n as f64
+            }
+            Objective::WeightedFlow { weights } => {
+                let mut num = 0.0;
+                let mut den = 0.0;
+                for a in &sched.assignments {
+                    let w = sanitize_weight(weights.get(a.task_id));
+                    num += w * turn(a);
+                    den += w;
+                }
+                num / den
+            }
+            Objective::TailTurnaround { alpha } => {
+                let k = tail_k(*alpha, n);
+                let mut buf = Vec::with_capacity(k);
+                for a in &sched.assignments {
+                    tail_push(&mut buf, k, turn(a));
+                }
+                tail_score(&buf)
+            }
+        }
+    }
+}
+
+/// A weight as the evaluators use it: finite and positive, else 1.0.
+fn sanitize_weight(w: Option<&f64>) -> f64 {
+    match w {
+        Some(&w) if w.is_finite() && w > 0.0 => w,
+        _ => 1.0,
+    }
+}
+
+/// Tail size ⌈α·n⌉ for `n` tasks, clamped to `[1, n]`; degenerate α
+/// (non-finite or ≤ 0) falls back to 1 — the single worst turnaround.
+fn tail_k(alpha: f64, n: usize) -> usize {
+    if !(alpha.is_finite() && alpha > 0.0) {
+        return 1;
+    }
+    ((alpha.min(1.0) * n as f64).ceil() as usize).clamp(1, n.max(1))
+}
+
+/// How a resolved objective aggregates per-task completions.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) enum ScoreKind {
+    /// Running max (the historical path — no auxiliary aggregates).
+    Makespan,
+    /// Weighted turnaround sum, normalized by the weight sum.
+    Flow,
+    /// Mean of the k largest turnarounds.
+    Tail,
+}
+
+/// A per-solve resolved objective: everything the evaluators need to
+/// turn a stream of `(task index, completion)` pairs into the scalar
+/// score, in a fixed accumulation order so every evaluator layer
+/// produces the identical `f64`.
+#[derive(Debug, Clone)]
+pub(crate) struct ScoreSpec {
+    /// Aggregation kind.
+    pub(crate) kind: ScoreKind,
+    /// Per-task-index additive offset (`now − arrival`, ≥ 0): completion
+    /// + offset = turnaround. Empty for makespan.
+    pub(crate) offsets: Vec<f64>,
+    /// Per-task-index weight (all 1.0 except weighted flow). Empty for
+    /// makespan and tail.
+    pub(crate) weights: Vec<f64>,
+    /// Σ weights (the flow normalizer; 0.0 otherwise).
+    pub(crate) wsum: f64,
+    /// Tail size (0 unless [`ScoreKind::Tail`]).
+    pub(crate) k: usize,
+}
+
+impl ScoreSpec {
+    /// The historical makespan objective.
+    pub(crate) fn makespan() -> Self {
+        Self { kind: ScoreKind::Makespan, offsets: Vec::new(), weights: Vec::new(), wsum: 0.0, k: 0 }
+    }
+
+    /// Weighted flow over per-task-index weights and offsets.
+    pub(crate) fn flow(weights: Vec<f64>, offsets: Vec<f64>) -> Self {
+        let wsum = weights.iter().sum();
+        Self { kind: ScoreKind::Flow, offsets, weights, wsum, k: 0 }
+    }
+
+    /// Top-`k` turnaround mean over per-task-index offsets.
+    pub(crate) fn tail(k: usize, offsets: Vec<f64>) -> Self {
+        Self { kind: ScoreKind::Tail, offsets, weights: Vec::new(), wsum: 0.0, k }
+    }
+
+    /// Turnaround of task index `t` completing at (relative) `end`.
+    #[inline]
+    pub(crate) fn turnaround(&self, t: usize, end: f64) -> f64 {
+        end + self.offsets[t]
+    }
+
+    /// The flow contribution of task index `t` completing at `end`.
+    #[inline]
+    pub(crate) fn flow_term(&self, t: usize, end: f64) -> f64 {
+        self.weights[t] * self.turnaround(t, end)
+    }
+
+    /// Final flow score from the accumulated weighted sum.
+    #[inline]
+    pub(crate) fn flow_score(&self, sum: f64) -> f64 {
+        sum / self.wsum
+    }
+
+    /// Score a materialized schedule whose assignment `j` seats the task
+    /// at `order[j]` — the same position-order accumulation the replay
+    /// evaluators use, so the result is bit-identical to theirs.
+    pub(crate) fn score_assignments(&self, order: &[usize], sched: &Schedule) -> f64 {
+        match self.kind {
+            ScoreKind::Makespan => sched.makespan(),
+            ScoreKind::Flow => {
+                let mut sum = 0.0;
+                for (j, a) in sched.assignments.iter().enumerate() {
+                    sum += self.flow_term(order[j], a.end());
+                }
+                self.flow_score(sum)
+            }
+            ScoreKind::Tail => {
+                let mut buf = Vec::with_capacity(self.k);
+                for (j, a) in sched.assignments.iter().enumerate() {
+                    tail_push(&mut buf, self.k, self.turnaround(order[j], a.end()));
+                }
+                tail_score(&buf)
+            }
+        }
+    }
+
+    /// A cluster-free lower bound on the score: every task's completion
+    /// is at least its fastest configuration's runtime, so flow bounds
+    /// aggregate `min runtime + offset` and the tail bound takes the k
+    /// largest of those (order statistics dominate pointwise bounds).
+    /// Deliberately ignores contention — it only needs to be *valid* for
+    /// the annealer's provably-optimal early exit, not tight. Makespan
+    /// keeps its stronger area bound in `JointOptimizer::lower_bound`.
+    pub(crate) fn lower_bound_hint(&self, tasks: &[SpaseTask]) -> f64 {
+        let min_rt = |t: &SpaseTask| {
+            t.configs.iter().map(|c| c.task_secs).fold(f64::INFINITY, f64::min)
+        };
+        match self.kind {
+            ScoreKind::Makespan => 0.0,
+            ScoreKind::Flow => {
+                let mut sum = 0.0;
+                for (i, t) in tasks.iter().enumerate() {
+                    sum += self.flow_term(i, min_rt(t));
+                }
+                self.flow_score(sum)
+            }
+            ScoreKind::Tail => {
+                let mut buf = Vec::with_capacity(self.k);
+                for (i, t) in tasks.iter().enumerate() {
+                    tail_push(&mut buf, self.k, self.turnaround(i, min_rt(t)));
+                }
+                tail_score(&buf)
+            }
+        }
+    }
+}
+
+/// Push a turnaround value into an ascending top-`k` buffer: the buffer
+/// always holds the k largest values seen, sorted ascending. The final
+/// multiset is the k largest of the whole stream regardless of insertion
+/// order, and every evaluator sums it ascending ([`tail_score`]), which
+/// is what makes the tail score bit-identical across the delta kernel's
+/// prefix-checkpointed replay and the full-replay evaluator.
+#[inline]
+pub(crate) fn tail_push(buf: &mut Vec<f64>, k: usize, v: f64) {
+    if buf.len() < k {
+        let i = buf.partition_point(|&x| x <= v);
+        buf.insert(i, v);
+    } else if k > 0 && v > buf[0] {
+        // evict the current minimum, splice v in at its sorted position
+        let i = buf.partition_point(|&x| x <= v);
+        buf.copy_within(1..i, 0);
+        buf[i - 1] = v;
+    }
+}
+
+/// Mean of a top-k buffer, summed in ascending order (fixed order =
+/// bit-identical across evaluators). Empty buffers score 0.0 — solves
+/// over zero tasks short-circuit before any evaluator runs, but a
+/// defined value beats a 0/0 NaN poisoning a Metropolis comparison if a
+/// future caller forgets that guard.
+#[inline]
+pub(crate) fn tail_score(buf: &[f64]) -> f64 {
+    if buf.is_empty() {
+        return 0.0;
+    }
+    let mut s = 0.0;
+    for &v in buf {
+        s += v;
+    }
+    s / buf.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_makespan() {
+        assert!(Objective::default().is_makespan());
+        assert!(!Objective::MeanTurnaround.is_makespan());
+    }
+
+    #[test]
+    fn tail_push_tracks_k_largest() {
+        let mut buf = Vec::new();
+        for v in [5.0, 1.0, 9.0, 3.0, 9.0, 2.0, 7.0] {
+            tail_push(&mut buf, 3, v);
+        }
+        assert_eq!(buf, vec![7.0, 9.0, 9.0], "top-3 with duplicates, ascending");
+        assert!((tail_score(&buf) - 25.0 / 3.0).abs() < 1e-12);
+        // insertion order must not change the multiset
+        let mut buf2 = Vec::new();
+        for v in [9.0, 9.0, 7.0, 5.0, 3.0, 2.0, 1.0] {
+            tail_push(&mut buf2, 3, v);
+        }
+        assert_eq!(buf, buf2);
+        // k = 1 degenerates to the max
+        let mut one = Vec::new();
+        for v in [4.0, 8.0, 6.0] {
+            tail_push(&mut one, 1, v);
+        }
+        assert_eq!(one, vec![8.0]);
+    }
+
+    #[test]
+    fn tail_k_clamps_degenerate_alpha() {
+        assert_eq!(tail_k(0.05, 256), 13); // ⌈12.8⌉: the p95 surrogate
+        assert_eq!(tail_k(0.05, 6), 1);
+        assert_eq!(tail_k(1.0, 6), 6);
+        assert_eq!(tail_k(7.5, 6), 6); // clamped to the full mean
+        assert_eq!(tail_k(0.0, 6), 1); // degenerate → worst turnaround
+        assert_eq!(tail_k(f64::NAN, 6), 1);
+    }
+
+    #[test]
+    fn weight_sanitization() {
+        assert_eq!(sanitize_weight(Some(&2.5)), 2.5);
+        assert_eq!(sanitize_weight(Some(&0.0)), 1.0);
+        assert_eq!(sanitize_weight(Some(&-3.0)), 1.0);
+        assert_eq!(sanitize_weight(Some(&f64::NAN)), 1.0);
+        assert_eq!(sanitize_weight(None), 1.0);
+    }
+
+    #[test]
+    fn score_schedule_flow_and_tail_hand_computed() {
+        use crate::costmodel::{Knobs, ParallelismKind};
+        use crate::profiler::TaskConfig;
+        let cfg = TaskConfig {
+            gpus: 1,
+            upp: "x".into(),
+            kind: ParallelismKind::Ddp,
+            knobs: Knobs::default(),
+            minibatch_secs: 1.0,
+            task_secs: 1.0,
+        };
+        let mk = |task_id: usize, start: f64, duration: f64| Assignment {
+            task_id,
+            node: 0,
+            gpus: vec![0],
+            start,
+            duration,
+            config: cfg.clone(),
+        };
+        // ends: task 0 → 100, task 1 → 300, task 2 → 50; now = 40,
+        // arrivals 0/10/40 → turnarounds 140, 330, 50
+        let sched =
+            Schedule { assignments: vec![mk(0, 0.0, 100.0), mk(1, 100.0, 200.0), mk(2, 0.0, 50.0)] };
+        let arrivals = [0.0, 10.0, 40.0];
+        let arr = |id: usize| arrivals[id];
+        assert_eq!(Objective::Makespan.score_schedule(&sched, 40.0, arr), sched.makespan());
+        let mean = Objective::MeanTurnaround.score_schedule(&sched, 40.0, arr);
+        assert!((mean - (140.0 + 330.0 + 50.0) / 3.0).abs() < 1e-12);
+        // weight task 1 ×3: (140 + 3·330 + 50) / 5 = 236
+        let wf = Objective::WeightedFlow { weights: vec![1.0, 3.0, 1.0] };
+        assert!((wf.score_schedule(&sched, 40.0, arr) - 236.0).abs() < 1e-12);
+        // α = 0.5 on 3 tasks → k = 2 → mean of {330, 140} = 235
+        let tail = Objective::TailTurnaround { alpha: 0.5 };
+        assert!((tail.score_schedule(&sched, 40.0, arr) - 235.0).abs() < 1e-12);
+        // empty schedules score 0 under every objective
+        let empty = Schedule::default();
+        assert_eq!(Objective::MeanTurnaround.score_schedule(&empty, 40.0, arr), 0.0);
+        assert_eq!(tail.score_schedule(&empty, 40.0, arr), 0.0);
+    }
+
+    #[test]
+    fn resolve_builds_per_index_tables() {
+        use crate::costmodel::{Knobs, ParallelismKind};
+        use crate::profiler::TaskConfig;
+        let cfg = |secs: f64| TaskConfig {
+            gpus: 1,
+            upp: "x".into(),
+            kind: ParallelismKind::Ddp,
+            knobs: Knobs::default(),
+            minibatch_secs: secs / 100.0,
+            task_secs: secs,
+        };
+        // note the non-dense, out-of-order ids: weights are keyed by id
+        let tasks = vec![
+            SpaseTask { id: 7, configs: vec![cfg(100.0)] },
+            SpaseTask { id: 2, configs: vec![cfg(300.0), cfg(200.0)] },
+        ];
+        let obj = Objective::WeightedFlow { weights: vec![9.0, 9.0, 4.0, 9.0, 9.0, 9.0, 9.0, 2.0] };
+        let spec = obj.resolve(&tasks, &[50.0, 0.0]);
+        assert_eq!(spec.kind, ScoreKind::Flow);
+        assert_eq!(spec.weights, vec![2.0, 4.0], "weights keyed by task id, ordered by index");
+        assert_eq!(spec.offsets, vec![50.0, 0.0]);
+        assert_eq!(spec.wsum, 6.0);
+        // lower bound: (2·(100+50) + 4·(200+0)) / 6
+        assert!((spec.lower_bound_hint(&tasks) - (2.0 * 150.0 + 4.0 * 200.0) / 6.0).abs() < 1e-12);
+        // mean turnaround with empty offsets = flat zeros
+        let spec2 = Objective::MeanTurnaround.resolve(&tasks, &[]);
+        assert_eq!(spec2.offsets, vec![0.0, 0.0]);
+        assert_eq!(spec2.weights, vec![1.0, 1.0]);
+        // tail k from α, offsets applied: top-1 of {150, 200} = 200
+        let spec3 = Objective::TailTurnaround { alpha: 0.3 }.resolve(&tasks, &[50.0, 0.0]);
+        assert_eq!(spec3.k, 1);
+        assert!((spec3.lower_bound_hint(&tasks) - 200.0).abs() < 1e-12);
+        // makespan resolves to the empty spec
+        assert_eq!(Objective::Makespan.resolve(&tasks, &[]).kind, ScoreKind::Makespan);
+    }
+}

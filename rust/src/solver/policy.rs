@@ -10,6 +10,7 @@ use crate::cluster::Cluster;
 use crate::costmodel::ParallelismKind;
 use crate::profiler::{ProfileGrid, TaskConfig};
 use crate::sched::Schedule;
+use crate::solver::objective::Objective;
 use crate::solver::spase::SpaseTask;
 use crate::trainer::Workload;
 use crate::util::rng::DetRng;
@@ -65,6 +66,18 @@ pub struct PlanCtx<'a> {
     /// `mark_switches`), keeping planner estimates and simulated reality
     /// in agreement.
     pub preempt_cost: Option<f64>,
+    /// Absolute time of this planning event, seconds. Flow objectives
+    /// measure each task's age as `now − arrival` (how long it has
+    /// already waited), so its final turnaround is that age plus its
+    /// planned relative completion. The simulator stamps this before
+    /// every re-plan; 0.0 (the default) makes every task brand new.
+    pub now: f64,
+    /// The scheduling objective this plan should minimize. `None` (the
+    /// default) defers to the planner's own knob
+    /// (`JointOptimizer::objective`, makespan by default); the simulator
+    /// sets `Some` from `SimConfig::objective` so the planner optimizes
+    /// exactly the scalar the re-plan acceptance threshold compares.
+    pub objective: Option<Objective>,
 }
 
 impl<'a> PlanCtx<'a> {
@@ -80,6 +93,8 @@ impl<'a> PlanCtx<'a> {
             pinned: vec![false; n],
             prior: Vec::new(),
             preempt_cost: None,
+            now: 0.0,
+            objective: None,
         }
     }
 
@@ -90,30 +105,11 @@ impl<'a> PlanCtx<'a> {
             .collect()
     }
 
-    /// Workload index of a task id — an O(n) linear scan kept only as the
-    /// reference the map-equivalence test compares against. Anything that
-    /// looks up more than one task must use [`Self::id_index_map`]; a
-    /// per-task scan is O(n²) at online stream scale, which is exactly
-    /// the regression this deprecation fences off.
-    #[doc(hidden)]
-    #[deprecated(note = "O(n) scan: build `id_index_map()` once instead")]
-    pub fn index_of(&self, task_id: usize) -> Option<usize> {
-        self.workload.iter().position(|t| t.id == task_id)
-    }
-
-    /// The incumbent decision for a task id — O(n) linear scan, kept only
-    /// as the reference for the map-equivalence test. Use
-    /// [`Self::prior_index_map`] for anything repeated.
-    #[doc(hidden)]
-    #[deprecated(note = "O(n) scan: build `prior_index_map()` once instead")]
-    pub fn prior_for(&self, task_id: usize) -> Option<&PriorDecision> {
-        self.prior.iter().find(|p| p.task_id == task_id)
-    }
-
-    /// Bulk task-id → workload-index map (first occurrence, matching
-    /// [`Self::index_of`]). Incremental re-solve seeding does one lookup
-    /// per task; per-task `index_of` scans made that O(n²) on 100+-task
-    /// online streams.
+    /// Bulk task-id → workload-index map (first occurrence). Incremental
+    /// re-solve seeding does one lookup per task; the per-task linear
+    /// scans this replaced (`index_of`, deleted in PR 5 after PR 4
+    /// migrated every caller) made that O(n²) on 100+-task online
+    /// streams.
     pub fn id_index_map(&self) -> HashMap<usize, usize> {
         let mut m = HashMap::with_capacity(self.workload.len());
         for (i, t) in self.workload.iter().enumerate() {
@@ -123,7 +119,7 @@ impl<'a> PlanCtx<'a> {
     }
 
     /// Bulk task-id → position-in-[`Self::prior`] map (first occurrence,
-    /// matching [`Self::prior_for`]).
+    /// the same contract the deleted `prior_for` scan had).
     pub fn prior_index_map(&self) -> HashMap<usize, usize> {
         let mut m = HashMap::with_capacity(self.prior.len());
         for (i, p) in self.prior.iter().enumerate() {
@@ -241,6 +237,9 @@ mod tests {
         let (w, grid, c) = setup();
         let ctx = PlanCtx::fresh(&w, &grid, &c);
         assert_eq!(ctx.active().len(), w.len());
+        // objective defaults: planning time zero, defer to the planner
+        assert_eq!(ctx.now, 0.0);
+        assert!(ctx.objective.is_none());
     }
 
     #[test]
@@ -294,27 +293,16 @@ mod tests {
         }
     }
 
+    /// The maps' contract — first occurrence wins, missing ids are
+    /// absent — asserted directly (the deprecated `index_of`/`prior_for`
+    /// linear scans that used to serve as the reference are gone; PR 4
+    /// migrated every caller to the bulk maps).
     #[test]
-    #[allow(deprecated)] // exercising the deprecated scans on purpose
-    fn index_and_prior_lookup() {
+    fn index_maps_first_occurrence_semantics() {
         let (w, grid, c) = setup();
         let mut ctx = PlanCtx::fresh(&w, &grid, &c);
-        assert_eq!(ctx.index_of(w[3].id), Some(3));
-        assert_eq!(ctx.index_of(999_999), None);
-        assert!(ctx.prior_for(w[0].id).is_none());
         let cfg = ctx.min_area_config(0).unwrap();
-        ctx.prior = vec![PriorDecision { task_id: w[0].id, config: cfg, node: Some(0) }];
-        assert_eq!(ctx.prior_for(w[0].id).unwrap().node, Some(0));
-    }
-
-    #[test]
-    #[allow(deprecated)] // the maps' contract is "first occurrence, like the scans"
-    fn index_maps_match_linear_scans() {
-        let (w, grid, c) = setup();
-        let mut ctx = PlanCtx::fresh(&w, &grid, &c);
-        // prior with a duplicate entry: maps must keep the first, exactly
-        // like the linear scans they replace
-        let cfg = ctx.min_area_config(0).unwrap();
+        // prior with a duplicate entry: the map must keep the first
         ctx.prior = vec![
             PriorDecision { task_id: w[2].id, config: cfg.clone(), node: Some(0) },
             PriorDecision { task_id: w[0].id, config: cfg.clone(), node: None },
@@ -322,17 +310,14 @@ mod tests {
         ];
         let widx = ctx.id_index_map();
         let pidx = ctx.prior_index_map();
-        for t in w.iter() {
-            assert_eq!(widx.get(&t.id).copied(), ctx.index_of(t.id));
-            assert_eq!(
-                pidx.get(&t.id).copied(),
-                ctx.prior.iter().position(|p| p.task_id == t.id),
-                "prior map diverged for task {}",
-                t.id
-            );
+        for (i, t) in w.iter().enumerate() {
+            assert_eq!(widx.get(&t.id).copied(), Some(i), "workload ids are unique here");
         }
         assert_eq!(pidx.get(&w[2].id).copied(), Some(0), "duplicate must resolve to first");
+        assert_eq!(pidx.get(&w[0].id).copied(), Some(1));
+        assert_eq!(pidx.get(&w[1].id).copied(), None, "unplanned task has no prior entry");
         assert!(widx.get(&999_999).is_none());
+        assert_eq!(ctx.prior[pidx[&w[2].id]].node, Some(0), "first occurrence's payload");
     }
 
     #[test]

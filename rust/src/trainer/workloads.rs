@@ -224,6 +224,48 @@ pub fn blocked_queue_instance() -> (Workload, crate::profiler::ProfileGrid, Clus
     (w, grid, Cluster::single_node_8gpu())
 }
 
+/// The canonical **flow-burst** objective instance: one long 1-GPU task
+/// (1000 s, arrives at t = 0) plus a burst of five 1-GPU 100 s jobs
+/// arriving together at t = 50 s, on a single 2-GPU node. The economics
+/// are exact (every task runs 100 minibatches, so `task_secs = 100 ×
+/// minibatch_secs`): a makespan-minimizing solver provably runs the long
+/// task first — any plan seating it at t = 0 hits the area/longest lower
+/// bound of 1000 s, with the shorts serialized on the other GPU at mean
+/// completion 2500/6 ≈ 416.7 s — while the mean-turnaround optimum is
+/// shortest-processing-time order (shorts first, mean 350 s, makespan
+/// 1200 s). Used by the solver-level and simulator-level objective
+/// acceptance tests and `examples/online_arrivals.rs`.
+pub fn flow_burst_instance() -> (Workload, crate::profiler::ProfileGrid, Cluster) {
+    use crate::profiler::{PlanEstimate, ProfileGrid};
+    // dataset 100 examples at batch 1 over 1 epoch → exactly 100 batches
+    let mut w: Workload = (0..6)
+        .map(|id| {
+            Task::new(id, ModelDesc::resnet_200m(), HParams::new(1, 1e-4, 1, Optimizer::Sgd), 100)
+        })
+        .collect();
+    for t in w.iter_mut().skip(1) {
+        t.arrival = 50.0;
+    }
+    let mut grid = ProfileGrid::default();
+    let mut put = |id: usize, secs: f64| {
+        grid.insert(PlanEstimate {
+            task_id: id,
+            upp: "pytorch-ddp".into(),
+            kind: ParallelismKind::Ddp,
+            gpus: 1,
+            knobs: Knobs::default(),
+            minibatch_secs: secs / 100.0,
+            mem_per_gpu_gib: 1.0,
+            dram_gib: 1.0,
+        });
+    };
+    put(0, 1000.0);
+    for id in 1..6 {
+        put(id, 100.0);
+    }
+    (w, grid, Cluster::from_gpu_counts(&[2]))
+}
+
 // ---- solver scaling workloads ---------------------------------------------
 //
 // The delta-kernel scale pass (EXPERIMENTS.md §Perf) needs SPASE instances
@@ -433,6 +475,24 @@ mod tests {
         let small = grid.configs(&w[1]);
         assert_eq!(small.len(), 1);
         assert_eq!((small[0].gpus, small[0].task_secs), (1, 500.0));
+    }
+
+    #[test]
+    fn flow_burst_instance_exact_economics() {
+        let (w, grid, c) = flow_burst_instance();
+        assert_eq!(w.len(), 6);
+        assert_eq!(c.total_gpus(), 2);
+        assert_eq!(w[0].arrival, 0.0);
+        assert!(w[1..].iter().all(|t| t.arrival == 50.0));
+        // the exact frontier the objective acceptance tests reason about
+        let long = grid.configs(&w[0]);
+        assert_eq!(long.len(), 1);
+        assert_eq!((long[0].gpus, long[0].task_secs), (1, 1000.0));
+        for t in &w[1..] {
+            let cfgs = grid.configs(t);
+            assert_eq!(cfgs.len(), 1);
+            assert_eq!((cfgs[0].gpus, cfgs[0].task_secs), (1, 100.0));
+        }
     }
 
     #[test]

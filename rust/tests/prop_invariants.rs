@@ -626,6 +626,169 @@ fn prop_preempt_resolve_thread_and_evaluator_parity() {
     );
 }
 
+/// A 64-task mid-stream re-solve context for the objective parity tests:
+/// 48 tasks planned (24 in flight and pinned), 16 arrivals just landed,
+/// planning time stamped at the last arrival so every task carries a
+/// real age (`now − arrival`) into the flow objectives.
+fn mid_stream_ctx<'a>(
+    w: &'a Workload,
+    grid: &'a saturn::profiler::ProfileGrid,
+    c: &'a Cluster,
+    seed: u64,
+) -> PlanCtx<'a> {
+    let mut ctx = PlanCtx::fresh(w, grid, c);
+    for i in 48..w.len() {
+        ctx.available[i] = false;
+    }
+    let incumbent = JointOptimizer::default().plan(&ctx, &mut DetRng::new(seed));
+    ctx.prior = incumbent
+        .assignments
+        .iter()
+        .map(|a| PriorDecision { task_id: a.task_id, config: a.config.clone(), node: Some(a.node) })
+        .collect();
+    let widx = ctx.id_index_map();
+    for a in incumbent.assignments.iter().take(24) {
+        ctx.pinned[widx[&a.task_id]] = true;
+    }
+    for i in 48..w.len() {
+        ctx.available[i] = true;
+    }
+    ctx.now = w.last().expect("non-empty workload").arrival;
+    ctx
+}
+
+/// The three non-default objective variants, built for a 64-task stream
+/// (weights keyed by task id for the weighted-flow case).
+fn objective_variants() -> Vec<(&'static str, saturn::solver::Objective)> {
+    use saturn::solver::Objective;
+    vec![
+        ("mean-turnaround", Objective::MeanTurnaround),
+        (
+            "weighted-flow",
+            Objective::WeightedFlow { weights: (0..64).map(|i| 1.0 + (i % 5) as f64).collect() },
+        ),
+        ("tail-p95", Objective::TailTurnaround { alpha: 0.05 }),
+    ]
+}
+
+/// Objective parity, evaluator side (the tentpole's determinism
+/// contract, run explicitly in release by CI alongside the thread-count
+/// jobs): for every objective variant, a 64-task mid-stream incremental
+/// re-solve — real task ages, 24 pinned in-flight gangs — walks a
+/// bit-identical trajectory through the delta kernel's prefix-aggregated
+/// suffix replay and the legacy full-replay evaluator, and each
+/// non-default objective genuinely forks the search away from the
+/// makespan trajectory.
+#[test]
+fn prop_objective_delta_and_full_replay_agree() {
+    use saturn::trainer::workloads;
+
+    let registry = UppRegistry::default_library(Arc::new(CostModel::default()));
+    let mut wrng = DetRng::new(888);
+    let w = workloads::online_mixed_workload(64, 200.0, &mut wrng);
+    let c = Cluster::four_node_32gpu();
+    let (grid, _) = TrialRunner::new(registry).profile(&w, &c);
+    let ctx = mid_stream_ctx(&w, &grid, &c, 889);
+    // budgets un-truncatable so wall-clock cannot fork the comparison
+    let base = JointOptimizer {
+        timeout: std::time::Duration::from_secs(14400),
+        incremental: true,
+        ..Default::default()
+    };
+    let (p_ms, s_ms) = base.resolve_incremental(&ctx, &mut DetRng::new(890));
+    for (name, objective) in objective_variants() {
+        let mk = |full_replay: bool| JointOptimizer {
+            full_replay,
+            objective: objective.clone(),
+            ..base.clone()
+        };
+        let (pd, sd) = mk(false).resolve_incremental(&ctx, &mut DetRng::new(890));
+        let (pf, sf) = mk(true).resolve_incremental(&ctx, &mut DetRng::new(890));
+        assert_eq!(sd.evals, sf.evals, "{name}: delta vs full replay diverged");
+        assert_eq!(sd.improvements, sf.improvements, "{name}");
+        assert_eq!(sd.warm_makespan, sf.warm_makespan, "{name}");
+        assert_eq!(sd.final_makespan, sf.final_makespan, "{name}");
+        assert_eq!(pd, pf, "{name}: plans diverged across evaluators");
+        // the objective must bite: a different scalar steers the anneal
+        // somewhere else than the makespan run with the same seed
+        assert!(
+            pd != p_ms || sd.final_makespan != s_ms.final_makespan,
+            "{name}: objective had no effect on a 64-task stream"
+        );
+    }
+}
+
+/// Objective parity, thread side (the `prop_thread_count_preserves_
+/// trajectory` twin the tentpole promises, run explicitly in release by
+/// CI): every objective variant walks bit-identical trajectories at 1
+/// and 8 worker threads — cold solves on 64-task (every variant) and
+/// 256-task (mean turnaround) synthetic-frontier instances, plus the
+/// 64-task mid-stream incremental re-solve with real task ages.
+#[test]
+fn prop_objective_thread_count_preserves_trajectory() {
+    use saturn::trainer::workloads;
+
+    // ---- cold solves ---------------------------------------------------
+    let mut cold_points: Vec<(usize, usize, usize, u64, saturn::solver::Objective)> = Vec::new();
+    for (i, (_, objective)) in objective_variants().into_iter().enumerate() {
+        cold_points.push((64, 2, 8, 141 + i as u64, objective));
+    }
+    cold_points.push((256, 8, 8, 144, saturn::solver::Objective::MeanTurnaround));
+    for (n, nodes, gpn, seed, objective) in cold_points {
+        let (tasks, cluster) = workloads::scaling_instance(n, nodes, gpn, seed);
+        let mk = |threads: usize, full_replay: bool| JointOptimizer {
+            timeout: std::time::Duration::from_secs(3600),
+            restarts: 1,
+            iters_per_temp: 60,
+            threads,
+            full_replay,
+            objective: objective.clone(),
+            ..Default::default()
+        };
+        let (s1, st1) = mk(1, false).solve(&tasks, &cluster, &mut DetRng::new(seed));
+        let (s8, st8) = mk(8, false).solve(&tasks, &cluster, &mut DetRng::new(seed));
+        assert_eq!(st1.evals, st8.evals, "{n} tasks {objective:?}: eval counts diverged");
+        assert_eq!(st1.improvements, st8.improvements, "{n} tasks {objective:?}");
+        assert_eq!(st1.warm_makespan, st8.warm_makespan, "{n} tasks {objective:?}");
+        assert_eq!(st1.final_makespan, st8.final_makespan, "{n} tasks {objective:?}");
+        assert_eq!(s1, s8, "{n} tasks {objective:?}: plans diverged across thread counts");
+        // the A/B full-replay baseline must parallelize identically too
+        if n == 64 {
+            let (f1, sf1) = mk(1, true).solve(&tasks, &cluster, &mut DetRng::new(seed));
+            let (f8, sf8) = mk(8, true).solve(&tasks, &cluster, &mut DetRng::new(seed));
+            assert_eq!(sf1.evals, sf8.evals, "{objective:?}: full-replay diverged across threads");
+            assert_eq!(sf1.final_makespan, sf8.final_makespan, "{objective:?}");
+            assert_eq!(f1, f8, "{objective:?}: full-replay plans diverged");
+            assert_eq!(st1.evals, sf1.evals, "{objective:?}: delta vs full replay diverged");
+            assert_eq!(st1.final_makespan, sf1.final_makespan, "{objective:?}");
+        }
+    }
+
+    // ---- incremental re-solve on the 64-task mid-stream context --------
+    let registry = UppRegistry::default_library(Arc::new(CostModel::default()));
+    let mut wrng = DetRng::new(888);
+    let w = workloads::online_mixed_workload(64, 200.0, &mut wrng);
+    let c = Cluster::four_node_32gpu();
+    let (grid, _) = TrialRunner::new(registry).profile(&w, &c);
+    let ctx = mid_stream_ctx(&w, &grid, &c, 889);
+    let mk_inc = |threads: usize, objective: saturn::solver::Objective| JointOptimizer {
+        timeout: std::time::Duration::from_secs(14400),
+        incremental: true,
+        threads,
+        objective,
+        ..Default::default()
+    };
+    for (name, objective) in objective_variants() {
+        let (w1, si1) = mk_inc(1, objective.clone()).resolve_incremental(&ctx, &mut DetRng::new(891));
+        let (w8, si8) = mk_inc(8, objective).resolve_incremental(&ctx, &mut DetRng::new(891));
+        assert_eq!(si1.evals, si8.evals, "{name}: incremental evals diverged across threads");
+        assert_eq!(si1.improvements, si8.improvements, "{name}");
+        assert_eq!(si1.warm_makespan, si8.warm_makespan, "{name}");
+        assert_eq!(si1.final_makespan, si8.final_makespan, "{name}");
+        assert_eq!(w1, w8, "{name}: incremental plans diverged across thread counts");
+    }
+}
+
 /// The Optimus allocator never exceeds its budget and never starves a
 /// task below one GPU.
 #[test]
