@@ -19,7 +19,7 @@ use saturn::trainer::workloads;
 use saturn::util::rng::DetRng;
 use saturn::util::table::TextTable;
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     let workload = workloads::txt_workload();
     let cluster = Cluster::single_node_8gpu();
     let mut saturn = Saturn::new(cluster.clone());
@@ -29,7 +29,7 @@ fn main() {
     println!("Trial Runner: {} plans profiled (simulated overhead {:.0}s)\n", saturn.grid.as_ref().unwrap().len(), overhead);
 
     // 2. plan — the Joint Optimizer solves SPASE
-    let plan = saturn.plan(&workload, 42);
+    let plan = saturn.plan(&workload, 42)?;
     plan.validate(&cluster, &workload).expect("valid plan");
     let mut t = TextTable::new(vec!["task", "parallelism", "gpus", "start", "duration"]);
     let mut rows: Vec<_> = plan.assignments.iter().collect();
@@ -48,7 +48,7 @@ fn main() {
     println!("planned makespan: {}\n", saturn::util::fmt_hms(plan.makespan()));
 
     // 3. execute — simulate with introspection, vs current practice
-    let result = saturn.execute_simulated(&workload, SimConfig::default(), 42);
+    let result = saturn.execute_simulated(&workload, SimConfig::default(), 42)?;
     let grid = saturn.grid.as_ref().unwrap();
     let ctx = PlanCtx::fresh(&workload, grid, &cluster);
     let mut rng = DetRng::new(42);
@@ -62,4 +62,5 @@ fn main() {
         "reduction vs current practice: {:.1}% (paper: 39–49%)",
         reduction_pct(result.makespan, cp.makespan)
     );
+    Ok(())
 }

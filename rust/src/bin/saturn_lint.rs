@@ -1,0 +1,104 @@
+//! `saturn-lint` — CLI front-end for [`saturn::lint`].
+//!
+//! ```text
+//! saturn-lint [--root <dir>] [--list-waivers] [PATH...]
+//! ```
+//!
+//! Lints every `.rs` file under the given `--root`-relative paths
+//! (default: `rust/src rust/benches rust/tests examples`). `--root`
+//! defaults to the crate's own manifest directory, so `cargo run
+//! --release --bin saturn-lint` works from anywhere in the checkout.
+//!
+//! Exit status: 0 clean, 1 findings, 2 usage or I/O error.
+
+use saturn::lint::{lint_tree, DEFAULT_ROOTS};
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+struct Args {
+    root: PathBuf,
+    rels: Vec<String>,
+    list_waivers: bool,
+}
+
+fn usage() -> &'static str {
+    "usage: saturn-lint [--root <dir>] [--list-waivers] [PATH...]\n\
+     \n\
+     Lints .rs files under each PATH (relative to --root) against the\n\
+     Saturn determinism and panic-freedom contracts. Default paths:\n\
+     rust/src rust/benches rust/tests examples. See LINTS.md."
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let mut rels: Vec<String> = Vec::new();
+    let mut list_waivers = false;
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => match it.next() {
+                Some(d) => root = PathBuf::from(d),
+                None => return Err("--root needs a directory argument".to_string()),
+            },
+            "--list-waivers" => list_waivers = true,
+            "--help" | "-h" => return Err(String::new()),
+            other if other.starts_with('-') => return Err(format!("unknown flag: {other}")),
+            other => rels.push(other.to_string()),
+        }
+    }
+    if rels.is_empty() {
+        rels = DEFAULT_ROOTS.iter().map(|s| s.to_string()).collect();
+    }
+    Ok(Args { root, rels, list_waivers })
+}
+
+fn main() -> ExitCode {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(msg) => {
+            if msg.is_empty() {
+                println!("{}", usage());
+                return ExitCode::SUCCESS;
+            }
+            eprintln!("saturn-lint: {msg}\n{}", usage());
+            return ExitCode::from(2);
+        }
+    };
+    let rels: Vec<&str> = args.rels.iter().map(String::as_str).collect();
+    let report = match lint_tree(&args.root, &rels) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("saturn-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    if args.list_waivers {
+        if report.waivers.is_empty() {
+            println!("no waivers in {} files", report.files);
+        } else {
+            for w in &report.waivers {
+                println!("{w}");
+            }
+            println!("-- {} waiver(s) in {} files", report.waivers.len(), report.files);
+        }
+        return ExitCode::SUCCESS;
+    }
+    if report.findings.is_empty() {
+        println!(
+            "saturn-lint: clean — {} files, {} waiver(s) in force",
+            report.files,
+            report.waivers.len()
+        );
+        return ExitCode::SUCCESS;
+    }
+    for f in &report.findings {
+        println!("{f}");
+    }
+    eprintln!(
+        "saturn-lint: {} finding(s) in {} files; fix them or add a justified \
+         `lint:allow` waiver (see LINTS.md)",
+        report.findings.len(),
+        report.files
+    );
+    ExitCode::from(1)
+}

@@ -4,6 +4,13 @@
 //! Wires the Parallelism Library, Trial Runner, Joint Optimizer, and the
 //! execution backends (simulator for paper-scale clusters, real PJRT
 //! executor for the e2e example) behind a single struct.
+//!
+//! This module is on the panic-sensitive path (see `LINTS.md`): the
+//! facade fronts long-running online streams, so every fallible entry
+//! point returns `anyhow::Result` instead of panicking, and the deny
+//! attributes below keep clippy in agreement with `saturn-lint`.
+
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 use crate::cluster::Cluster;
 use crate::costmodel::CostModel;
@@ -15,6 +22,7 @@ use crate::solver::joint::JointOptimizer;
 use crate::solver::policy::{PlanCtx, Policy};
 use crate::trainer::Workload;
 use crate::util::rng::DetRng;
+use anyhow::{anyhow, Result};
 use std::sync::Arc;
 
 /// The Saturn system handle.
@@ -59,22 +67,33 @@ impl Saturn {
         overhead
     }
 
+    /// The profile grid, or a descriptive error if [`Saturn::profile`]
+    /// has not run yet.
+    fn grid(&self) -> Result<&ProfileGrid> {
+        self.grid.as_ref().ok_or_else(|| anyhow!("no profile grid: call profile() first"))
+    }
+
     /// Produce a one-shot execution plan (requires [`Saturn::profile`]).
-    pub fn plan(&self, workload: &Workload, seed: u64) -> Schedule {
-        let grid = self.grid.as_ref().expect("call profile() before plan()");
+    pub fn plan(&self, workload: &Workload, seed: u64) -> Result<Schedule> {
+        let grid = self.grid()?;
         let ctx = PlanCtx::fresh(workload, grid, &self.cluster);
         let mut rng = DetRng::new(seed);
-        self.optimizer.plan(&ctx, &mut rng)
+        Ok(self.optimizer.plan(&ctx, &mut rng))
     }
 
     /// Execute the workload in the simulator (paper: `execute(tasks)` on
     /// the simulated testbed). Introspection per `cfg`. Tasks with
     /// positive [`crate::trainer::Task::arrival`] times are injected at
     /// their arrival events.
-    pub fn execute_simulated(&self, workload: &Workload, cfg: SimConfig, seed: u64) -> SimResult {
-        let grid = self.grid.as_ref().expect("call profile() before execute()");
+    pub fn execute_simulated(
+        &self,
+        workload: &Workload,
+        cfg: SimConfig,
+        seed: u64,
+    ) -> Result<SimResult> {
+        let grid = self.grid()?;
         let mut rng = DetRng::new(seed);
-        simulate(&self.optimizer, workload, grid, &self.cluster, cfg, &mut rng)
+        Ok(simulate(&self.optimizer, workload, grid, &self.cluster, cfg, &mut rng))
     }
 
     /// Execute an online workload (tasks arriving over time) and return
@@ -85,17 +104,18 @@ impl Saturn {
         workload: &Workload,
         cfg: SimConfig,
         seed: u64,
-    ) -> (SimResult, crate::metrics::OnlineStats) {
-        let grid = self.grid.as_ref().expect("call profile() before execute()");
+    ) -> Result<(SimResult, crate::metrics::OnlineStats)> {
+        let grid = self.grid()?;
         let optimizer = JointOptimizer { incremental: true, ..self.optimizer.clone() };
         let mut rng = DetRng::new(seed);
         let result = simulate(&optimizer, workload, grid, &self.cluster, cfg, &mut rng);
         let stats = crate::metrics::online_stats(workload, &result);
-        (result, stats)
+        Ok((result, stats))
     }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::trainer::workloads;
@@ -106,17 +126,19 @@ mod tests {
         let w = workloads::txt_workload();
         let overhead = saturn.profile(&w);
         assert!(overhead > 0.0);
-        let plan = saturn.plan(&w, 1);
+        let plan = saturn.plan(&w, 1).unwrap();
         plan.validate(&saturn.cluster, &w).unwrap();
-        let result = saturn.execute_simulated(&w, SimConfig::default(), 1);
+        let result = saturn.execute_simulated(&w, SimConfig::default(), 1).unwrap();
         assert_eq!(result.completions.len(), w.len());
     }
 
     #[test]
-    #[should_panic(expected = "profile()")]
-    fn plan_requires_profile() {
+    fn plan_without_profile_is_an_error_not_a_panic() {
         let saturn = Saturn::new(Cluster::single_node_8gpu());
         let w = workloads::txt_workload();
-        let _ = saturn.plan(&w, 1);
+        let err = saturn.plan(&w, 1).unwrap_err();
+        assert!(err.to_string().contains("profile()"), "{err}");
+        assert!(saturn.execute_simulated(&w, SimConfig::default(), 1).is_err());
+        assert!(saturn.execute_online(&w, SimConfig::default(), 1).is_err());
     }
 }

@@ -39,6 +39,8 @@
 //! - [`exec`] — the real executor: tokio-based gang launch over emulated
 //!   device slots, driving actual training steps through [`runtime`].
 //! - [`metrics`] — utilization sampling and report generation.
+//! - [`lint`] — `saturn-lint`, the dependency-free static analyzer that
+//!   enforces the determinism and panic-freedom contracts at CI time.
 //!
 //! Python (JAX + Pallas) appears only at build time under `python/compile/`;
 //! the Rust binary is self-contained once `artifacts/` is built.
@@ -50,6 +52,7 @@ pub mod coordinator;
 pub mod costmodel;
 pub mod exec;
 pub mod introspect;
+pub mod lint;
 pub mod metrics;
 pub mod model;
 pub mod online;

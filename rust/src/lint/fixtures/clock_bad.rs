@@ -1,0 +1,8 @@
+// Fixture: linted as `rust/src/solver/anneal.rs` (determinism-contract).
+// Both direct clock reads below must fire `clock-in-evaluator`.
+
+pub fn evaluate_with_wall_clock(budget_ms: u64) -> bool {
+    let start = std::time::Instant::now();
+    let wall = std::time::SystemTime::now();
+    (start.elapsed().as_millis() as u64) <= budget_ms && wall.elapsed().is_ok()
+}

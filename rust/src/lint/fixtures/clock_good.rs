@@ -1,0 +1,11 @@
+// Fixture: linted as `rust/src/solver/anneal.rs` (determinism-contract).
+// Timing routed through the sanctioned util::DeadlinePoll, plus the rule
+// must stay blind to `Instant::now` appearing in docs and string literals.
+
+use crate::util::DeadlinePoll;
+
+/// Workers never call `Instant::now` directly; see `util::Deadline`.
+pub fn anneal_step(poll: &mut DeadlinePoll) -> bool {
+    let label = "Instant::now is just prose inside this string";
+    !poll.expired_batch() && !label.is_empty()
+}

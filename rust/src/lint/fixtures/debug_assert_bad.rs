@@ -1,0 +1,14 @@
+// Fixture: linted as `rust/src/solver/anneal.rs`.
+// Mutations inside debug_assert! bodies vanish in release builds; both
+// the `.push(` call and the bare `=` assignment must fire
+// `debug-assert-side-effect`.
+
+pub fn staged_replay(xs: &mut Vec<u64>, n: u64) {
+    debug_assert!({
+        xs.push(n);
+        !xs.is_empty()
+    });
+    let mut verified = false;
+    debug_assert!(verified = replay_matches(xs));
+    drop(verified);
+}

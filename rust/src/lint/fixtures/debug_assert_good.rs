@@ -1,0 +1,9 @@
+// Fixture: linted as `rust/src/solver/anneal.rs`.
+// Pure comparisons inside debug assertions are the sanctioned form;
+// `==`/`<=`/`!=` are single comparison tokens, never assignment. Silent.
+
+pub fn staged_replay(xs: &[u64], n: usize) {
+    debug_assert!(xs.len() <= n && n != 0);
+    debug_assert_eq!(xs.len(), n, "staging and replay disagree on {n}");
+    debug_assert_ne!(xs.first(), None);
+}

@@ -1,0 +1,14 @@
+// Fixture: linted as `rust/src/online/mod.rs` (panic-sensitive).
+// Every panic path below must fire `panic-freedom`.
+
+pub fn admit(slot: Option<u32>, cfg: Result<u32, String>, kind: u8) -> u32 {
+    let a = slot.unwrap();
+    let b = cfg.expect("config must parse");
+    match kind {
+        0 => a + b,
+        1 => panic!("unhandled kind"),
+        2 => todo!(),
+        3 => unimplemented!(),
+        _ => unreachable!(),
+    }
+}

@@ -1,0 +1,14 @@
+// Fixture: linted as `rust/src/online/mod.rs` (panic-sensitive).
+// The same logic with errors propagated via Result/anyhow; silent.
+// `unwrap_or`-family helpers and fields *named* expect are not matches.
+
+use anyhow::{anyhow, bail, Result};
+
+pub fn admit(slot: Option<u32>, cfg: Result<u32>, kind: u8) -> Result<u32> {
+    let a = slot.ok_or_else(|| anyhow!("no free slot"))?;
+    let b = cfg?;
+    if kind > 0 {
+        bail!("unhandled kind {kind}");
+    }
+    Ok(a + b + slot.unwrap_or_default())
+}

@@ -1,0 +1,9 @@
+// Fixture: linted as `rust/src/solver/spase.rs` (rng-scoped).
+// Every ambient randomness source below must fire `ambient-rng`.
+
+pub fn jitter() -> u64 {
+    let mut r = rand::thread_rng();
+    let state = RandomState::new();
+    let mut hasher = DefaultHasher::new();
+    r.gen::<u64>() ^ probe(&state, &mut hasher)
+}

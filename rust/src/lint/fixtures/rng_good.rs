@@ -1,0 +1,9 @@
+// Fixture: linted as `rust/src/solver/spase.rs` (rng-scoped).
+// All randomness flows from the explicitly seeded DetRng; silent.
+
+use crate::util::rng::DetRng;
+
+pub fn draw(seed: u64, bound: u64) -> u64 {
+    let mut rng = DetRng::new(seed);
+    rng.below(bound)
+}

@@ -1,0 +1,18 @@
+// Fixture: linted as `rust/src/sim/mod.rs` (determinism-contract).
+// Three distinct iteration shapes over hash containers, all of which
+// must fire `unordered-iteration`: a method call on a typed param, a
+// for-loop over a reference, and a chained map-returning call.
+
+use std::collections::{HashMap, HashSet};
+
+pub fn accumulate(m: &HashMap<u64, f64>, s: &HashSet<u64>, ctx: &Ctx) -> f64 {
+    let mut acc = 0.0;
+    for (_k, v) in m.iter() {
+        acc += v;
+    }
+    for x in &s {
+        acc += *x as f64;
+    }
+    let n = ctx.id_index_map().keys().count();
+    acc + n as f64
+}

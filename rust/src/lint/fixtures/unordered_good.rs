@@ -1,0 +1,20 @@
+// Fixture: linted as `rust/src/sim/mod.rs` (determinism-contract).
+// Keyed lookups into hash containers and iteration over ordered
+// sequences are legal; nothing here may fire.
+
+use std::collections::HashMap;
+
+pub fn lookup(m: &HashMap<u64, f64>, ids: &[u64]) -> f64 {
+    let mut acc = 0.0;
+    for id in ids {
+        if let Some(v) = m.get(id) {
+            acc += *v;
+        }
+    }
+    acc
+}
+
+pub fn upsert(m: &mut HashMap<u64, f64>, id: u64, v: f64) -> bool {
+    *m.entry(id).or_insert(0.0) += v;
+    m.contains_key(&id) && m.insert(id, v).is_some()
+}

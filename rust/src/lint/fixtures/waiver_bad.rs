@@ -1,0 +1,13 @@
+// Fixture: linted as `rust/src/online/mod.rs`.
+// A waiver without a justification is a `waiver-syntax` finding, and a
+// justified waiver that suppresses nothing is an `unused-waiver` finding.
+
+// lint:allow(panic-freedom)
+pub fn naked_waiver(g: Option<u32>) -> u32 {
+    g.unwrap_or(0)
+}
+
+// lint:allow(panic-freedom) -- stale: the unwrap below was fixed long ago
+pub fn stale_waiver(g: Option<u32>) -> u32 {
+    g.unwrap_or(7)
+}

@@ -1,0 +1,8 @@
+// Fixture: linted as `rust/src/online/mod.rs`.
+// A justified waiver directly above its finding suppresses it and is
+// inventoried via --list-waivers; the file lints clean.
+
+pub fn first(g: Option<u32>) -> u32 {
+    // lint:allow(panic-freedom) -- fixture demo: the caller guarantees Some
+    g.unwrap()
+}

@@ -1,0 +1,448 @@
+//! A minimal, dependency-free Rust lexer for `saturn-lint`.
+//!
+//! The rules in [`crate::lint::rules`] must match real tokens — never text
+//! inside string literals or documentation. This lexer covers exactly the
+//! surface that matters for that guarantee:
+//!
+//! - line comments (`//`, `///`, `//!`) and **nested** block comments;
+//! - regular strings with escapes, raw strings (`r"…"`, `r#"…"#`, any hash
+//!   depth), byte strings (`b"…"`), and raw byte strings (`br#"…"#`);
+//! - char and byte-char literals (escapes included) vs lifetimes (`'a`,
+//!   `'static`, `'_`);
+//! - identifiers/keywords, numeric literals, and multi-character operators
+//!   (`==`, `=>`, `::`, `<<=`, …) combined greedily so a lone `=` token
+//!   really is an assignment.
+//!
+//! It is *not* a full Rust lexer: exotica such as raw identifiers
+//! (`r#match`) or float exponents (`1e-9`) lex as several adjacent tokens.
+//! That is harmless for linting — every rule matches short, anchored token
+//! sequences — and keeps the lexer small enough to be obviously correct.
+
+/// Kind of a lexed token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword.
+    Ident,
+    /// Operator / punctuation (multi-char operators are one token).
+    Punct,
+    /// Any string literal: regular, raw, byte, raw byte.
+    Str,
+    /// Char or byte-char literal.
+    Char,
+    /// Lifetime (`'a`, `'static`, `'_`).
+    Lifetime,
+    /// Numeric literal (integer or float, suffixes included).
+    Num,
+    /// `//`-style comment, text includes the slashes.
+    LineComment,
+    /// `/* … */` comment (nesting handled), text includes delimiters.
+    BlockComment,
+}
+
+/// One lexed token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Token {
+    /// Token kind.
+    pub kind: TokKind,
+    /// Source text of the token (comment text includes delimiters).
+    pub text: String,
+    /// 1-based line the token starts on.
+    pub line: u32,
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_'
+}
+
+fn is_ident_cont(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Multi-character operators, matched longest-first so `<<=` never lexes
+/// as `<` `<` `=` and a bare `=` token is always an assignment.
+const OPS3: [&str; 4] = ["<<=", ">>=", "..=", "..."];
+const OPS2: [&str; 20] = [
+    "==", "!=", "<=", ">=", "=>", "->", "+=", "-=", "*=", "/=", "%=", "^=", "&=", "|=", "&&",
+    "||", "<<", ">>", "::", "..",
+];
+
+/// Count newlines in `s` (for multi-line literals/comments).
+fn newlines(s: &str) -> u32 {
+    s.bytes().filter(|&c| c == b'\n').count() as u32
+}
+
+/// Scan a quoted string starting at the opening `"` (index `i`), honoring
+/// backslash escapes. Returns the index one past the closing quote.
+fn scan_quoted(b: &[u8], i: usize) -> usize {
+    let mut j = i + 1;
+    while j < b.len() {
+        match b[j] {
+            b'\\' => j += 2,
+            b'"' => return j + 1,
+            _ => j += 1,
+        }
+    }
+    b.len()
+}
+
+/// Scan a raw string whose opening quote is at `q` with `hashes` leading
+/// `#` characters. Returns the index one past the final closing hash.
+fn scan_raw(b: &[u8], q: usize, hashes: usize) -> usize {
+    let mut j = q + 1;
+    while j < b.len() {
+        if b[j] == b'"'
+            && j + 1 + hashes <= b.len()
+            && b[j + 1..j + 1 + hashes].iter().all(|&c| c == b'#')
+        {
+            return j + 1 + hashes;
+        }
+        j += 1;
+    }
+    b.len()
+}
+
+/// Scan a char/byte-char literal starting at the opening `'` (index `i`).
+/// Returns the index one past the closing quote.
+fn scan_char(b: &[u8], i: usize) -> usize {
+    let mut j = i + 1;
+    while j < b.len() {
+        match b[j] {
+            b'\\' => j += 2,
+            b'\'' => return j + 1,
+            _ => j += 1,
+        }
+    }
+    b.len()
+}
+
+/// Tokenize Rust source. Never panics on malformed input: unterminated
+/// literals or comments run to end-of-file, unknown bytes are skipped.
+pub fn tokenize(src: &str) -> Vec<Token> {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut toks: Vec<Token> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+
+    let push = |toks: &mut Vec<Token>, kind: TokKind, text: &str, line: u32| {
+        toks.push(Token { kind, text: text.to_string(), line });
+    };
+
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_ascii_whitespace() {
+            i += 1;
+            continue;
+        }
+        // comments (before operator matching so `//` is never `/` `/`)
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let start = i;
+            while i < n && b[i] != b'\n' {
+                i += 1;
+            }
+            push(&mut toks, TokKind::LineComment, &src[start..i], line);
+            continue;
+        }
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let start = i;
+            let start_line = line;
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == b'\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            push(&mut toks, TokKind::BlockComment, &src[start..i], start_line);
+            continue;
+        }
+        // raw / byte string prefixes: r"…", r#"…"#, b"…", b'…', br#"…"#
+        if c == b'r' || c == b'b' {
+            let mut q = usize::MAX; // index of the opening quote, if raw
+            let mut hashes = 0usize;
+            let mut plain_quote = usize::MAX; // opening " of b"…"
+            let mut byte_char = usize::MAX; // opening ' of b'…'
+            if c == b'r' {
+                let mut j = i + 1;
+                while j < n && b[j] == b'#' {
+                    j += 1;
+                }
+                if j < n && b[j] == b'"' {
+                    hashes = j - (i + 1);
+                    q = j;
+                }
+            } else {
+                // c == b'b'
+                if i + 1 < n && b[i + 1] == b'"' {
+                    plain_quote = i + 1;
+                } else if i + 1 < n && b[i + 1] == b'\'' {
+                    byte_char = i + 1;
+                } else if i + 1 < n && b[i + 1] == b'r' {
+                    let mut j = i + 2;
+                    while j < n && b[j] == b'#' {
+                        j += 1;
+                    }
+                    if j < n && b[j] == b'"' {
+                        hashes = j - (i + 2);
+                        q = j;
+                    }
+                }
+            }
+            if q != usize::MAX {
+                let end = scan_raw(b, q, hashes);
+                let text = &src[i..end];
+                push(&mut toks, TokKind::Str, text, line);
+                line += newlines(text);
+                i = end;
+                continue;
+            }
+            if plain_quote != usize::MAX {
+                let end = scan_quoted(b, plain_quote);
+                let text = &src[i..end];
+                push(&mut toks, TokKind::Str, text, line);
+                line += newlines(text);
+                i = end;
+                continue;
+            }
+            if byte_char != usize::MAX {
+                let end = scan_char(b, byte_char);
+                push(&mut toks, TokKind::Char, &src[i..end], line);
+                i = end;
+                continue;
+            }
+            // falls through: ordinary identifier starting with r/b
+        }
+        if c == b'"' {
+            let end = scan_quoted(b, i);
+            let text = &src[i..end];
+            push(&mut toks, TokKind::Str, text, line);
+            line += newlines(text);
+            i = end;
+            continue;
+        }
+        if c == b'\'' {
+            // lifetime or char literal: a single ident char closed by '
+            // is a char ('a'); an ident run not closed by ' is a lifetime
+            if i + 1 < n && is_ident_start(b[i + 1]) {
+                let mut j = i + 1;
+                while j < n && is_ident_cont(b[j]) {
+                    j += 1;
+                }
+                let closed_single = j == i + 2 && j < n && b[j] == b'\'';
+                if !closed_single {
+                    push(&mut toks, TokKind::Lifetime, &src[i..j], line);
+                    i = j;
+                    continue;
+                }
+            }
+            let end = scan_char(b, i);
+            push(&mut toks, TokKind::Char, &src[i..end], line);
+            i = end;
+            continue;
+        }
+        if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_cont(b[i]) {
+                i += 1;
+            }
+            push(&mut toks, TokKind::Ident, &src[start..i], line);
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < n && is_ident_cont(b[i]) {
+                i += 1;
+            }
+            // one fractional part: `1.5` but not the range in `0..5`
+            if i + 1 < n && b[i] == b'.' && b[i + 1].is_ascii_digit() {
+                i += 1;
+                while i < n && is_ident_cont(b[i]) {
+                    i += 1;
+                }
+            }
+            push(&mut toks, TokKind::Num, &src[start..i], line);
+            continue;
+        }
+        if c.is_ascii() {
+            let rest = &src[i..];
+            let mut matched = 0usize;
+            for op in OPS3 {
+                if rest.starts_with(op) {
+                    matched = 3;
+                    break;
+                }
+            }
+            if matched == 0 {
+                for op in OPS2 {
+                    if rest.starts_with(op) {
+                        matched = 2;
+                        break;
+                    }
+                }
+            }
+            if matched == 0 {
+                matched = 1;
+            }
+            push(&mut toks, TokKind::Punct, &src[i..i + matched], line);
+            i += matched;
+            continue;
+        }
+        // non-ASCII byte outside any literal (only ever seen in prose);
+        // skip the whole UTF-8 sequence without emitting a token
+        i += 1;
+        while i < n && (b[i] & 0xC0) == 0x80 {
+            i += 1;
+        }
+    }
+    toks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        tokenize(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_puncts_and_numbers() {
+        let ts = kinds("let x = a.b(1, 2.5);");
+        let texts: Vec<&str> = ts.iter().map(|(_, s)| s.as_str()).collect();
+        assert_eq!(texts, ["let", "x", "=", "a", ".", "b", "(", "1", ",", "2.5", ")", ";"]);
+        assert_eq!(ts[0].0, TokKind::Ident);
+        assert_eq!(ts[2].0, TokKind::Punct);
+        assert_eq!(ts[9].0, TokKind::Num);
+    }
+
+    #[test]
+    fn multichar_operators_are_single_tokens() {
+        let texts: Vec<String> =
+            kinds("a == b != c <= d >= e => f -> g :: h && i || j <<= k ..= l .. m")
+                .into_iter()
+                .filter(|(k, _)| *k == TokKind::Punct)
+                .map(|(_, s)| s)
+                .collect();
+        assert_eq!(texts, ["==", "!=", "<=", ">=", "=>", "->", "::", "&&", "||", "<<=", "..=", ".."]);
+        // a lone `=` still lexes as itself
+        let eq: Vec<String> = kinds("x = 1")
+            .into_iter()
+            .filter(|(k, _)| *k == TokKind::Punct)
+            .map(|(_, s)| s)
+            .collect();
+        assert_eq!(eq, ["="]);
+    }
+
+    #[test]
+    fn strings_hide_their_contents() {
+        // rule-relevant text inside a string must be one opaque Str token
+        let ts = kinds(r#"let s = "Instant::now() .unwrap()";"#);
+        assert_eq!(ts.iter().filter(|(k, _)| *k == TokKind::Str).count(), 1);
+        assert!(ts.iter().all(|(k, s)| *k == TokKind::Str || !s.contains("unwrap")));
+        // escaped quotes do not terminate the literal early
+        let ts = kinds(r#"let s = "a \" b .unwrap() c";"#);
+        assert_eq!(ts.iter().filter(|(k, _)| *k == TokKind::Str).count(), 1);
+        assert!(!ts.iter().any(|(k, s)| *k == TokKind::Ident && s == "unwrap"));
+    }
+
+    #[test]
+    fn raw_strings_any_hash_depth() {
+        let src = "let a = r\"x .unwrap() y\"; let b = r#\"quote \" inside .expect(\"#; done";
+        let ts = kinds(src);
+        assert_eq!(ts.iter().filter(|(k, _)| *k == TokKind::Str).count(), 2);
+        assert!(!ts.iter().any(|(k, s)| *k == TokKind::Ident && (s == "unwrap" || s == "expect")));
+        assert!(ts.iter().any(|(k, s)| *k == TokKind::Ident && s == "done"));
+        // deeper hash fences, with a "# that must not close the literal
+        let src = "r##\"has \"# inside\"## after";
+        let ts = kinds(src);
+        assert_eq!(ts[0].0, TokKind::Str);
+        assert!(ts[0].1.contains("inside"));
+        assert_eq!(ts[1].1, "after");
+    }
+
+    #[test]
+    fn byte_strings_and_byte_chars() {
+        let ts = kinds("let a = b\"raw .unwrap() bytes\"; let c = b'x'; let r = br#\"more \" x\"#;");
+        assert_eq!(ts.iter().filter(|(k, _)| *k == TokKind::Str).count(), 2);
+        assert_eq!(ts.iter().filter(|(k, _)| *k == TokKind::Char).count(), 1);
+        assert!(!ts.iter().any(|(k, s)| *k == TokKind::Ident && s == "unwrap"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "before /* outer /* inner .unwrap() */ still comment */ after";
+        let ts = kinds(src);
+        assert_eq!(ts[0].1, "before");
+        assert_eq!(ts[1].0, TokKind::BlockComment);
+        assert!(ts[1].1.contains("inner"));
+        assert_eq!(ts[2].1, "after");
+        assert_eq!(ts.len(), 3);
+    }
+
+    #[test]
+    fn line_comments_capture_to_eol() {
+        let ts = tokenize("x // lint:allow(panic-freedom) -- why\ny");
+        assert_eq!(ts[0].text, "x");
+        assert_eq!(ts[1].kind, TokKind::LineComment);
+        assert!(ts[1].text.contains("lint:allow"));
+        assert_eq!(ts[2].text, "y");
+        assert_eq!(ts[2].line, 2);
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let src = "fn f<'a>(x: &'a str) { let y = 'z'; let s = '\\''; let u = '\\u{41}'; let w = '_'; }";
+        let ts = kinds(src);
+        let lifetimes: Vec<&str> =
+            ts.iter().filter(|(k, _)| *k == TokKind::Lifetime).map(|(_, s)| s.as_str()).collect();
+        assert_eq!(lifetimes, ["'a", "'a"]);
+        let chars: Vec<&str> =
+            ts.iter().filter(|(k, _)| *k == TokKind::Char).map(|(_, s)| s.as_str()).collect();
+        assert_eq!(chars, ["'z'", "'\\''", "'\\u{41}'", "'_'"]);
+        // 'static is a lifetime, not a truncated char
+        let ts = kinds("&'static str");
+        assert!(ts.iter().any(|(k, s)| *k == TokKind::Lifetime && s == "'static"));
+    }
+
+    #[test]
+    fn line_numbers_survive_multiline_tokens() {
+        let src = "a\n/* two\nlines */\nb\nr\"raw\nstring\"\nc";
+        let ts = tokenize(src);
+        let find = |name: &str| ts.iter().find(|t| t.text == name).map(|t| t.line);
+        assert_eq!(find("a"), Some(1));
+        assert_eq!(find("b"), Some(4));
+        assert_eq!(find("c"), Some(7));
+    }
+
+    #[test]
+    fn unterminated_literals_do_not_panic() {
+        // degenerate inputs lex to something rather than panicking
+        for src in ["\"unterminated", "r#\"raw unterminated", "/* open comment", "'\\", "b\"open"] {
+            let _ = tokenize(src);
+        }
+    }
+
+    #[test]
+    fn non_ascii_in_code_is_skipped() {
+        // prose characters (§, ≥, →) appear in the tree's comments; the
+        // lexer must also survive them outside literals
+        let ts = kinds("a § b ≥ c");
+        let idents: Vec<&String> =
+            ts.iter().filter(|(k, _)| *k == TokKind::Ident).map(|(_, s)| s).collect();
+        assert_eq!(idents, [&"a".to_string(), &"b".to_string(), &"c".to_string()]);
+    }
+}

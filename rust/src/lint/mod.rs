@@ -1,0 +1,708 @@
+//! `saturn-lint` — a dependency-free static analyzer enforcing the repo's
+//! determinism and panic-freedom contracts at CI time.
+//!
+//! The annealer's two core contracts — delta ≡ full-replay and
+//! bit-identical trajectories for every thread count — plus the online
+//! path's panic-freedom are checked *dynamically* by property tests, which
+//! catch a stray `Instant::now`, an ambient RNG draw, or a `HashMap`
+//! iteration only probabilistically and long after the offending line
+//! landed. This module checks them *statically*: a minimal Rust lexer
+//! ([`lexer`]) feeds token-sequence rules ([`rules`]) scoped by a per-file
+//! module classification ([`classify`]), so rules match real tokens, never
+//! text inside strings or docs, and `#[cfg(test)]`/`#[test]` regions (and
+//! `tests/`/`benches/` trees) are exempt.
+//!
+//! Run it as `cargo run --release --bin saturn-lint` (CI does), or call
+//! [`lint_tree`] / [`lint_source`] directly. See `LINTS.md` for the rule
+//! catalogue.
+//!
+//! # Waivers
+//!
+//! A finding can be waived with a justified inline comment on the same
+//! line or the line directly above the offending code:
+//!
+//! ```text
+//! // lint:allow(clock-in-evaluator) -- coordinator-side budget start,
+//! //                                   never read by workers
+//! ```
+//!
+//! The justification after `--` is mandatory — a bare waiver is itself a
+//! finding (`waiver-syntax`), as is a waiver that no longer suppresses
+//! anything (`unused-waiver`) or one naming an unknown rule. Waivers are
+//! only recognized in plain `//` comments (never `///`/`//!` docs, so
+//! documenting the syntax cannot accidentally waive). Inventory them with
+//! `saturn-lint --list-waivers`.
+
+pub mod lexer;
+pub mod rules;
+
+use self::lexer::{tokenize, TokKind, Token};
+use self::rules::{
+    check_clock, check_debug_assert, check_panic, check_rng, check_unordered, RawFinding,
+    RULE_UNUSED_WAIVER, RULE_WAIVER_SYNTAX, WAIVABLE_RULES,
+};
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// The roots CI lints, relative to the repository root.
+pub const DEFAULT_ROOTS: [&str; 4] = ["rust/src", "rust/benches", "rust/tests", "examples"];
+
+/// Determinism-contract files: the delta kernel, the speculative anneal
+/// engine, the objective layer, the optimizer driving both, and the
+/// planning context they all read. Together with `src/sim/` these are the
+/// modules where delta ≡ full-replay and thread-count trajectory parity
+/// must hold bit-for-bit.
+const DETERMINISM_FILES: [&str; 5] = [
+    "src/solver/delta.rs",
+    "src/solver/anneal.rs",
+    "src/solver/objective.rs",
+    "src/solver/joint.rs",
+    "src/solver/policy.rs",
+];
+
+/// Which rule families apply to a file, derived from its path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FileClass {
+    /// Determinism-contract module: clock + unordered-iteration rules.
+    pub determinism: bool,
+    /// Inside `solver`/`sim`: the ambient-rng rule.
+    pub rng_scope: bool,
+    /// Online ingest path (`online`, `coordinator`): panic-freedom rule.
+    pub panic_sensitive: bool,
+    /// `tests/` or `benches/` tree: all rules exempt (waivers still
+    /// parsed so malformed ones are reported).
+    pub test_only: bool,
+}
+
+/// Classify a repo-relative path (`rust/src/solver/delta.rs`, …).
+pub fn classify(path: &str) -> FileClass {
+    let p = path.replace('\\', "/");
+    let test_only = p.contains("/tests/")
+        || p.starts_with("tests/")
+        || p.contains("/benches/")
+        || p.starts_with("benches/");
+    let determinism = DETERMINISM_FILES.iter().any(|s| p.ends_with(s)) || p.contains("src/sim/");
+    FileClass {
+        determinism,
+        rng_scope: p.contains("src/solver/") || p.contains("src/sim/"),
+        panic_sensitive: p.contains("src/online/") || p.contains("src/coordinator/"),
+        test_only,
+    }
+}
+
+/// One reported lint violation.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Repo-relative path.
+    pub path: String,
+    /// 1-based line.
+    pub line: u32,
+    /// Rule identifier (see [`rules`]).
+    pub rule: &'static str,
+    /// Explanation of the violation.
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.message)
+    }
+}
+
+/// One parsed `lint:allow` waiver.
+#[derive(Debug, Clone)]
+pub struct Waiver {
+    /// Repo-relative path.
+    pub path: String,
+    /// 1-based line of the waiver comment.
+    pub line: u32,
+    /// Rules the waiver covers.
+    pub rules: Vec<String>,
+    /// The mandatory justification after `--`.
+    pub justification: String,
+}
+
+impl fmt::Display for Waiver {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: {} -- {}", self.path, self.line, self.rules.join(", "), self.justification)
+    }
+}
+
+/// Lint result for one file.
+#[derive(Debug, Clone, Default)]
+pub struct FileReport {
+    /// Findings after waiver filtering, sorted by line.
+    pub findings: Vec<Finding>,
+    /// All waivers in the file (used or not).
+    pub waivers: Vec<Waiver>,
+}
+
+/// Lint result for a tree of files.
+#[derive(Debug, Clone, Default)]
+pub struct TreeReport {
+    /// All findings, sorted by (path, line).
+    pub findings: Vec<Finding>,
+    /// All waivers, in path order.
+    pub waivers: Vec<Waiver>,
+    /// Number of files scanned.
+    pub files: usize,
+}
+
+/// Index one past the matching `]` of an attribute starting at `i`
+/// (`#` `[` …), or `None` if `i` does not start an attribute.
+fn attr_end(code: &[Token], i: usize) -> Option<usize> {
+    let at = |k: usize, s: &str| code.get(k).is_some_and(|t| t.kind == TokKind::Punct && t.text == s);
+    if !(at(i, "#") && at(i + 1, "[")) {
+        return None;
+    }
+    let mut depth = 1i32;
+    let mut j = i + 2;
+    while j < code.len() {
+        if code[j].kind == TokKind::Punct {
+            match code[j].text.as_str() {
+                "[" => depth += 1,
+                "]" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Some(j + 1);
+                    }
+                }
+                _ => {}
+            }
+        }
+        j += 1;
+    }
+    None
+}
+
+/// True if the attribute spanning `i..end` is `#[test]` or `#[cfg(test)]`.
+fn is_test_attr(code: &[Token], i: usize, end: usize) -> bool {
+    let c: Vec<&str> = code[i + 2..end - 1].iter().map(|t| t.text.as_str()).collect();
+    c == ["test"] || c == ["cfg", "(", "test", ")"]
+}
+
+/// Index of the `}` matching the `{` at `open` (last token if unbalanced).
+fn match_brace(code: &[Token], open: usize) -> usize {
+    let mut depth = 0i32;
+    let mut j = open;
+    while j < code.len() {
+        if code[j].kind == TokKind::Punct {
+            match code[j].text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return j;
+                    }
+                }
+                _ => {}
+            }
+        }
+        j += 1;
+    }
+    code.len().saturating_sub(1)
+}
+
+/// Inclusive line ranges covered by `#[cfg(test)]` / `#[test]` items:
+/// from the attribute to the item's closing brace (or terminating `;`).
+fn test_exempt_ranges(code: &[Token]) -> Vec<(u32, u32)> {
+    let mut ranges = Vec::new();
+    let mut i = 0usize;
+    while i < code.len() {
+        let Some(end) = attr_end(code, i) else {
+            i += 1;
+            continue;
+        };
+        let start_line = code[i].line;
+        let mut is_test = is_test_attr(code, i, end);
+        // absorb the whole attribute run; any test attr marks the item
+        let mut k = end;
+        while let Some(e2) = attr_end(code, k) {
+            is_test = is_test || is_test_attr(code, k, e2);
+            k = e2;
+        }
+        if !is_test {
+            i = k;
+            continue;
+        }
+        // the item body: first `{` outside parens/brackets, or a bare `;`
+        let mut depth = 0i32;
+        let mut found = false;
+        while k < code.len() {
+            if code[k].kind == TokKind::Punct {
+                match code[k].text.as_str() {
+                    "(" | "[" => depth += 1,
+                    ")" | "]" => depth -= 1,
+                    "{" if depth == 0 => {
+                        let close = match_brace(code, k);
+                        ranges.push((start_line, code[close].line));
+                        k = close + 1;
+                        found = true;
+                    }
+                    ";" if depth == 0 => {
+                        ranges.push((start_line, code[k].line));
+                        k += 1;
+                        found = true;
+                    }
+                    _ => {}
+                }
+            }
+            if found {
+                break;
+            }
+            k += 1;
+        }
+        if !found {
+            let last = code.last().map(|t| t.line).unwrap_or(start_line);
+            ranges.push((start_line, last));
+        }
+        i = k;
+    }
+    ranges
+}
+
+fn in_exempt(ranges: &[(u32, u32)], line: u32) -> bool {
+    ranges.iter().any(|&(a, b)| a <= line && line <= b)
+}
+
+/// Parsed waiver or a syntax error message for a malformed one.
+enum WaiverParse {
+    NotAWaiver,
+    Ok(Vec<String>, String),
+    Bad(String),
+}
+
+/// Parse a `lint:allow` waiver out of one line comment. Doc comments
+/// (`///`, `//!`) never carry waivers.
+fn parse_waiver(comment: &str) -> WaiverParse {
+    let body = match comment.strip_prefix("//") {
+        Some(b) => b,
+        None => return WaiverParse::NotAWaiver,
+    };
+    if body.starts_with('/') || body.starts_with('!') {
+        return WaiverParse::NotAWaiver;
+    }
+    let body = body.trim_start();
+    let Some(rest) = body.strip_prefix("lint:allow") else {
+        return WaiverParse::NotAWaiver;
+    };
+    let rest = rest.trim_start();
+    let Some(rest) = rest.strip_prefix('(') else {
+        return WaiverParse::Bad("waiver must name its rules: lint:allow(<rule>)".to_string());
+    };
+    let Some(close) = rest.find(')') else {
+        return WaiverParse::Bad("unclosed rule list in lint:allow(".to_string());
+    };
+    let mut names = Vec::new();
+    for raw in rest[..close].split(',') {
+        let name = raw.trim();
+        if name.is_empty() {
+            return WaiverParse::Bad("empty rule name in lint:allow(...)".to_string());
+        }
+        if !WAIVABLE_RULES.contains(&name) {
+            return WaiverParse::Bad(format!(
+                "unknown or unwaivable rule `{name}` (waivable: {})",
+                WAIVABLE_RULES.join(", ")
+            ));
+        }
+        names.push(name.to_string());
+    }
+    let after = rest[close + 1..].trim_start();
+    let Some(just) = after.strip_prefix("--") else {
+        return WaiverParse::Bad(
+            "waiver without justification; write: lint:allow(<rule>) -- <why this is sound>"
+                .to_string(),
+        );
+    };
+    let just = just.trim();
+    if just.is_empty() {
+        return WaiverParse::Bad(
+            "waiver without justification; write: lint:allow(<rule>) -- <why this is sound>"
+                .to_string(),
+        );
+    }
+    WaiverParse::Ok(names, just.to_string())
+}
+
+/// Lint one file's source. `path` is the repo-relative path used both for
+/// classification and reporting, so fixtures can be linted *as if* they
+/// lived in a contract module.
+pub fn lint_source(path: &str, src: &str) -> FileReport {
+    let class = classify(path);
+    let toks = tokenize(src);
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut waivers: Vec<Waiver> = Vec::new();
+    let mut code: Vec<Token> = Vec::with_capacity(toks.len());
+    for t in toks {
+        match t.kind {
+            TokKind::LineComment => match parse_waiver(&t.text) {
+                WaiverParse::NotAWaiver => {}
+                WaiverParse::Ok(rules, justification) => waivers.push(Waiver {
+                    path: path.to_string(),
+                    line: t.line,
+                    rules,
+                    justification,
+                }),
+                WaiverParse::Bad(msg) => findings.push(Finding {
+                    path: path.to_string(),
+                    line: t.line,
+                    rule: RULE_WAIVER_SYNTAX,
+                    message: msg,
+                }),
+            },
+            TokKind::BlockComment => {}
+            _ => code.push(t),
+        }
+    }
+    let exempt = test_exempt_ranges(&code);
+
+    let mut raw: Vec<RawFinding> = Vec::new();
+    if !class.test_only {
+        if class.determinism {
+            check_clock(&code, &mut raw);
+            check_unordered(&code, &mut raw);
+        }
+        if class.rng_scope {
+            check_rng(&code, &mut raw);
+        }
+        if class.panic_sensitive {
+            check_panic(&code, &mut raw);
+        }
+        check_debug_assert(&code, &mut raw);
+    }
+    raw.retain(|f| !in_exempt(&exempt, f.line));
+
+    let mut used = vec![false; waivers.len()];
+    for f in raw {
+        let mut waived = false;
+        for (wi, w) in waivers.iter().enumerate() {
+            let covers = w.line == f.line || w.line + 1 == f.line;
+            if covers && w.rules.iter().any(|r| r == f.rule) {
+                used[wi] = true;
+                waived = true;
+            }
+        }
+        if !waived {
+            findings.push(Finding {
+                path: path.to_string(),
+                line: f.line,
+                rule: f.rule,
+                message: f.message,
+            });
+        }
+    }
+    for (wi, w) in waivers.iter().enumerate() {
+        if !used[wi] && !class.test_only && !in_exempt(&exempt, w.line) {
+            findings.push(Finding {
+                path: path.to_string(),
+                line: w.line,
+                rule: RULE_UNUSED_WAIVER,
+                message: format!(
+                    "waiver for `{}` suppresses nothing; delete it or move it next to \
+                     the finding it covers",
+                    w.rules.join(", ")
+                ),
+            });
+        }
+    }
+    findings.sort_by(|a, b| a.line.cmp(&b.line).then(a.rule.cmp(b.rule)));
+    FileReport { findings, waivers }
+}
+
+/// Recursively collect `.rs` files (deterministic order: sorted by name).
+fn collect_rs_files(path: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    if path.is_dir() {
+        let mut entries: Vec<PathBuf> = std::fs::read_dir(path)?
+            .map(|e| e.map(|d| d.path()))
+            .collect::<std::io::Result<Vec<PathBuf>>>()?;
+        entries.sort();
+        for e in entries {
+            collect_rs_files(&e, out)?;
+        }
+    } else if path.extension().is_some_and(|e| e == "rs") {
+        out.push(path.to_path_buf());
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `root`-relative paths `rels`. The lint's
+/// own rule fixtures (`lint/fixtures/`) are skipped — they deliberately
+/// violate every rule and are exercised by the fixture tests instead.
+pub fn lint_tree(root: &Path, rels: &[&str]) -> std::io::Result<TreeReport> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for rel in rels {
+        let p = root.join(rel);
+        if !p.exists() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::NotFound,
+                format!("no such path: {}", p.display()),
+            ));
+        }
+        collect_rs_files(&p, &mut files)?;
+    }
+    files.sort();
+    files.dedup();
+    let mut report = TreeReport::default();
+    for f in &files {
+        let disp = f
+            .strip_prefix(root)
+            .unwrap_or(f.as_path())
+            .to_string_lossy()
+            .replace('\\', "/");
+        if disp.contains("lint/fixtures") {
+            continue;
+        }
+        let src = std::fs::read_to_string(f)?;
+        let fr = lint_source(&disp, &src);
+        report.files += 1;
+        report.findings.extend(fr.findings);
+        report.waivers.extend(fr.waivers);
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::rules::{RULE_CLOCK, RULE_DEBUG_ASSERT, RULE_PANIC, RULE_RNG, RULE_UNORDERED};
+    use super::*;
+
+    fn rules_fired(report: &FileReport) -> Vec<&'static str> {
+        report.findings.iter().map(|f| f.rule).collect()
+    }
+
+    // ---- classification --------------------------------------------------
+
+    #[test]
+    fn classification_matches_contract_map() {
+        let c = classify("rust/src/solver/delta.rs");
+        assert!(c.determinism && c.rng_scope && !c.panic_sensitive && !c.test_only);
+        let c = classify("rust/src/sim/mod.rs");
+        assert!(c.determinism && c.rng_scope);
+        let c = classify("rust/src/solver/milp.rs");
+        assert!(!c.determinism && c.rng_scope, "milp is rng-scoped but not a contract file");
+        let c = classify("rust/src/online/mod.rs");
+        assert!(c.panic_sensitive && !c.determinism);
+        let c = classify("rust/src/coordinator/mod.rs");
+        assert!(c.panic_sensitive);
+        let c = classify("rust/tests/prop_invariants.rs");
+        assert!(c.test_only);
+        let c = classify("rust/benches/bench_solver.rs");
+        assert!(c.test_only);
+        let c = classify("examples/quickstart.rs");
+        assert!(!c.determinism && !c.rng_scope && !c.panic_sensitive && !c.test_only);
+        let c = classify("rust/src/util/mod.rs");
+        assert!(!c.determinism && !c.rng_scope, "util::Deadline is the sanctioned clock site");
+    }
+
+    // ---- test-region exemption -------------------------------------------
+
+    #[test]
+    fn cfg_test_modules_are_exempt() {
+        let src = "fn live() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       #[test]\n\
+                       fn t() { x.unwrap(); let i = std::time::Instant::now(); }\n\
+                   }\n";
+        let r = lint_source("rust/src/online/mod.rs", src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        let r = lint_source("rust/src/solver/anneal.rs", src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn test_attribute_on_a_single_fn_is_exempt_but_neighbors_are_not() {
+        let src = "#[test]\n\
+                   fn t() { x.unwrap(); }\n\
+                   fn live() { y.unwrap(); }\n";
+        let r = lint_source("rust/src/online/mod.rs", src);
+        assert_eq!(rules_fired(&r), [RULE_PANIC]);
+        assert_eq!(r.findings[0].line, 3);
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_exempt() {
+        let src = "#[cfg(not(test))]\nfn live() { x.unwrap(); }\n";
+        let r = lint_source("rust/src/online/mod.rs", src);
+        assert_eq!(rules_fired(&r), [RULE_PANIC]);
+    }
+
+    // ---- waivers ----------------------------------------------------------
+
+    #[test]
+    fn waiver_on_previous_line_suppresses_and_is_inventoried() {
+        let src = "// lint:allow(panic-freedom) -- startup-only invariant, documented\n\
+                   fn live() { x.unwrap(); }\n";
+        let r = lint_source("rust/src/online/mod.rs", src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        assert_eq!(r.waivers.len(), 1);
+        assert_eq!(r.waivers[0].rules, ["panic-freedom"]);
+        assert!(r.waivers[0].justification.contains("startup-only"));
+    }
+
+    #[test]
+    fn trailing_waiver_on_the_same_line_suppresses() {
+        let src = "fn live() { x.unwrap(); } // lint:allow(panic-freedom) -- demo harness\n";
+        let r = lint_source("rust/src/online/mod.rs", src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn waiver_without_justification_is_an_error() {
+        let src = "// lint:allow(panic-freedom)\nfn live() { x.unwrap(); }\n";
+        let r = lint_source("rust/src/online/mod.rs", src);
+        // the malformed waiver does not suppress, so both errors surface
+        let fired = rules_fired(&r);
+        assert!(fired.contains(&rules::RULE_WAIVER_SYNTAX), "{fired:?}");
+        assert!(fired.contains(&RULE_PANIC), "{fired:?}");
+    }
+
+    #[test]
+    fn waiver_for_unknown_rule_is_an_error() {
+        let src = "// lint:allow(made-up-rule) -- because\nfn live() {}\n";
+        let r = lint_source("rust/src/online/mod.rs", src);
+        assert_eq!(rules_fired(&r), [rules::RULE_WAIVER_SYNTAX]);
+        assert!(r.findings[0].message.contains("made-up-rule"));
+    }
+
+    #[test]
+    fn unused_waiver_is_an_error() {
+        let src = "// lint:allow(panic-freedom) -- nothing here panics anymore\nfn live() {}\n";
+        let r = lint_source("rust/src/online/mod.rs", src);
+        assert_eq!(rules_fired(&r), [RULE_UNUSED_WAIVER]);
+    }
+
+    #[test]
+    fn doc_comments_never_waive() {
+        let src = "/// lint:allow(panic-freedom) -- docs cannot waive\nfn live() { x.unwrap(); }\n";
+        let r = lint_source("rust/src/online/mod.rs", src);
+        assert_eq!(rules_fired(&r), [RULE_PANIC]);
+        assert!(r.waivers.is_empty());
+    }
+
+    #[test]
+    fn one_waiver_covers_a_multi_rule_list() {
+        let src = "// lint:allow(clock-in-evaluator, ambient-rng) -- calibration-only path\n\
+                   fn f() { let t = Instant::now(); let h = RandomState::new(); }\n";
+        let r = lint_source("rust/src/solver/delta.rs", src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        assert_eq!(r.waivers[0].rules.len(), 2);
+    }
+
+    // ---- fixtures: each rule fires on its bad twin, not its good twin ----
+
+    #[test]
+    fn fixture_clock_in_evaluator() {
+        let bad = lint_source("rust/src/solver/anneal.rs", include_str!("fixtures/clock_bad.rs"));
+        assert!(!bad.findings.is_empty());
+        assert!(bad.findings.iter().all(|f| f.rule == RULE_CLOCK), "{:?}", bad.findings);
+        let good = lint_source("rust/src/solver/anneal.rs", include_str!("fixtures/clock_good.rs"));
+        assert!(good.findings.is_empty(), "{:?}", good.findings);
+    }
+
+    #[test]
+    fn fixture_unordered_iteration() {
+        let bad = lint_source("rust/src/sim/mod.rs", include_str!("fixtures/unordered_bad.rs"));
+        assert!(bad.findings.len() >= 3, "{:?}", bad.findings);
+        assert!(bad.findings.iter().all(|f| f.rule == RULE_UNORDERED), "{:?}", bad.findings);
+        let good = lint_source("rust/src/sim/mod.rs", include_str!("fixtures/unordered_good.rs"));
+        assert!(good.findings.is_empty(), "{:?}", good.findings);
+    }
+
+    #[test]
+    fn fixture_ambient_rng() {
+        let bad = lint_source("rust/src/solver/spase.rs", include_str!("fixtures/rng_bad.rs"));
+        assert!(!bad.findings.is_empty());
+        assert!(bad.findings.iter().all(|f| f.rule == RULE_RNG), "{:?}", bad.findings);
+        let good = lint_source("rust/src/solver/spase.rs", include_str!("fixtures/rng_good.rs"));
+        assert!(good.findings.is_empty(), "{:?}", good.findings);
+    }
+
+    #[test]
+    fn fixture_panic_freedom() {
+        let bad = lint_source("rust/src/online/mod.rs", include_str!("fixtures/panic_bad.rs"));
+        assert!(bad.findings.len() >= 5, "{:?}", bad.findings);
+        assert!(bad.findings.iter().all(|f| f.rule == RULE_PANIC), "{:?}", bad.findings);
+        let good = lint_source("rust/src/online/mod.rs", include_str!("fixtures/panic_good.rs"));
+        assert!(good.findings.is_empty(), "{:?}", good.findings);
+    }
+
+    #[test]
+    fn fixture_debug_assert_side_effect() {
+        let bad =
+            lint_source("rust/src/solver/anneal.rs", include_str!("fixtures/debug_assert_bad.rs"));
+        assert!(!bad.findings.is_empty());
+        assert!(bad.findings.iter().all(|f| f.rule == RULE_DEBUG_ASSERT), "{:?}", bad.findings);
+        let good =
+            lint_source("rust/src/solver/anneal.rs", include_str!("fixtures/debug_assert_good.rs"));
+        assert!(good.findings.is_empty(), "{:?}", good.findings);
+    }
+
+    #[test]
+    fn fixture_waivers() {
+        let bad = lint_source("rust/src/online/mod.rs", include_str!("fixtures/waiver_bad.rs"));
+        let fired = rules_fired(&bad);
+        assert!(fired.contains(&rules::RULE_WAIVER_SYNTAX), "{fired:?}");
+        assert!(fired.contains(&RULE_UNUSED_WAIVER), "{fired:?}");
+        let good = lint_source("rust/src/online/mod.rs", include_str!("fixtures/waiver_good.rs"));
+        assert!(good.findings.is_empty(), "{:?}", good.findings);
+        assert!(!good.waivers.is_empty());
+    }
+
+    // ---- the real tree ----------------------------------------------------
+
+    #[test]
+    fn real_tree_is_lint_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let report = match lint_tree(root, &DEFAULT_ROOTS) {
+            Ok(r) => r,
+            Err(e) => panic!("tree walk failed: {e}"),
+        };
+        assert!(report.files > 50, "walker found suspiciously few files: {}", report.files);
+        let msgs: Vec<String> = report.findings.iter().map(|f| f.to_string()).collect();
+        assert!(report.findings.is_empty(), "the tree must be lint-clean:\n{}", msgs.join("\n"));
+        assert!(!report.waivers.is_empty(), "the joint.rs deadline waivers should be inventoried");
+    }
+
+    /// Acceptance demo: deleting any one waiver comment makes the lint
+    /// exit non-zero — here, the `joint.rs` deadline-read waivers.
+    #[test]
+    fn deleting_a_waiver_surfaces_the_underlying_finding() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let path = "rust/src/solver/joint.rs";
+        let src = match std::fs::read_to_string(root.join(path)) {
+            Ok(s) => s,
+            Err(e) => panic!("reading {path}: {e}"),
+        };
+        let with = lint_source(path, &src);
+        assert!(with.findings.is_empty(), "{:?}", with.findings);
+        let clock_waivers =
+            with.waivers.iter().filter(|w| w.rules.iter().any(|r| r == RULE_CLOCK)).count();
+        assert!(clock_waivers >= 2, "expected the two deadline-read waivers, saw {clock_waivers}");
+        let stripped: String = src
+            .lines()
+            .filter(|l| !l.contains("lint:allow"))
+            .map(|l| format!("{l}\n"))
+            .collect();
+        let without = lint_source(path, &stripped);
+        let clocks = without.findings.iter().filter(|f| f.rule == RULE_CLOCK).count();
+        assert!(clocks >= 2, "stripping waivers must surface the clock reads: {:?}", without.findings);
+    }
+
+    /// Acceptance demo: reverting an online-path panic fix (reintroducing
+    /// an `unwrap`) makes the lint exit non-zero.
+    #[test]
+    fn reintroducing_a_coordinator_unwrap_fires() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let path = "rust/src/coordinator/mod.rs";
+        let src = match std::fs::read_to_string(root.join(path)) {
+            Ok(s) => s,
+            Err(e) => panic!("reading {path}: {e}"),
+        };
+        let clean = lint_source(path, &src);
+        assert!(clean.findings.is_empty(), "{:?}", clean.findings);
+        let dirty = format!("{src}\nfn regressed(g: Option<u32>) -> u32 {{ g.unwrap() }}\n");
+        let r = lint_source(path, &dirty);
+        assert_eq!(rules_fired(&r), [RULE_PANIC]);
+    }
+}

@@ -1,0 +1,500 @@
+//! The `saturn-lint` rules: token-sequence matchers over the output of
+//! [`crate::lint::lexer`], scoped per file by the module classification in
+//! [`crate::lint::classify`]. See `LINTS.md` for the catalogue — what each
+//! rule guards, why, an example finding, and the waiver policy.
+
+use super::lexer::{TokKind, Token};
+
+/// `Instant::now`/`SystemTime::now` in a determinism-contract module.
+pub const RULE_CLOCK: &str = "clock-in-evaluator";
+/// Iteration over `HashMap`/`HashSet` in a determinism-contract module.
+pub const RULE_UNORDERED: &str = "unordered-iteration";
+/// Randomness source other than `util::rng::DetRng` in `solver`/`sim`.
+pub const RULE_RNG: &str = "ambient-rng";
+/// `unwrap`/`expect`/`panic!`-family in a panic-sensitive module.
+pub const RULE_PANIC: &str = "panic-freedom";
+/// Mutation inside a `debug_assert!` body (compiled out in release).
+pub const RULE_DEBUG_ASSERT: &str = "debug-assert-side-effect";
+/// Malformed waiver comment (missing justification, unknown rule).
+pub const RULE_WAIVER_SYNTAX: &str = "waiver-syntax";
+/// A waiver that suppresses nothing (stale after the code moved on).
+pub const RULE_UNUSED_WAIVER: &str = "unused-waiver";
+
+/// Rules that may be waived with `// lint:allow(<rule>) -- <justification>`.
+/// The two waiver meta-rules are deliberately not waivable.
+pub const WAIVABLE_RULES: [&str; 5] =
+    [RULE_CLOCK, RULE_UNORDERED, RULE_RNG, RULE_PANIC, RULE_DEBUG_ASSERT];
+
+/// A rule match before waiver filtering.
+#[derive(Debug, Clone)]
+pub struct RawFinding {
+    /// Which rule fired.
+    pub rule: &'static str,
+    /// 1-based source line.
+    pub line: u32,
+    /// Human-readable explanation.
+    pub message: String,
+}
+
+fn ident(code: &[Token], i: usize, text: &str) -> bool {
+    code.get(i).is_some_and(|t| t.kind == TokKind::Ident && t.text == text)
+}
+
+fn ident_of(code: &[Token], i: usize, texts: &[&str]) -> Option<String> {
+    code.get(i)
+        .filter(|t| t.kind == TokKind::Ident && texts.iter().any(|x| t.text == *x))
+        .map(|t| t.text.clone())
+}
+
+fn any_ident(code: &[Token], i: usize) -> Option<&str> {
+    code.get(i).filter(|t| t.kind == TokKind::Ident).map(|t| t.text.as_str())
+}
+
+fn punct(code: &[Token], i: usize, text: &str) -> bool {
+    code.get(i).is_some_and(|t| t.kind == TokKind::Punct && t.text == text)
+}
+
+/// **clock-in-evaluator** — the PR 3 contract "workers never read the
+/// clock", promoted from a comment to a check. Evaluator/worker code must
+/// route all timing through `util::Deadline` / `util::DeadlinePoll`; a
+/// direct `Instant::now`/`SystemTime::now` makes the search trajectory a
+/// function of wall-clock jitter, breaking bit-identical replans.
+pub fn check_clock(code: &[Token], out: &mut Vec<RawFinding>) {
+    for i in 0..code.len() {
+        if let Some(src) = ident_of(code, i, &["Instant", "SystemTime"]) {
+            if punct(code, i + 1, "::") && ident(code, i + 2, "now") {
+                out.push(RawFinding {
+                    rule: RULE_CLOCK,
+                    line: code[i].line,
+                    message: format!(
+                        "`{src}::now` in a determinism-contract module; route timing \
+                         through util::Deadline / util::DeadlinePoll (workers never \
+                         read the clock)"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Iterating methods that expose `HashMap`/`HashSet`'s nondeterministic
+/// order. Keyed access (`get`, `entry`, `insert`, `contains_key`, …) is
+/// deliberately absent: lookups are order-free and stay legal.
+const ITER_METHODS: [&str; 9] = [
+    "iter", "iter_mut", "into_iter", "keys", "into_keys", "values", "values_mut", "into_values",
+    "drain",
+];
+
+/// Methods in this crate known to *return* a `HashMap`, so chained
+/// iteration (`ctx.id_index_map().iter()`) is caught even without a
+/// binding.
+const MAP_RETURNING: [&str; 3] = ["id_index_map", "prior_index_map", "id_index"];
+
+/// Collect identifiers bound to a `HashMap`/`HashSet` in this file: typed
+/// bindings/fields/params (`name: [&][mut] [path::]HashMap<…>`) and
+/// `let [mut] name = <expr containing HashMap::/HashSet:: or a known
+/// map-returning method>`. File-scoped and flow-insensitive on purpose —
+/// a rare same-name shadow costs a waiver, never a missed finding.
+fn collect_map_names(code: &[Token]) -> Vec<String> {
+    let mut names: Vec<String> = Vec::new();
+    let mut add = |n: &str| {
+        if !names.iter().any(|x| x == n) {
+            names.push(n.to_string());
+        }
+    };
+    for i in 0..code.len() {
+        // `name : [&] [lifetime] [mut] [path ::]* (HashMap|HashSet)`
+        if code[i].kind == TokKind::Ident && punct(code, i + 1, ":") {
+            let mut j = i + 2;
+            while punct(code, j, "&")
+                || ident(code, j, "mut")
+                || code.get(j).is_some_and(|t| t.kind == TokKind::Lifetime)
+            {
+                j += 1;
+            }
+            // walk a path `a :: b :: HashMap`
+            while code.get(j).is_some_and(|t| t.kind == TokKind::Ident) && punct(code, j + 1, "::")
+            {
+                j += 2;
+            }
+            if ident_of(code, j, &["HashMap", "HashSet"]).is_some() {
+                add(&code[i].text);
+            }
+        }
+        // `let [mut] name = … HashMap:: … ;` / `… .id_index_map() … ;`
+        if ident(code, i, "let") {
+            let mut j = i + 1;
+            if ident(code, j, "mut") {
+                j += 1;
+            }
+            if code.get(j).map(|t| t.kind) != Some(TokKind::Ident) {
+                continue;
+            }
+            let name = code[j].text.clone();
+            if !punct(code, j + 1, "=") {
+                continue;
+            }
+            let mut depth = 0i32;
+            let mut k = j + 2;
+            while k < code.len() {
+                if code[k].kind == TokKind::Punct {
+                    match code[k].text.as_str() {
+                        "(" | "[" | "{" => depth += 1,
+                        ")" | "]" | "}" => depth -= 1,
+                        ";" if depth == 0 => break,
+                        _ => {}
+                    }
+                }
+                let from_ctor =
+                    ident_of(code, k, &["HashMap", "HashSet"]).is_some() && punct(code, k + 1, "::");
+                let from_method = ident_of(code, k, &MAP_RETURNING).is_some()
+                    && punct(code, k + 1, "(")
+                    && punct(code, k + 2, ")");
+                if from_ctor || from_method {
+                    add(&name);
+                    break;
+                }
+                k += 1;
+            }
+        }
+    }
+    names
+}
+
+/// **unordered-iteration** — `HashMap`/`HashSet` iteration order is
+/// seeded per process, so any contract-module decision derived from it
+/// (candidate order, tie-breaks, accumulation order of floats) silently
+/// breaks delta ≡ full-replay and thread-count trajectory parity. Keyed
+/// lookups stay legal.
+pub fn check_unordered(code: &[Token], out: &mut Vec<RawFinding>) {
+    let maps = collect_map_names(code);
+    let is_map = |n: &str| maps.iter().any(|m| m == n);
+    let flag = |line: u32, what: &str, out: &mut Vec<RawFinding>| {
+        out.push(RawFinding {
+            rule: RULE_UNORDERED,
+            line,
+            message: format!(
+                "{what}: HashMap/HashSet iteration order is nondeterministic in a \
+                 determinism-contract module; iterate a Vec/BTreeMap or sort first \
+                 (keyed lookups are fine)"
+            ),
+        });
+    };
+    for i in 0..code.len() {
+        // `name.iter()` / `self.name.drain()` / chained `id_index_map().keys()`
+        if punct(code, i + 1, ".") {
+            if let Some(m) = ident_of(code, i + 2, &ITER_METHODS) {
+                if punct(code, i + 3, "(") {
+                    if let Some(n) = any_ident(code, i) {
+                        if is_map(n) {
+                            flag(code[i].line, &format!("`{n}.{m}()`"), out);
+                        }
+                    }
+                    // `…map_returning_method().iter()` — i is the `)` of a
+                    // zero-arg call `name ( )`
+                    if punct(code, i, ")") && i >= 2 && punct(code, i - 1, "(") {
+                        if let Some(f) = any_ident(code, i - 2) {
+                            if MAP_RETURNING.contains(&f) {
+                                flag(code[i].line, &format!("`{f}().{m}()`"), out);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // `for pat in [&][mut] name {`
+        if ident(code, i, "for") {
+            let mut depth = 0i32;
+            let mut j = i + 1;
+            let limit = (i + 64).min(code.len());
+            while j < limit {
+                if code[j].kind == TokKind::Punct {
+                    match code[j].text.as_str() {
+                        "(" | "[" => depth += 1,
+                        ")" | "]" => depth -= 1,
+                        "{" | ";" => break, // not a for-loop header after all
+                        _ => {}
+                    }
+                } else if depth == 0 && ident(code, j, "in") {
+                    let mut k = j + 1;
+                    while punct(code, k, "&") || ident(code, k, "mut") {
+                        k += 1;
+                    }
+                    if let Some(n) = any_ident(code, k) {
+                        if is_map(n) && punct(code, k + 1, "{") {
+                            flag(code[k].line, &format!("`for … in {n}`"), out);
+                        }
+                    }
+                    break;
+                }
+                j += 1;
+            }
+        }
+    }
+}
+
+/// Identifiers whose presence means ambient (process-seeded or OS-seeded)
+/// randomness: `rand`-crate entry points and std's randomly keyed hashers.
+const RNG_IDENTS: [&str; 4] = ["thread_rng", "from_entropy", "RandomState", "DefaultHasher"];
+
+/// **ambient-rng** — all randomness in `solver`/`sim` must flow from the
+/// explicitly seeded `util::rng::DetRng`; an ambient generator (or a
+/// randomly keyed hasher driving decisions) makes runs irreproducible and
+/// voids every seed-pinned test margin.
+pub fn check_rng(code: &[Token], out: &mut Vec<RawFinding>) {
+    for i in 0..code.len() {
+        let hit = if let Some(name) = ident_of(code, i, &RNG_IDENTS) {
+            Some(name)
+        } else if ident(code, i, "rand") && punct(code, i + 1, "::") {
+            Some("rand::".to_string())
+        } else {
+            None
+        };
+        if let Some(name) = hit {
+            out.push(RawFinding {
+                rule: RULE_RNG,
+                line: code[i].line,
+                message: format!(
+                    "`{name}` is an ambient randomness source; only util::rng::DetRng \
+                     may produce randomness in solver/sim"
+                ),
+            });
+        }
+    }
+}
+
+/// **panic-freedom** — the online ingest path (`online`, `coordinator`)
+/// fronts long-running streams; a panic tears down the whole coordinator.
+/// Errors must propagate as `Result` (the vendored `anyhow` is in-tree).
+pub fn check_panic(code: &[Token], out: &mut Vec<RawFinding>) {
+    for i in 0..code.len() {
+        if punct(code, i, ".") {
+            if let Some(m) = ident_of(code, i + 1, &["unwrap", "expect"]) {
+                if punct(code, i + 2, "(") {
+                    out.push(RawFinding {
+                        rule: RULE_PANIC,
+                        line: code[i + 1].line,
+                        message: format!(
+                            "`.{m}()` in a panic-sensitive module; propagate the error \
+                             with Result/anyhow instead"
+                        ),
+                    });
+                }
+            }
+        }
+        if let Some(m) = ident_of(code, i, &["panic", "todo", "unimplemented", "unreachable"]) {
+            if punct(code, i + 1, "!") {
+                out.push(RawFinding {
+                    rule: RULE_PANIC,
+                    line: code[i].line,
+                    message: format!(
+                        "`{m}!` in a panic-sensitive module; propagate the error with \
+                         Result/anyhow instead"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// **debug-assert-side-effect** — `debug_assert!` bodies vanish in
+/// release builds, so a mutation inside one (the staging-replay
+/// assertions in `anneal.rs` are the live risk) changes behavior between
+/// profiles. Flags `.push(`/`.insert(` calls and bare `=` assignment
+/// inside `debug_assert!`/`debug_assert_eq!`/`debug_assert_ne!` bodies.
+pub fn check_debug_assert(code: &[Token], out: &mut Vec<RawFinding>) {
+    let mut i = 0usize;
+    while i < code.len() {
+        let is_da = ident_of(code, i, &["debug_assert", "debug_assert_eq", "debug_assert_ne"])
+            .is_some()
+            && punct(code, i + 1, "!")
+            && punct(code, i + 2, "(");
+        if !is_da {
+            i += 1;
+            continue;
+        }
+        let macro_name = code[i].text.clone();
+        let mut depth = 1i32;
+        let mut j = i + 3;
+        while j < code.len() && depth > 0 {
+            if code[j].kind == TokKind::Punct {
+                match code[j].text.as_str() {
+                    "(" | "[" | "{" => depth += 1,
+                    ")" | "]" | "}" => depth -= 1,
+                    _ => {}
+                }
+                if depth == 0 {
+                    break;
+                }
+                if code[j].text == "=" {
+                    out.push(RawFinding {
+                        rule: RULE_DEBUG_ASSERT,
+                        line: code[j].line,
+                        message: format!(
+                            "assignment inside `{macro_name}!` body; debug assertions \
+                             are compiled out in release and must stay side-effect free"
+                        ),
+                    });
+                }
+            }
+            if punct(code, j, ".") {
+                if let Some(m) = ident_of(code, j + 1, &["push", "insert"]) {
+                    if punct(code, j + 2, "(") {
+                        out.push(RawFinding {
+                            rule: RULE_DEBUG_ASSERT,
+                            line: code[j + 1].line,
+                            message: format!(
+                                "`.{m}(` inside `{macro_name}!` body; debug assertions \
+                                 are compiled out in release and must stay side-effect \
+                                 free"
+                            ),
+                        });
+                    }
+                }
+            }
+            j += 1;
+        }
+        i = j.max(i + 1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer::tokenize;
+
+    fn code_tokens(src: &str) -> Vec<Token> {
+        tokenize(src)
+            .into_iter()
+            .filter(|t| t.kind != TokKind::LineComment && t.kind != TokKind::BlockComment)
+            .collect()
+    }
+
+    #[test]
+    fn map_name_collection_covers_bindings_fields_params() {
+        let code = code_tokens(
+            "struct S { cache: HashMap<u64, u32> }\n\
+             fn f(id2idx: &HashMap<usize, usize>, xs: &[u32]) {\n\
+                 let mut seen: std::collections::HashSet<u64> = Default::default();\n\
+                 let by_id = HashMap::with_capacity(4);\n\
+                 let widx = ctx.id_index_map();\n\
+                 let plain = Vec::new();\n\
+             }",
+        );
+        let names = collect_map_names(&code);
+        for expect in ["cache", "id2idx", "seen", "by_id", "widx"] {
+            assert!(names.iter().any(|n| n == expect), "missing {expect} in {names:?}");
+        }
+        assert!(!names.iter().any(|n| n == "plain" || n == "xs"));
+    }
+
+    #[test]
+    fn unordered_flags_iteration_not_lookups() {
+        let mut out = Vec::new();
+        let code = code_tokens(
+            "fn f(m: &HashMap<usize, usize>) {\n\
+                 let v = m.get(&1);\n\
+                 m.entry(2).or_insert(3);\n\
+                 for (k, v) in m.iter() {}\n\
+             }",
+        );
+        check_unordered(&code, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].rule, RULE_UNORDERED);
+        assert_eq!(out[0].line, 4);
+    }
+
+    #[test]
+    fn unordered_flags_for_loop_over_reference() {
+        let mut out = Vec::new();
+        let code =
+            code_tokens("fn f() { let mut s = HashSet::new(); for x in &s { use_it(x); } }");
+        check_unordered(&code, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        // a for-loop over a Vec stays silent
+        let mut out2 = Vec::new();
+        let code2 = code_tokens("fn f() { let v = Vec::new(); for x in &v { use_it(x); } }");
+        check_unordered(&code2, &mut out2);
+        assert!(out2.is_empty(), "{out2:?}");
+    }
+
+    #[test]
+    fn unordered_flags_chained_map_returning_call() {
+        let mut out = Vec::new();
+        let code = code_tokens("fn f(ctx: &PlanCtx) { for x in ctx.id_index_map().keys() {} }");
+        check_unordered(&code, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        // …but keyed use of the same return value is fine
+        let mut out2 = Vec::new();
+        let code2 = code_tokens("fn f(ctx: &PlanCtx) { let i = ctx.id_index_map()[&7]; }");
+        check_unordered(&code2, &mut out2);
+        assert!(out2.is_empty(), "{out2:?}");
+    }
+
+    #[test]
+    fn clock_rule_matches_qualified_and_bare_paths() {
+        let mut out = Vec::new();
+        check_clock(
+            &code_tokens("let t = std::time::Instant::now(); let s = SystemTime::now();"),
+            &mut out,
+        );
+        assert_eq!(out.len(), 2, "{out:?}");
+        // inside a string: invisible
+        let mut out2 = Vec::new();
+        check_clock(&code_tokens(r#"let s = "Instant::now";"#), &mut out2);
+        assert!(out2.is_empty());
+    }
+
+    #[test]
+    fn panic_rule_matches_all_five_forms() {
+        let mut out = Vec::new();
+        check_panic(
+            &code_tokens(
+                "fn f() { x.unwrap(); y.expect(\"m\"); panic!(\"p\"); todo!(); unreachable!(); }",
+            ),
+            &mut out,
+        );
+        assert_eq!(out.len(), 5, "{out:?}");
+        // unwrap_or and a field named expect are not matches
+        let mut out2 = Vec::new();
+        check_panic(&code_tokens("fn f() { x.unwrap_or(0); s.expect = 1; }"), &mut out2);
+        assert!(out2.is_empty(), "{out2:?}");
+    }
+
+    #[test]
+    fn debug_assert_rule_flags_mutation_not_comparison() {
+        let mut out = Vec::new();
+        check_debug_assert(
+            &code_tokens(
+                "debug_assert!(a == b && c <= d);\n\
+                 debug_assert_eq!(xs.len(), n, \"msg {n}\");\n\
+                 debug_assert!({ v.push(1); v.len() > 0 });\n\
+                 debug_assert!(x = compute());",
+            ),
+            &mut out,
+        );
+        assert_eq!(out.len(), 2, "{out:?}");
+        assert!(out.iter().all(|f| f.rule == RULE_DEBUG_ASSERT));
+        assert_eq!(out[0].line, 3);
+        assert_eq!(out[1].line, 4);
+    }
+
+    #[test]
+    fn rng_rule_flags_ambient_sources() {
+        let mut out = Vec::new();
+        check_rng(
+            &code_tokens(
+                "let r = rand::thread_rng();\n\
+                 let h: RandomState = RandomState::new();\n\
+                 let d = DetRng::new(7);",
+            ),
+            &mut out,
+        );
+        // rand:: + thread_rng on line 1, RandomState twice on line 2
+        assert_eq!(out.len(), 4, "{out:?}");
+        assert!(out.iter().all(|f| f.rule == RULE_RNG));
+        let mut out2 = Vec::new();
+        check_rng(&code_tokens("let d = DetRng::new(7); let x = d.below(10);"), &mut out2);
+        assert!(out2.is_empty(), "{out2:?}");
+    }
+}

@@ -153,7 +153,7 @@ fn cmd_plan(args: &Args) -> anyhow::Result<()> {
     let mut saturn = Saturn::new(c);
     saturn.optimizer = JointOptimizer::with_timeout(std::time::Duration::from_millis(timeout_ms));
     saturn.profile(&w);
-    let plan = saturn.plan(&w, seed);
+    let plan = saturn.plan(&w, seed)?;
     plan.validate(&saturn.cluster, &w).map_err(|e| anyhow::anyhow!(e))?;
     let mut t = TextTable::new(vec!["task", "parallelism", "gpus", "node", "start", "duration"]);
     let mut rows: Vec<_> = plan.assignments.iter().collect();

@@ -20,6 +20,13 @@
 //!   the full MILP from scratch on every arrival (see
 //!   [`JointOptimizer::resolve_incremental`] and `benches/bench_online.rs`
 //!   for the warm-vs-cold latency comparison).
+//!
+//! This module is on the panic-sensitive path (see `LINTS.md`): it
+//! fronts long-running submission streams, so non-test code must stay
+//! panic-free — `saturn-lint` and the deny attributes below both
+//! enforce it.
+
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 use crate::cluster::Cluster;
 use crate::costmodel::CostModel;
@@ -151,6 +158,7 @@ impl OnlineCoordinator {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::model::ModelDesc;

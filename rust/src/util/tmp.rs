@@ -60,4 +60,32 @@ mod tests {
         let b = TempDir::new("u").unwrap();
         assert_ne!(a.path(), b.path());
     }
+
+    /// Regression: naming keyed on `SystemTime::now` alone collides when
+    /// two dirs are created inside one clock tick. The PID + atomic
+    /// counter must keep paths distinct even when many threads allocate
+    /// simultaneously with the same prefix.
+    #[test]
+    fn concurrent_paths_are_distinct() {
+        const THREADS: usize = 8;
+        const PER_THREAD: usize = 32;
+        let handles: Vec<_> = (0..THREADS)
+            .map(|_| {
+                std::thread::spawn(|| {
+                    let dirs: Vec<TempDir> =
+                        (0..PER_THREAD).map(|_| TempDir::new("race").unwrap()).collect();
+                    dirs.iter().map(|d| d.path().to_path_buf()).collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        let mut all: Vec<std::path::PathBuf> = Vec::new();
+        for h in handles {
+            all.extend(h.join().unwrap());
+        }
+        assert_eq!(all.len(), THREADS * PER_THREAD);
+        let mut dedup = all.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), all.len(), "temp paths collided under concurrency");
+    }
 }

@@ -128,9 +128,9 @@ fn coordinator_end_to_end_img() {
     let mut saturn = Saturn::new(Cluster::heterogeneous_12gpu());
     let overhead = saturn.profile(&w);
     assert!(overhead > 0.0);
-    let plan = saturn.plan(&w, 1);
+    let plan = saturn.plan(&w, 1).unwrap();
     plan.validate(&saturn.cluster, &w).unwrap();
-    let result = saturn.execute_simulated(&w, SimConfig::default(), 1);
+    let result = saturn.execute_simulated(&w, SimConfig::default(), 1).unwrap();
     assert_eq!(result.completions.len(), w.len());
     assert!(result.avg_utilization(&saturn.cluster) > 0.2);
 }
