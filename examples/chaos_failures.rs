@@ -1,0 +1,164 @@
+//! Chaos economics end-to-end: the hand-built blocked-failure fixture
+//! (five gangs on a 2-node 8+2-GPU cluster, node 0 crashing at t = 600 s
+//! and rejoining at t = 2600 s) run through three arms:
+//!
+//!  - **relocate** — the crash cuts the running segment through the
+//!    chaos re-plan; the stranded 8-GPU gang restarts from its last
+//!    checkpoint on the surviving 2-GPU node, paying switch churn.
+//!  - **wait** — the control: node 0 stalls (slowdown to ~1e-9) over the
+//!    same window and introspection is disabled, so everything queued
+//!    behind the stall waits the outage out.
+//!  - **drain** — the same capacity loss announced with a 100 s grace
+//!    period (`NodeLeave`): the gang checkpoints *before* the node goes,
+//!    so the relocation costs churn but zero lost work.
+//!
+//! The margins are pinned (noiseless fixture, cross-validated by
+//! `scripts/validate_chaos_fixture.py`): relocating beats waiting by
+//! >= 429 s of makespan and >= 85 s of mean turnaround.
+//!
+//! See EXPERIMENTS.md §Failures for the full table.
+
+use saturn::metrics::{online_stats, write_report};
+use saturn::sim::{simulate, IntrospectCfg, SimConfig, SimResult};
+use saturn::solver::joint::JointOptimizer;
+use saturn::solver::Objective;
+use saturn::trainer::workloads;
+use saturn::util::rng::DetRng;
+use saturn::util::table::TextTable;
+
+fn main() {
+    let (w, grid, cluster) = workloads::blocked_failure_instance();
+    println!(
+        "blocked-failure fixture: {} tasks, {} nodes ({} GPUs), crash at 600s, repair at 2600s\n",
+        w.len(),
+        cluster.nodes.len(),
+        cluster.total_gpus()
+    );
+
+    let policy = || JointOptimizer {
+        timeout: std::time::Duration::from_secs(120),
+        incremental: true,
+        ..Default::default()
+    };
+    let base_cfg = || SimConfig {
+        noise_sigma: 0.0,
+        switch_cost: 30.0,
+        objective: Objective::MeanTurnaround,
+        ..SimConfig::default()
+    };
+
+    // relocate: the crash/repair pair routed through the chaos re-plan
+    let relocate_cfg = SimConfig { chaos: workloads::failure_recovery_events(), ..base_cfg() };
+    let relocate = simulate(&policy(), &w, &grid, &cluster, relocate_cfg.clone(), &mut DetRng::new(99));
+
+    // wait: node 0 stalls instead of crashing, re-planning suppressed —
+    // the un-meetable threshold keeps the original plan pinned in place
+    let wait_cfg = SimConfig {
+        chaos: workloads::failure_wait_baseline_events(),
+        introspect: Some(IntrospectCfg { interval: 1e9, threshold: 1e18 }),
+        ..base_cfg()
+    };
+    let wait = simulate(&policy(), &w, &grid, &cluster, wait_cfg, &mut DetRng::new(99));
+
+    // drain: the same node leaves gracefully with 100s notice, no crash
+    let drain_cfg = SimConfig {
+        chaos: workloads::spot_churn_events(0, 600.0, 1e9, 100.0, 0.0, 1e9),
+        ..base_cfg()
+    };
+    let drain = simulate(&policy(), &w, &grid, &cluster, drain_cfg, &mut DetRng::new(99));
+
+    let mut table = TextTable::new(vec![
+        "arm",
+        "makespan",
+        "mean turnaround",
+        "failures",
+        "relocations",
+        "lost work",
+        "recovery",
+        "avg util",
+    ]);
+    let mut report = String::new();
+    for (label, r) in [("relocate", &relocate), ("wait", &wait), ("drain", &drain)] {
+        let stats = online_stats(&w, r);
+        let row = vec![
+            label.to_string(),
+            format!("{:.0}s", r.makespan),
+            format!("{:.0}s", stats.mean_turnaround),
+            format!("{}", r.failures),
+            format!("{}", r.relocations),
+            format!("{:.0}s", r.lost_work_secs),
+            format!("{:.0}s", r.time_to_recover),
+            format!("{:.3}", r.avg_utilization(&cluster)),
+        ];
+        report.push_str(&row.join(" | "));
+        report.push('\n');
+        table.row(row);
+    }
+    println!("{}", table.render());
+
+    // recovery invariants, each arm
+    for (label, r) in [("relocate", &relocate), ("wait", &wait), ("drain", &drain)] {
+        assert_eq!(r.completions.len(), w.len(), "{label}: every task must finish");
+        for t in &w {
+            let start = r
+                .starts
+                .iter()
+                .find(|(id, _)| *id == t.id)
+                .map(|(_, s)| *s)
+                .expect("every task starts");
+            assert!(start >= t.arrival - 1e-6, "{label}: task {} jumped its arrival", t.id);
+        }
+        assert!(r.relocations <= r.preemptions, "{label}: relocations are preemptions");
+    }
+    // arm-specific accounting
+    assert_eq!(relocate.failures, 1, "the crash is counted once");
+    assert_eq!(relocate.relocations, 1, "the stranded gang relocates once");
+    assert!(relocate.lost_work_secs > 0.0, "a mid-segment crash loses work");
+    assert_eq!(wait.failures, 0, "a stall is not a crash");
+    assert_eq!(wait.relocations, 0, "waiting moves nothing");
+    assert_eq!(drain.failures, 0, "a drain is not a crash");
+    assert_eq!(drain.lost_work_secs, 0.0, "drained work is never lost");
+    assert_eq!(drain.relocations, 1, "the drained gang relocates once");
+
+    // the pinned economics: relocating beats waiting the outage out
+    let stats = |r: &SimResult| online_stats(&w, r);
+    assert!(
+        relocate.makespan <= wait.makespan - 429.0,
+        "relocation must beat waiting by >= 429s of makespan: {} vs {}",
+        relocate.makespan,
+        wait.makespan
+    );
+    assert!(
+        stats(&relocate).mean_turnaround <= stats(&wait).mean_turnaround - 85.0,
+        "relocation must beat waiting by >= 85s of mean turnaround: {} vs {}",
+        stats(&relocate).mean_turnaround,
+        stats(&wait).mean_turnaround
+    );
+    // and graceful notice beats both: no lost work, no repair to wait for
+    assert!(
+        drain.makespan < relocate.makespan,
+        "a drained leave outruns a crash: {} vs {}",
+        drain.makespan,
+        relocate.makespan
+    );
+
+    // determinism: the chaos path replays byte-identically
+    let again = simulate(&policy(), &w, &grid, &cluster, relocate_cfg, &mut DetRng::new(99));
+    assert_eq!(relocate, again, "chaos simulation must be byte-identical");
+
+    let line = format!(
+        "\nrelocating recovered {:.0}s of makespan and {:.0}s of mean turnaround over \
+         waiting; graceful drain lost {:.0}s of work vs {:.0}s for the crash",
+        wait.makespan - relocate.makespan,
+        stats(&wait).mean_turnaround - stats(&relocate).mean_turnaround,
+        drain.lost_work_secs,
+        relocate.lost_work_secs
+    );
+    println!("{line}");
+    report.push_str(&line);
+    report.push('\n');
+
+    if let Ok(p) = write_report("chaos_failures.txt", &report) {
+        println!("report written to {}", p.display());
+    }
+}

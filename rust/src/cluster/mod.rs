@@ -47,6 +47,67 @@ impl Node {
     }
 }
 
+/// A capacity-changing chaos event. The simulator cuts execution
+/// segments at these exactly like arrival events and routes each through
+/// the same proposal/threshold re-plan pipeline, so losing capacity is
+/// handled by the identical machinery that absorbs gaining work.
+///
+/// Node indices that are out of range for the cluster are ignored at
+/// application time (chaos handling degrades, it never panics).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClusterEvent {
+    /// The node crashes instantly. In-flight gangs on it lose all work
+    /// since their last checkpoint (re-plan boundary) and must relocate,
+    /// paying the checkpoint/restore cost through the churn model.
+    NodeFail {
+        /// Node index.
+        node: usize,
+    },
+    /// The node (re)joins the cluster at full capacity and rate 1.0.
+    NodeJoin {
+        /// Node index.
+        node: usize,
+    },
+    /// Planned removal (spot reclaim with notice): the node is
+    /// immediately dead for *planning* — no new gang may start there —
+    /// but gangs already running get `grace` seconds to drain before the
+    /// node's capacity actually disappears. No work is lost; anything
+    /// still unfinished at the deadline relocates via re-plan. A
+    /// [`ClusterEvent::NodeJoin`] during the grace window cancels the
+    /// removal.
+    NodeLeave {
+        /// Node index.
+        node: usize,
+        /// Drain window, seconds (clamped non-negative).
+        grace: f64,
+    },
+    /// Straggler onset: the node's effective rate becomes `rate`
+    /// (1.0 = nominal, 0.5 = half speed). Gang durations on the node
+    /// stretch by `1/rate`. Non-positive or non-finite rates are clamped
+    /// to a tiny positive value (the node effectively stalls but the
+    /// simulation stays finite and panic-free).
+    SlowdownStart {
+        /// Node index.
+        node: usize,
+        /// Effective rate multiplier.
+        rate: f64,
+    },
+    /// The straggler recovers: rate back to 1.0.
+    SlowdownEnd {
+        /// Node index.
+        node: usize,
+    },
+}
+
+/// A chaos event stamped with its absolute injection time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimedClusterEvent {
+    /// Absolute simulation time, seconds.
+    pub at: f64,
+    /// The event.
+    pub event: ClusterEvent,
+}
+
 /// A fixed cluster: a list of nodes.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Cluster {
@@ -153,5 +214,19 @@ mod tests {
         assert_eq!(c, d);
         let e = Cluster::heterogeneous_12gpu();
         assert_ne!(c, e);
+    }
+
+    #[test]
+    fn cluster_events_clone_and_compare() {
+        let fail = TimedClusterEvent { at: 600.0, event: ClusterEvent::NodeFail { node: 0 } };
+        let join = TimedClusterEvent { at: 2600.0, event: ClusterEvent::NodeJoin { node: 0 } };
+        assert_eq!(fail, fail.clone());
+        assert_ne!(fail, join);
+        let slow = ClusterEvent::SlowdownStart { node: 1, rate: 0.5 };
+        assert_ne!(slow, ClusterEvent::SlowdownEnd { node: 1 });
+        assert_ne!(
+            ClusterEvent::NodeLeave { node: 2, grace: 120.0 },
+            ClusterEvent::NodeLeave { node: 2, grace: 0.0 }
+        );
     }
 }

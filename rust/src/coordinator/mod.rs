@@ -84,7 +84,11 @@ impl Saturn {
     /// Execute the workload in the simulator (paper: `execute(tasks)` on
     /// the simulated testbed). Introspection per `cfg`. Tasks with
     /// positive [`crate::trainer::Task::arrival`] times are injected at
-    /// their arrival events.
+    /// their arrival events, and [`SimConfig::chaos`] events (crashes,
+    /// elastic joins/leaves, stragglers) cut running segments the same
+    /// way — the result's robustness fields ([`SimResult::failures`],
+    /// [`SimResult::relocations`], [`SimResult::lost_work_secs`],
+    /// [`SimResult::time_to_recover`]) account for what each outage cost.
     pub fn execute_simulated(
         &self,
         workload: &Workload,
@@ -130,6 +134,33 @@ mod tests {
         plan.validate(&saturn.cluster, &w).unwrap();
         let result = saturn.execute_simulated(&w, SimConfig::default(), 1).unwrap();
         assert_eq!(result.completions.len(), w.len());
+    }
+
+    /// The facade executes chaos streams end to end: a crash/repair pair
+    /// runs deterministically, every task completes on the repaired
+    /// capacity, and the robustness accounting reaches the caller.
+    #[test]
+    fn execute_simulated_with_chaos_events() {
+        use crate::cluster::{ClusterEvent, TimedClusterEvent};
+        let mut saturn = Saturn::new(Cluster::single_node_8gpu());
+        saturn.optimizer.timeout = std::time::Duration::from_secs(240);
+        let w = workloads::txt_workload();
+        saturn.profile(&w);
+        let cfg = SimConfig {
+            chaos: vec![
+                TimedClusterEvent { at: 100.0, event: ClusterEvent::NodeFail { node: 0 } },
+                TimedClusterEvent { at: 200.0, event: ClusterEvent::NodeJoin { node: 0 } },
+            ],
+            ..SimConfig::default()
+        };
+        let a = saturn.execute_simulated(&w, cfg.clone(), 5).unwrap();
+        let b = saturn.execute_simulated(&w, cfg, 5).unwrap();
+        assert_eq!(a, b, "chaos execution must be deterministic");
+        assert_eq!(a.completions.len(), w.len());
+        assert_eq!(a.failures, 1);
+        assert_eq!(a.capacity_trace.first(), Some(&(0.0, 8)));
+        assert!(a.capacity_trace.contains(&(100.0, 0)));
+        assert!(a.makespan > 200.0, "the stream can only finish after the repair");
     }
 
     #[test]

@@ -1,0 +1,14 @@
+// Fixture: linted as `rust/src/sim/chaos.rs` (panic-sensitive — the
+// failure-handling path must degrade, never panic). Every line below
+// that aborts on junk input must fire `panic-freedom`.
+
+pub fn apply_event(alive: &mut Vec<bool>, node: Option<usize>, rate: Result<f64, String>) -> f64 {
+    let n = node.unwrap();
+    let slot = alive.get_mut(n).expect("event named a node the cluster does not have");
+    *slot = false;
+    match rate {
+        Ok(r) if r > 0.0 => r,
+        Ok(_) => panic!("non-positive slowdown rate"),
+        Err(_) => unreachable!(),
+    }
+}

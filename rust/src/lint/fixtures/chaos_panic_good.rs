@@ -1,0 +1,15 @@
+// Fixture: linted as `rust/src/sim/chaos.rs` (panic-sensitive). The
+// same event application degrading instead of aborting: out-of-range
+// nodes are ignored, junk rates clamp to a finite stall. Silent.
+
+const STALL_RATE: f64 = 1e-9;
+
+pub fn apply_event(alive: &mut [bool], node: Option<usize>, rate: Result<f64, String>) -> f64 {
+    if let Some(slot) = node.and_then(|n| alive.get_mut(n)) {
+        *slot = false;
+    }
+    match rate {
+        Ok(r) if r.is_finite() && r > 0.0 => r,
+        _ => STALL_RATE,
+    }
+}

@@ -67,7 +67,9 @@ pub struct FileClass {
     pub determinism: bool,
     /// Inside `solver`/`sim`: the ambient-rng rule.
     pub rng_scope: bool,
-    /// Online ingest path (`online`, `coordinator`): panic-freedom rule.
+    /// Online ingest path (`online`, `coordinator`) and the simulator's
+    /// chaos state machine (`sim/chaos.rs` — the failure-handling path
+    /// must degrade, never panic): panic-freedom rule.
     pub panic_sensitive: bool,
     /// `tests/` or `benches/` tree: all rules exempt (waivers still
     /// parsed so malformed ones are reported).
@@ -85,7 +87,9 @@ pub fn classify(path: &str) -> FileClass {
     FileClass {
         determinism,
         rng_scope: p.contains("src/solver/") || p.contains("src/sim/"),
-        panic_sensitive: p.contains("src/online/") || p.contains("src/coordinator/"),
+        panic_sensitive: p.contains("src/online/")
+            || p.contains("src/coordinator/")
+            || p.ends_with("src/sim/chaos.rs"),
         test_only,
     }
 }
@@ -477,7 +481,12 @@ mod tests {
         let c = classify("rust/src/solver/delta.rs");
         assert!(c.determinism && c.rng_scope && !c.panic_sensitive && !c.test_only);
         let c = classify("rust/src/sim/mod.rs");
-        assert!(c.determinism && c.rng_scope);
+        assert!(c.determinism && c.rng_scope && !c.panic_sensitive);
+        let c = classify("rust/src/sim/chaos.rs");
+        assert!(
+            c.determinism && c.rng_scope && c.panic_sensitive,
+            "the chaos state machine carries every contract: deterministic AND panic-free"
+        );
         let c = classify("rust/src/solver/milp.rs");
         assert!(!c.determinism && c.rng_scope, "milp is rng-scoped but not a contract file");
         let c = classify("rust/src/online/mod.rs");
@@ -624,6 +633,16 @@ mod tests {
         assert!(bad.findings.len() >= 5, "{:?}", bad.findings);
         assert!(bad.findings.iter().all(|f| f.rule == RULE_PANIC), "{:?}", bad.findings);
         let good = lint_source("rust/src/online/mod.rs", include_str!("fixtures/panic_good.rs"));
+        assert!(good.findings.is_empty(), "{:?}", good.findings);
+    }
+
+    #[test]
+    fn fixture_chaos_panic() {
+        let bad = lint_source("rust/src/sim/chaos.rs", include_str!("fixtures/chaos_panic_bad.rs"));
+        assert!(bad.findings.len() >= 4, "{:?}", bad.findings);
+        assert!(bad.findings.iter().all(|f| f.rule == RULE_PANIC), "{:?}", bad.findings);
+        let good =
+            lint_source("rust/src/sim/chaos.rs", include_str!("fixtures/chaos_panic_good.rs"));
         assert!(good.findings.is_empty(), "{:?}", good.findings);
     }
 

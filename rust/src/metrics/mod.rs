@@ -152,6 +152,19 @@ pub struct OnlineStats {
     /// In-flight gangs checkpointed-and-moved by accepted re-plans
     /// (copied from [`SimResult::preemptions`]).
     pub preemptions: usize,
+    /// Node crashes applied to live nodes (copied from
+    /// [`SimResult::failures`]).
+    pub failures: usize,
+    /// In-flight gangs moved off failed/slowed/draining nodes by accepted
+    /// chaos re-plans (copied from [`SimResult::relocations`]; a subset of
+    /// [`Self::preemptions`]).
+    pub relocations: usize,
+    /// Executed-but-rolled-back seconds across all crashes (copied from
+    /// [`SimResult::lost_work_secs`]).
+    pub lost_work_secs: f64,
+    /// Worst recovery latency across crash re-plans (copied from
+    /// [`SimResult::time_to_recover`]).
+    pub time_to_recover: f64,
 }
 
 /// Total time at least one task occupies a GPU: the union of the busy
@@ -200,7 +213,16 @@ pub fn online_stats(workload: &Workload, result: &SimResult) -> OnlineStats {
     }
     let finished = turn.len();
     if finished == 0 {
-        return OnlineStats::default();
+        // chaos accounting still reports: a stream that finished nothing
+        // because the cluster died is exactly the case these fields exist
+        // for
+        return OnlineStats {
+            failures: result.failures,
+            relocations: result.relocations,
+            lost_work_secs: result.lost_work_secs,
+            time_to_recover: result.time_to_recover,
+            ..Default::default()
+        };
     }
     let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len() as f64;
     let max = |xs: &[f64]| xs.iter().cloned().fold(0.0f64, f64::max);
@@ -215,6 +237,10 @@ pub fn online_stats(workload: &Workload, result: &SimResult) -> OnlineStats {
         p95_turnaround: quantile(&turn, 0.95),
         throughput_per_hour: if window > 0.0 { finished as f64 * 3600.0 / window } else { 0.0 },
         preemptions: result.preemptions,
+        failures: result.failures,
+        relocations: result.relocations,
+        lost_work_secs: result.lost_work_secs,
+        time_to_recover: result.time_to_recover,
     }
 }
 
@@ -376,6 +402,51 @@ mod tests {
         assert_eq!(s.mean_queue_delay, 0.0);
         assert_eq!(s.p95_queueing_delay, 0.0);
         assert_eq!(s.p95_turnaround, 0.0);
+        assert_eq!((s.failures, s.relocations), (0, 0));
+        assert_eq!((s.lost_work_secs, s.time_to_recover), (0.0, 0.0));
+    }
+
+    /// Hand-computed regression for the chaos robustness fields: they are
+    /// copied verbatim from the simulation result, alongside (not
+    /// replacing) the queueing statistics, and they survive the
+    /// zero-finished early return — a stream that finished nothing
+    /// because the cluster died still reports why.
+    #[test]
+    fn online_stats_carries_chaos_accounting() {
+        use crate::model::ModelDesc;
+        use crate::trainer::{HParams, Optimizer, Task};
+        let w: Workload = (0..2)
+            .map(|i| {
+                Task::new(i, ModelDesc::resnet_200m(), HParams::new(32, 1e-4, 1, Optimizer::Sgd), 320)
+                    .with_arrival(i as f64 * 100.0)
+            })
+            .collect();
+        let chaos = SimResult {
+            makespan: 2570.0,
+            starts: vec![(0, 0.0), (1, 100.0)],
+            completions: vec![(0, 2570.0), (1, 600.0)],
+            preemptions: 2,
+            failures: 1,
+            relocations: 1,
+            lost_work_secs: 500.0,
+            time_to_recover: 500.0,
+            ..Default::default()
+        };
+        let s = online_stats(&w, &chaos);
+        assert_eq!(s.finished, 2);
+        // turnarounds 2570 and 500 still aggregate as before
+        assert!((s.mean_turnaround - 1535.0).abs() < 1e-9);
+        assert_eq!(s.preemptions, 2);
+        assert_eq!(s.failures, 1);
+        assert_eq!(s.relocations, 1);
+        assert_eq!(s.lost_work_secs, 500.0);
+        assert_eq!(s.time_to_recover, 500.0);
+        // nothing finished: queueing stats are empty, chaos fields are not
+        let dead = SimResult { failures: 3, lost_work_secs: 1200.0, ..Default::default() };
+        let s = online_stats(&w, &dead);
+        assert_eq!(s.finished, 0);
+        assert_eq!(s.failures, 3);
+        assert_eq!(s.lost_work_secs, 1200.0);
     }
 
     /// Hand-computed regression for the interpolated-quantile helper and

@@ -19,7 +19,14 @@
 //!   re-deciding only new and not-yet-started tasks instead of solving
 //!   the full MILP from scratch on every arrival (see
 //!   [`JointOptimizer::resolve_incremental`] and `benches/bench_online.rs`
-//!   for the warm-vs-cold latency comparison).
+//!   for the warm-vs-cold latency comparison);
+//! - cluster capacity is a failure-prone, elastic resource:
+//!   [`OnlineCoordinator::inject_event`] queues crashes, joins, drains,
+//!   and stragglers ([`crate::cluster::ClusterEvent`]) that cut running
+//!   segments exactly like arrivals do, and the report's robustness
+//!   fields ([`OnlineStats::failures`], [`OnlineStats::relocations`],
+//!   [`OnlineStats::lost_work_secs`], [`OnlineStats::time_to_recover`])
+//!   account for what each outage cost.
 //!
 //! This module is on the panic-sensitive path (see `LINTS.md`): it
 //! fronts long-running submission streams, so non-test code must stay
@@ -132,6 +139,30 @@ impl OnlineCoordinator {
     /// Submit a batch of tasks; returns their assigned ids.
     pub fn submit_all<I: IntoIterator<Item = Task>>(&mut self, tasks: I) -> Vec<usize> {
         tasks.into_iter().map(|t| self.submit(t)).collect()
+    }
+
+    /// Inject one cluster capacity event (crash, elastic join/leave,
+    /// straggler) into the stream at an absolute time. Events ride the
+    /// same re-plan pipeline as arrivals and introspection rounds; the
+    /// report's [`OnlineStats`] carries the resulting robustness
+    /// accounting (failures, relocations, lost work, recovery latency).
+    /// Trace builders live in [`crate::trainer::workloads`]
+    /// (`poisson_failure_events`, `rack_failure_events`,
+    /// `spot_churn_events`, `straggler_events`). Junk events (non-finite
+    /// times, unknown nodes, non-positive rates) are dropped or clamped
+    /// at ingest, never panicked on.
+    pub fn inject_event(&mut self, event: crate::cluster::TimedClusterEvent) {
+        self.sim.chaos.push(event);
+    }
+
+    /// Inject a batch of cluster capacity events (e.g. a generated
+    /// failure trace). Order does not matter; the simulator applies
+    /// events in time order.
+    pub fn inject_events<I: IntoIterator<Item = crate::cluster::TimedClusterEvent>>(
+        &mut self,
+        events: I,
+    ) {
+        self.sim.chaos.extend(events);
     }
 
     /// Tasks waiting in the pending queue.
@@ -270,6 +301,54 @@ mod tests {
             assert!(*start >= t.arrival - 1e-6, "task {} jumped its arrival", t.id);
         }
         assert_eq!(on.stats.preemptions, on.result.preemptions);
+    }
+
+    /// Chaos events are surfaced through the coordinator: a crash/repair
+    /// pair mid-stream runs deterministically, every task still
+    /// completes, the failure is accounted, and the report's stats mirror
+    /// the simulation's robustness fields. A no-event stream stays
+    /// byte-identical to the pre-chaos coordinator.
+    #[test]
+    fn chaos_events_surfaced_and_deterministic() {
+        use crate::cluster::{ClusterEvent, TimedClusterEvent};
+        let run_with = |fail: bool| {
+            let mut oc = OnlineCoordinator::new(Cluster::single_node_8gpu());
+            oc.optimizer.timeout = std::time::Duration::from_secs(240);
+            assert!(oc.sim.chaos.is_empty(), "chaos must default empty");
+            if fail {
+                oc.inject_event(TimedClusterEvent {
+                    at: 50.0,
+                    event: ClusterEvent::NodeFail { node: 0 },
+                });
+                oc.inject_events(vec![TimedClusterEvent {
+                    at: 400.0,
+                    event: ClusterEvent::NodeJoin { node: 0 },
+                }]);
+            }
+            for i in 0..5 {
+                oc.submit(small_task(i as f64 * 300.0));
+            }
+            oc.run(23)
+        };
+        let calm = run_with(false);
+        assert_eq!(calm.result.failures, 0);
+        assert!(calm.result.capacity_trace.is_empty(), "no chaos ⇒ no capacity trace");
+        let a = run_with(true);
+        let b = run_with(true);
+        assert_eq!(a.result, b.result, "chaos stream must be deterministic");
+        assert_eq!(a.result.completions.len(), 5, "the repaired node finishes the stream");
+        assert_eq!(a.result.failures, 1);
+        assert_eq!(a.result.capacity_trace.first(), Some(&(0.0, 8)));
+        assert!(a.result.capacity_trace.contains(&(50.0, 0)), "the crash empties the cluster");
+        // stats mirror the simulation's robustness accounting
+        assert_eq!(a.stats.failures, a.result.failures);
+        assert_eq!(a.stats.relocations, a.result.relocations);
+        assert_eq!(a.stats.lost_work_secs, a.result.lost_work_secs);
+        assert_eq!(a.stats.time_to_recover, a.result.time_to_recover);
+        for t in &a.workload {
+            let (_, start) = a.result.starts.iter().find(|(id, _)| *id == t.id).unwrap();
+            assert!(*start >= t.arrival - 1e-6, "task {} jumped its arrival", t.id);
+        }
     }
 
     /// The objective knob is surfaced through the coordinator's

@@ -209,12 +209,44 @@ pub fn list_schedule(choices: &[PlacementChoice], cluster: &Cluster) -> Schedule
 /// this to cap gang sizes to the largest node instead of discovering the
 /// loss later as a confusing "task N not scheduled" validate error.
 pub fn list_schedule_with_skips(choices: &[PlacementChoice], cluster: &Cluster) -> (Schedule, Vec<usize>) {
+    let caps: Vec<usize> = cluster.nodes.iter().map(|n| n.gpus).collect();
+    let rates = vec![1.0f64; cluster.nodes.len()];
+    list_schedule_masked(choices, cluster, &caps, &rates)
+}
+
+/// Chaos-aware gang list scheduler: [`list_schedule_with_skips`] with
+/// per-node *effective* GPU capacities and rate multipliers.
+///
+/// `caps[ni]` is the usable GPU count on node `ni` right now (0 = dead —
+/// the node is refused for every gang, forced or not); `rates[ni]` is the
+/// node's effective speed (a gang hosted there takes `duration / rate`
+/// wall seconds — node *selection* still minimizes start time and ignores
+/// rates, so the decision rule is identical for every evaluator layer).
+/// Missing entries default to full capacity / rate 1.0, and non-positive
+/// or non-finite rates are treated as 1.0 — degraded inputs degrade the
+/// schedule, they never panic.
+///
+/// With full capacities and unit rates this is bit-identical to the
+/// historical scheduler: `duration / 1.0` is IEEE-exact.
+pub fn list_schedule_masked(
+    choices: &[PlacementChoice],
+    cluster: &Cluster,
+    caps: &[usize],
+    rates: &[f64],
+) -> (Schedule, Vec<usize>) {
     // per-node free list kept sorted by (free time, GPU index): the gang
     // start on a node is a direct read of entry g-1 and the gang itself is
     // the first g entries, instead of a clone + sort per candidate node
     // per choice (which dominated planning cost on large workloads)
-    let mut free: Vec<Vec<(f64, usize)>> =
-        cluster.nodes.iter().map(|n| (0..n.gpus).map(|i| (0.0f64, i)).collect()).collect();
+    let mut free: Vec<Vec<(f64, usize)>> = cluster
+        .nodes
+        .iter()
+        .enumerate()
+        .map(|(i, n)| {
+            let cap = caps.get(i).copied().unwrap_or(n.gpus).min(n.gpus);
+            (0..cap).map(|i| (0.0f64, i)).collect()
+        })
+        .collect();
     let sort_key = |a: &(f64, usize), b: &(f64, usize)| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1));
     let mut assignments = Vec::with_capacity(choices.len());
     let mut skipped = Vec::new();
@@ -227,7 +259,7 @@ pub fn list_schedule_with_skips(choices: &[PlacementChoice], cluster: &Cluster) 
         // earliest gang start across candidate nodes
         let mut best: Option<(usize, f64)> = None;
         for &ni in &candidate_nodes {
-            if ni >= free.len() || free[ni].len() < g {
+            if ni >= free.len() || free[ni].len() < g || g == 0 {
                 continue;
             }
             let start = free[ni][g - 1].0;
@@ -238,15 +270,18 @@ pub fn list_schedule_with_skips(choices: &[PlacementChoice], cluster: &Cluster) 
         let (ni, start) = match best {
             Some(x) => x,
             None => {
-                skipped.push(c.task_id); // no node large enough
+                skipped.push(c.task_id); // no live node large enough
                 continue;
             }
         };
+        // the host node's rate stretches the gang *after* selection
+        let rate = rates.get(ni).copied().filter(|r| r.is_finite() && *r > 0.0).unwrap_or(1.0);
+        let duration = c.duration / rate;
         // the g earliest-free GPUs (ties broken by index) are the sorted
         // prefix; re-stamp their free time and restore the order (node
         // widths are ≤ 16, one small sort beats anything clever)
         let gang: Vec<usize> = free[ni][..g].iter().map(|&(_, gi)| gi).collect();
-        let end = start + c.duration;
+        let end = start + duration;
         for entry in &mut free[ni][..g] {
             entry.0 = end;
         }
@@ -256,7 +291,7 @@ pub fn list_schedule_with_skips(choices: &[PlacementChoice], cluster: &Cluster) 
             node: ni,
             gpus: gang,
             start,
-            duration: c.duration,
+            duration,
             config: c.config.clone(),
         });
     }
@@ -538,5 +573,59 @@ mod tests {
     #[test]
     fn makespan_empty_is_zero() {
         assert_eq!(Schedule::default().makespan(), 0.0);
+    }
+
+    /// Full capacities + unit rates must be bit-identical to the
+    /// unmasked scheduler — the masked path is the only implementation,
+    /// so this pins the delegation contract.
+    #[test]
+    fn masked_full_caps_unit_rates_is_identity() {
+        let c = Cluster::from_gpu_counts(&[2, 4, 8]);
+        let choices: Vec<_> = (0..10).map(|i| choice(i, 1 + i % 4, 10.0 + i as f64)).collect();
+        let (want, want_skips) = list_schedule_with_skips(&choices, &c);
+        let caps = vec![2, 4, 8];
+        let rates = vec![1.0; 3];
+        let (got, got_skips) = list_schedule_masked(&choices, &c, &caps, &rates);
+        assert_eq!(got, want);
+        assert_eq!(got_skips, want_skips);
+    }
+
+    #[test]
+    fn masked_dead_node_is_refused() {
+        let c = Cluster::from_gpu_counts(&[8, 2]);
+        let caps = vec![0, 2]; // node 0 dead
+        let rates = vec![1.0, 1.0];
+        // unforced: lands on the live node
+        let (s, skipped) = list_schedule_masked(&[choice(0, 2, 100.0)], &c, &caps, &rates);
+        assert!(skipped.is_empty());
+        assert_eq!(s.assignments[0].node, 1);
+        // forced onto the dead node: skipped, never placed
+        let mut ch = choice(1, 2, 100.0);
+        ch.node = Some(0);
+        let (s2, skipped2) = list_schedule_masked(&[ch], &c, &caps, &rates);
+        assert!(s2.assignments.is_empty());
+        assert_eq!(skipped2, vec![1]);
+        // a gang wider than every live node is skipped too
+        let (s3, skipped3) = list_schedule_masked(&[choice(2, 4, 100.0)], &c, &caps, &rates);
+        assert!(s3.assignments.is_empty());
+        assert_eq!(skipped3, vec![2]);
+    }
+
+    #[test]
+    fn masked_rate_stretches_duration_after_selection() {
+        let c = Cluster::from_gpu_counts(&[1, 1]);
+        let caps = vec![1, 1];
+        // node 0 at half speed; selection ignores rates (both free at 0,
+        // min-start tie broken toward node 0) but the duration stretches
+        let rates = vec![0.5, 1.0];
+        let (s, _) = list_schedule_masked(&[choice(0, 1, 100.0)], &c, &caps, &rates);
+        assert_eq!(s.assignments[0].node, 0);
+        assert!((s.assignments[0].duration - 200.0).abs() < 1e-9);
+        // degraded rates (zero, NaN) are treated as 1.0, never panic
+        let bad = vec![0.0, f64::NAN];
+        let (s2, _) = list_schedule_masked(&[choice(0, 1, 100.0), choice(1, 1, 50.0)], &c, &caps, &bad);
+        for a in &s2.assignments {
+            assert!((a.duration - if a.task_id == 0 { 100.0 } else { 50.0 }).abs() < 1e-9);
+        }
     }
 }

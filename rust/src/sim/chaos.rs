@@ -1,0 +1,356 @@
+//! Chaos event stream: the simulator-side state machine for
+//! [`ClusterEvent`] injection.
+//!
+//! The simulator treats capacity changes exactly like arrival events — a
+//! third source of segment boundaries, routed through the same
+//! proposal/threshold re-plan pipeline. This module owns the bookkeeping
+//! between those boundaries:
+//!
+//! - **two aliveness views.** `plan_alive` is what the *planner* may use
+//!   (a node draining under a [`ClusterEvent::NodeLeave`] grace window is
+//!   plan-dead — no new gang may start there — but still executes);
+//!   `exec_alive` is what the *replay* may use (capacity that physically
+//!   exists right now). A crash ([`ClusterEvent::NodeFail`]) drops both at
+//!   once; a planned leave drops `plan_alive` at the event and
+//!   `exec_alive` only when the grace window expires.
+//! - **join cancels leave.** A [`ClusterEvent::NodeJoin`] during the
+//!   grace window restores `plan_alive`, and the pending removal is
+//!   discarded at expiry (the node is plan-alive again, so the drain
+//!   deadline no longer applies).
+//! - **rates.** [`ClusterEvent::SlowdownStart`] sets the node's effective
+//!   rate (non-finite / non-positive inputs clamp to a tiny positive
+//!   stall rate so the simulation stays finite), `SlowdownEnd` restores
+//!   1.0.
+//!
+//! This is the failure-handling path: it must **degrade, never panic**
+//! (out-of-range node indices and junk rates are ignored or clamped), and
+//! it is classified panic-sensitive by `saturn-lint` alongside `online/`
+//! and `coordinator/`. Determinism: ops live in plain `Vec`s sorted by
+//! injection time with a stable tiebreak on submission order — no map
+//! iteration, no ambient randomness, no clocks.
+
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+use crate::cluster::{Cluster, ClusterEvent, TimedClusterEvent};
+
+/// The stall rate junk slowdown inputs clamp to: effectively frozen, but
+/// finite, so durations stay representable and the simulator can still
+/// make (glacial) progress instead of dividing by zero.
+const STALL_RATE: f64 = 1e-9;
+
+/// One desugared chaos operation. [`ClusterEvent::NodeLeave`] expands to
+/// a [`OpKind::PlanDead`] at the event time plus an [`OpKind::ExecGone`]
+/// at the end of the grace window; everything else maps one-to-one.
+#[derive(Debug, Clone)]
+enum OpKind {
+    /// Instant crash: exec and plan capacity vanish together.
+    Fail(usize),
+    /// (Re)join at full capacity, rate 1.0. Cancels a pending leave.
+    Join(usize),
+    /// Planned removal begins: no new gangs, existing ones drain.
+    PlanDead(usize),
+    /// Drain window expired: exec capacity disappears (graceful — no
+    /// work is lost; unfinished tasks relocate via the re-plan). Ignored
+    /// if the node re-joined during the grace window.
+    ExecGone(usize),
+    /// Straggler onset at the given (already clamped) rate.
+    SlowStart(usize, f64),
+    /// Straggler recovered: rate back to 1.0.
+    SlowEnd(usize),
+}
+
+/// A desugared op stamped with its absolute time.
+#[derive(Debug, Clone)]
+struct Op {
+    at: f64,
+    kind: OpKind,
+}
+
+/// What one [`ChaosState::advance`] call did, for the simulator's
+/// recovery accounting.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct ChaosBatch {
+    /// Nodes that crashed while exec-alive (their in-flight gangs roll
+    /// back to the last checkpoint and must relocate).
+    pub(crate) failed: Vec<usize>,
+    /// Number of ops applied (0 = nothing happened at this boundary).
+    pub(crate) applied: usize,
+}
+
+/// Simulator-side chaos state machine (see module docs).
+#[derive(Debug, Clone)]
+pub(crate) struct ChaosState {
+    /// Desugared ops, sorted by (time, submission order).
+    ops: Vec<Op>,
+    /// Index of the first unapplied op.
+    next: usize,
+    /// Planner view: may a new gang be placed on the node?
+    plan_alive: Vec<bool>,
+    /// Replay view: does the node's capacity physically exist?
+    exec_alive: Vec<bool>,
+    /// Per-node effective rate (1.0 = nominal).
+    rate: Vec<f64>,
+}
+
+impl ChaosState {
+    /// Build the state machine for `n_nodes` nodes from the configured
+    /// event stream. Events with a non-finite timestamp or an
+    /// out-of-range node index are dropped here (degrade, don't panic);
+    /// negative timestamps are kept and simply apply before the first
+    /// plan.
+    pub(crate) fn new(events: &[TimedClusterEvent], n_nodes: usize) -> Self {
+        let mut ops: Vec<Op> = Vec::with_capacity(events.len());
+        for ev in events {
+            if !ev.at.is_finite() {
+                continue;
+            }
+            match ev.event {
+                ClusterEvent::NodeFail { node } if node < n_nodes => {
+                    ops.push(Op { at: ev.at, kind: OpKind::Fail(node) });
+                }
+                ClusterEvent::NodeJoin { node } if node < n_nodes => {
+                    ops.push(Op { at: ev.at, kind: OpKind::Join(node) });
+                }
+                ClusterEvent::NodeLeave { node, grace } if node < n_nodes => {
+                    let grace = if grace.is_finite() { grace.max(0.0) } else { 0.0 };
+                    ops.push(Op { at: ev.at, kind: OpKind::PlanDead(node) });
+                    ops.push(Op { at: ev.at + grace, kind: OpKind::ExecGone(node) });
+                }
+                ClusterEvent::SlowdownStart { node, rate } if node < n_nodes => {
+                    let rate =
+                        if rate.is_finite() && rate > 0.0 { rate } else { STALL_RATE };
+                    ops.push(Op { at: ev.at, kind: OpKind::SlowStart(node, rate) });
+                }
+                ClusterEvent::SlowdownEnd { node } if node < n_nodes => {
+                    ops.push(Op { at: ev.at, kind: OpKind::SlowEnd(node) });
+                }
+                _ => {} // out-of-range node: ignored
+            }
+        }
+        // stable: ties keep desugaring/submission order, so a PlanDead
+        // always precedes an ExecGone expiring at the same instant
+        ops.sort_by(|a, b| a.at.total_cmp(&b.at));
+        Self {
+            ops,
+            next: 0,
+            plan_alive: vec![true; n_nodes],
+            exec_alive: vec![true; n_nodes],
+            rate: vec![1.0; n_nodes],
+        }
+    }
+
+    /// True when the stream carries any events at all (the simulator
+    /// keeps its legacy static-capacity arithmetic — bit for bit — when
+    /// it does not).
+    pub(crate) fn enabled(&self) -> bool {
+        !self.ops.is_empty()
+    }
+
+    /// Time of the next unapplied op, if any.
+    pub(crate) fn next_at(&self) -> Option<f64> {
+        self.ops.get(self.next).map(|o| o.at)
+    }
+
+    /// Apply every op with `at <= now`. Returns what happened so the
+    /// simulator can roll back lost work and count recoveries.
+    pub(crate) fn advance(&mut self, now: f64) -> ChaosBatch {
+        let mut batch = ChaosBatch::default();
+        while let Some(op) = self.ops.get(self.next) {
+            if op.at > now {
+                break;
+            }
+            match op.kind {
+                OpKind::Fail(n) => {
+                    if self.exec_alive[n] {
+                        batch.failed.push(n);
+                    }
+                    self.exec_alive[n] = false;
+                    self.plan_alive[n] = false;
+                }
+                OpKind::Join(n) => {
+                    self.plan_alive[n] = true;
+                    self.exec_alive[n] = true;
+                    self.rate[n] = 1.0;
+                }
+                OpKind::PlanDead(n) => {
+                    self.plan_alive[n] = false;
+                }
+                OpKind::ExecGone(n) => {
+                    // a join during the grace window cancels the removal
+                    if !self.plan_alive[n] {
+                        self.exec_alive[n] = false;
+                    }
+                }
+                OpKind::SlowStart(n, r) => {
+                    self.rate[n] = r;
+                }
+                OpKind::SlowEnd(n) => {
+                    self.rate[n] = 1.0;
+                }
+            }
+            batch.applied += 1;
+            self.next += 1;
+        }
+        batch
+    }
+
+    /// The planner's per-node availability mask.
+    pub(crate) fn plan_alive(&self) -> &[bool] {
+        &self.plan_alive
+    }
+
+    /// Per-node effective rates.
+    pub(crate) fn rates(&self) -> &[f64] {
+        &self.rate
+    }
+
+    /// Replay capacity view: full GPU count on exec-alive nodes, zero on
+    /// crashed/left ones (a draining node still executes).
+    pub(crate) fn exec_caps(&self, cluster: &Cluster) -> Vec<usize> {
+        cluster
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, n)| if self.exec_alive.get(i).copied().unwrap_or(true) { n.gpus } else { 0 })
+            .collect()
+    }
+
+    /// Total exec-alive GPU count (the time-varying utilization
+    /// denominator).
+    pub(crate) fn total_exec_gpus(&self, cluster: &Cluster) -> usize {
+        self.exec_caps(cluster).iter().sum()
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    fn ev(at: f64, event: ClusterEvent) -> TimedClusterEvent {
+        TimedClusterEvent { at, event }
+    }
+
+    #[test]
+    fn fail_and_join_roundtrip() {
+        let c = Cluster::from_gpu_counts(&[8, 2]);
+        let mut ch = ChaosState::new(
+            &[
+                ev(600.0, ClusterEvent::NodeFail { node: 0 }),
+                ev(2600.0, ClusterEvent::NodeJoin { node: 0 }),
+            ],
+            2,
+        );
+        assert!(ch.enabled());
+        assert_eq!(ch.next_at(), Some(600.0));
+        assert!(ch.advance(599.0).failed.is_empty());
+        let b = ch.advance(600.0);
+        assert_eq!(b.failed, vec![0]);
+        assert_eq!(b.applied, 1);
+        assert_eq!(ch.plan_alive(), &[false, true]);
+        assert_eq!(ch.exec_caps(&c), vec![0, 2]);
+        assert_eq!(ch.total_exec_gpus(&c), 2);
+        assert_eq!(ch.next_at(), Some(2600.0));
+        let b2 = ch.advance(3000.0);
+        assert!(b2.failed.is_empty(), "a join is not a failure");
+        assert_eq!(ch.exec_caps(&c), vec![8, 2]);
+        assert_eq!(ch.next_at(), None);
+    }
+
+    #[test]
+    fn double_fail_counts_once() {
+        let mut ch = ChaosState::new(
+            &[
+                ev(10.0, ClusterEvent::NodeFail { node: 1 }),
+                ev(20.0, ClusterEvent::NodeFail { node: 1 }),
+            ],
+            2,
+        );
+        assert_eq!(ch.advance(10.0).failed, vec![1]);
+        assert!(ch.advance(20.0).failed.is_empty(), "already-dead node cannot re-fail");
+    }
+
+    #[test]
+    fn leave_drains_then_removes() {
+        let c = Cluster::from_gpu_counts(&[4, 4]);
+        let mut ch =
+            ChaosState::new(&[ev(100.0, ClusterEvent::NodeLeave { node: 0, grace: 50.0 })], 2);
+        let b = ch.advance(100.0);
+        assert_eq!(b.applied, 1);
+        assert!(b.failed.is_empty(), "a planned leave loses no work");
+        // draining: plan-dead but still executing
+        assert_eq!(ch.plan_alive(), &[false, true]);
+        assert_eq!(ch.exec_caps(&c), vec![4, 4]);
+        assert_eq!(ch.next_at(), Some(150.0));
+        ch.advance(150.0);
+        assert_eq!(ch.exec_caps(&c), vec![0, 4]);
+    }
+
+    #[test]
+    fn join_during_grace_cancels_leave() {
+        let c = Cluster::from_gpu_counts(&[4]);
+        let mut ch = ChaosState::new(
+            &[
+                ev(100.0, ClusterEvent::NodeLeave { node: 0, grace: 200.0 }),
+                ev(150.0, ClusterEvent::NodeJoin { node: 0 }),
+            ],
+            1,
+        );
+        ch.advance(150.0);
+        assert_eq!(ch.plan_alive(), &[true]);
+        ch.advance(300.0); // the ExecGone at 300 must be a no-op
+        assert_eq!(ch.exec_caps(&c), vec![4]);
+    }
+
+    #[test]
+    fn slowdown_clamps_and_recovers() {
+        let mut ch = ChaosState::new(
+            &[
+                ev(0.0, ClusterEvent::SlowdownStart { node: 0, rate: 0.5 }),
+                ev(5.0, ClusterEvent::SlowdownStart { node: 1, rate: -3.0 }),
+                ev(10.0, ClusterEvent::SlowdownEnd { node: 0 }),
+            ],
+            2,
+        );
+        ch.advance(5.0);
+        assert_eq!(ch.rates()[0], 0.5);
+        assert_eq!(ch.rates()[1], STALL_RATE, "junk rate clamps to the stall rate");
+        ch.advance(10.0);
+        assert_eq!(ch.rates()[0], 1.0);
+    }
+
+    #[test]
+    fn junk_events_are_dropped_not_panicked() {
+        let ch = ChaosState::new(
+            &[
+                ev(f64::NAN, ClusterEvent::NodeFail { node: 0 }),
+                ev(10.0, ClusterEvent::NodeFail { node: 99 }),
+                ev(f64::INFINITY, ClusterEvent::NodeJoin { node: 0 }),
+            ],
+            2,
+        );
+        assert!(!ch.enabled(), "all junk events must be filtered");
+    }
+
+    #[test]
+    fn same_instant_ops_apply_in_submission_order() {
+        // leave with zero grace: PlanDead then ExecGone at the same t —
+        // the stable sort keeps the desugaring order, so the node is
+        // fully gone in one advance
+        let c = Cluster::from_gpu_counts(&[2, 2]);
+        let mut ch =
+            ChaosState::new(&[ev(7.0, ClusterEvent::NodeLeave { node: 1, grace: 0.0 })], 2);
+        let b = ch.advance(7.0);
+        assert_eq!(b.applied, 2);
+        assert_eq!(ch.exec_caps(&c), vec![2, 0]);
+        assert!(b.failed.is_empty());
+    }
+
+    #[test]
+    fn negative_timestamps_apply_before_start() {
+        let c = Cluster::from_gpu_counts(&[2, 2]);
+        let mut ch = ChaosState::new(&[ev(-5.0, ClusterEvent::NodeFail { node: 0 })], 2);
+        assert_eq!(ch.advance(0.0).failed, vec![0]);
+        assert_eq!(ch.exec_caps(&c), vec![0, 2]);
+    }
+}

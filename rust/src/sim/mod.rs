@@ -16,11 +16,21 @@
 //!   relaunches across boundaries; we replay each segment with the gang
 //!   list scheduler and carry per-task progress across boundaries;
 //! - **utilization tracing** — busy spans per task for Fig 7(B)-style
-//!   utilization-over-time plots.
+//!   utilization-over-time plots;
+//! - **chaos events** — node failures, elastic joins/leaves, and
+//!   stragglers ([`crate::cluster::ClusterEvent`]) cut segments exactly
+//!   like arrivals and route through the same proposal/threshold re-plan
+//!   pipeline: a crash rolls its in-flight gangs back to the last
+//!   segment-boundary checkpoint (the lost progress is accounted in
+//!   [`SimResult::lost_work_secs`]) and the survivors relocate, paying
+//!   the same checkpoint/relaunch cost as any other switch.
 
-use crate::cluster::Cluster;
+mod chaos;
+
+use crate::cluster::{Cluster, TimedClusterEvent};
 use crate::profiler::ProfileGrid;
-use crate::sched::{list_schedule, PlacementChoice, Schedule};
+use crate::sched::{list_schedule_masked, PlacementChoice, Schedule};
+use crate::sim::chaos::ChaosState;
 use crate::solver::objective::Objective;
 use crate::solver::policy::{PlanCtx, Policy};
 use crate::trainer::Workload;
@@ -80,6 +90,19 @@ pub struct SimConfig {
     /// deviations are priced — so flow objectives may delay a running
     /// gang's resumption for free; see the ROADMAP's pause-churn item.
     pub objective: Objective,
+    /// Cluster capacity events injected at absolute times: failures,
+    /// elastic joins/leaves, stragglers. Each event cuts the running
+    /// segment (exactly like an arrival) and triggers a re-plan through
+    /// the standard proposal/threshold pipeline, with one chaos-only
+    /// relaxation: a proposal that places strictly more tasks on the
+    /// surviving capacity than the kept plan is adopted regardless of the
+    /// score threshold (capacity loss can strand pinned gangs on dead
+    /// nodes; waiting forever is never the right answer). Empty (the
+    /// default) keeps every code path — planning, replay, utilization
+    /// arithmetic — bit-identical to the pre-chaos simulator. Events with
+    /// junk payloads (non-finite times, out-of-range nodes, non-positive
+    /// rates) are dropped or clamped, never panicked on.
+    pub chaos: Vec<TimedClusterEvent>,
 }
 
 impl Default for SimConfig {
@@ -91,6 +114,7 @@ impl Default for SimConfig {
             start_latency: 0.0,
             preempt: false,
             objective: Objective::Makespan,
+            chaos: Vec::new(),
         }
     }
 }
@@ -135,16 +159,77 @@ pub struct SimResult {
     /// [`Self::switches`]; always 0 while [`SimConfig::preempt`] is off
     /// and the planner honors its pins.
     pub preemptions: usize,
+    /// Node crashes applied to live nodes ([`crate::cluster::ClusterEvent::NodeFail`]
+    /// on a node that still had capacity; re-failing a dead node counts
+    /// nothing).
+    pub failures: usize,
+    /// In-flight gangs moved by an accepted *chaos* re-plan — survivors
+    /// checkpointed off a failed/slowed/draining node. A subset of
+    /// [`Self::preemptions`].
+    pub relocations: usize,
+    /// Total executed-but-rolled-back seconds: progress made since the
+    /// last segment-boundary checkpoint by gangs that were running on a
+    /// node when it crashed.
+    pub lost_work_secs: f64,
+    /// Worst recovery latency across crash re-plans: the latest relative
+    /// start in the schedule adopted at a failure boundary (how long the
+    /// most-delayed surviving task waited for capacity after the crash).
+    pub time_to_recover: f64,
+    /// Cluster capacity changepoints `(time, total live GPUs)`, recorded
+    /// only when [`SimConfig::chaos`] carries events (empty keeps the
+    /// utilization arithmetic bit-identical to the static-capacity
+    /// formulas). Opens with the capacity at t = 0; each entry holds
+    /// until the next.
+    pub capacity_trace: Vec<(f64, usize)>,
 }
 
 impl SimResult {
-    /// Average GPU utilization over `[0, makespan]`.
+    /// GPU-seconds of capacity that existed over `[lo, hi]`: the
+    /// time-varying denominator for utilization. With an empty
+    /// [`Self::capacity_trace`] (no chaos events) this is exactly
+    /// `total_gpus × (hi − lo)`, the historical static-capacity product.
+    fn capacity_gpu_secs(&self, cluster: &Cluster, lo: f64, hi: f64) -> f64 {
+        if hi <= lo {
+            return 0.0;
+        }
+        if self.capacity_trace.is_empty() {
+            return cluster.total_gpus() as f64 * (hi - lo);
+        }
+        let mut total = 0.0;
+        for (i, &(t, cap)) in self.capacity_trace.iter().enumerate() {
+            let seg_lo = t.max(lo);
+            let seg_hi = self.capacity_trace.get(i + 1).map_or(hi, |&(t2, _)| t2).min(hi);
+            if seg_hi > seg_lo {
+                total += cap as f64 * (seg_hi - seg_lo);
+            }
+        }
+        // the trace opens at t = 0; cover [lo, first changepoint) anyway
+        // in case a caller asks about a window before it
+        let (first_t, first_cap) = self.capacity_trace[0];
+        if first_t > lo {
+            total += first_cap as f64 * ((first_t.min(hi) - lo).max(0.0));
+        }
+        total
+    }
+
+    /// Average GPU utilization over `[0, makespan]` — busy GPU-seconds
+    /// over *available* GPU-seconds. With chaos events the denominator
+    /// integrates the recorded [`Self::capacity_trace`] (a 30-GPU-hour
+    /// outage no longer counts as schedulable capacity the planner
+    /// "wasted"); without, it is the historical `makespan × total_gpus`.
     pub fn avg_utilization(&self, cluster: &Cluster) -> f64 {
         if self.makespan <= 0.0 {
             return 0.0;
         }
         let busy: f64 = self.spans.iter().map(|s| (s.end - s.start) * s.gpus as f64).sum();
-        busy / (self.makespan * cluster.total_gpus() as f64)
+        if self.capacity_trace.is_empty() {
+            return busy / (self.makespan * cluster.total_gpus() as f64);
+        }
+        let cap = self.capacity_gpu_secs(cluster, 0.0, self.makespan);
+        if cap <= 0.0 {
+            return 0.0;
+        }
+        busy / cap
     }
 
     /// Utilization sampled every `period` seconds (Fig 7(B): 100 s).
@@ -167,7 +252,20 @@ impl SimResult {
                 .iter()
                 .map(|s| (s.end.min(hi) - s.start.max(t)).max(0.0) * s.gpus as f64)
                 .sum();
-            out.push((t, busy / ((hi - t).max(1e-12) * total)));
+            let u = if self.capacity_trace.is_empty() {
+                // static capacity: the exact historical arithmetic
+                busy / ((hi - t).max(1e-12) * total)
+            } else {
+                // time-varying capacity: windows that fall entirely
+                // inside an outage have no capacity and report 0
+                let cap = self.capacity_gpu_secs(cluster, t, hi);
+                if cap > 0.0 {
+                    busy / cap
+                } else {
+                    0.0
+                }
+            };
+            out.push((t, u));
             t += period;
         }
         out
@@ -265,6 +363,25 @@ pub fn simulate_with_controller(
     for i in 0..n {
         ctx.available[i] = workload[i].arrival <= now + 1e-9;
     }
+    // chaos: capacity events desugared into a sorted op stream. Events at
+    // or before the start (including negative timestamps) apply before
+    // the initial plan — the planner never sees capacity that is already
+    // gone.
+    let mut chaos = ChaosState::new(&cfg.chaos, cluster.nodes.len());
+    let pre = chaos.advance(now);
+    result.failures += pre.failed.len();
+    if chaos.enabled() {
+        result.capacity_trace.push((0.0, chaos.total_exec_gpus(cluster)));
+    }
+    // replay-side capacity/rate views (full caps + unit rates without
+    // chaos, which keeps the masked scheduler bit-identical to the
+    // historical one), refreshed after every applied chaos batch
+    let mut exec_caps: Vec<usize> = chaos.exec_caps(cluster);
+    let mut exec_rates: Vec<f64> = chaos.rates().to_vec();
+    // per-task checkpoint: `remaining` at the last segment boundary —
+    // what a gang rolls back to when its node crashes mid-segment
+    let mut ckpt: Vec<f64> = states.iter().map(|s| s.remaining).collect();
+    refresh_chaos_ctx(&mut ctx, &chaos, &cfg);
     let mut plan: Vec<PlacementChoice> = Vec::new();
     if !ctx.active().is_empty() {
         let first = policy.plan(&ctx, rng);
@@ -279,36 +396,74 @@ pub fn simulate_with_controller(
 
     loop {
         // replay the current plan over the remaining work, with actual
-        // (noised) durations and pending relaunch penalties
-        let trace = replay_into(&plan, &states, workload, cluster, &id2idx, &mut scratch.replay_choices);
+        // (noised) durations and pending relaunch penalties, on the
+        // capacity that physically exists right now
+        let trace = replay_into(
+            &plan, &states, workload, cluster, &exec_caps, &exec_rates, &id2idx,
+            &mut scratch.replay_choices,
+        );
         let seg_makespan = trace.makespan();
         // the next event cutting this segment short: an introspection
-        // boundary or the next pending arrival, whichever is sooner
+        // boundary, the next pending arrival, or the next chaos event,
+        // whichever is sooner
         let next_arrival = (0..n)
             .filter(|&i| !ctx.available[i])
             .map(|i| workload[i].arrival)
             .fold(f64::INFINITY, f64::min);
         let intro_h = next_intro.map_or(f64::INFINITY, |t| (t - now).max(0.0));
         let arr_h = if next_arrival.is_finite() { (next_arrival - now).max(0.0) } else { f64::INFINITY };
-        let horizon = intro_h.min(arr_h);
+        let chaos_h = chaos.next_at().map_or(f64::INFINITY, |t| (t - now).max(0.0));
+        let horizon = intro_h.min(arr_h).min(chaos_h);
 
         if seg_makespan <= horizon {
-            // everything currently planned finishes before the next event
+            // everything currently *placeable* finishes before the next
+            // event
             commit_segment(&trace, f64::INFINITY, now, &mut states, &mut started, &id2idx, &mut result);
-            if !next_arrival.is_finite() {
+            for (i, st) in states.iter().enumerate() {
+                ckpt[i] = st.remaining;
+            }
+            let work_left = states.iter().any(|s| s.remaining > 1e-12);
+            if !next_arrival.is_finite() && !work_left {
+                // done; trailing chaos events change nothing
                 result.makespan = now + seg_makespan;
                 break;
             }
-            // idle (or run out the tail) until the next submission, then
-            // take the arrival path below
-            now = next_arrival.max(now + seg_makespan);
+            // idle (or run out the tail) until the next event — a
+            // submission, or a chaos event that may return the capacity
+            // stranded work is waiting for
+            let t_next = next_arrival.min(chaos.next_at().unwrap_or(f64::INFINITY));
+            if !t_next.is_finite() {
+                // work remains but capacity never comes back: record
+                // what actually ran and stop
+                result.makespan = now + seg_makespan;
+                break;
+            }
+            now = t_next.max(now + seg_makespan);
             // there is nothing left to introspect over the idle gap:
-            // restart the interval clock from the arrival
+            // restart the interval clock from the event
             next_intro = cfg.introspect.map(|ic| now + ic.interval);
             plan.retain(|c| states[id2idx[&c.task_id]].remaining > 1e-12);
+            let batch = chaos.advance(now);
+            if batch.applied > 0 {
+                // nothing was mid-segment (the whole tail was committed
+                // above), so a crash here rolls back no work — but the
+                // capacity changed, and stranded tasks may now fit
+                result.failures += batch.failed.len();
+                exec_caps = chaos.exec_caps(cluster);
+                exec_rates.clear();
+                exec_rates.extend_from_slice(chaos.rates());
+                result.capacity_trace.push((now, chaos.total_exec_gpus(cluster)));
+                refresh_chaos_ctx(&mut ctx, &chaos, &cfg);
+                chaos_replan(
+                    policy, workload, cluster, &cfg, rng, &mut ctx, &mut states, &mut plan,
+                    &started, now, &mut result, &id2idx, &mut scratch, &exec_caps, &exec_rates,
+                    !batch.failed.is_empty(),
+                );
+            }
+            refresh_chaos_ctx(&mut ctx, &chaos, &cfg);
             arrival_replan(
                 policy, workload, cluster, &cfg, rng, &mut ctx, &mut states, &mut plan, &started, now,
-                &mut result, &id2idx, &mut scratch,
+                &mut result, &id2idx, &mut scratch, &exec_caps, &exec_rates,
             );
             continue;
         }
@@ -317,15 +472,56 @@ pub fn simulate_with_controller(
         commit_segment(&trace, horizon, now, &mut states, &mut started, &id2idx, &mut result);
         now += horizon;
 
+        if chaos_h <= intro_h.min(arr_h) {
+            // chaos event: capacity changed under the running segment.
+            // Ties resolve chaos-first — an arrival or overdue
+            // introspection round fires on the very next iteration (with
+            // a zero-length segment) and sees the new capacity.
+            let batch = chaos.advance(now);
+            result.failures += batch.failed.len();
+            if !batch.failed.is_empty() {
+                // crash: gangs running on the failed nodes lose all
+                // progress since the last segment-boundary checkpoint
+                for a in &trace.assignments {
+                    if a.start < horizon && a.end() > horizon && batch.failed.contains(&a.node) {
+                        let idx = id2idx[&a.task_id];
+                        let full_est = workload[idx].total_runtime(a.config.minibatch_secs);
+                        let lost =
+                            (ckpt[idx] - states[idx].remaining).max(0.0) * full_est * states[idx].noise;
+                        result.lost_work_secs += lost;
+                        states[idx].remaining = ckpt[idx];
+                    }
+                }
+            }
+            for (i, st) in states.iter().enumerate() {
+                ckpt[i] = st.remaining;
+            }
+            exec_caps = chaos.exec_caps(cluster);
+            exec_rates.clear();
+            exec_rates.extend_from_slice(chaos.rates());
+            result.capacity_trace.push((now, chaos.total_exec_gpus(cluster)));
+            refresh_chaos_ctx(&mut ctx, &chaos, &cfg);
+            chaos_replan(
+                policy, workload, cluster, &cfg, rng, &mut ctx, &mut states, &mut plan, &started,
+                now, &mut result, &id2idx, &mut scratch, &exec_caps, &exec_rates,
+                !batch.failed.is_empty(),
+            );
+            continue;
+        }
+
+        for (i, st) in states.iter().enumerate() {
+            ckpt[i] = st.remaining;
+        }
         if arr_h <= intro_h {
             // arrival event: inject the newly submitted tasks and re-plan
             // through the same proposal/threshold path as introspection.
             // The introspection clock keeps running — on a tie the
             // overdue round fires on the very next loop iteration (with a
             // zero-length segment), now seeing the injected tasks.
+            refresh_chaos_ctx(&mut ctx, &chaos, &cfg);
             arrival_replan(
                 policy, workload, cluster, &cfg, rng, &mut ctx, &mut states, &mut plan, &started, now,
-                &mut result, &id2idx, &mut scratch,
+                &mut result, &id2idx, &mut scratch, &exec_caps, &exec_rates,
             );
             continue;
         }
@@ -345,6 +541,7 @@ pub fn simulate_with_controller(
         ctx.remaining = states.iter().map(|s| s.remaining).collect();
         ctx.now = now;
         refresh_prior(&mut ctx, &plan, &started);
+        refresh_chaos_ctx(&mut ctx, &chaos, &cfg);
         if ctx.active().is_empty() {
             if !has_pending(&ctx, workload) {
                 result.makespan = now;
@@ -361,8 +558,10 @@ pub fn simulate_with_controller(
         let keep_ms = if cfg.objective.is_makespan() {
             seg_makespan - horizon
         } else {
-            let keep_sched =
-                replay_into(&plan, &states, workload, cluster, &id2idx, &mut scratch.replay_choices);
+            let keep_sched = replay_into(
+                &plan, &states, workload, cluster, &exec_caps, &exec_rates, &id2idx,
+                &mut scratch.replay_choices,
+            );
             score_remaining(&cfg.objective, &keep_sched, now, workload, &id2idx)
         };
         // proposed remaining score (planner estimates + switch costs)
@@ -381,6 +580,8 @@ pub fn simulate_with_controller(
             &scratch.switch_states,
             workload,
             cluster,
+            &exec_caps,
+            &exec_rates,
             &id2idx,
             &mut scratch.replay_choices,
         );
@@ -438,6 +639,122 @@ fn refresh_prior(ctx: &mut PlanCtx, plan: &[PlacementChoice], started: &[bool]) 
     }
 }
 
+/// Refresh the planning context's chaos view: the planner's per-node
+/// availability mask (`plan_alive` — a draining node is plan-dead while
+/// it still executes), effective rates, and the checkpoint/restore price
+/// of relocating a gang pinned to a dead node. Without chaos events this
+/// writes the all-alive / unit-rate / inert defaults the context was born
+/// with — planner behavior is unchanged bit for bit.
+fn refresh_chaos_ctx(ctx: &mut PlanCtx, chaos: &ChaosState, cfg: &SimConfig) {
+    ctx.node_alive.clear();
+    ctx.node_alive.extend_from_slice(chaos.plan_alive());
+    ctx.node_rate.clear();
+    ctx.node_rate.extend_from_slice(chaos.rates());
+    ctx.relocate_cost = cfg.switch_cost;
+}
+
+/// Chaos event: capacity changed (crash, join, drain, straggler) —
+/// re-plan the remaining workload through the same proposal/threshold
+/// pipeline as introspection and arrivals, with two chaos-only twists:
+///
+/// - a proposal that places strictly **more tasks** on the surviving
+///   capacity than the kept plan is adopted regardless of the score
+///   threshold (a crash can strand pinned gangs on a dead node; the kept
+///   plan would wait forever, which can *score* better than relocating
+///   because the stranded task drops out of its replay entirely);
+/// - on a crash, the adopted schedule's latest relative start is recorded
+///   as the recovery latency ([`SimResult::time_to_recover`]).
+///
+/// Rejection keeps the incumbent order untouched (finished entries drop
+/// out); stranded entries stay in the plan and recover when a later join
+/// re-plans them onto restored capacity.
+#[allow(clippy::too_many_arguments)]
+fn chaos_replan(
+    policy: &dyn Policy,
+    workload: &Workload,
+    cluster: &Cluster,
+    cfg: &SimConfig,
+    rng: &mut DetRng,
+    ctx: &mut PlanCtx,
+    states: &mut Vec<TaskState>,
+    plan: &mut Vec<PlacementChoice>,
+    started: &[bool],
+    now: f64,
+    result: &mut SimResult,
+    id2idx: &HashMap<usize, usize>,
+    scratch: &mut ReplanScratch,
+    caps: &[usize],
+    rates: &[f64],
+    fail_event: bool,
+) {
+    ctx.remaining = states.iter().map(|s| s.remaining).collect();
+    ctx.now = now;
+    refresh_prior(ctx, plan, started);
+    if ctx.active().is_empty() {
+        plan.retain(|c| states[id2idx[&c.task_id]].remaining > 1e-12);
+        return;
+    }
+    let proposal = policy.plan(ctx, rng);
+    ordered_choices_into(&proposal, &mut scratch.order, &mut scratch.proposal);
+    // keep-alternative: the incumbent plan minus finished tasks
+    scratch.keep.clear();
+    scratch
+        .keep
+        .extend(plan.iter().filter(|c| states[id2idx[&c.task_id]].remaining > 1e-12).cloned());
+    scratch.switch_states.clear();
+    scratch.switch_states.extend_from_slice(states);
+    let (switched, preempted) = mark_switches(
+        &scratch.keep,
+        &scratch.proposal,
+        &mut scratch.switch_states,
+        started,
+        cfg.switch_cost,
+        id2idx,
+    );
+    let prop_sched = replay_into(
+        &scratch.proposal,
+        &scratch.switch_states,
+        workload,
+        cluster,
+        caps,
+        rates,
+        id2idx,
+        &mut scratch.replay_choices,
+    );
+    let prop_ms = score_remaining(&cfg.objective, &prop_sched, now, workload, id2idx);
+    let keep_sched =
+        replay_into(
+            &scratch.keep,
+            states,
+            workload,
+            cluster,
+            caps,
+            rates,
+            id2idx,
+            &mut scratch.replay_choices,
+        );
+    let keep_ms = score_remaining(&cfg.objective, &keep_sched, now, workload, id2idx);
+    let threshold = cfg.introspect.map_or(0.0, |ic| ic.threshold);
+    let accept = prop_ms <= keep_ms - threshold
+        || prop_sched.assignments.len() > keep_sched.assignments.len()
+        || scratch.keep.is_empty();
+    let adopted = if accept {
+        std::mem::swap(plan, &mut scratch.proposal);
+        std::mem::swap(states, &mut scratch.switch_states);
+        result.switches += switched;
+        result.preemptions += preempted;
+        result.relocations += preempted;
+        &prop_sched
+    } else {
+        plan.retain(|c| states[id2idx[&c.task_id]].remaining > 1e-12);
+        &keep_sched
+    };
+    if fail_event {
+        let ttr = adopted.assignments.iter().map(|a| a.start).fold(0.0, f64::max);
+        result.time_to_recover = result.time_to_recover.max(ttr);
+    }
+}
+
 /// Arrival event: mark newly submitted tasks available and re-plan. The
 /// proposal is compared against keeping the incumbent plan with the new
 /// tasks appended (at their most GPU-efficient configuration); the switch
@@ -459,6 +776,8 @@ fn arrival_replan(
     result: &mut SimResult,
     id2idx: &HashMap<usize, usize>,
     scratch: &mut ReplanScratch,
+    caps: &[usize],
+    rates: &[f64],
 ) {
     let n = workload.len();
     let mut newly: Vec<usize> = Vec::new();
@@ -503,6 +822,8 @@ fn arrival_replan(
         &scratch.switch_states,
         workload,
         cluster,
+        caps,
+        rates,
         id2idx,
         &mut scratch.replay_choices,
     );
@@ -522,7 +843,16 @@ fn arrival_replan(
         }
     }
     let keep_sched =
-        replay_into(&scratch.keep, states, workload, cluster, id2idx, &mut scratch.replay_choices);
+        replay_into(
+            &scratch.keep,
+            states,
+            workload,
+            cluster,
+            caps,
+            rates,
+            id2idx,
+            &mut scratch.replay_choices,
+        );
     let keep_ms = score_remaining(&cfg.objective, &keep_sched, now, workload, id2idx);
     let threshold = cfg.introspect.map_or(0.0, |ic| ic.threshold);
     let accept = prop_ms <= keep_ms - threshold
@@ -565,12 +895,18 @@ fn ordered_choices_into(plan: &Schedule, order: &mut Vec<usize>, out: &mut Vec<P
 }
 
 /// Re-schedule the plan's order with *actual* remaining durations,
-/// building the choice list in `buf` (reused across calls).
+/// building the choice list in `buf` (reused across calls). `caps` and
+/// `rates` are the replay-side capacity view — zero GPUs on crashed/left
+/// nodes, stretched durations on slowed ones; full caps + unit rates
+/// (the no-chaos case) reproduce the historical scheduler bit for bit.
+#[allow(clippy::too_many_arguments)]
 fn replay_into(
     plan: &[PlacementChoice],
     states: &[TaskState],
     workload: &Workload,
     cluster: &Cluster,
+    caps: &[usize],
+    rates: &[f64],
     id2idx: &HashMap<usize, usize>,
     buf: &mut Vec<PlacementChoice>,
 ) -> Schedule {
@@ -593,7 +929,7 @@ fn replay_into(
             node: c.node,
         });
     }
-    list_schedule(buf, cluster)
+    list_schedule_masked(buf, cluster, caps, rates).0
 }
 
 /// Apply the executed portion of `trace` (relative times, cut at
@@ -693,6 +1029,7 @@ fn mark_switches(
 mod tests {
     use super::*;
     use crate::baselines::{MaxHeuristic, OptimusGreedy};
+    use crate::sched::list_schedule;
     use crate::costmodel::CostModel;
     use crate::parallelism::UppRegistry;
     use crate::profiler::TrialRunner;
@@ -937,10 +1274,13 @@ mod tests {
             .collect();
         let want = list_schedule(&choices, &c);
         let mut buf = Vec::new();
-        let got = replay_into(&plan, &states, &w, &c, &id2idx, &mut buf);
+        // full caps + unit rates: the no-chaos replay view
+        let caps: Vec<usize> = c.nodes.iter().map(|n| n.gpus).collect();
+        let rates = vec![1.0f64; c.nodes.len()];
+        let got = replay_into(&plan, &states, &w, &c, &caps, &rates, &id2idx, &mut buf);
         assert_eq!(got, want, "scratch replay diverged from reference");
         // second call on the now-dirty buffer must be byte-identical too
-        let again = replay_into(&plan, &states, &w, &c, &id2idx, &mut buf);
+        let again = replay_into(&plan, &states, &w, &c, &caps, &rates, &id2idx, &mut buf);
         assert_eq!(again, want, "dirty-buffer replay diverged");
     }
 
@@ -1172,6 +1512,246 @@ mod tests {
             old_buggy
         );
         assert!(s.throughput_per_hour > 0.0);
+    }
+
+    /// Chaos tentpole acceptance, on the shared blocked-failure instance
+    /// ([`workloads::blocked_failure_instance`]): node 0 crashes at
+    /// t = 600 s under an 8-GPU gang. The gang loses the 500 s it ran
+    /// since the t = 100 checkpoint, rolls back, and the re-planner
+    /// relocates it to node 1 at 2 GPUs behind the two queued shorts
+    /// (mean-turnaround order) — every number below is hand-computed and
+    /// cross-validated by the Python transliteration in
+    /// `scripts/validate_chaos_fixture.py`.
+    #[test]
+    fn chaos_failure_relocates_and_recovers() {
+        use crate::metrics::online_stats;
+        let (w, grid, c) = workloads::blocked_failure_instance();
+        let run = |chaos: Vec<TimedClusterEvent>| {
+            let cfg = SimConfig {
+                noise_sigma: 0.0,
+                switch_cost: 30.0,
+                objective: Objective::MeanTurnaround,
+                chaos,
+                ..Default::default()
+            };
+            let policy = JointOptimizer {
+                timeout: std::time::Duration::from_secs(120),
+                incremental: true,
+                ..Default::default()
+            };
+            let mut rng = DetRng::new(99);
+            simulate(&policy, &w, &grid, &c, cfg, &mut rng)
+        };
+        let r = run(workloads::failure_recovery_events());
+        assert_eq!(r.completions.len(), 5);
+        // 600 s pre-crash + 500 s of shorts + 0.9·1600 + 30 s relaunch
+        assert!((r.makespan - 2570.0).abs() < 1e-6, "makespan {}", r.makespan);
+        assert_eq!(r.failures, 1);
+        assert_eq!(r.relocations, 1, "the gang must relocate off the dead node");
+        assert_eq!(r.preemptions, 1);
+        // progress since the t = 100 checkpoint: (0.9 − 0.4) × 1000 s
+        assert!((r.lost_work_secs - 500.0).abs() < 1e-6, "lost {}", r.lost_work_secs);
+        // the relocated gang waits behind the two 500 s shorts
+        assert!((r.time_to_recover - 500.0).abs() < 1e-6, "ttr {}", r.time_to_recover);
+        let stats = online_stats(&w, &r);
+        // (500 + 500 + 1000 + 1000 + 2570) / 5
+        assert!((stats.mean_turnaround - 1114.0).abs() < 1e-6, "mean {}", stats.mean_turnaround);
+        // capacity changepoints: 10 GPUs from t = 0, 2 after the crash
+        // (the repair at 2600 lands after the stream already finished)
+        assert_eq!(r.capacity_trace, vec![(0.0, 10), (600.0, 2)]);
+        // utilization against capacity that *existed*: busy 9740 GPU-s
+        // over 10·600 + 2·1970 = 9940 available — the static denominator
+        // (10 × 2570) would report a nonsensical 38%
+        let avg = r.avg_utilization(&c);
+        assert!((avg - 9740.0 / 9940.0).abs() < 1e-9, "avg {avg}");
+        let busy_static = avg * 9940.0 / (2570.0 * 10.0);
+        assert!(busy_static < 0.5, "static-denominator utilization {busy_static}");
+        // chaos runs are byte-identical run to run
+        let r2 = run(workloads::failure_recovery_events());
+        assert_eq!(r, r2, "chaos SimResult must be byte-identical run to run");
+    }
+
+    /// The control arm: same instance, but node 0 *stalls* over
+    /// [600, 2600] instead of crashing, and a huge threshold pins the
+    /// plan — the wait-for-the-node strategy. The gang's remaining 400 s
+    /// resume only at t = 2600, so relocation beats waiting by ≥ 429 s
+    /// of makespan and ≥ 85 s of mean turnaround (exact gaps 430 and 86,
+    /// minus the ~2·10⁻⁶ s the stalled node crawls through).
+    #[test]
+    fn chaos_relocation_beats_wait_for_recovery_baseline() {
+        use crate::metrics::online_stats;
+        let (w, grid, c) = workloads::blocked_failure_instance();
+        let policy = JointOptimizer {
+            timeout: std::time::Duration::from_secs(120),
+            incremental: true,
+            ..Default::default()
+        };
+        let wait = {
+            let cfg = SimConfig {
+                noise_sigma: 0.0,
+                switch_cost: 30.0,
+                objective: Objective::MeanTurnaround,
+                chaos: workloads::failure_wait_baseline_events(),
+                // threshold no replay can clear: every chaos re-plan
+                // keeps the incumbent — capacity still exists (slow ≠
+                // dead), so the more-tasks relaxation never fires
+                introspect: Some(IntrospectCfg { interval: 1e9, threshold: 1e18 }),
+                ..Default::default()
+            };
+            simulate(&policy, &w, &grid, &c, cfg, &mut DetRng::new(99))
+        };
+        assert_eq!(wait.completions.len(), 5);
+        assert!((wait.makespan - 3000.0).abs() < 1e-3, "wait makespan {}", wait.makespan);
+        assert!(wait.makespan < 3000.0 + 1e-9, "stall residue only shortens it");
+        assert_eq!(wait.failures, 0, "a stall is not a crash");
+        assert_eq!(wait.relocations, 0, "nothing may move under the pinning threshold");
+        assert_eq!(wait.lost_work_secs, 0.0);
+        let wait_stats = online_stats(&w, &wait);
+        let wait_mean = wait_stats.mean_turnaround;
+        assert!((wait_mean - 1200.0).abs() < 1e-3, "wait mean {wait_mean}");
+
+        let relocate = {
+            let cfg = SimConfig {
+                noise_sigma: 0.0,
+                switch_cost: 30.0,
+                objective: Objective::MeanTurnaround,
+                chaos: workloads::failure_recovery_events(),
+                ..Default::default()
+            };
+            simulate(&policy, &w, &grid, &c, cfg, &mut DetRng::new(99))
+        };
+        let rel_stats = online_stats(&w, &relocate);
+        assert!(
+            relocate.makespan <= wait.makespan - 429.0,
+            "relocation {} must beat waiting {} by ≥ 429 s",
+            relocate.makespan,
+            wait.makespan
+        );
+        assert!(
+            rel_stats.mean_turnaround <= wait_stats.mean_turnaround - 85.0,
+            "relocation mean {} must beat waiting {} by ≥ 85 s",
+            rel_stats.mean_turnaround,
+            wait_stats.mean_turnaround
+        );
+    }
+
+    /// A graceful leave drains instead of killing: during the grace
+    /// window the node keeps executing (the keep-side replay still sees
+    /// its capacity, so re-planning away early loses the acceptance
+    /// comparison), and when the window expires the stranded gang
+    /// relocates with **zero** lost work — the whole point of drain
+    /// notice. Hand-computed: gang runs to t = 700 (remaining 0.3),
+    /// relocates to 2 GPUs behind the two 400-s-remaining shorts:
+    /// 700 + 400 + 0.3·1600 + 30 = 1610 s.
+    #[test]
+    fn drain_grace_relocates_without_lost_work() {
+        let (w, grid, c) = workloads::blocked_failure_instance();
+        let cfg = SimConfig {
+            noise_sigma: 0.0,
+            switch_cost: 30.0,
+            objective: Objective::MeanTurnaround,
+            chaos: vec![TimedClusterEvent {
+                at: 600.0,
+                event: crate::cluster::ClusterEvent::NodeLeave { node: 0, grace: 100.0 },
+            }],
+            ..Default::default()
+        };
+        let policy = JointOptimizer {
+            timeout: std::time::Duration::from_secs(120),
+            incremental: true,
+            ..Default::default()
+        };
+        let r = simulate(&policy, &w, &grid, &c, cfg, &mut DetRng::new(99));
+        assert_eq!(r.completions.len(), 5);
+        assert!((r.makespan - 1610.0).abs() < 1e-6, "makespan {}", r.makespan);
+        assert_eq!(r.failures, 0, "a drain is not a crash");
+        assert_eq!(r.lost_work_secs, 0.0, "drained work is never lost");
+        assert_eq!(r.relocations, 1, "the gang relocates when the grace window expires");
+        assert_eq!(r.time_to_recover, 0.0, "recovery latency is a crash metric");
+        // capacity drops only at grace expiry, not at the leave notice
+        assert_eq!(r.capacity_trace, vec![(0.0, 10), (600.0, 10), (700.0, 2)]);
+    }
+
+    /// Work stranded by a crash with *no* surviving capacity waits for
+    /// the repair join and then completes: the single task rolls back to
+    /// its last checkpoint (t = 0 ⇒ the full 600 s of progress is lost),
+    /// the cluster idles to the join, and the task re-runs from scratch.
+    #[test]
+    fn stranded_work_recovers_on_join() {
+        let (w, grid, c) = {
+            let (mut w, grid, _) = workloads::blocked_failure_instance();
+            w.truncate(1); // just the gang, on a single-node cluster
+            (w, grid, Cluster::single_node_8gpu())
+        };
+        let cfg = SimConfig {
+            noise_sigma: 0.0,
+            switch_cost: 30.0,
+            objective: Objective::MeanTurnaround,
+            chaos: vec![
+                TimedClusterEvent {
+                    at: 600.0,
+                    event: crate::cluster::ClusterEvent::NodeFail { node: 0 },
+                },
+                TimedClusterEvent {
+                    at: 2600.0,
+                    event: crate::cluster::ClusterEvent::NodeJoin { node: 0 },
+                },
+            ],
+            ..Default::default()
+        };
+        let policy = JointOptimizer {
+            timeout: std::time::Duration::from_secs(120),
+            incremental: true,
+            ..Default::default()
+        };
+        let r = simulate(&policy, &w, &grid, &c, cfg, &mut DetRng::new(99));
+        assert_eq!(r.completions.len(), 1);
+        // idle [600, 2600], then the full 1000 s re-run on the repaired node
+        assert!((r.makespan - 3600.0).abs() < 1e-6, "makespan {}", r.makespan);
+        assert_eq!(r.failures, 1);
+        // no checkpoint boundary before the crash: all 600 s are lost
+        assert!((r.lost_work_secs - 600.0).abs() < 1e-6, "lost {}", r.lost_work_secs);
+        assert_eq!(r.capacity_trace, vec![(0.0, 8), (600.0, 0), (2600.0, 8)]);
+        // utilization counts no capacity over the outage: busy = 600 +
+        // 1000 GPU-fractions… busy 600·8 + 1000·8 over 8·(600 + 1000)
+        let avg = r.avg_utilization(&c);
+        assert!((avg - 1.0).abs() < 1e-9, "outage-aware utilization {avg}");
+    }
+
+    /// Junk chaos events (non-finite timestamps, out-of-range nodes) are
+    /// filtered at ingest: the stream degrades to chaos-free and the
+    /// whole simulation — spans, switches, everything — is byte-identical
+    /// to an empty `chaos` config, with no capacity trace recorded.
+    #[test]
+    fn junk_chaos_events_keep_sim_byte_identical() {
+        let c = Cluster::single_node_8gpu();
+        let (mut w, grid) = setup(&c);
+        for (i, t) in w.iter_mut().enumerate() {
+            t.arrival = (i as f64) * 900.0;
+        }
+        let cfg = SimConfig {
+            introspect: Some(IntrospectCfg { interval: 1500.0, threshold: 200.0 }),
+            ..Default::default()
+        };
+        let junk = SimConfig {
+            chaos: vec![
+                TimedClusterEvent {
+                    at: f64::NAN,
+                    event: crate::cluster::ClusterEvent::NodeFail { node: 0 },
+                },
+                TimedClusterEvent {
+                    at: 500.0,
+                    event: crate::cluster::ClusterEvent::NodeFail { node: 99 },
+                },
+            ],
+            ..cfg.clone()
+        };
+        let a = simulate(&JointOptimizer::default(), &w, &grid, &c, cfg, &mut DetRng::new(77));
+        let b = simulate(&JointOptimizer::default(), &w, &grid, &c, junk, &mut DetRng::new(77));
+        assert_eq!(a, b, "junk chaos must be indistinguishable from no chaos");
+        assert!(a.capacity_trace.is_empty(), "no chaos ⇒ no capacity trace");
+        assert_eq!((a.failures, a.relocations), (0, 0));
+        assert_eq!((a.lost_work_secs, a.time_to_recover), (0.0, 0.0));
     }
 
     #[test]

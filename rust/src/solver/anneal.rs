@@ -63,8 +63,16 @@ const PAR_MIN_TASKS: usize = 64;
 pub(crate) struct AnnealParams<'a> {
     /// Per-task (gpus, duration) tables.
     pub durs: &'a [Vec<(usize, f64)>],
-    /// Per-node GPU counts.
+    /// Per-node GPU counts. Chaos capacity masking happens here: the
+    /// caller zeroes the GPU count of plan-dead nodes, so every evaluator
+    /// refuses them without any extra aliveness plumbing.
     pub node_gpus: &'a [usize],
+    /// Per-node effective rate multipliers (chaos stragglers). All-1.0 is
+    /// the bit-identical fixed-rate behavior; see
+    /// [`DeltaKernel::with_rates`]. Applied identically by the delta
+    /// kernel, the read-only worker replays, and the full-replay
+    /// baseline, so the parity contracts extend to slowed nodes.
+    pub node_rates: &'a [f64],
     /// Tasks whose configuration/node may change (order moves may touch
     /// any position regardless — pinned tasks keep placement, not rank).
     pub movable: &'a [usize],
@@ -219,9 +227,9 @@ enum EvalScratch {
 }
 
 impl EvalScratch {
-    fn new(full_replay: bool, node_gpus: &[usize]) -> Self {
+    fn new(full_replay: bool, node_gpus: &[usize], node_rates: &[f64]) -> Self {
         if full_replay {
-            EvalScratch::Full(FullScratch::new(node_gpus))
+            EvalScratch::Full(FullScratch::new(node_gpus).with_rates(node_rates))
         } else {
             EvalScratch::Delta { free: Vec::new(), tail: Vec::new() }
         }
@@ -270,9 +278,10 @@ pub(crate) fn anneal(
             let rtx = res_tx.clone();
             let full_replay = p.full_replay;
             let node_gpus = p.node_gpus;
+            let node_rates = p.node_rates;
             let durs = p.durs;
             let churn = p.churn;
-            sc.spawn(move || worker_loop(jrx, rtx, full_replay, node_gpus, durs, churn));
+            sc.spawn(move || worker_loop(jrx, rtx, full_replay, node_gpus, node_rates, durs, churn));
         }
         // the coordinator holds no result sender: if every worker dies,
         // recv reports it instead of blocking forever
@@ -290,10 +299,11 @@ fn worker_loop(
     results: mpsc::Sender<(usize, Vec<f64>)>,
     full_replay: bool,
     node_gpus: &[usize],
+    node_rates: &[f64],
     durs: &[Vec<(usize, f64)>],
     churn: Option<&Churn>,
 ) {
-    let mut scratch = EvalScratch::new(full_replay, node_gpus);
+    let mut scratch = EvalScratch::new(full_replay, node_gpus, node_rates);
     let mut local = State::default();
     while let Ok(job) = jobs.recv() {
         let Job { shared, lo, hi, mut out } = job;
@@ -329,8 +339,10 @@ fn run(
 ) -> AnnealOutcome {
     let n = seed.order.len();
     let n_nodes = p.node_gpus.len();
-    let mut kernel = Arc::new(DeltaKernel::new(p.node_gpus.to_vec(), n, p.objective.clone()));
-    let mut scratch = EvalScratch::new(p.full_replay, p.node_gpus);
+    let mut kernel = Arc::new(
+        DeltaKernel::new(p.node_gpus.to_vec(), n, p.objective.clone()).with_rates(p.node_rates),
+    );
+    let mut scratch = EvalScratch::new(p.full_replay, p.node_gpus, p.node_rates);
     let mut mover = Mover::new(n);
     let mut poll = DeadlinePoll::new(p.deadline, DEADLINE_POLL_PERIOD);
     let mut best = seed.clone();

@@ -186,6 +186,24 @@ pub(crate) struct DeltaKernel {
     /// candidate whose first change lies strictly beyond it inherits the
     /// committed prefix's infeasibility.
     valid_upto: usize,
+    /// Per-node effective rate multipliers (chaos stragglers): a gang
+    /// hosted on node `ni` takes `dur / rates[ni]` seconds. Node
+    /// *selection* ignores rates — it still minimizes the start time —
+    /// so every evaluator layer shares one decision rule. All-1.0 (the
+    /// default) divides by 1.0, which is IEEE-exact: the no-chaos path
+    /// stays bit-identical to the pre-rates kernel.
+    rates: Vec<f64>,
+}
+
+/// Sanitize a rate vector for evaluator use: sized to `n` nodes (missing
+/// entries = 1.0) with non-finite or non-positive rates mapped to 1.0, so
+/// the placement inner loops can index and divide without guards.
+pub(crate) fn sanitize_rates(rates: &[f64], n: usize) -> Vec<f64> {
+    (0..n)
+        .map(|i| {
+            rates.get(i).copied().filter(|r| r.is_finite() && *r > 0.0).unwrap_or(1.0)
+        })
+        .collect()
 }
 
 impl DeltaKernel {
@@ -200,6 +218,7 @@ impl DeltaKernel {
             offsets.push(acc);
         }
         let total = acc;
+        let n_nodes = node_gpus.len();
         let block = ((n as f64).sqrt().ceil() as usize).max(1);
         let nblocks = n.div_ceil(block).max(1);
         Self {
@@ -224,7 +243,15 @@ impl DeltaKernel {
             spec,
             committed_ms: 0.0,
             valid_upto: 0,
+            rates: vec![1.0; n_nodes],
         }
+    }
+
+    /// Attach per-node rate multipliers (builder-style; the default is
+    /// all-1.0, the bit-identical fixed-rate behavior).
+    pub(crate) fn with_rates(mut self, rates: &[f64]) -> Self {
+        self.rates = sanitize_rates(rates, self.node_gpus.len());
+        self
     }
 
     /// The objective this kernel scores with.
@@ -237,7 +264,7 @@ impl DeltaKernel {
     /// the gang's end time. `None` when no candidate node is wide enough —
     /// the same infeasibility the full-replay evaluator maps to INFINITY.
     fn step(&mut self, g: usize, dur: f64, forced: Option<usize>) -> Option<f64> {
-        place_gang(&mut self.free, &self.node_gpus, &self.offsets, g, dur, forced)
+        place_gang(&mut self.free, &self.node_gpus, &self.offsets, &self.rates, g, dur, forced)
     }
 
     /// Full replay of `s`, refreshing every checkpoint. Returns the
@@ -431,7 +458,7 @@ impl DeltaKernel {
         for pos in b0 * self.block..self.n {
             let t = s.order[pos];
             let (g, dur) = gang_dur(durs, churn, s, t);
-            match place_gang(free, &self.node_gpus, &self.offsets, g, dur, s.node[t]) {
+            match place_gang(free, &self.node_gpus, &self.offsets, &self.rates, g, dur, s.node[t]) {
                 Some(end) => match self.spec.kind {
                     ScoreKind::Makespan => ms = ms.max(end),
                     ScoreKind::Flow => sum += self.spec.flow_term(t, end),
@@ -452,11 +479,14 @@ impl DeltaKernel {
 /// committed replay and the workers' read-only replays): pick the
 /// earliest-start node (or the forced one), occupy the g earliest-free
 /// GPUs, return the gang's end time. `None` when no candidate node is
-/// wide enough.
+/// wide enough. The chosen host's rate stretches the duration *after*
+/// selection (`dur / rates[node]`), so selection itself is rate-blind
+/// and identical across every evaluator layer.
 fn place_gang(
     free: &mut [f64],
     node_gpus: &[usize],
     offsets: &[usize],
+    rates: &[f64],
     g: usize,
     dur: f64,
     forced: Option<usize>,
@@ -489,7 +519,7 @@ fn place_gang(
             (best_node, best_start)
         }
     };
-    let end = start + dur;
+    let end = start + dur / rates[node];
     let off = offsets[node];
     let width = node_gpus[node];
     let seg = &mut free[off..off + width];
@@ -516,6 +546,9 @@ pub(crate) struct FullScratch {
     tmp: Vec<f64>,
     /// Top-k turnaround buffer for the tail objective.
     tailbuf: Vec<f64>,
+    /// Per-node effective rates; same semantics as [`DeltaKernel`]'s
+    /// (selection rate-blind, chosen host stretches `dur / rate`).
+    rates: Vec<f64>,
 }
 
 /// The g-th smallest value of `xs` (gang start time), using `tmp` as
@@ -537,7 +570,15 @@ impl FullScratch {
             free: node_gpus.iter().map(|&n| Vec::with_capacity(n)).collect(),
             tmp: Vec::new(),
             tailbuf: Vec::new(),
+            rates: vec![1.0; node_gpus.len()],
         }
+    }
+
+    /// Attach per-node rate multipliers (builder-style; the default is
+    /// all-1.0, the bit-identical fixed-rate behavior).
+    pub(crate) fn with_rates(mut self, rates: &[f64]) -> Self {
+        self.rates = sanitize_rates(rates, self.node_gpus.len());
+        self
     }
 
     /// Full-replay candidate evaluation: replays the gang list scheduler
@@ -586,7 +627,7 @@ impl FullScratch {
                     }
                 }
             }
-            let end = best_start + dur;
+            let end = best_start + dur / self.rates[best_node];
             // occupy the g earliest-free GPUs on that node
             let free = &mut self.free[best_node];
             for _ in 0..g {
@@ -1265,6 +1306,133 @@ mod tests {
             }
         }
         assert!(charged_seen > 200, "churn term rarely exercised: {charged_seen}");
+    }
+
+    /// Rate-aware reference: verbatim [`eval_reference`] with the one
+    /// chaos extension — the chosen host's rate divides the duration
+    /// *after* node selection, never during it.
+    fn eval_reference_rated(
+        s: &State,
+        durs: &[Vec<(usize, f64)>],
+        node_gpus: &[usize],
+        rates: &[f64],
+        churn: Option<&Churn>,
+    ) -> f64 {
+        let mut free: Vec<Vec<f64>> = node_gpus.iter().map(|&n| vec![0.0; n]).collect();
+        let mut makespan = 0.0f64;
+        for &t in &s.order {
+            let (g, dur) = gang_dur(durs, churn, s, t);
+            let kth = |xs: &[f64]| {
+                let mut tmp = xs.to_vec();
+                tmp.sort_by(f64::total_cmp);
+                tmp[g - 1]
+            };
+            let mut best_node = usize::MAX;
+            let mut best_start = f64::INFINITY;
+            match s.node[t] {
+                Some(n) if node_gpus[n] >= g => {
+                    best_node = n;
+                    best_start = kth(&free[n]);
+                }
+                Some(_) => return f64::INFINITY,
+                None => {
+                    for n in 0..node_gpus.len() {
+                        if node_gpus[n] < g {
+                            continue;
+                        }
+                        let start = kth(&free[n]);
+                        if start < best_start {
+                            best_start = start;
+                            best_node = n;
+                        }
+                    }
+                    if best_node == usize::MAX {
+                        return f64::INFINITY;
+                    }
+                }
+            }
+            let end = best_start + dur / rates[best_node];
+            let fr = &mut free[best_node];
+            for _ in 0..g {
+                let (mi, _) =
+                    fr.iter().enumerate().min_by(|a, b| a.1.total_cmp(b.1)).expect("non-empty");
+                fr[mi] = end;
+            }
+            makespan = makespan.max(end);
+        }
+        makespan
+    }
+
+    /// The chaos-rate contract: with per-node rate multipliers attached
+    /// (stragglers slowed, some nodes nominal), the delta evaluator, the
+    /// read-only worker replay, and the FullScratch evaluator agree bit
+    /// for bit with the rate-aware transliterated reference over random
+    /// accepted/rejected move sequences — and an all-1.0 rate vector is
+    /// exactly the unrated kernel (division by 1.0 is IEEE-exact).
+    #[test]
+    fn prop_rated_delta_eval_matches_full_replay() {
+        let mut slowed_differs = 0usize;
+        for case in 0..30u64 {
+            let mut rng = DetRng::new(12000 + case);
+            let (durs, node_gpus) = random_instance(&mut rng, case % 3 == 0);
+            let nt = durs.len();
+            let mut s = random_state(&mut rng, &durs, node_gpus.len(), true);
+            // roughly half the nodes straggle at a random rate
+            let rates: Vec<f64> = (0..node_gpus.len())
+                .map(|_| if rng.f64() < 0.5 { rng.range_f64(0.1, 0.9) } else { 1.0 })
+                .collect();
+            let mut kernel =
+                DeltaKernel::new(node_gpus.clone(), nt, ScoreSpec::makespan()).with_rates(&rates);
+            let mut unit =
+                DeltaKernel::new(node_gpus.clone(), nt, ScoreSpec::makespan()).with_rates(&vec![1.0; node_gpus.len()]);
+            let mut mover = Mover::new(nt);
+            let mut full = FullScratch::new(&node_gpus).with_rates(&rates);
+            mover.rebuild_pos(&s.order);
+            let ms0 = kernel.rebuild(&s, &durs, None);
+            assert_eq!(
+                ms0,
+                eval_reference_rated(&s, &durs, &node_gpus, &rates, None),
+                "case {case}: rated rebuild"
+            );
+            // all-1.0 rates must be the pre-rates arithmetic bit for bit
+            assert_eq!(
+                unit.rebuild(&s, &durs, None),
+                eval_reference(&s, &durs, &node_gpus, None),
+                "case {case}: unit-rate kernel drifted from legacy"
+            );
+            let movable: Vec<usize> = (0..nt).collect();
+            let mut ro_free: Vec<f64> = Vec::new();
+            let mut ro_tail: Vec<f64> = Vec::new();
+            for step in 0..200 {
+                let (undo, p0) = mover.propose(&mut s, &durs, node_gpus.len(), &mut rng, &movable);
+                let ms_ro =
+                    kernel.eval_move_readonly(&s, &durs, p0, &mut ro_free, &mut ro_tail, None);
+                let ms = kernel.eval_move(&s, &durs, p0, None);
+                assert_eq!(ms, ms_ro, "case {case} step {step}: rated readonly diverged");
+                let reference = eval_reference_rated(&s, &durs, &node_gpus, &rates, None);
+                assert_eq!(ms, reference, "case {case} step {step}: rated delta != reference");
+                assert_eq!(
+                    full.eval(&s, &durs, None, kernel.spec()),
+                    reference,
+                    "case {case} step {step}: rated FullScratch != reference"
+                );
+                if ms.is_finite()
+                    && rates.iter().any(|&r| r != 1.0)
+                    && ms != eval_reference(&s, &durs, &node_gpus, None)
+                {
+                    slowed_differs += 1;
+                }
+                if ms.is_finite() && rng.f64() < 0.4 {
+                    kernel.accept(p0, ms);
+                } else {
+                    mover.undo(&mut s, undo);
+                }
+            }
+        }
+        assert!(slowed_differs > 200, "rates rarely bit: {slowed_differs}");
+        // sanitizer: junk rates degrade to 1.0, missing entries fill
+        let clean = sanitize_rates(&[0.5, f64::NAN, -2.0, 0.0, f64::INFINITY], 7);
+        assert_eq!(clean, vec![0.5, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0]);
     }
 
     /// Reference scorer for arbitrary objectives: the verbatim naive

@@ -38,7 +38,7 @@ use super::objective::{Objective, ScoreKind, ScoreSpec};
 use super::policy::{PlanCtx, Policy};
 use super::spase::SpaseTask;
 use crate::cluster::Cluster;
-use crate::sched::{list_schedule, PlacementChoice, Schedule};
+use crate::sched::{list_schedule_masked, PlacementChoice, Schedule};
 use crate::util::rng::DetRng;
 use crate::util::Deadline;
 use std::time::Duration;
@@ -197,15 +197,23 @@ impl JointOptimizer {
     /// wall-clock.
     pub fn solve(&self, tasks: &[SpaseTask], cluster: &Cluster, rng: &mut DetRng) -> (Schedule, SolveStats) {
         let spec = self.objective.resolve(tasks, &[]);
-        self.solve_with(tasks, cluster, &spec, rng)
+        let caps: Vec<usize> = cluster.nodes.iter().map(|n| n.gpus).collect();
+        let rates = vec![1.0f64; cluster.nodes.len()];
+        self.solve_with(tasks, cluster, &spec, &caps, &rates, rng)
     }
 
-    /// [`Self::solve`] against an already-resolved objective spec.
+    /// [`Self::solve`] against an already-resolved objective spec and an
+    /// explicit chaos capacity view: `caps` is the per-node GPU budget
+    /// (dead nodes zeroed — every evaluator then refuses them) and
+    /// `rates` the per-node effective speed. Full caps + unit rates is
+    /// the bit-identical legacy solve.
     fn solve_with(
         &self,
         tasks: &[SpaseTask],
         cluster: &Cluster,
         spec: &ScoreSpec,
+        caps: &[usize],
+        rates: &[f64],
         rng: &mut DetRng,
     ) -> (Schedule, SolveStats) {
         let mut stats = SolveStats::default();
@@ -217,11 +225,11 @@ impl JointOptimizer {
         // the search itself only polls the Deadline below at batch boundaries
         let deadline = Deadline::after(self.timeout);
         let durs = duration_table(tasks);
-        let node_gpus: Vec<usize> = cluster.nodes.iter().map(|n| n.gpus).collect();
+        let node_gpus: Vec<usize> = caps.to_vec();
 
         // ---- warm starts -------------------------------------------------
         let (best_state, mut best_sched, mut best_ms) =
-            self.warm_starts(tasks, cluster, spec, rng, &mut stats);
+            self.warm_starts(tasks, cluster, spec, caps, rates, rng, &mut stats);
         stats.warm_makespan = best_ms;
 
         // ---- speculative annealing with restarts ------------------------
@@ -229,8 +237,9 @@ impl JointOptimizer {
         let params = AnnealParams {
             durs: &durs,
             node_gpus: &node_gpus,
+            node_rates: rates,
             movable: &movable,
-            lower_bound: Self::objective_lower_bound(spec, tasks, cluster),
+            lower_bound: Self::objective_lower_bound(spec, tasks, caps),
             deadline,
             threads: self.resolved_threads(),
             full_replay: self.full_replay,
@@ -244,7 +253,7 @@ impl JointOptimizer {
         best_ms = out.best_ms;
 
         // materialize the incumbent's full schedule once
-        let (sched, ms) = self.eval(&out.best, tasks, cluster, None, spec, &mut stats);
+        let (sched, ms) = self.eval(&out.best, tasks, cluster, caps, rates, None, spec, &mut stats);
         if ms <= best_ms + 1e-9 {
             best_sched = sched;
             best_ms = ms;
@@ -276,16 +285,28 @@ impl JointOptimizer {
     /// makespan, the contention-free per-task bound for flow/tail
     /// objectives (valid, deliberately not tight — see
     /// [`ScoreSpec::lower_bound_hint`]).
-    fn objective_lower_bound(spec: &ScoreSpec, tasks: &[SpaseTask], cluster: &Cluster) -> f64 {
+    fn objective_lower_bound(spec: &ScoreSpec, tasks: &[SpaseTask], caps: &[usize]) -> f64 {
         match spec.kind {
-            ScoreKind::Makespan => Self::lower_bound(tasks, cluster),
+            ScoreKind::Makespan => Self::lower_bound_caps(tasks, caps),
             _ => spec.lower_bound_hint(tasks),
         }
     }
 
     /// A simple lower bound: max(area bound, longest-min-runtime bound).
     pub fn lower_bound(tasks: &[SpaseTask], cluster: &Cluster) -> f64 {
-        let total_gpus: f64 = cluster.total_gpus() as f64;
+        let caps: Vec<usize> = cluster.nodes.iter().map(|n| n.gpus).collect();
+        Self::lower_bound_caps(tasks, &caps)
+    }
+
+    /// [`Self::lower_bound`] against an explicit chaos capacity view: the
+    /// area bound divides by the *alive* GPU total (dead nodes zeroed),
+    /// which is valid and tighter than the static-cluster bound when
+    /// capacity has been lost. An all-dead cluster yields `INFINITY` —
+    /// nothing is placeable, so the annealer exits immediately; slowdowns
+    /// are ignored (rates only stretch durations, so the rate-blind bound
+    /// stays a lower bound).
+    fn lower_bound_caps(tasks: &[SpaseTask], caps: &[usize]) -> f64 {
+        let total_gpus: f64 = caps.iter().sum::<usize>() as f64;
         // area bound: each task contributes at least its min GPU-seconds
         let area: f64 = tasks
             .iter()
@@ -310,12 +331,17 @@ impl JointOptimizer {
     /// task's duration with its checkpoint/restore cost, and the returned
     /// scalar is the state's score under `spec` — both computed exactly
     /// as the annealing evaluators compute them, so the materialized
-    /// schedule's score matches the annealed incumbent's.
+    /// schedule's score matches the annealed incumbent's. `caps`/`rates`
+    /// are the chaos capacity view the annealing evaluators used (full
+    /// caps + unit rates = the bit-identical legacy scheduler).
+    #[allow(clippy::too_many_arguments)]
     fn eval(
         &self,
         s: &State,
         tasks: &[SpaseTask],
         cluster: &Cluster,
+        caps: &[usize],
+        rates: &[f64],
         churn: Option<&Churn>,
         spec: &ScoreSpec,
         stats: &mut SolveStats,
@@ -335,7 +361,7 @@ impl JointOptimizer {
                 }
             })
             .collect();
-        let sched = list_schedule(&choices, cluster);
+        let (sched, _skipped) = list_schedule_masked(&choices, cluster, caps, rates);
         // unplaceable tasks (forced node too small) poison the candidate
         let ms = if sched.assignments.len() == tasks.len() {
             spec.score_assignments(&s.order, &sched)
@@ -378,7 +404,11 @@ impl JointOptimizer {
                 Some(&pi) => {
                     let p = &ctx.prior[pi];
                     prior_pos[t] = Some(pi);
-                    node[t] = p.node;
+                    // a prior node that has since died is never re-seeded:
+                    // the seed would be unplaceable there, and a pinned
+                    // task must not be locked to a corpse
+                    let prior_alive = p.node.map_or(true, |ni| ctx.node_is_alive(ni));
+                    node[t] = if prior_alive { p.node } else { None };
                     let matched = st
                         .configs
                         .iter()
@@ -387,15 +417,32 @@ impl JointOptimizer {
                         Some(ci) => {
                             cfg[t] = ci;
                             let pinned = widx.get(&st.id).map_or(false, |&i| ctx.pinned[i]);
-                            match churn.as_mut() {
-                                // preemption: in-flight tasks stay movable
-                                // but deviating from (ci, node) pays churn
-                                Some(ch) if pinned => {
-                                    ch.prior_cfg[t] = Some(ci);
-                                    ch.prior_node[t] = p.node;
+                            if pinned && !prior_alive {
+                                // mandatory relocation off a dead node:
+                                // stays movable, and the churn entry
+                                // charges checkpoint/restore wherever it
+                                // lands (preempt cost when preemption is
+                                // on, the context's relocation cost
+                                // otherwise — a churn table is built on
+                                // demand just for these tasks)
+                                let ch = churn.get_or_insert_with(|| Churn {
+                                    cost: ctx.relocate_cost,
+                                    prior_cfg: vec![None; nt],
+                                    prior_node: vec![None; nt],
+                                });
+                                ch.prior_cfg[t] = Some(ci);
+                                ch.prior_node[t] = p.node;
+                            } else {
+                                match churn.as_mut() {
+                                    // preemption: in-flight tasks stay movable
+                                    // but deviating from (ci, node) pays churn
+                                    Some(ch) if pinned => {
+                                        ch.prior_cfg[t] = Some(ci);
+                                        ch.prior_node[t] = p.node;
+                                    }
+                                    Some(_) => {}
+                                    None => locked[t] = pinned,
                                 }
-                                Some(_) => {}
-                                None => locked[t] = pinned,
                             }
                         }
                         None => cfg[t] = min_area_index(st),
@@ -448,15 +495,18 @@ impl JointOptimizer {
         let spec = self.ctx_spec(ctx, &tasks);
         let (seed, locked, churn) = self.incremental_seed(ctx, &tasks, preempt);
         let durs = duration_table(&tasks);
-        let node_gpus: Vec<usize> = cluster.nodes.iter().map(|n| n.gpus).collect();
+        // chaos capacity view: plan-dead nodes are zero-width for every
+        // evaluator, slowed nodes stretch whatever lands on them
+        let node_gpus: Vec<usize> = ctx.node_caps();
 
         // one short annealing pass; locked tasks keep (config, node)
         let movable: Vec<usize> = (0..nt).filter(|&t| !locked[t]).collect();
         let params = AnnealParams {
             durs: &durs,
             node_gpus: &node_gpus,
+            node_rates: &ctx.node_rate,
             movable: &movable,
-            lower_bound: Self::objective_lower_bound(&spec, &tasks, cluster),
+            lower_bound: Self::objective_lower_bound(&spec, &tasks, &node_gpus),
             deadline,
             threads: self.resolved_threads(),
             full_replay: self.full_replay,
@@ -472,11 +522,20 @@ impl JointOptimizer {
             // incumbent cannot seat the current task set: cold-solve
             // (the engine consumed no randomness — with one restart and an
             // infeasible seed the annealing loop never starts), keeping
-            // the context's objective and task ages
-            return self.solve_with(&tasks, cluster, &spec, rng);
+            // the context's objective, task ages, and chaos capacity view
+            return self.solve_with(&tasks, cluster, &spec, &node_gpus, &ctx.node_rate, rng);
         }
 
-        let (sched, ms) = self.eval(&out.best, &tasks, cluster, churn.as_ref(), &spec, &mut stats);
+        let (sched, ms) = self.eval(
+            &out.best,
+            &tasks,
+            cluster,
+            &node_gpus,
+            &ctx.node_rate,
+            churn.as_ref(),
+            &spec,
+            &mut stats,
+        );
         stats.final_makespan = if ms.is_finite() { ms } else { out.best_ms };
         stats.elapsed_secs = start.elapsed().as_secs_f64();
         stats.evals_per_sec = stats.evals as f64 / stats.elapsed_secs.max(1e-12);
@@ -488,11 +547,14 @@ impl JointOptimizer {
     /// (The previous `min_by` comparator re-scheduled both sides of every
     /// comparison, so each warm start was built O(k) times — inflating
     /// `stats.evals` and wasting Schedule builds for zero information.)
+    #[allow(clippy::too_many_arguments)]
     fn warm_starts(
         &self,
         tasks: &[SpaseTask],
         cluster: &Cluster,
         spec: &ScoreSpec,
+        caps: &[usize],
+        rates: &[f64],
         rng: &mut DetRng,
         stats: &mut SolveStats,
     ) -> (State, Schedule, f64) {
@@ -524,7 +586,7 @@ impl JointOptimizer {
         candidates.push(State { cfg: fast_cfg, order: order2, node: vec![None; nt] });
 
         // (c) greedy marginal-gain rescaling from 1-GPU-ish configs
-        candidates.push(self.greedy_rescale(tasks, cluster));
+        candidates.push(self.greedy_rescale(tasks, caps));
 
         // (d) a couple of random states for diversity
         for _ in 0..2 {
@@ -536,7 +598,7 @@ impl JointOptimizer {
 
         let mut best: Option<(State, Schedule, f64)> = None;
         for cand in candidates {
-            let (sched, ms) = self.eval(&cand, tasks, cluster, None, spec, stats);
+            let (sched, ms) = self.eval(&cand, tasks, cluster, caps, rates, None, spec, stats);
             if best.as_ref().map_or(true, |(_, _, bms)| ms < *bms) {
                 best = Some((cand, sched, ms));
             }
@@ -546,7 +608,8 @@ impl JointOptimizer {
 
     /// Optimus-style greedy: start every task at its smallest config, then
     /// repeatedly grant a GPU to the task with the best marginal gain.
-    fn greedy_rescale(&self, tasks: &[SpaseTask], cluster: &Cluster) -> State {
+    /// The GPU budget is the *alive* capacity (`caps` zeroes dead nodes).
+    fn greedy_rescale(&self, tasks: &[SpaseTask], caps: &[usize]) -> State {
         // the marginal-gain walk below reads configs[i] and configs[i + 1]
         // as "current" and "one step up the GPU frontier" — a profile grid
         // that is not sorted by GPU count would silently produce a
@@ -557,7 +620,7 @@ impl JointOptimizer {
         );
         let nt = tasks.len();
         let mut cfg: Vec<usize> = vec![0; nt]; // configs sorted by gpus asc
-        let budget: isize = cluster.total_gpus() as isize;
+        let budget: isize = caps.iter().sum::<usize>() as isize;
         let mut used: isize = tasks.iter().enumerate().map(|(t, s)| s.configs[cfg[t]].gpus as isize).sum();
         while used < budget {
             let mut best: Option<(usize, f64)> = None;
@@ -595,7 +658,8 @@ impl Policy for JointOptimizer {
         }
         let tasks = ctx.spase_tasks();
         let spec = self.ctx_spec(ctx, &tasks);
-        self.solve_with(&tasks, ctx.cluster, &spec, rng).0
+        let caps = ctx.node_caps();
+        self.solve_with(&tasks, ctx.cluster, &spec, &caps, &ctx.node_rate, rng).0
     }
 }
 
@@ -826,7 +890,8 @@ mod tests {
         let mut stats = SolveStats::default();
         let mut rng = DetRng::new(11);
         let spec = opt.objective.resolve(&tasks, &[]);
-        let (_, sched, ms) = opt.warm_starts(&tasks, &cluster, &spec, &mut rng, &mut stats);
+        let (_, sched, ms) =
+            opt.warm_starts(&tasks, &cluster, &spec, &[8], &[1.0], &mut rng, &mut stats);
         assert_eq!(stats.evals, 5, "5 candidates ⇒ exactly 5 evaluations");
         assert!(ms.is_finite());
         assert_eq!(sched.assignments.len(), 4);
@@ -1161,9 +1226,8 @@ mod tests {
         let tasks: Vec<SpaseTask> = (0..3)
             .map(|i| SpaseTask { id: i, configs: frontier(&[100.0, 60.0, 45.0, 40.0]) })
             .collect();
-        let cluster = Cluster::from_gpu_counts(&[4]);
         let opt = JointOptimizer::default();
-        let s = opt.greedy_rescale(&tasks, &cluster);
+        let s = opt.greedy_rescale(&tasks, &[4]);
         let used: usize = s.cfg.iter().enumerate().map(|(t, &c)| tasks[t].configs[c].gpus).sum();
         assert!(used <= 4, "used={used}");
     }
@@ -1177,7 +1241,6 @@ mod tests {
     fn greedy_rescale_rejects_unsorted_configs() {
         let tasks =
             vec![SpaseTask { id: 0, configs: vec![cfg(4, 40.0), cfg(1, 100.0), cfg(2, 60.0)] }];
-        let cluster = Cluster::single_node_8gpu();
-        JointOptimizer::default().greedy_rescale(&tasks, &cluster);
+        JointOptimizer::default().greedy_rescale(&tasks, &[8]);
     }
 }

@@ -78,6 +78,24 @@ pub struct PlanCtx<'a> {
     /// sets `Some` from `SimConfig::objective` so the planner optimizes
     /// exactly the scalar the re-plan acceptance threshold compares.
     pub objective: Option<Objective>,
+    /// Per-node availability mask, indexed like `cluster.nodes`. A dead
+    /// node (failed, or draining after a `NodeLeave`) must not host any
+    /// gang in the plan: every evaluator layer sees its capacity as zero.
+    /// All-true (the default) is the historical fixed-cluster behavior.
+    pub node_alive: Vec<bool>,
+    /// Per-node effective rate multipliers, indexed like `cluster.nodes`.
+    /// A gang hosted on node `ni` takes `duration / node_rate[ni]` wall
+    /// seconds; node *selection* ignores rates (it still minimizes start
+    /// time), so the decision rule is identical across evaluator layers.
+    /// All-1.0 (the default) is bit-identical to the historical behavior.
+    pub node_rate: Vec<f64>,
+    /// Mandatory-relocation churn, seconds: what a *pinned* task whose
+    /// prior node is no longer alive pays to move (it has no choice). The
+    /// simulator sets this to its `switch_cost`. Only consulted when a
+    /// pinned prior node is dead and [`Self::preempt_cost`] is `None` —
+    /// with preemption on, the ordinary preempt churn already prices the
+    /// move.
+    pub relocate_cost: f64,
 }
 
 impl<'a> PlanCtx<'a> {
@@ -95,7 +113,43 @@ impl<'a> PlanCtx<'a> {
             preempt_cost: None,
             now: 0.0,
             objective: None,
+            node_alive: vec![true; cluster.nodes.len()],
+            node_rate: vec![1.0; cluster.nodes.len()],
+            relocate_cost: 0.0,
         }
+    }
+
+    /// Per-node *effective* GPU capacities under the availability mask:
+    /// a dead node contributes zero width, so every placement layer that
+    /// consumes these (the delta kernel, `FullScratch`, the masked list
+    /// scheduler) refuses it without any special-casing. Out-of-range
+    /// mask entries default to alive.
+    pub fn node_caps(&self) -> Vec<usize> {
+        self.cluster
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, n)| if self.node_is_alive(i) { n.gpus } else { 0 })
+            .collect()
+    }
+
+    /// Whether node `ni` may host new gangs. Indices the mask does not
+    /// cover default to alive (the fixed-cluster behavior).
+    pub fn node_is_alive(&self, ni: usize) -> bool {
+        self.node_alive.get(ni).copied().unwrap_or(true)
+    }
+
+    /// Largest *live* per-node GPU count (bounds feasible gang sizes
+    /// during an outage; 0 when every node is dead).
+    pub fn max_live_gpus_per_node(&self) -> usize {
+        self.cluster
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| self.node_is_alive(*i))
+            .map(|(_, n)| n.gpus)
+            .max()
+            .unwrap_or(0)
     }
 
     /// Indices of tasks with work left that have arrived.
@@ -333,6 +387,25 @@ mod tests {
         // node 3 (8 GPUs) should get ~2× node 2 (4 GPUs) and ~4× node 0
         assert!(counts[3] > counts[2]);
         assert!(counts[2] > counts[0] + counts[0] / 2);
+    }
+
+    #[test]
+    fn fresh_ctx_chaos_defaults_are_inert() {
+        let (w, grid, _) = setup();
+        let c = Cluster::heterogeneous_16gpu(); // 2,2,4,8
+        let mut ctx = PlanCtx::fresh(&w, &grid, &c);
+        assert_eq!(ctx.node_alive, vec![true; 4]);
+        assert_eq!(ctx.node_rate, vec![1.0; 4]);
+        assert_eq!(ctx.relocate_cost, 0.0);
+        assert_eq!(ctx.node_caps(), vec![2, 2, 4, 8]);
+        assert_eq!(ctx.max_live_gpus_per_node(), 8);
+        assert!(ctx.node_is_alive(99), "out-of-range defaults to alive");
+        // kill the wide node: caps zero out, the live frontier shrinks
+        ctx.node_alive[3] = false;
+        assert_eq!(ctx.node_caps(), vec![2, 2, 4, 0]);
+        assert_eq!(ctx.max_live_gpus_per_node(), 4);
+        ctx.node_alive = vec![false; 4];
+        assert_eq!(ctx.max_live_gpus_per_node(), 0);
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! and generic grid / random search constructors.
 
 use super::{HParams, Optimizer, Task, Workload};
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, ClusterEvent, TimedClusterEvent};
 use crate::costmodel::{Knobs, ParallelismKind};
 use crate::model::ModelDesc;
 use crate::profiler::TaskConfig;
@@ -266,6 +266,167 @@ pub fn flow_burst_instance() -> (Workload, crate::profiler::ProfileGrid, Cluster
     (w, grid, Cluster::from_gpu_counts(&[2]))
 }
 
+/// The canonical **blocked-failure** chaos instance: task 0 has the
+/// diminishing-returns frontier (1 GPU → 3000 s, 2 → 1600 s, 4 → 1150 s,
+/// 8 → 1000 s), is alone at t = 0 on a `[8, 2]`-GPU cluster (so a solver
+/// grabs all 8 GPUs of node 0 — no other node fits the gang), and four
+/// 1-GPU 500 s jobs land at t = 100 s and fill node 1 two at a time.
+/// With [`failure_recovery_events`] node 0 crashes at t = 600 s: the gang
+/// loses the 500 s it ran since the t = 100 checkpoint, relocates to
+/// node 1 at 2 GPUs behind the two remaining shorts (mean-turnaround
+/// order), and the whole stream finishes at 2570 s with mean turnaround
+/// 1114 s — strictly better than the [`failure_wait_baseline_events`]
+/// wait-for-recovery alternative (3000 s / 1200 s, up to the 2·10⁻⁶ s of
+/// stall-rate residue). Every task runs exactly 100 minibatches, so the
+/// economics are bit-exact. Used by the simulator chaos acceptance tests
+/// and `examples/chaos_failures.rs`.
+pub fn blocked_failure_instance() -> (Workload, crate::profiler::ProfileGrid, Cluster) {
+    use crate::profiler::{PlanEstimate, ProfileGrid};
+    // dataset 100 examples at batch 1 over 1 epoch → exactly 100 batches
+    let mut w: Workload = (0..5)
+        .map(|id| {
+            Task::new(id, ModelDesc::resnet_200m(), HParams::new(1, 1e-4, 1, Optimizer::Sgd), 100)
+        })
+        .collect();
+    for t in w.iter_mut().skip(1) {
+        t.arrival = 100.0;
+    }
+    let mut grid = ProfileGrid::default();
+    let mut put = |id: usize, gpus: usize, secs: f64| {
+        grid.insert(PlanEstimate {
+            task_id: id,
+            upp: "pytorch-ddp".into(),
+            kind: ParallelismKind::Ddp,
+            gpus,
+            knobs: Knobs::default(),
+            minibatch_secs: secs / 100.0,
+            mem_per_gpu_gib: 1.0,
+            dram_gib: 1.0,
+        });
+    };
+    for &(g, secs) in &[(1usize, 3000.0), (2, 1600.0), (4, 1150.0), (8, 1000.0)] {
+        put(0, g, secs);
+    }
+    for id in 1..5 {
+        put(id, 1, 500.0);
+    }
+    (w, grid, Cluster::from_gpu_counts(&[8, 2]))
+}
+
+// ---- chaos event traces ----------------------------------------------------
+//
+// Capacity events for `SimConfig::chaos`: hand-built recovery scenarios
+// for the acceptance tests plus generators for failure studies. All
+// randomness comes from the caller's `DetRng` — traces are reproducible
+// by seed, like every arrival helper above.
+
+/// The treatment arm of the blocked-failure scenario: node 0 crashes at
+/// t = 600 s and is repaired at t = 2600 s. Paired with
+/// [`blocked_failure_instance`]; the relocation finishes at 2570 s,
+/// before the repair even lands.
+pub fn failure_recovery_events() -> Vec<TimedClusterEvent> {
+    vec![
+        TimedClusterEvent { at: 600.0, event: ClusterEvent::NodeFail { node: 0 } },
+        TimedClusterEvent { at: 2600.0, event: ClusterEvent::NodeJoin { node: 0 } },
+    ]
+}
+
+/// The control arm: instead of crashing, node 0 stalls (slowdown to a
+/// ~10⁻⁹ rate) over the same `[600, 2600]` window — the "wait for the
+/// node to come back" strategy a re-plan-free scheduler is stuck with.
+/// No work is lost and nothing relocates, but the gang's remaining 400 s
+/// resume only at t = 2600 s, so the stream ends at 3000 s (minus the
+/// ~2·10⁻⁶ s the stalled node crawls through).
+pub fn failure_wait_baseline_events() -> Vec<TimedClusterEvent> {
+    vec![
+        TimedClusterEvent { at: 600.0, event: ClusterEvent::SlowdownStart { node: 0, rate: 1e-9 } },
+        TimedClusterEvent { at: 2600.0, event: ClusterEvent::SlowdownEnd { node: 0 } },
+    ]
+}
+
+/// Poisson node-failure trace: each node independently fails with
+/// exponential mean-time-between-failures `mtbf_secs` and rejoins
+/// `repair_secs` later, repeating over `[0, horizon_secs)`. Events are
+/// returned sorted by time (stable across platforms: node-major
+/// generation, then a total-order sort by timestamp).
+pub fn poisson_failure_events(
+    n_nodes: usize,
+    horizon_secs: f64,
+    mtbf_secs: f64,
+    repair_secs: f64,
+    rng: &mut DetRng,
+) -> Vec<TimedClusterEvent> {
+    assert!(mtbf_secs > 0.0, "mean time between failures must be positive");
+    assert!(repair_secs >= 0.0, "repair time must be non-negative");
+    let mut events = Vec::new();
+    for node in 0..n_nodes {
+        let mut t = 0.0;
+        loop {
+            // inverse-CDF exponential gap; 1 - u ∈ (0, 1] keeps ln finite
+            t += -mtbf_secs * (1.0 - rng.f64()).ln();
+            if t >= horizon_secs {
+                break;
+            }
+            events.push(TimedClusterEvent { at: t, event: ClusterEvent::NodeFail { node } });
+            t += repair_secs;
+            events.push(TimedClusterEvent { at: t, event: ClusterEvent::NodeJoin { node } });
+        }
+    }
+    events.sort_by(|a, b| a.at.total_cmp(&b.at));
+    events
+}
+
+/// Correlated rack loss: every node in `rack` crashes at `at` and rejoins
+/// together `outage_secs` later — the switch/power-domain failure mode
+/// where independence assumptions break.
+pub fn rack_failure_events(rack: &[usize], at: f64, outage_secs: f64) -> Vec<TimedClusterEvent> {
+    assert!(outage_secs >= 0.0, "outage must be non-negative");
+    let mut events = Vec::new();
+    for &node in rack {
+        events.push(TimedClusterEvent { at, event: ClusterEvent::NodeFail { node } });
+        events.push(TimedClusterEvent { at: at + outage_secs, event: ClusterEvent::NodeJoin { node } });
+    }
+    events
+}
+
+/// Spot/elastic churn: `node` is reclaimed (graceful leave with
+/// `grace_secs` of drain warning — the cloud's two-minute notice) every
+/// `period_secs`, staying gone for `downtime_secs` before rejoining,
+/// repeating over `[first_leave_at, horizon_secs)`.
+pub fn spot_churn_events(
+    node: usize,
+    first_leave_at: f64,
+    period_secs: f64,
+    grace_secs: f64,
+    downtime_secs: f64,
+    horizon_secs: f64,
+) -> Vec<TimedClusterEvent> {
+    assert!(period_secs > 0.0, "churn period must be positive");
+    let mut events = Vec::new();
+    let mut t = first_leave_at;
+    while t < horizon_secs {
+        events.push(TimedClusterEvent {
+            at: t,
+            event: ClusterEvent::NodeLeave { node, grace: grace_secs },
+        });
+        events.push(TimedClusterEvent {
+            at: t + grace_secs + downtime_secs,
+            event: ClusterEvent::NodeJoin { node },
+        });
+        t += period_secs;
+    }
+    events
+}
+
+/// Straggler onset: `node` degrades to `rate` (e.g. 0.5 = half speed) at
+/// `at` and recovers `duration_secs` later.
+pub fn straggler_events(node: usize, at: f64, rate: f64, duration_secs: f64) -> Vec<TimedClusterEvent> {
+    vec![
+        TimedClusterEvent { at, event: ClusterEvent::SlowdownStart { node, rate } },
+        TimedClusterEvent { at: at + duration_secs, event: ClusterEvent::SlowdownEnd { node } },
+    ]
+}
+
 // ---- solver scaling workloads ---------------------------------------------
 //
 // The delta-kernel scale pass (EXPERIMENTS.md §Perf) needs SPASE instances
@@ -493,6 +654,69 @@ mod tests {
             assert_eq!(cfgs.len(), 1);
             assert_eq!((cfgs[0].gpus, cfgs[0].task_secs), (1, 100.0));
         }
+    }
+
+    #[test]
+    fn blocked_failure_instance_exact_economics() {
+        let (w, grid, c) = blocked_failure_instance();
+        assert_eq!(w.len(), 5);
+        assert_eq!(c.nodes.len(), 2);
+        assert_eq!(c.total_gpus(), 10);
+        assert_eq!(c.nodes[0].gpus, 8, "only node 0 fits the 8-GPU gang");
+        assert_eq!(w[0].arrival, 0.0);
+        assert!(w[1..].iter().all(|t| t.arrival == 100.0));
+        let secs: Vec<(usize, f64)> =
+            grid.configs(&w[0]).iter().map(|cfg| (cfg.gpus, cfg.task_secs)).collect();
+        assert_eq!(secs, vec![(1, 3000.0), (2, 1600.0), (4, 1150.0), (8, 1000.0)]);
+        for t in &w[1..] {
+            let cfgs = grid.configs(t);
+            assert_eq!(cfgs.len(), 1);
+            assert_eq!((cfgs[0].gpus, cfgs[0].task_secs), (1, 500.0));
+        }
+        // the paired event traces target node 0 over [600, 2600]
+        let fail = failure_recovery_events();
+        assert_eq!(fail.len(), 2);
+        assert_eq!(fail[0].event, ClusterEvent::NodeFail { node: 0 });
+        assert_eq!((fail[0].at, fail[1].at), (600.0, 2600.0));
+        let wait = failure_wait_baseline_events();
+        assert_eq!(wait[0].event, ClusterEvent::SlowdownStart { node: 0, rate: 1e-9 });
+        assert_eq!((wait[0].at, wait[1].at), (600.0, 2600.0));
+    }
+
+    #[test]
+    fn poisson_failures_pair_and_sort() {
+        let mut rng = DetRng::new(13);
+        let ev = poisson_failure_events(4, 50_000.0, 8_000.0, 600.0, &mut rng);
+        assert!(!ev.is_empty());
+        for pair in ev.windows(2) {
+            assert!(pair[1].at >= pair[0].at, "events must be time-sorted");
+        }
+        // every fail has a matching later join on the same node
+        let fails = ev.iter().filter(|e| matches!(e.event, ClusterEvent::NodeFail { .. })).count();
+        let joins = ev.iter().filter(|e| matches!(e.event, ClusterEvent::NodeJoin { .. })).count();
+        assert_eq!(fails, joins);
+        // deterministic by seed
+        let mut rng2 = DetRng::new(13);
+        let ev2 = poisson_failure_events(4, 50_000.0, 8_000.0, 600.0, &mut rng2);
+        assert_eq!(ev.len(), ev2.len());
+        assert!(ev.iter().zip(&ev2).all(|(a, b)| a.at == b.at && a.event == b.event));
+    }
+
+    #[test]
+    fn rack_spot_and_straggler_traces_shape() {
+        let rack = rack_failure_events(&[1, 2], 1000.0, 300.0);
+        assert_eq!(rack.len(), 4);
+        assert!(rack
+            .iter()
+            .filter(|e| matches!(e.event, ClusterEvent::NodeJoin { .. }))
+            .all(|e| e.at == 1300.0));
+        let spot = spot_churn_events(3, 500.0, 4000.0, 120.0, 900.0, 9000.0);
+        assert_eq!(spot.len(), 6, "three reclaim cycles, leave+join each");
+        assert!(matches!(spot[0].event, ClusterEvent::NodeLeave { node: 3, grace } if grace == 120.0));
+        assert_eq!(spot[1].at, 500.0 + 120.0 + 900.0);
+        let strag = straggler_events(0, 250.0, 0.5, 1000.0);
+        assert_eq!(strag[1].at, 1250.0);
+        assert_eq!(strag[1].event, ClusterEvent::SlowdownEnd { node: 0 });
     }
 
     #[test]

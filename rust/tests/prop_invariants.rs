@@ -789,6 +789,199 @@ fn prop_objective_thread_count_preserves_trajectory() {
     }
 }
 
+/// Chaos safety: a node that dies and never recovers hosts no new work.
+/// For random instances with a mid-stream crash (and a dead-at-start
+/// crash), no busy span on the failed node may begin after the failure
+/// time, the failure is counted exactly once, and the whole run is
+/// byte-identical when repeated.
+#[test]
+fn prop_chaos_no_work_starts_on_dead_node() {
+    use saturn::cluster::{ClusterEvent, TimedClusterEvent};
+    let registry = UppRegistry::default_library(Arc::new(CostModel::default()));
+    let mut rng = DetRng::new(1212);
+    let mut checked = 0;
+    for case in 0..10 {
+        let mut crng = rng.fork(case);
+        let mut w = random_workload(&mut crng);
+        let c = random_cluster(&mut crng);
+        if c.nodes.len() < 2 {
+            continue; // a surviving node keeps the stream observable
+        }
+        let (grid, _) = TrialRunner::new(registry.clone()).profile(&w, &c);
+        if w.iter().any(|t| grid.configs(t).is_empty()) {
+            continue;
+        }
+        let mut t_arr = 0.0;
+        for t in w.iter_mut() {
+            t.arrival = t_arr;
+            t_arr += crng.range_f64(50.0, 1500.0);
+        }
+        let dead = crng.below(c.nodes.len());
+        let fail_at = crng.range_f64(1.0, 2000.0);
+        let cfg = SimConfig {
+            noise_sigma: 0.05,
+            chaos: vec![TimedClusterEvent {
+                at: fail_at,
+                event: ClusterEvent::NodeFail { node: dead },
+            }],
+            ..SimConfig::default()
+        };
+        let policy = JointOptimizer {
+            timeout: std::time::Duration::from_secs(120),
+            incremental: true,
+            ..Default::default()
+        };
+        let r = simulate(&policy, &w, &grid, &c, cfg.clone(), &mut crng.fork(3));
+        // trailing events after the stream drains are ignored by design,
+        // so the crash only counts when the run was still alive to see it
+        assert!(r.failures <= 1, "case {case}: a single crash cannot count twice");
+        if r.capacity_trace.iter().any(|&(at, _)| at > 0.0) {
+            assert_eq!(r.failures, 1, "case {case}: one live-node crash, one failure");
+        }
+        for s in &r.spans {
+            assert!(
+                s.node != dead || s.start <= fail_at + 1e-6,
+                "case {case}: span {s:?} started on node {dead} after it died at {fail_at}"
+            );
+        }
+        for t in &w {
+            if let Some((_, s)) = r.starts.iter().find(|(id, _)| *id == t.id) {
+                assert!(*s >= t.arrival - 1e-6, "case {case}: task {} jumped arrival", t.id);
+            }
+        }
+        // capacity trace opens at full capacity and is time-ordered
+        assert_eq!(r.capacity_trace.first(), Some(&(0.0, c.total_gpus())));
+        for pair in r.capacity_trace.windows(2) {
+            assert!(pair[0].0 < pair[1].0, "case {case}: trace not time-ordered");
+        }
+        let r2 = simulate(&policy, &w, &grid, &c, cfg, &mut crng.fork(3));
+        assert_eq!(r, r2, "case {case}: chaos simulation must be byte-identical");
+        checked += 1;
+    }
+    assert!(checked >= 4, "too few chaos cases: {checked}");
+}
+
+/// Chaos churn accounting: relocations are exactly the in-flight gangs an
+/// accepted chaos re-plan moved, so they can never exceed preemptions,
+/// which can never exceed switches; lost work is non-negative and zero
+/// without a crash; and a crash-free event stream (graceful drain) loses
+/// nothing. Verified on the hand-built blocked-failure instance where the
+/// economics are pinned, across seeds.
+#[test]
+fn prop_chaos_relocation_pays_churn() {
+    use saturn::metrics::online_stats;
+    use saturn::trainer::workloads;
+    let (w, grid, c) = workloads::blocked_failure_instance();
+    for seed in [5u64, 99, 1234] {
+        let policy = JointOptimizer {
+            timeout: std::time::Duration::from_secs(120),
+            incremental: true,
+            ..Default::default()
+        };
+        let cfg = SimConfig {
+            noise_sigma: 0.0,
+            switch_cost: 30.0,
+            objective: saturn::solver::Objective::MeanTurnaround,
+            chaos: workloads::failure_recovery_events(),
+            ..SimConfig::default()
+        };
+        let r = simulate(&policy, &w, &grid, &c, cfg, &mut DetRng::new(seed));
+        assert_eq!(r.completions.len(), w.len(), "seed {seed}: survivors finish");
+        assert!(r.relocations <= r.preemptions, "seed {seed}");
+        assert!(r.preemptions <= r.switches, "seed {seed}");
+        assert_eq!(r.failures, 1, "seed {seed}");
+        assert!(r.relocations >= 1, "seed {seed}: the stranded gang must relocate");
+        assert!(r.lost_work_secs > 0.0, "seed {seed}: a mid-segment crash loses work");
+        assert!(r.time_to_recover >= 0.0, "seed {seed}");
+        // the relocation pays: the stats mirror the simulator's accounting
+        let stats = online_stats(&w, &r);
+        assert_eq!(stats.relocations, r.relocations, "seed {seed}");
+        assert_eq!(stats.failures, r.failures, "seed {seed}");
+        assert_eq!(stats.lost_work_secs, r.lost_work_secs, "seed {seed}");
+        // graceful drain: same capacity loss with notice loses nothing
+        let drain = SimConfig {
+            noise_sigma: 0.0,
+            switch_cost: 30.0,
+            objective: saturn::solver::Objective::MeanTurnaround,
+            chaos: workloads::spot_churn_events(0, 600.0, 1e9, 100.0, 0.0, 1e9),
+            ..SimConfig::default()
+        };
+        let policy2 = JointOptimizer {
+            timeout: std::time::Duration::from_secs(120),
+            incremental: true,
+            ..Default::default()
+        };
+        let d = simulate(&policy2, &w, &grid, &c, drain, &mut DetRng::new(seed));
+        assert_eq!(d.failures, 0, "seed {seed}: a drain is not a crash");
+        assert_eq!(d.lost_work_secs, 0.0, "seed {seed}: drained work is never lost");
+    }
+}
+
+/// The determinism contracts under chaos (run explicitly in release by CI
+/// alongside the other parity jobs): with every event type in one stream
+/// — crash, repair join, graceful leave with drain grace, straggler
+/// slowdown and recovery — the simulation must be bit-identical through
+/// the delta kernel and the full-replay evaluator, and across 1 vs 8
+/// solver worker threads. Budgets are un-truncatable so wall-clock cannot
+/// fork the trajectories.
+#[test]
+fn prop_chaos_delta_full_replay_and_thread_parity() {
+    use saturn::cluster::{ClusterEvent, TimedClusterEvent};
+    let registry = UppRegistry::default_library(Arc::new(CostModel::default()));
+    let mut rng = DetRng::new(1313);
+    let mut checked = 0;
+    for case in 0..10 {
+        if checked >= 3 {
+            break; // enough evidence; keep debug-build runtime bounded
+        }
+        let mut crng = rng.fork(case);
+        let mut w = random_workload(&mut crng);
+        let c = random_cluster(&mut crng);
+        if c.nodes.len() < 2 {
+            continue;
+        }
+        let (grid, _) = TrialRunner::new(registry.clone()).profile(&w, &c);
+        if w.iter().any(|t| grid.configs(t).is_empty()) {
+            continue;
+        }
+        let mut t_arr = 0.0;
+        for t in w.iter_mut() {
+            t.arrival = t_arr;
+            t_arr += crng.range_f64(100.0, 2000.0);
+        }
+        let a = crng.below(c.nodes.len());
+        let b = crng.below(c.nodes.len());
+        let chaos = vec![
+            TimedClusterEvent { at: 400.0, event: ClusterEvent::SlowdownStart { node: b, rate: 0.5 } },
+            TimedClusterEvent { at: 900.0, event: ClusterEvent::NodeFail { node: a } },
+            TimedClusterEvent { at: 1600.0, event: ClusterEvent::SlowdownEnd { node: b } },
+            TimedClusterEvent { at: 2200.0, event: ClusterEvent::NodeJoin { node: a } },
+            TimedClusterEvent { at: 3000.0, event: ClusterEvent::NodeLeave { node: b, grace: 250.0 } },
+            TimedClusterEvent { at: 5000.0, event: ClusterEvent::NodeJoin { node: b } },
+        ];
+        let cfg = SimConfig {
+            noise_sigma: 0.05,
+            introspect: Some(IntrospectCfg { interval: 700.0, threshold: 150.0 }),
+            chaos,
+            ..SimConfig::default()
+        };
+        let mk = |threads: usize, full_replay: bool| JointOptimizer {
+            timeout: std::time::Duration::from_secs(3600),
+            incremental: true,
+            threads,
+            full_replay,
+            ..Default::default()
+        };
+        let base = simulate(&mk(1, false), &w, &grid, &c, cfg.clone(), &mut crng.fork(5));
+        let full = simulate(&mk(1, true), &w, &grid, &c, cfg.clone(), &mut crng.fork(5));
+        assert_eq!(base, full, "case {case}: delta vs full replay diverged under chaos");
+        let t8 = simulate(&mk(8, false), &w, &grid, &c, cfg, &mut crng.fork(5));
+        assert_eq!(base, t8, "case {case}: thread count forked the chaos trajectory");
+        checked += 1;
+    }
+    assert!(checked >= 2, "too few chaos parity cases: {checked}");
+}
+
 /// The Optimus allocator never exceeds its budget and never starves a
 /// task below one GPU.
 #[test]

@@ -1,0 +1,480 @@
+#!/usr/bin/env python3
+"""Cross-validation of the blocked-failure chaos fixture economics.
+
+Transliterates the simulator mechanics that produce the numbers pinned in
+`rust/src/sim/mod.rs`'s chaos tests and `rust/src/trainer/workloads.rs`'s
+`blocked_failure_instance`: the masked gang list scheduler, the
+replay/commit loop, checkpoint rollback with lost-work accounting, the
+chaos re-plan acceptance rule (score threshold + the more-tasks
+relaxation), and the time-varying utilization integral. Planner *search*
+is not transliterated — on this fixture every decision is forced (pinned
+gangs may not move while their node lives, a dead node unpins, and the
+1-GPU shorts have a single configuration), so the planner is a small
+decision table; everything downstream of it is computed with the same
+IEEE-754 arithmetic as the Rust code.
+
+Run: python3 scripts/validate_chaos_fixture.py  (exits non-zero on any
+mismatch with the pinned expectations).
+"""
+
+import math
+
+# ---------------------------------------------------------------- fixture
+
+# task 0: an 8-GPU-preferring gang; frontier (gpus -> full-task seconds)
+GANG_FRONTIER = {1: 3000.0, 2: 1600.0, 4: 1150.0, 8: 1000.0}
+SHORT_SECS = 500.0
+ARRIVALS = {0: 0.0, 1: 100.0, 2: 100.0, 3: 100.0, 4: 100.0}
+NODE_GPUS = [8, 2]
+SWITCH_COST = 30.0
+
+
+def full_est(task_id, gpus):
+    if task_id == 0:
+        return GANG_FRONTIER[gpus]
+    assert gpus == 1
+    return SHORT_SECS
+
+
+# ------------------------------------------------- masked list scheduler
+
+def list_schedule_masked(choices, node_gpus, caps, rates):
+    """rust/src/sched/mod.rs::list_schedule_masked.
+
+    choices: list of dicts {task_id, duration, gpus, node(None|int)}.
+    Returns (assignments, skipped); assignment = dict with task_id, node,
+    gpus, start, duration (rate-stretched), end.
+    """
+    free = []
+    for i, n in enumerate(node_gpus):
+        cap = min(caps[i] if i < len(caps) else n, n)
+        free.append([(0.0, j) for j in range(cap)])
+    assignments, skipped = [], []
+    for c in choices:
+        g = c["gpus"]
+        cand = [c["node"]] if c["node"] is not None else list(range(len(node_gpus)))
+        best = None
+        for ni in cand:
+            if ni >= len(free) or len(free[ni]) < g or g == 0:
+                continue
+            start = free[ni][g - 1][0]
+            if best is None or start < best[1]:
+                best = (ni, start)
+        if best is None:
+            skipped.append(c["task_id"])
+            continue
+        ni, start = best
+        rate = rates[ni] if ni < len(rates) else 1.0
+        if not (math.isfinite(rate) and rate > 0.0):
+            rate = 1.0
+        duration = c["duration"] / rate
+        end = start + duration
+        gang = free[ni][:g]
+        free[ni] = sorted(free[ni][g:] + [(end, idx) for (_, idx) in gang],
+                          key=lambda e: (e[0], e[1]))
+        assignments.append({"task_id": c["task_id"], "node": ni, "gpus": g,
+                            "start": start, "duration": duration, "end": end})
+    return assignments, skipped
+
+
+def makespan(assignments):
+    return max((a["end"] for a in assignments), default=0.0)
+
+
+def score_mean_turnaround(assignments, now):
+    """Objective::MeanTurnaround via score_schedule (empty -> 0.0)."""
+    if not assignments:
+        return 0.0
+    tot = sum(max(now - ARRIVALS[a["task_id"]], 0.0) + a["end"] for a in assignments)
+    return tot / len(assignments)
+
+
+# ------------------------------------------------------------ replay/commit
+
+def replay(plan, states, caps, rates):
+    """rust/src/sim/mod.rs::replay_into: actual remaining durations."""
+    buf = []
+    for c in plan:
+        st = states[c["task_id"]]
+        if st["remaining"] <= 1e-12:
+            continue
+        actual = full_est(c["task_id"], c["gpus"]) * st["remaining"] * st["noise"] + st["penalty"]
+        buf.append({"task_id": c["task_id"], "duration": actual,
+                    "gpus": c["gpus"], "node": c["node"]})
+    return list_schedule_masked(buf, NODE_GPUS, caps, rates)[0]
+
+
+def commit(trace, horizon, now, states, started, result):
+    """rust/src/sim/mod.rs::commit_segment, bit for bit."""
+    for a in trace:
+        if a["start"] >= horizon:
+            continue
+        end = min(a["end"], horizon)
+        ran = end - a["start"]
+        if ran <= 0.0:
+            continue
+        started.add(a["task_id"])
+        result["spans"].append((a["task_id"], a["node"], a["gpus"],
+                                now + a["start"], now + end))
+        st = states[a["task_id"]]
+        work_dur = max(a["duration"] - st["penalty"], 1e-12)
+        effective = ran
+        if st["penalty"] > 0.0:
+            burn = min(st["penalty"], effective)
+            st["penalty"] -= burn
+            effective -= burn
+        progress = st["remaining"] * min(effective / work_dur, 1.0)
+        st["remaining"] = max(st["remaining"] - progress, 0.0)
+        if a["end"] <= horizon:
+            st["remaining"] = 0.0
+            st["penalty"] = 0.0
+            result["completions"][a["task_id"]] = now + a["end"]
+
+
+def mark_switches(old, new, states, started):
+    """rust/src/sim/mod.rs::mark_switches on what-if state copies."""
+    old_by_id = {}
+    for o in old:
+        old_by_id.setdefault(o["task_id"], o)
+    switched = preempted = 0
+    for c in new:
+        p = old_by_id.get(c["task_id"])
+        changed = p is not None and (p["gpus"] != c["gpus"] or p["node"] != c["node"])
+        if changed:
+            states[c["task_id"]]["penalty"] += SWITCH_COST
+            if c["task_id"] in started:
+                preempted += 1
+            switched += 1
+    return switched, preempted
+
+
+def chaos_replan(proposal, plan, states, started, now, caps, rates,
+                 threshold, fail_event, result):
+    """rust/src/sim/mod.rs::chaos_replan acceptance, transliterated."""
+    keep = [c for c in plan if states[c["task_id"]]["remaining"] > 1e-12]
+    switch_states = {t: dict(s) for t, s in states.items()}
+    switched, preempted = mark_switches(keep, proposal, switch_states, started)
+    prop_sched = replay(proposal, switch_states, caps, rates)
+    prop_ms = score_mean_turnaround(prop_sched, now)
+    keep_sched = replay(keep, states, caps, rates)
+    keep_ms = score_mean_turnaround(keep_sched, now)
+    accept = (prop_ms <= keep_ms - threshold
+              or len(prop_sched) > len(keep_sched)
+              or not keep)
+    if accept:
+        plan[:] = proposal
+        for t in states:
+            states[t] = switch_states[t]
+        result["switches"] += switched
+        result["preemptions"] += preempted
+        result["relocations"] += preempted
+        adopted = prop_sched
+    else:
+        plan[:] = keep
+        adopted = keep_sched
+    if fail_event:
+        ttr = max((a["start"] for a in adopted), default=0.0)
+        result["time_to_recover"] = max(result["time_to_recover"], ttr)
+    return accept
+
+
+# -------------------------------------------------------------- sim driver
+
+def fresh_states(task_ids):
+    return {t: {"remaining": 1.0, "noise": 1.0, "penalty": 0.0} for t in task_ids}
+
+
+def capacity_gpu_secs(trace, total, lo, hi):
+    """SimResult::capacity_gpu_secs: integral of capacity over [lo, hi)."""
+    if not trace:
+        return total * (hi - lo)
+    acc = 0.0
+    first_at = trace[0][0]
+    if lo < first_at:
+        acc += trace[0][1] * (min(first_at, hi) - lo)
+    for i, (at, cap) in enumerate(trace):
+        seg_lo = max(at, lo)
+        seg_hi = min(trace[i + 1][0] if i + 1 < len(trace) else hi, hi)
+        if seg_hi > seg_lo:
+            acc += cap * (seg_hi - seg_lo)
+    return acc
+
+
+def run_scenario(events, planner, task_ids, threshold=0.0):
+    """The sim loop of simulate_with_controller, specialized to the
+    fixture (no noise, no introspection rounds unless `threshold` pins),
+    with `events` the desugared chaos op stream: (at, kind, node, arg)
+    where kind in {fail, join, plan_dead, exec_gone, slow_start, slow_end}.
+    `planner(now, states, plan_alive, started)` returns the proposal
+    choice list (the decision table standing in for the annealer).
+    """
+    states = fresh_states(task_ids)
+    result = {"spans": [], "completions": {}, "switches": 0, "preemptions": 0,
+              "relocations": 0, "failures": 0, "lost_work_secs": 0.0,
+              "time_to_recover": 0.0, "capacity_trace": [], "makespan": 0.0}
+    plan_alive = [True] * len(NODE_GPUS)
+    exec_alive = [True] * len(NODE_GPUS)
+    rate = [1.0] * len(NODE_GPUS)
+    ops = sorted([e for e in events if math.isfinite(e[0]) and e[2] < len(NODE_GPUS)],
+                 key=lambda e: e[0])
+    next_op = 0
+
+    def exec_caps():
+        return [g if exec_alive[i] else 0 for i, g in enumerate(NODE_GPUS)]
+
+    def advance(now):
+        nonlocal next_op
+        failed, applied = [], 0
+        while next_op < len(ops) and ops[next_op][0] <= now + 1e-9:
+            at, kind, node, arg = ops[next_op]
+            next_op += 1
+            applied += 1
+            if kind == "fail":
+                if exec_alive[node]:
+                    failed.append(node)
+                plan_alive[node] = exec_alive[node] = False
+            elif kind == "join":
+                plan_alive[node] = exec_alive[node] = True
+                rate[node] = 1.0
+            elif kind == "plan_dead":
+                plan_alive[node] = False
+            elif kind == "exec_gone":
+                if not plan_alive[node]:
+                    exec_alive[node] = False
+            elif kind == "slow_start":
+                rate[node] = arg
+            elif kind == "slow_end":
+                rate[node] = 1.0
+        return failed, applied
+
+    def next_at():
+        return ops[next_op][0] if next_op < len(ops) else math.inf
+
+    now = 0.0
+    advance(now)
+    if ops:
+        result["capacity_trace"].append((0.0, sum(exec_caps())))
+    caps, rates = exec_caps(), list(rate)
+    ckpt = {t: states[t]["remaining"] for t in task_ids}
+    started = set()
+    injected = {t for t in task_ids if ARRIVALS[t] <= now + 1e-9}
+    plan = planner(now, states, plan_alive, started)
+
+    while True:
+        trace = replay(plan, states, caps, rates)
+        seg_ms = makespan(trace)
+        pending = [ARRIVALS[t] for t in task_ids if t not in injected]
+        next_arrival = min(pending) if pending else math.inf
+        arr_h = max(next_arrival - now, 0.0) if math.isfinite(next_arrival) else math.inf
+        chaos_h = max(next_at() - now, 0.0)
+        horizon = min(arr_h, chaos_h)
+
+        if seg_ms <= horizon:
+            commit(trace, math.inf, now, states, started, result)
+            for t in task_ids:
+                ckpt[t] = states[t]["remaining"]
+            work_left = any(states[t]["remaining"] > 1e-12 for t in task_ids)
+            if not math.isfinite(next_arrival) and not work_left:
+                result["makespan"] = now + seg_ms
+                break
+            t_next = min(next_arrival, next_at())
+            if not math.isfinite(t_next):
+                result["makespan"] = now + seg_ms
+                break
+            now = max(t_next, now + seg_ms)
+            plan = [c for c in plan if states[c["task_id"]]["remaining"] > 1e-12]
+            failed, applied = advance(now)
+            if applied:
+                result["failures"] += len(failed)
+                caps, rates = exec_caps(), list(rate)
+                result["capacity_trace"].append((now, sum(caps)))
+                chaos_replan(planner(now, states, plan_alive, started), plan,
+                             states, started, now, caps, rates, threshold,
+                             bool(failed), result)
+            newly = [t for t in task_ids
+                     if t not in injected and ARRIVALS[t] <= now + 1e-9]
+            injected.update(newly)
+            if newly:
+                arrival_replan(planner, plan, states, started, now, caps,
+                               rates, threshold, plan_alive, result)
+            continue
+
+        commit(trace, horizon, now, states, started, result)
+        now += horizon
+
+        if chaos_h <= arr_h:
+            failed, _ = advance(now)
+            result["failures"] += len(failed)
+            if failed:
+                for a in trace:
+                    if a["start"] < horizon and a["end"] > horizon and a["node"] in failed:
+                        t = a["task_id"]
+                        fe = full_est(t, a["gpus"])
+                        lost = max(ckpt[t] - states[t]["remaining"], 0.0) * fe * states[t]["noise"]
+                        result["lost_work_secs"] += lost
+                        states[t]["remaining"] = ckpt[t]
+            for t in task_ids:
+                ckpt[t] = states[t]["remaining"]
+            caps, rates = exec_caps(), list(rate)
+            result["capacity_trace"].append((now, sum(caps)))
+            chaos_replan(planner(now, states, plan_alive, started), plan, states,
+                         started, now, caps, rates, threshold, bool(failed), result)
+            continue
+
+        for t in task_ids:
+            ckpt[t] = states[t]["remaining"]
+        newly = [t for t in task_ids if t not in injected and ARRIVALS[t] <= now + 1e-9]
+        injected.update(newly)
+        arrival_replan(planner, plan, states, started, now, caps, rates,
+                       threshold, plan_alive, result)
+    return result, states
+
+
+def arrival_replan(planner, plan, states, started, now, caps, rates,
+                   threshold, plan_alive, result):
+    """Arrival acceptance: threshold OR (no switches and no worse)."""
+    proposal = planner(now, states, plan_alive, started)
+    keep = [c for c in plan if states[c["task_id"]]["remaining"] > 1e-12]
+    switch_states = {t: dict(s) for t, s in states.items()}
+    switched, preempted = mark_switches(keep, proposal, switch_states, started)
+    prop_sched = replay(proposal, switch_states, caps, rates)
+    prop_ms = score_mean_turnaround(prop_sched, now)
+    # keep-side: arrivals appended at min-area config (their only config)
+    keep_ids = {c["task_id"] for c in keep}
+    keep_full = keep + [{"task_id": t, "gpus": 1, "node": None}
+                        for t in sorted(states) if t not in keep_ids
+                        and states[t]["remaining"] > 1e-12 and t != 0]
+    keep_sched = replay(keep_full, states, caps, rates)
+    keep_ms = score_mean_turnaround(keep_sched, now)
+    if (prop_ms <= keep_ms - threshold
+            or (switched == 0 and prop_ms <= keep_ms) or not keep_full):
+        plan[:] = proposal
+        for t in states:
+            states[t] = switch_states[t]
+        result["switches"] += switched
+        result["preemptions"] += preempted
+    else:
+        plan[:] = [{"task_id": a["task_id"], "gpus": a["gpus"], "node": a["node"]}
+                   for a in sorted(keep_sched, key=lambda a: (a["start"], a["task_id"]))]
+
+
+# ----------------------------------------------------- planner decision table
+
+def fixture_planner(now, states, plan_alive, started):
+    """What the annealer provably produces on this instance: pinned gangs
+    keep (config, node) while their node is plan-alive; a plan-dead host
+    unpins; shorts have one config, placed earliest-start; mean-turnaround
+    order runs the shorts ahead of the relocated gang."""
+    active = [t for t in sorted(states)
+              if states[t]["remaining"] > 1e-12 and ARRIVALS[t] <= now + 1e-9]
+    live = [i for i, a in enumerate(plan_alive) if a]
+    if not live:
+        return []
+    plan = []
+    shorts = [t for t in active if t != 0]
+    if 0 in active:
+        if plan_alive[0]:
+            # pinned to node 0 at 8 GPUs (or fresh-planned there)
+            plan.append({"task_id": 0, "gpus": 8, "node": 0})
+            plan.extend({"task_id": t, "gpus": 1, "node": 1} for t in shorts)
+        else:
+            # node 0 dead: shorts first, gang shrinks to node 1 @ 2 GPUs
+            plan.extend({"task_id": t, "gpus": 1, "node": 1} for t in shorts)
+            plan.append({"task_id": 0, "gpus": 2, "node": 1})
+    else:
+        plan.extend({"task_id": t, "gpus": 1, "node": 1} for t in shorts)
+    return plan
+
+
+def stranded_planner(now, states, plan_alive, started):
+    if not plan_alive[0] or states[0]["remaining"] <= 1e-12:
+        return []
+    return [{"task_id": 0, "gpus": 8, "node": 0}]
+
+
+# ------------------------------------------------------------------ checks
+
+FAILURES = []
+
+
+def check(name, got, want, tol=0.0):
+    ok = (got == want) if tol == 0.0 else abs(got - want) <= tol
+    tag = "ok  " if ok else "FAIL"
+    print(f"  [{tag}] {name}: got {got!r}" + ("" if ok else f", want {want!r}"))
+    if not ok:
+        FAILURES.append(name)
+
+
+def mean_turnaround(result, task_ids):
+    return sum(result["completions"][t] - ARRIVALS[t] for t in task_ids) / len(task_ids)
+
+
+def busy_gpu_secs(result):
+    return sum((e - s) * g for (_, _, g, s, e) in result["spans"])
+
+
+ALL = [0, 1, 2, 3, 4]
+
+print("treatment: NodeFail(0)@600, NodeJoin(0)@2600")
+res, _ = run_scenario([(600.0, "fail", 0, None), (2600.0, "join", 0, None)],
+                      fixture_planner, ALL)
+check("makespan", res["makespan"], 2570.0, 1e-9)
+check("mean turnaround", mean_turnaround(res, ALL), 1114.0, 1e-9)
+check("failures", res["failures"], 1)
+check("relocations", res["relocations"], 1)
+check("preemptions", res["preemptions"], 1)
+check("lost_work_secs", res["lost_work_secs"], 500.0, 1e-9)
+check("time_to_recover", res["time_to_recover"], 500.0, 1e-9)
+check("capacity_trace", res["capacity_trace"], [(0.0, 10), (600.0, 2)])
+busy = busy_gpu_secs(res)
+check("busy gpu-secs", busy, 9740.0, 1e-9)
+cap = capacity_gpu_secs(res["capacity_trace"], 10, 0.0, res["makespan"])
+check("capacity gpu-secs", cap, 9940.0, 1e-9)
+check("avg_utilization", busy / cap, 9740.0 / 9940.0, 1e-12)
+check("static-denominator util < 0.5", busy / (res["makespan"] * 10.0) < 0.5, True)
+treat = res
+
+print("baseline: SlowdownStart(0,1e-9)@600, SlowdownEnd(0)@2600, threshold 1e18")
+res, _ = run_scenario([(600.0, "slow_start", 0, 1e-9), (2600.0, "slow_end", 0, None)],
+                      fixture_planner, ALL, threshold=1e18)
+check("makespan", res["makespan"], 3000.0, 1e-3)
+check("makespan < 3000", res["makespan"] < 3000.0 + 1e-9, True)
+check("mean turnaround", mean_turnaround(res, ALL), 1200.0, 1e-3)
+check("failures", res["failures"], 0)
+check("relocations", res["relocations"], 0)
+check("lost_work_secs", res["lost_work_secs"], 0.0)
+check("time_to_recover", res["time_to_recover"], 0.0)
+check("makespan margin >= 429", res["makespan"] - treat["makespan"] >= 429.0, True)
+check("mean margin >= 85",
+      mean_turnaround(res, ALL) - mean_turnaround(treat, ALL) >= 85.0, True)
+
+print("drain: NodeLeave(0, grace 100)@600  (plan-dead@600, exec-gone@700)")
+res, _ = run_scenario([(600.0, "plan_dead", 0, None), (700.0, "exec_gone", 0, None)],
+                      fixture_planner, ALL)
+check("makespan", res["makespan"], 1610.0, 1e-9)
+check("failures", res["failures"], 0)
+check("lost_work_secs", res["lost_work_secs"], 0.0)
+check("relocations", res["relocations"], 1)
+check("time_to_recover", res["time_to_recover"], 0.0)
+check("capacity_trace", res["capacity_trace"], [(0.0, 10), (600.0, 10), (700.0, 2)])
+
+print("stranded: single gang, NodeFail(0)@600 + NodeJoin(0)@2600 on a [8] cluster")
+_saved = NODE_GPUS[:]
+NODE_GPUS[:] = [8]
+res, _ = run_scenario([(600.0, "fail", 0, None), (2600.0, "join", 0, None)],
+                      stranded_planner, [0])
+check("makespan", res["makespan"], 3600.0, 1e-9)
+check("failures", res["failures"], 1)
+check("lost_work_secs", res["lost_work_secs"], 600.0, 1e-9)
+check("relocations", res["relocations"], 0)
+check("completions", len(res["completions"]), 1)
+check("capacity_trace", res["capacity_trace"], [(0.0, 8), (600.0, 0), (2600.0, 8)])
+busy = busy_gpu_secs(res)
+cap = capacity_gpu_secs(res["capacity_trace"], 8, 0.0, res["makespan"])
+check("outage-aware utilization", busy / cap, 1.0, 1e-12)
+NODE_GPUS[:] = _saved
+
+if FAILURES:
+    print(f"\n{len(FAILURES)} mismatch(es): {FAILURES}")
+    raise SystemExit(1)
+print("\nall pinned fixture economics reproduced")
