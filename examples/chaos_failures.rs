@@ -18,7 +18,7 @@
 //!
 //! See EXPERIMENTS.md §Failures for the full table.
 
-use saturn::metrics::{online_stats, write_report};
+use saturn::metrics::{goodput, online_stats, write_report};
 use saturn::sim::{simulate, IntrospectCfg, SimConfig, SimResult};
 use saturn::solver::joint::JointOptimizer;
 use saturn::solver::Objective;
@@ -74,6 +74,7 @@ fn main() {
         "failures",
         "relocations",
         "lost work",
+        "goodput",
         "recovery",
         "avg util",
     ]);
@@ -87,6 +88,7 @@ fn main() {
             format!("{}", r.failures),
             format!("{}", r.relocations),
             format!("{:.0}s", r.lost_work_secs),
+            format!("{:.3}", goodput(r)),
             format!("{:.0}s", r.time_to_recover),
             format!("{:.3}", r.avg_utilization(&cluster)),
         ];
@@ -119,6 +121,13 @@ fn main() {
     assert_eq!(drain.failures, 0, "a drain is not a crash");
     assert_eq!(drain.lost_work_secs, 0.0, "drained work is never lost");
     assert_eq!(drain.relocations, 1, "the drained gang relocates once");
+    // goodput mirrors the lost-work accounting: the crash arm burns
+    // wall-seconds re-earning rolled-back work, the lossless arms don't
+    assert!(goodput(&relocate) < 1.0, "lost work must dent goodput");
+    assert_eq!(goodput(&drain), 1.0, "zero lost work is perfect goodput");
+    assert_eq!(goodput(&wait), 1.0, "waiting loses time, not work");
+    let g = online_stats(&w, &relocate).goodput;
+    assert_eq!(g, goodput(&relocate), "the stats report carries the same goodput");
 
     // the pinned economics: relocating beats waiting the outage out
     let stats = |r: &SimResult| online_stats(&w, r);

@@ -108,6 +108,113 @@ pub struct TimedClusterEvent {
     pub event: ClusterEvent,
 }
 
+/// Per-node reliability model for failure-aware planning: how often the
+/// node gets interrupted (crash or spot reclaim) and how long a restart
+/// takes. Consumed by `solver::risk` as an expected-loss term in the
+/// score and by the simulator's checkpoint-cadence rollback accounting.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeReliability {
+    /// Mean time between failures, seconds. `f64::INFINITY` (or any
+    /// non-finite / non-positive value) means the node never fails.
+    pub mtbf_secs: f64,
+    /// Mean restart/repair delay each failure imposes on interrupted
+    /// work, seconds.
+    pub restart_secs: f64,
+}
+
+impl NodeReliability {
+    /// A reliability model with the given MTBF and restart delay.
+    pub fn new(mtbf_secs: f64, restart_secs: f64) -> Self {
+        Self { mtbf_secs, restart_secs }
+    }
+
+    /// A node that never fails (MTBF ∞, zero restart): contributes no
+    /// expected loss, so plans are identical to the risk-blind ones.
+    pub fn reliable() -> Self {
+        Self { mtbf_secs: f64::INFINITY, restart_secs: 0.0 }
+    }
+
+    /// Failure rate λ = 1/MTBF per second; 0.0 when the MTBF is
+    /// non-finite or non-positive (never fails).
+    pub fn failure_rate(&self) -> f64 {
+        if self.mtbf_secs.is_finite() && self.mtbf_secs > 0.0 {
+            1.0 / self.mtbf_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Estimate per-node reliability from an observed chaos trace over
+/// `[0, horizon]`: every `NodeFail` / `NodeLeave` while the node is up
+/// counts as one interruption, MTBF is uptime ÷ interruptions, and the
+/// restart delay is the mean downtime until the matching `NodeJoin` (or
+/// the horizon). Nodes with no observed interruption report `None` —
+/// no evidence, so the planner stays risk-blind for them (and a trace
+/// with no interruptions anywhere builds no risk model at all).
+/// Non-finite timestamps and out-of-range node indices are skipped, as
+/// the chaos state machine does.
+pub fn estimate_reliability(
+    events: &[TimedClusterEvent],
+    n_nodes: usize,
+    horizon: f64,
+) -> Vec<Option<NodeReliability>> {
+    let node_of = |e: &ClusterEvent| match *e {
+        ClusterEvent::NodeFail { node }
+        | ClusterEvent::NodeJoin { node }
+        | ClusterEvent::NodeLeave { node, .. }
+        | ClusterEvent::SlowdownStart { node, .. }
+        | ClusterEvent::SlowdownEnd { node } => node,
+    };
+    let mut ordered: Vec<&TimedClusterEvent> = events
+        .iter()
+        .filter(|e| e.at.is_finite() && e.at >= 0.0 && e.at <= horizon && node_of(&e.event) < n_nodes)
+        .collect();
+    ordered.sort_by(|a, b| a.at.partial_cmp(&b.at).unwrap_or(std::cmp::Ordering::Equal));
+
+    let mut alive = vec![true; n_nodes];
+    let mut last_change = vec![0.0f64; n_nodes];
+    let mut uptime = vec![0.0f64; n_nodes];
+    let mut downtime = vec![0.0f64; n_nodes];
+    let mut interruptions = vec![0usize; n_nodes];
+    for e in ordered {
+        let n = node_of(&e.event);
+        match e.event {
+            ClusterEvent::NodeFail { .. } | ClusterEvent::NodeLeave { .. } => {
+                if alive[n] {
+                    uptime[n] += e.at - last_change[n];
+                    alive[n] = false;
+                    last_change[n] = e.at;
+                    interruptions[n] += 1;
+                }
+            }
+            ClusterEvent::NodeJoin { .. } => {
+                if !alive[n] {
+                    downtime[n] += e.at - last_change[n];
+                    alive[n] = true;
+                    last_change[n] = e.at;
+                }
+            }
+            ClusterEvent::SlowdownStart { .. } | ClusterEvent::SlowdownEnd { .. } => {}
+        }
+    }
+    (0..n_nodes)
+        .map(|n| {
+            if interruptions[n] == 0 {
+                return None;
+            }
+            let tail = horizon - last_change[n];
+            let (up, down) = if alive[n] {
+                (uptime[n] + tail.max(0.0), downtime[n])
+            } else {
+                (uptime[n], downtime[n] + tail.max(0.0))
+            };
+            let k = interruptions[n] as f64;
+            Some(NodeReliability { mtbf_secs: up / k, restart_secs: down / k })
+        })
+        .collect()
+}
+
 /// A fixed cluster: a list of nodes.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Cluster {
@@ -214,6 +321,51 @@ mod tests {
         assert_eq!(c, d);
         let e = Cluster::heterogeneous_12gpu();
         assert_ne!(c, e);
+    }
+
+    #[test]
+    fn reliability_estimated_from_fail_join_trace() {
+        let ev = |at, event| TimedClusterEvent { at, event };
+        let trace = vec![
+            ev(700.0, ClusterEvent::NodeFail { node: 0 }),
+            ev(900.0, ClusterEvent::NodeJoin { node: 0 }),
+            ev(1600.0, ClusterEvent::NodeFail { node: 0 }),
+            ev(1800.0, ClusterEvent::NodeJoin { node: 0 }),
+            ev(2500.0, ClusterEvent::NodeFail { node: 0 }),
+            ev(2700.0, ClusterEvent::NodeJoin { node: 0 }),
+            // junk: skipped exactly as the chaos state machine would
+            ev(f64::NAN, ClusterEvent::NodeFail { node: 0 }),
+            ev(100.0, ClusterEvent::NodeFail { node: 99 }),
+        ];
+        let est = estimate_reliability(&trace, 2, 3000.0);
+        // uptime 700+700+700+300 = 2400 over 3 interruptions; downtime 3×200
+        let r0 = est[0].expect("node 0 has observed failures");
+        assert!((r0.mtbf_secs - 800.0).abs() < 1e-9);
+        assert!((r0.restart_secs - 200.0).abs() < 1e-9);
+        assert!((r0.failure_rate() - 1.0 / 800.0).abs() < 1e-15);
+        assert_eq!(est[1], None, "no evidence for node 1 stays risk-blind");
+    }
+
+    #[test]
+    fn reliability_counts_graceful_leaves_and_open_outages() {
+        let trace = vec![
+            TimedClusterEvent { at: 600.0, event: ClusterEvent::NodeLeave { node: 0, grace: 100.0 } },
+            TimedClusterEvent { at: 1000.0, event: ClusterEvent::NodeJoin { node: 0 } },
+            TimedClusterEvent { at: 1500.0, event: ClusterEvent::NodeFail { node: 0 } },
+        ];
+        // uptime 600 + 500 over 2 interruptions; downtime 400 + (2000-1500)
+        let est = estimate_reliability(&trace, 1, 2000.0);
+        let r = est[0].expect("two interruptions observed");
+        assert!((r.mtbf_secs - 550.0).abs() < 1e-9);
+        assert!((r.restart_secs - 450.0).abs() < 1e-9);
+        // slowdown-only and empty traces carry no failure evidence
+        let slow = vec![TimedClusterEvent {
+            at: 100.0,
+            event: ClusterEvent::SlowdownStart { node: 0, rate: 0.5 },
+        }];
+        assert_eq!(estimate_reliability(&slow, 1, 2000.0), vec![None]);
+        assert_eq!(estimate_reliability(&[], 1, 2000.0), vec![None]);
+        assert_eq!(NodeReliability::reliable().failure_rate(), 0.0);
     }
 
     #[test]

@@ -12,7 +12,7 @@
 
 #![deny(clippy::unwrap_used, clippy::expect_used)]
 
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, NodeReliability};
 use crate::costmodel::CostModel;
 use crate::parallelism::{Upp, UppRegistry};
 use crate::profiler::{ProfileGrid, TrialRunner};
@@ -37,6 +37,16 @@ pub struct Saturn {
     pub grid: Option<ProfileGrid>,
     /// Simulated profiling overhead (seconds), populated with the grid.
     pub profile_overhead_secs: f64,
+    /// Per-node reliability model for failure-aware planning. Empty (the
+    /// default) keeps every plan risk-blind; install one with
+    /// [`Saturn::set_reliability`]. [`Saturn::plan`] prices expected lost
+    /// work + restarts into every placement, and the execute paths adopt
+    /// it as the default whenever the passed [`SimConfig`] carries no
+    /// model of its own.
+    pub reliability: Vec<Option<NodeReliability>>,
+    /// Checkpoint write cost, seconds — the `C` in the Young/Daly
+    /// interval √(2·C·MTBF). Travels with [`Saturn::reliability`].
+    pub ckpt_cost: f64,
 }
 
 impl Saturn {
@@ -49,7 +59,48 @@ impl Saturn {
             optimizer: JointOptimizer::default(),
             grid: None,
             profile_overhead_secs: 0.0,
+            reliability: Vec::new(),
+            ckpt_cost: 0.0,
         }
+    }
+
+    /// Install a per-node reliability model (and the checkpoint write
+    /// cost it prices) after validating it at the API edge: one entry
+    /// per node, positive MTBF (∞ = never fails), finite non-negative
+    /// restart delay, finite non-negative checkpoint cost. `None`
+    /// entries keep that node risk-blind.
+    pub fn set_reliability(
+        &mut self,
+        reliability: Vec<Option<NodeReliability>>,
+        ckpt_cost: f64,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            reliability.len() == self.cluster.nodes.len(),
+            "reliability has {} entries but the cluster has {} nodes",
+            reliability.len(),
+            self.cluster.nodes.len()
+        );
+        for (node, rel) in reliability.iter().enumerate() {
+            if let Some(r) = rel {
+                anyhow::ensure!(
+                    !r.mtbf_secs.is_nan() && r.mtbf_secs > 0.0,
+                    "node {node}: MTBF must be positive (∞ = never fails), got {}",
+                    r.mtbf_secs
+                );
+                anyhow::ensure!(
+                    r.restart_secs.is_finite() && r.restart_secs >= 0.0,
+                    "node {node}: restart delay must be finite and non-negative, got {}",
+                    r.restart_secs
+                );
+            }
+        }
+        anyhow::ensure!(
+            ckpt_cost.is_finite() && ckpt_cost >= 0.0,
+            "checkpoint cost must be finite and non-negative, got {ckpt_cost}"
+        );
+        self.reliability = reliability;
+        self.ckpt_cost = ckpt_cost;
+        Ok(())
     }
 
     /// Register a custom UPP (paper Listing 2).
@@ -74,11 +125,25 @@ impl Saturn {
     }
 
     /// Produce a one-shot execution plan (requires [`Saturn::profile`]).
+    /// With a model from [`Saturn::set_reliability`] installed, every
+    /// placement is scored with its expected lost work + restarts.
     pub fn plan(&self, workload: &Workload, seed: u64) -> Result<Schedule> {
         let grid = self.grid()?;
-        let ctx = PlanCtx::fresh(workload, grid, &self.cluster);
+        let mut ctx = PlanCtx::fresh(workload, grid, &self.cluster);
+        ctx.reliability = self.reliability.clone();
+        ctx.ckpt_cost = self.ckpt_cost;
         let mut rng = DetRng::new(seed);
         Ok(self.optimizer.plan(&ctx, &mut rng))
+    }
+
+    /// The simulation config with the facade's reliability model adopted
+    /// as the default when `cfg` carries none of its own.
+    fn with_reliability_default(&self, mut cfg: SimConfig) -> SimConfig {
+        if cfg.reliability.is_empty() && !self.reliability.is_empty() {
+            cfg.reliability = self.reliability.clone();
+            cfg.ckpt_cost = self.ckpt_cost;
+        }
+        cfg
     }
 
     /// Execute the workload in the simulator (paper: `execute(tasks)` on
@@ -96,6 +161,7 @@ impl Saturn {
         seed: u64,
     ) -> Result<SimResult> {
         let grid = self.grid()?;
+        let cfg = self.with_reliability_default(cfg);
         let mut rng = DetRng::new(seed);
         Ok(simulate(&self.optimizer, workload, grid, &self.cluster, cfg, &mut rng))
     }
@@ -110,6 +176,7 @@ impl Saturn {
         seed: u64,
     ) -> Result<(SimResult, crate::metrics::OnlineStats)> {
         let grid = self.grid()?;
+        let cfg = self.with_reliability_default(cfg);
         let optimizer = JointOptimizer { incremental: true, ..self.optimizer.clone() };
         let mut rng = DetRng::new(seed);
         let result = simulate(&optimizer, workload, grid, &self.cluster, cfg, &mut rng);
@@ -161,6 +228,35 @@ mod tests {
         assert_eq!(a.capacity_trace.first(), Some(&(0.0, 8)));
         assert!(a.capacity_trace.contains(&(100.0, 0)));
         assert!(a.makespan > 200.0, "the stream can only finish after the repair");
+    }
+
+    /// The reliability model is surfaced through the facade with edge
+    /// validation, and a "never fails" model (MTBF ∞, zero restart)
+    /// contributes zero expected loss — the risk-enabled evaluator path
+    /// produces a plan byte-identical to the risk-blind one.
+    #[test]
+    fn reliability_surfaced_and_reliable_nodes_change_nothing() {
+        let mut saturn = Saturn::new(Cluster::single_node_8gpu());
+        saturn.optimizer.timeout = std::time::Duration::from_secs(240);
+        // junk models are rejected at the edge, state untouched
+        assert!(saturn.set_reliability(vec![None, None], 0.0).is_err());
+        assert!(saturn
+            .set_reliability(vec![Some(NodeReliability::new(f64::NAN, 0.0))], 0.0)
+            .is_err());
+        assert!(saturn
+            .set_reliability(vec![Some(NodeReliability::new(800.0, -1.0))], 0.0)
+            .is_err());
+        assert!(saturn
+            .set_reliability(vec![Some(NodeReliability::new(800.0, 200.0))], f64::NAN)
+            .is_err());
+        assert!(saturn.reliability.is_empty());
+        let w = workloads::txt_workload();
+        saturn.profile(&w);
+        let blind = saturn.plan(&w, 3).unwrap();
+        saturn.set_reliability(vec![Some(NodeReliability::reliable())], 25.0).unwrap();
+        let riskful = saturn.plan(&w, 3).unwrap();
+        assert_eq!(blind, riskful, "zero expected loss must not perturb the plan");
+        riskful.validate(&saturn.cluster, &w).unwrap();
     }
 
     #[test]

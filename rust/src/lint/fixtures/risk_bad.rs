@@ -1,0 +1,18 @@
+// Fixture: linted as `rust/src/solver/risk.rs` (determinism-contract +
+// rng-scoped). The expected-loss pricing below breaks all three
+// contracts at once: a wall-clock read inside scoring, a HashMap-ordered
+// accumulation (float sums are order-sensitive), and an ambient
+// randomness source keying the hasher.
+
+use std::collections::HashMap;
+
+pub fn expected_loss_by_node(rates: &HashMap<usize, f64>, w: f64) -> f64 {
+    let started = std::time::Instant::now();
+    let mut total = 0.0;
+    for (_, lambda) in rates.iter() {
+        total += lambda * w;
+    }
+    let jitter = std::collections::hash_map::RandomState::new();
+    let _ = (&started, &jitter);
+    total
+}

@@ -1,0 +1,15 @@
+// Fixture: linted as `rust/src/solver/risk.rs` (determinism-contract +
+// rng-scoped). Deterministic twin: ordered iteration over a slice, no
+// clock reads, and the rules must stay blind to rule trigger names
+// appearing only in docs and string literals.
+
+/// Closed-form expected loss per node; workers never call
+/// `Instant::now` — any deadline is the coordinator's business.
+pub fn expected_loss_by_node(rates: &[(usize, f64)], w: f64) -> f64 {
+    let label = "thread_rng appears only inside this string";
+    let mut total = 0.0;
+    for (_, lambda) in rates.iter() {
+        total += lambda * w;
+    }
+    total + (label.len() as f64) * 0.0
+}

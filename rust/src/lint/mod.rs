@@ -48,16 +48,18 @@ use std::path::{Path, PathBuf};
 pub const DEFAULT_ROOTS: [&str; 4] = ["rust/src", "rust/benches", "rust/tests", "examples"];
 
 /// Determinism-contract files: the delta kernel, the speculative anneal
-/// engine, the objective layer, the optimizer driving both, and the
-/// planning context they all read. Together with `src/sim/` these are the
+/// engine, the objective layer, the optimizer driving both, the planning
+/// context they all read, and the expected-loss risk pricing scored
+/// inside every evaluator. Together with `src/sim/` these are the
 /// modules where delta ≡ full-replay and thread-count trajectory parity
 /// must hold bit-for-bit.
-const DETERMINISM_FILES: [&str; 5] = [
+const DETERMINISM_FILES: [&str; 6] = [
     "src/solver/delta.rs",
     "src/solver/anneal.rs",
     "src/solver/objective.rs",
     "src/solver/joint.rs",
     "src/solver/policy.rs",
+    "src/solver/risk.rs",
 ];
 
 /// Which rule families apply to a file, derived from its path.
@@ -489,6 +491,11 @@ mod tests {
         );
         let c = classify("rust/src/solver/milp.rs");
         assert!(!c.determinism && c.rng_scope, "milp is rng-scoped but not a contract file");
+        let c = classify("rust/src/solver/risk.rs");
+        assert!(
+            c.determinism && c.rng_scope && !c.panic_sensitive,
+            "risk pricing runs inside every evaluator: deterministic, DetRng-only"
+        );
         let c = classify("rust/src/online/mod.rs");
         assert!(c.panic_sensitive && !c.determinism);
         let c = classify("rust/src/coordinator/mod.rs");
@@ -643,6 +650,17 @@ mod tests {
         assert!(bad.findings.iter().all(|f| f.rule == RULE_PANIC), "{:?}", bad.findings);
         let good =
             lint_source("rust/src/sim/chaos.rs", include_str!("fixtures/chaos_panic_good.rs"));
+        assert!(good.findings.is_empty(), "{:?}", good.findings);
+    }
+
+    #[test]
+    fn fixture_risk_determinism() {
+        let bad = lint_source("rust/src/solver/risk.rs", include_str!("fixtures/risk_bad.rs"));
+        let fired = rules_fired(&bad);
+        assert!(fired.contains(&RULE_CLOCK), "{fired:?}");
+        assert!(fired.contains(&RULE_UNORDERED), "{fired:?}");
+        assert!(fired.contains(&RULE_RNG), "{fired:?}");
+        let good = lint_source("rust/src/solver/risk.rs", include_str!("fixtures/risk_good.rs"));
         assert!(good.findings.is_empty(), "{:?}", good.findings);
     }
 

@@ -165,6 +165,24 @@ pub struct OnlineStats {
     /// Worst recovery latency across crash re-plans (copied from
     /// [`SimResult::time_to_recover`]).
     pub time_to_recover: f64,
+    /// Fraction of executed wall-seconds that advanced tasks
+    /// ([`goodput`]): `1 − lost_work_secs / total executed`. 1.0 on a
+    /// crash-free stream.
+    pub goodput: f64,
+}
+
+/// Goodput: useful ÷ total executed wall-seconds,
+/// `1 − lost_work_secs / total`, where total sums every busy-span
+/// duration — re-runs of rolled-back work count toward the denominator,
+/// which is exactly what makes lost work show up as a deficit. A result
+/// with no recorded spans (nothing executed, or hand-built) reports 1.0:
+/// nothing ran, so nothing was wasted.
+pub fn goodput(result: &SimResult) -> f64 {
+    let total: f64 = result.spans.iter().map(|s| s.end - s.start).sum();
+    if total <= 0.0 {
+        return 1.0;
+    }
+    (1.0 - result.lost_work_secs / total).clamp(0.0, 1.0)
 }
 
 /// Total time at least one task occupies a GPU: the union of the busy
@@ -221,6 +239,7 @@ pub fn online_stats(workload: &Workload, result: &SimResult) -> OnlineStats {
             relocations: result.relocations,
             lost_work_secs: result.lost_work_secs,
             time_to_recover: result.time_to_recover,
+            goodput: goodput(result),
             ..Default::default()
         };
     }
@@ -241,6 +260,7 @@ pub fn online_stats(workload: &Workload, result: &SimResult) -> OnlineStats {
         relocations: result.relocations,
         lost_work_secs: result.lost_work_secs,
         time_to_recover: result.time_to_recover,
+        goodput: goodput(result),
     }
 }
 
@@ -447,6 +467,43 @@ mod tests {
         assert_eq!(s.finished, 0);
         assert_eq!(s.failures, 3);
         assert_eq!(s.lost_work_secs, 1200.0);
+    }
+
+    /// Hand-computed goodput regression: 2000 s of executed spans with
+    /// 500 s rolled back ⇒ 0.75 useful fraction, copied onto
+    /// [`OnlineStats::goodput`]; crash-free and empty results report 1.0.
+    #[test]
+    fn goodput_hand_computed() {
+        use crate::model::ModelDesc;
+        use crate::sim::BusySpan;
+        use crate::trainer::{HParams, Optimizer, Task};
+        let span = |start: f64, end: f64| BusySpan { task_id: 0, node: 0, gpus: 2, start, end };
+        // 700 + 1300 = 2000 s executed, 500 s of it rolled back
+        let r = SimResult {
+            makespan: 2000.0,
+            spans: vec![span(0.0, 700.0), span(700.0, 2000.0)],
+            starts: vec![(0, 0.0)],
+            completions: vec![(0, 2000.0)],
+            lost_work_secs: 500.0,
+            ..Default::default()
+        };
+        assert!((goodput(&r) - 0.75).abs() < 1e-12, "goodput {}", goodput(&r));
+        let w: Workload = vec![Task::new(
+            0,
+            ModelDesc::resnet_200m(),
+            HParams::new(32, 1e-4, 1, Optimizer::Sgd),
+            320,
+        )];
+        let s = online_stats(&w, &r);
+        assert!((s.goodput - 0.75).abs() < 1e-12, "stats goodput {}", s.goodput);
+        // crash-free: goodput 1.0 exactly
+        let clean = SimResult { lost_work_secs: 0.0, ..r.clone() };
+        assert_eq!(goodput(&clean), 1.0);
+        // nothing executed: neutral 1.0, never a division by zero
+        assert_eq!(goodput(&SimResult::default()), 1.0);
+        // pathological over-loss clamps instead of going negative
+        let broken = SimResult { lost_work_secs: 9000.0, ..r };
+        assert_eq!(goodput(&broken), 0.0);
     }
 
     /// Hand-computed regression for the interpolated-quantile helper and

@@ -35,7 +35,7 @@
 
 #![deny(clippy::unwrap_used, clippy::expect_used)]
 
-use crate::cluster::Cluster;
+use crate::cluster::{estimate_reliability, Cluster, ClusterEvent, NodeReliability, TimedClusterEvent};
 use crate::costmodel::CostModel;
 use crate::metrics::{online_stats, OnlineStats};
 use crate::parallelism::UppRegistry;
@@ -149,22 +149,119 @@ impl OnlineCoordinator {
     /// Trace builders live in [`crate::trainer::workloads`]
     /// (`poisson_failure_events`, `rack_failure_events`,
     /// `spot_churn_events`, `straggler_events`). Junk events (non-finite
-    /// times, unknown nodes, non-positive rates) are dropped or clamped
-    /// at ingest, never panicked on.
-    pub fn inject_event(&mut self, event: crate::cluster::TimedClusterEvent) {
+    /// or negative times, unknown nodes, non-positive straggler rates,
+    /// negative drain windows) are rejected with a descriptive error at
+    /// the API edge — never panicked on, and never silently dropped deep
+    /// in the simulator.
+    pub fn inject_event(&mut self, event: TimedClusterEvent) -> anyhow::Result<()> {
+        validate_event(&event, self.cluster.nodes.len())?;
         self.sim.chaos.push(event);
+        Ok(())
     }
 
     /// Inject a batch of cluster capacity events (e.g. a generated
     /// failure trace). Order does not matter; the simulator applies
-    /// events in time order.
-    pub fn inject_events<I: IntoIterator<Item = crate::cluster::TimedClusterEvent>>(
+    /// events in time order. Validation is all-or-nothing: the first
+    /// junk event rejects the whole batch and leaves the queued chaos
+    /// trace untouched.
+    pub fn inject_events<I: IntoIterator<Item = TimedClusterEvent>>(
         &mut self,
         events: I,
-    ) {
+    ) -> anyhow::Result<()> {
+        let events: Vec<TimedClusterEvent> = events.into_iter().collect();
+        for e in &events {
+            validate_event(e, self.cluster.nodes.len())?;
+        }
         self.sim.chaos.extend(events);
+        Ok(())
     }
 
+    /// Install a per-node reliability model ([`NodeReliability`]) for the
+    /// stream: the planner prices expected lost work + restarts into
+    /// every placement, and the simulator's rollback accounting follows
+    /// each task's checkpoint cadence (explicit
+    /// [`crate::trainer::Task::ckpt_interval`], else the host node's
+    /// Young/Daly optimum from [`SimConfig::ckpt_cost`]). One entry per
+    /// node; `None` entries keep that node risk-blind. Rejects length
+    /// mismatches and non-finite/negative statistics at the API edge.
+    pub fn set_reliability(
+        &mut self,
+        reliability: Vec<Option<NodeReliability>>,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            reliability.len() == self.cluster.nodes.len(),
+            "reliability has {} entries but the cluster has {} nodes",
+            reliability.len(),
+            self.cluster.nodes.len()
+        );
+        for (node, rel) in reliability.iter().enumerate() {
+            if let Some(r) = rel {
+                anyhow::ensure!(
+                    !r.mtbf_secs.is_nan() && r.mtbf_secs > 0.0,
+                    "node {node}: MTBF must be positive (∞ = never fails), got {}",
+                    r.mtbf_secs
+                );
+                anyhow::ensure!(
+                    r.restart_secs.is_finite() && r.restart_secs >= 0.0,
+                    "node {node}: restart delay must be finite and non-negative, got {}",
+                    r.restart_secs
+                );
+            }
+        }
+        self.sim.reliability = reliability;
+        Ok(())
+    }
+
+    /// Fit the reliability model from the chaos trace queued so far
+    /// (fail→join gaps per node over `horizon` seconds, via
+    /// [`estimate_reliability`]) and install it with the same validation
+    /// as [`Self::set_reliability`]. Returns the fitted model.
+    pub fn learn_reliability(
+        &mut self,
+        horizon: f64,
+    ) -> anyhow::Result<Vec<Option<NodeReliability>>> {
+        anyhow::ensure!(
+            horizon.is_finite() && horizon > 0.0,
+            "horizon must be finite and positive, got {horizon}"
+        );
+        let fitted = estimate_reliability(&self.sim.chaos, self.cluster.nodes.len(), horizon);
+        self.set_reliability(fitted.clone())?;
+        Ok(fitted)
+    }
+}
+
+/// Edge validation for one chaos event: finite non-negative time, a node
+/// the cluster actually has, a finite positive straggler rate, a finite
+/// non-negative drain window. Pure and panic-free.
+fn validate_event(event: &TimedClusterEvent, n_nodes: usize) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        event.at.is_finite() && event.at >= 0.0,
+        "event time must be finite and non-negative, got {}",
+        event.at
+    );
+    let node = match event.event {
+        ClusterEvent::NodeFail { node }
+        | ClusterEvent::NodeJoin { node }
+        | ClusterEvent::NodeLeave { node, .. }
+        | ClusterEvent::SlowdownStart { node, .. }
+        | ClusterEvent::SlowdownEnd { node } => node,
+    };
+    anyhow::ensure!(node < n_nodes, "event names node {node} but the cluster has {n_nodes} nodes");
+    match event.event {
+        ClusterEvent::SlowdownStart { rate, .. } => anyhow::ensure!(
+            rate.is_finite() && rate > 0.0,
+            "straggler rate must be finite and positive, got {rate}"
+        ),
+        ClusterEvent::NodeLeave { grace, .. } => anyhow::ensure!(
+            grace.is_finite() && grace >= 0.0,
+            "drain grace must be finite and non-negative, got {grace}"
+        ),
+        _ => {}
+    }
+    Ok(())
+}
+
+impl OnlineCoordinator {
     /// Tasks waiting in the pending queue.
     pub fn pending(&self) -> usize {
         self.queue.len()
@@ -319,11 +416,13 @@ mod tests {
                 oc.inject_event(TimedClusterEvent {
                     at: 50.0,
                     event: ClusterEvent::NodeFail { node: 0 },
-                });
+                })
+                .unwrap();
                 oc.inject_events(vec![TimedClusterEvent {
                     at: 400.0,
                     event: ClusterEvent::NodeJoin { node: 0 },
-                }]);
+                }])
+                .unwrap();
             }
             for i in 0..5 {
                 oc.submit(small_task(i as f64 * 300.0));
@@ -379,5 +478,72 @@ mod tests {
         assert!(turn.stats.p95_turnaround >= turn.stats.mean_turnaround - 1e-9);
         assert!(turn.stats.p95_turnaround <= turn.stats.max_turnaround + 1e-9);
         assert!(turn.stats.p95_queueing_delay <= turn.stats.max_queue_delay + 1e-9);
+    }
+
+    /// Satellite: the event-ingest boundary returns errors instead of
+    /// panicking (or silently dropping) on junk — non-finite/negative
+    /// times, unknown nodes, non-positive straggler rates, bad drain
+    /// windows — and a rejected batch leaves the queued trace untouched.
+    #[test]
+    fn junk_events_rejected_without_panic() {
+        let ev = |at: f64, event: ClusterEvent| TimedClusterEvent { at, event };
+        let fail = |node| ClusterEvent::NodeFail { node };
+        let mut oc = OnlineCoordinator::new(Cluster::single_node_8gpu());
+        let junk = [
+            ev(f64::NAN, fail(0)),
+            ev(f64::INFINITY, fail(0)),
+            ev(-1.0, fail(0)),
+            ev(10.0, fail(7)), // single-node cluster: node 7 does not exist
+            ev(10.0, ClusterEvent::SlowdownStart { node: 0, rate: 0.0 }),
+            ev(10.0, ClusterEvent::SlowdownStart { node: 0, rate: -0.5 }),
+            ev(10.0, ClusterEvent::SlowdownStart { node: 0, rate: f64::NAN }),
+            ev(10.0, ClusterEvent::NodeLeave { node: 0, grace: -1.0 }),
+            ev(10.0, ClusterEvent::NodeLeave { node: 0, grace: f64::INFINITY }),
+        ];
+        for e in &junk {
+            let err = oc.inject_event(e.clone()).unwrap_err();
+            assert!(!err.to_string().is_empty());
+        }
+        assert!(oc.sim.chaos.is_empty(), "rejected events must not be queued");
+        // all-or-nothing batches: one bad event poisons the whole batch
+        let batch = vec![ev(5.0, fail(0)), ev(f64::NAN, fail(0))];
+        assert!(oc.inject_events(batch).is_err());
+        assert!(oc.sim.chaos.is_empty(), "a rejected batch must leave the trace untouched");
+        // and a clean event still goes through
+        oc.inject_event(ev(5.0, fail(0))).unwrap();
+        oc.inject_events(vec![ev(9.0, ClusterEvent::NodeJoin { node: 0 })]).unwrap();
+        assert_eq!(oc.sim.chaos.len(), 2);
+    }
+
+    /// The reliability model is surfaced through the coordinator with
+    /// the same edge validation as event ingest, and can be fitted from
+    /// the queued chaos trace (fail→join gaps over a horizon).
+    #[test]
+    fn reliability_surfaced_and_learned_from_trace() {
+        let mut oc = OnlineCoordinator::new(Cluster::single_node_8gpu());
+        assert!(oc.sim.reliability.is_empty(), "reliability must default off");
+        // wrong length and junk statistics are rejected, state untouched
+        assert!(oc.set_reliability(vec![None, None]).is_err());
+        assert!(oc.set_reliability(vec![Some(NodeReliability::new(f64::NAN, 0.0))]).is_err());
+        assert!(oc.set_reliability(vec![Some(NodeReliability::new(0.0, 0.0))]).is_err());
+        assert!(oc.set_reliability(vec![Some(NodeReliability::new(800.0, -1.0))]).is_err());
+        assert!(oc
+            .set_reliability(vec![Some(NodeReliability::new(800.0, f64::INFINITY))])
+            .is_err());
+        assert!(oc.sim.reliability.is_empty());
+        // an infinite MTBF is a legal "never fails" model
+        oc.set_reliability(vec![Some(NodeReliability::reliable())]).unwrap();
+        // fitting: one 200 s outage at t=100 over a 1000 s horizon
+        oc.inject_event(TimedClusterEvent { at: 100.0, event: ClusterEvent::NodeFail { node: 0 } })
+            .unwrap();
+        oc.inject_event(TimedClusterEvent { at: 300.0, event: ClusterEvent::NodeJoin { node: 0 } })
+            .unwrap();
+        assert!(oc.learn_reliability(f64::NAN).is_err());
+        assert!(oc.learn_reliability(-5.0).is_err());
+        let fitted = oc.learn_reliability(1000.0).unwrap();
+        let r = fitted[0].expect("the failing node carries a model");
+        assert_eq!(r.mtbf_secs, 800.0, "uptime 100 + 700 over one failure");
+        assert_eq!(r.restart_secs, 200.0, "one 200 s outage");
+        assert_eq!(oc.sim.reliability, fitted, "the fit is installed on the stream");
     }
 }

@@ -234,6 +234,30 @@ pub fn list_schedule_masked(
     caps: &[usize],
     rates: &[f64],
 ) -> (Schedule, Vec<usize>) {
+    list_schedule_ext(choices, cluster, caps, rates, None)
+}
+
+/// Risk-aware gang list scheduler: [`list_schedule_masked`] with an
+/// optional per-placement duration-extension hook.
+///
+/// `extra(choice_idx, node, wall_dur)` returns additional effective
+/// seconds appended to the gang's duration *after* node selection and
+/// rate stretching — the shape `solver::risk::Risk::extra` prices
+/// expected lost work + restarts with. The hook must be applied inside
+/// the scheduling loop (not as post-processing): the padded end time
+/// occupies GPUs, so it shapes every later placement's start, which is
+/// exactly how the solver's evaluators account it. The scheduler stays
+/// dependency-free of `solver` by taking a closure.
+///
+/// With `extra == None` the arithmetic is the historical
+/// `duration / rate`, bit for bit.
+pub fn list_schedule_ext(
+    choices: &[PlacementChoice],
+    cluster: &Cluster,
+    caps: &[usize],
+    rates: &[f64],
+    extra: Option<&dyn Fn(usize, usize, f64) -> f64>,
+) -> (Schedule, Vec<usize>) {
     // per-node free list kept sorted by (free time, GPU index): the gang
     // start on a node is a direct read of entry g-1 and the gang itself is
     // the first g entries, instead of a clone + sort per candidate node
@@ -250,7 +274,7 @@ pub fn list_schedule_masked(
     let sort_key = |a: &(f64, usize), b: &(f64, usize)| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1));
     let mut assignments = Vec::with_capacity(choices.len());
     let mut skipped = Vec::new();
-    for c in choices {
+    for (j, c) in choices.iter().enumerate() {
         let g = c.config.gpus;
         let candidate_nodes: Vec<usize> = match c.node {
             Some(n) => vec![n],
@@ -274,9 +298,17 @@ pub fn list_schedule_masked(
                 continue;
             }
         };
-        // the host node's rate stretches the gang *after* selection
+        // the host node's rate stretches the gang *after* selection; the
+        // risk hook then pads the effective duration (None keeps the
+        // historical expression bit for bit — no `+ 0.0` detour)
         let rate = rates.get(ni).copied().filter(|r| r.is_finite() && *r > 0.0).unwrap_or(1.0);
-        let duration = c.duration / rate;
+        let duration = match extra {
+            Some(f) => {
+                let w = c.duration / rate;
+                w + f(j, ni, w)
+            }
+            None => c.duration / rate,
+        };
         // the g earliest-free GPUs (ties broken by index) are the sorted
         // prefix; re-stamp their free time and restore the order (node
         // widths are ≤ 16, one small sort beats anything clever)
@@ -609,6 +641,36 @@ mod tests {
         let (s3, skipped3) = list_schedule_masked(&[choice(2, 4, 100.0)], &c, &caps, &rates);
         assert!(s3.assignments.is_empty());
         assert_eq!(skipped3, vec![2]);
+    }
+
+    /// The risk hook pads effective durations inside the loop: a padded
+    /// gang occupies its GPUs for the padded span, delaying successors —
+    /// and a `None` hook is the masked scheduler, bit for bit.
+    #[test]
+    fn ext_hook_pads_duration_and_shapes_successors() {
+        let c = Cluster::from_gpu_counts(&[1, 1]);
+        let caps = vec![1, 1];
+        let rates = vec![1.0, 1.0];
+        let choices = vec![choice(0, 1, 100.0), choice(1, 1, 100.0), choice(2, 1, 100.0)];
+        // node 0 is flaky: every gang there pays 50% expected loss
+        let pad = |_j: usize, ni: usize, w: f64| if ni == 0 { 0.5 * w } else { 0.0 };
+        let (s, skipped) = list_schedule_ext(&choices, &c, &caps, &rates, Some(&pad));
+        assert!(skipped.is_empty());
+        // task 0 → node 0 (tie toward low index), padded to 150
+        assert_eq!(s.assignments[0].node, 0);
+        assert!((s.assignments[0].duration - 150.0).abs() < 1e-12);
+        // task 1 → node 1 (free at 0), unpadded
+        assert_eq!(s.assignments[1].node, 1);
+        assert!((s.assignments[1].duration - 100.0).abs() < 1e-12);
+        // task 2: node 1 frees at 100 < node 0's padded 150 — the pad
+        // shaped the selection, which post-processing could not do
+        assert_eq!(s.assignments[2].node, 1);
+        assert!((s.assignments[2].start - 100.0).abs() < 1e-12);
+        // None hook ≡ masked scheduler
+        let (a, sa) = list_schedule_ext(&choices, &c, &caps, &rates, None);
+        let (b, sb) = list_schedule_masked(&choices, &c, &caps, &rates);
+        assert_eq!(a, b);
+        assert_eq!(sa, sb);
     }
 
     #[test]

@@ -27,7 +27,7 @@
 
 mod chaos;
 
-use crate::cluster::{Cluster, TimedClusterEvent};
+use crate::cluster::{Cluster, NodeReliability, TimedClusterEvent};
 use crate::profiler::ProfileGrid;
 use crate::sched::{list_schedule_masked, PlacementChoice, Schedule};
 use crate::sim::chaos::ChaosState;
@@ -103,6 +103,23 @@ pub struct SimConfig {
     /// junk payloads (non-finite times, out-of-range nodes, non-positive
     /// rates) are dropped or clamped, never panicked on.
     pub chaos: Vec<TimedClusterEvent>,
+    /// Per-node reliability model (observed MTBF + restart latency,
+    /// e.g. from [`crate::cluster::estimate_reliability`] over a failure
+    /// trace). Threaded into every planning context as
+    /// [`crate::solver::policy::PlanCtx::reliability`], where it becomes
+    /// the solver's expected-loss term, **and** into the crash-rollback
+    /// accounting below: a failed gang rolls back to its last
+    /// checkpoint-cadence boundary instead of the segment start. Empty
+    /// (the default) keeps planning and rollback bit-identical to the
+    /// risk-blind simulator.
+    pub reliability: Vec<Option<NodeReliability>>,
+    /// Checkpoint write cost `C`, seconds, feeding the Young/Daly optimal
+    /// cadence `√(2·C·MTBF)` for tasks without an explicit
+    /// [`crate::trainer::Task::ckpt_interval`]. Checkpoint writes are
+    /// assumed asynchronous (overlapped with training), so the simulator
+    /// charges no wall-clock for them — the cost only shapes the cadence
+    /// and the solver's expected-overhead pricing.
+    pub ckpt_cost: f64,
 }
 
 impl Default for SimConfig {
@@ -115,6 +132,8 @@ impl Default for SimConfig {
             preempt: false,
             objective: Objective::Makespan,
             chaos: Vec::new(),
+            reliability: Vec::new(),
+            ckpt_cost: 0.0,
         }
     }
 }
@@ -480,16 +499,31 @@ pub fn simulate_with_controller(
             let batch = chaos.advance(now);
             result.failures += batch.failed.len();
             if !batch.failed.is_empty() {
-                // crash: gangs running on the failed nodes lose all
-                // progress since the last segment-boundary checkpoint
+                // crash: gangs running on the failed nodes lose the
+                // progress since their last checkpoint. Without a cadence
+                // (no reliability model, no explicit interval) that is
+                // everything since the segment-boundary checkpoint — the
+                // historical arithmetic, bit for bit; with one, estimated
+                // progress rounds down to the last τ-boundary write.
                 for a in &trace.assignments {
                     if a.start < horizon && a.end() > horizon && batch.failed.contains(&a.node) {
                         let idx = id2idx[&a.task_id];
                         let full_est = workload[idx].total_runtime(a.config.minibatch_secs);
-                        let lost =
-                            (ckpt[idx] - states[idx].remaining).max(0.0) * full_est * states[idx].noise;
-                        result.lost_work_secs += lost;
-                        states[idx].remaining = ckpt[idx];
+                        let done = (ckpt[idx] - states[idx].remaining).max(0.0) * full_est;
+                        let tau = ckpt_cadence(&cfg, &workload[idx], a.node);
+                        let kept = if tau <= 0.0 {
+                            done // free checkpoints ⇒ continuous cadence
+                        } else if tau.is_finite() {
+                            (done / tau).floor() * tau
+                        } else {
+                            0.0
+                        };
+                        result.lost_work_secs += (done - kept) * states[idx].noise;
+                        states[idx].remaining = if kept > 0.0 {
+                            ckpt[idx] - kept / full_est
+                        } else {
+                            ckpt[idx]
+                        };
                     }
                 }
             }
@@ -641,16 +675,38 @@ fn refresh_prior(ctx: &mut PlanCtx, plan: &[PlacementChoice], started: &[bool]) 
 
 /// Refresh the planning context's chaos view: the planner's per-node
 /// availability mask (`plan_alive` — a draining node is plan-dead while
-/// it still executes), effective rates, and the checkpoint/restore price
-/// of relocating a gang pinned to a dead node. Without chaos events this
-/// writes the all-alive / unit-rate / inert defaults the context was born
-/// with — planner behavior is unchanged bit for bit.
+/// it still executes), effective rates, the checkpoint/restore price
+/// of relocating a gang pinned to a dead node, and the reliability model
+/// feeding the solver's expected-loss term. Without chaos events or a
+/// reliability config this writes the all-alive / unit-rate / inert
+/// defaults the context was born with — planner behavior is unchanged
+/// bit for bit.
 fn refresh_chaos_ctx(ctx: &mut PlanCtx, chaos: &ChaosState, cfg: &SimConfig) {
     ctx.node_alive.clear();
     ctx.node_alive.extend_from_slice(chaos.plan_alive());
     ctx.node_rate.clear();
     ctx.node_rate.extend_from_slice(chaos.rates());
     ctx.relocate_cost = cfg.switch_cost;
+    ctx.reliability.clear();
+    ctx.reliability.extend_from_slice(&cfg.reliability);
+    ctx.ckpt_cost = cfg.ckpt_cost;
+}
+
+/// The checkpoint cadence governing a task's crash rollback on `node`:
+/// an explicit finite positive [`crate::trainer::Task::ckpt_interval`]
+/// wins; otherwise the Young/Daly optimum for the node's observed MTBF
+/// (∞ — no checkpoints beyond segment boundaries — when the node has no
+/// reliability model, which is exactly the historical behavior).
+fn ckpt_cadence(cfg: &SimConfig, task: &crate::trainer::Task, node: usize) -> f64 {
+    if let Some(tau) = task.ckpt_interval {
+        if tau.is_finite() && tau > 0.0 {
+            return tau;
+        }
+    }
+    match cfg.reliability.get(node).copied().flatten() {
+        Some(rel) => crate::solver::young_daly_interval(cfg.ckpt_cost, rel.mtbf_secs),
+        None => f64::INFINITY,
+    }
 }
 
 /// Chaos event: capacity changed (crash, join, drain, straggler) —
@@ -1752,6 +1808,171 @@ mod tests {
         assert!(a.capacity_trace.is_empty(), "no chaos ⇒ no capacity trace");
         assert_eq!((a.failures, a.relocations), (0, 0));
         assert_eq!((a.lost_work_secs, a.time_to_recover), (0.0, 0.0));
+    }
+
+    /// Tentpole acceptance, on the shared flaky-node instance
+    /// ([`workloads::flaky_node_instance`]): node 0 fails at
+    /// 700/1600/2500 s (observed MTBF 800 s, restart 200 s). The
+    /// risk-blind planner's earliest-free tie-break parks the 8-GPU
+    /// 2000 s gang on flaky node 0 — the t = 700 crash rolls it back
+    /// 700 s and it relaunches on node 1 for a 2730 s makespan. The
+    /// risk-aware planner prices the node-0 seat at
+    /// 2000 + (2000/800)·200 = 2500 s and steers the gang to clean
+    /// node 1 up front: the shorts absorb the flaky node, finish at
+    /// 400 s < 700 s, and the stream ends at the 2000 s optimum with
+    /// **zero** lost work. Margins cross-validated by
+    /// `scripts/validate_chaos_fixture.py`.
+    #[test]
+    fn risk_aware_planning_beats_risk_blind_on_flaky_node() {
+        use crate::cluster::estimate_reliability;
+        let (w, grid, c) = workloads::flaky_node_instance();
+        let events = workloads::flaky_node_events();
+        let reliability =
+            estimate_reliability(&events, c.nodes.len(), workloads::FLAKY_NODE_HORIZON_SECS);
+        let run = |reliability: Vec<Option<NodeReliability>>| {
+            let cfg = SimConfig {
+                noise_sigma: 0.0,
+                switch_cost: 30.0,
+                chaos: events.clone(),
+                reliability,
+                ..Default::default()
+            };
+            let policy = JointOptimizer {
+                timeout: std::time::Duration::from_secs(120),
+                incremental: true,
+                ..Default::default()
+            };
+            simulate(&policy, &w, &grid, &c, cfg, &mut DetRng::new(99))
+        };
+        let blind = run(Vec::new());
+        let aware = run(reliability.clone());
+        assert_eq!(blind.completions.len(), 9);
+        assert_eq!(aware.completions.len(), 9);
+
+        // blind: crash at 700 costs the full 700 s since the t = 0
+        // checkpoint, then 2000 + 30 s relaunch on node 1 ⇒ 2730 s
+        assert!((blind.makespan - 2730.0).abs() < 1e-6, "blind makespan {}", blind.makespan);
+        assert!((blind.lost_work_secs - 700.0).abs() < 1e-6, "blind lost {}", blind.lost_work_secs);
+        assert_eq!(blind.relocations, 1, "the gang must relocate off the dead node");
+        assert_eq!(blind.failures, 3);
+
+        // aware: the gang never touches node 0 — optimum, nothing lost
+        assert!((aware.makespan - 2000.0).abs() < 1e-6, "aware makespan {}", aware.makespan);
+        assert_eq!(aware.lost_work_secs, 0.0, "aware lost {}", aware.lost_work_secs);
+        assert_eq!(aware.relocations, 0, "risk-aware plan never needs to relocate");
+
+        // the ISSUE's headline margins, implied by the pins above but
+        // asserted directly: strictly better realized loss AND makespan
+        assert!(blind.lost_work_secs >= aware.lost_work_secs + 600.0);
+        assert!(blind.makespan >= aware.makespan + 600.0);
+
+        // risk-enabled runs stay byte-identical run to run
+        let aware2 = run(reliability);
+        assert_eq!(aware, aware2, "risk-aware SimResult must be byte-identical");
+    }
+
+    /// The checkpoint-interval knob bounds crash rollback: the lone
+    /// 8-GPU 2000 s gang crashes at t = 700 with τ = 200 s — estimated
+    /// progress rounds down to the 600 s boundary, so only 100 s is
+    /// lost and the t = 900 repair resumes at remaining 0.7
+    /// (makespan 900 + 1400 = 2300 s). Without a cadence the historical
+    /// arithmetic loses all 700 s (makespan 2900 s). The Young/Daly
+    /// route pins the same numbers: C = 25 s on an 800 s-MTBF node
+    /// gives τ = √(2·25·800) = 200 s exactly.
+    #[test]
+    fn ckpt_interval_bounds_crash_rollback() {
+        let (w0, grid, _) = workloads::flaky_node_instance();
+        let c = Cluster::single_node_8gpu();
+        let base_w: Workload = w0.into_iter().take(1).collect();
+        let events = vec![
+            TimedClusterEvent {
+                at: 700.0,
+                event: crate::cluster::ClusterEvent::NodeFail { node: 0 },
+            },
+            TimedClusterEvent {
+                at: 900.0,
+                event: crate::cluster::ClusterEvent::NodeJoin { node: 0 },
+            },
+        ];
+        let run = |w: &Workload, reliability: Vec<Option<NodeReliability>>, ckpt_cost: f64| {
+            let cfg = SimConfig {
+                noise_sigma: 0.0,
+                switch_cost: 30.0,
+                chaos: events.clone(),
+                reliability,
+                ckpt_cost,
+                ..Default::default()
+            };
+            let policy = JointOptimizer {
+                timeout: std::time::Duration::from_secs(120),
+                incremental: true,
+                ..Default::default()
+            };
+            simulate(&policy, w, &grid, &c, cfg, &mut DetRng::new(99))
+        };
+
+        // explicit per-task τ = 200 s: rollback to the 600 s boundary
+        let mut pinned_w = base_w.clone();
+        pinned_w[0].ckpt_interval = Some(200.0);
+        let pinned = run(&pinned_w, Vec::new(), 0.0);
+        assert_eq!(pinned.completions.len(), 1);
+        assert!((pinned.lost_work_secs - 100.0).abs() < 1e-6, "lost {}", pinned.lost_work_secs);
+        assert!((pinned.makespan - 2300.0).abs() < 1e-6, "makespan {}", pinned.makespan);
+
+        // Young/Daly from the node's MTBF lands on the identical cadence
+        let yd = run(&base_w, vec![Some(NodeReliability::new(800.0, 200.0))], 25.0);
+        assert!((yd.lost_work_secs - 100.0).abs() < 1e-6, "yd lost {}", yd.lost_work_secs);
+        assert!((yd.makespan - 2300.0).abs() < 1e-6, "yd makespan {}", yd.makespan);
+
+        // no cadence: the historical full-segment rollback, bit for bit
+        let legacy = run(&base_w, Vec::new(), 0.0);
+        assert!((legacy.lost_work_secs - 700.0).abs() < 1e-6, "legacy lost {}", legacy.lost_work_secs);
+        assert!((legacy.makespan - 2900.0).abs() < 1e-6, "legacy makespan {}", legacy.makespan);
+    }
+
+    /// Reliability-unset parity: an all-`None` reliability vector (even
+    /// with a nonzero checkpoint cost) builds no risk model and no
+    /// cadence — planning, rollback, spans, everything stays
+    /// byte-identical to the default config on both the chaos-rich
+    /// fixture and an arrival-heavy introspection stream.
+    #[test]
+    fn reliability_unset_is_byte_identical() {
+        // chaos-rich: the blocked-failure recovery scenario
+        let (w, grid, c) = workloads::blocked_failure_instance();
+        let policy = JointOptimizer {
+            timeout: std::time::Duration::from_secs(120),
+            incremental: true,
+            ..Default::default()
+        };
+        let mk = |reliability: Vec<Option<NodeReliability>>, ckpt_cost: f64| SimConfig {
+            noise_sigma: 0.0,
+            switch_cost: 30.0,
+            objective: Objective::MeanTurnaround,
+            chaos: workloads::failure_recovery_events(),
+            reliability,
+            ckpt_cost,
+            ..Default::default()
+        };
+        let a = simulate(&policy, &w, &grid, &c, mk(Vec::new(), 0.0), &mut DetRng::new(99));
+        let b =
+            simulate(&policy, &w, &grid, &c, mk(vec![None; 2], 37.0), &mut DetRng::new(99));
+        assert_eq!(a, b, "all-None reliability must be indistinguishable from unset");
+        assert!((a.lost_work_secs - 500.0).abs() < 1e-6, "scenario sanity: {}", a.lost_work_secs);
+
+        // arrival-heavy introspection stream on the profiled txt workload
+        let c2 = Cluster::single_node_8gpu();
+        let (mut w2, grid2) = setup(&c2);
+        for (i, t) in w2.iter_mut().enumerate() {
+            t.arrival = (i as f64) * 900.0;
+        }
+        let cfg = SimConfig {
+            introspect: Some(IntrospectCfg { interval: 1500.0, threshold: 200.0 }),
+            ..Default::default()
+        };
+        let unset = SimConfig { reliability: vec![None; 1], ckpt_cost: 12.0, ..cfg.clone() };
+        let x = simulate(&JointOptimizer::default(), &w2, &grid2, &c2, cfg, &mut DetRng::new(77));
+        let y = simulate(&JointOptimizer::default(), &w2, &grid2, &c2, unset, &mut DetRng::new(77));
+        assert_eq!(x, y, "stream must be byte-identical with all-None reliability");
     }
 
     #[test]

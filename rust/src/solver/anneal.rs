@@ -38,6 +38,7 @@
 use super::delta::{apply_cand, undo_cand, CandMove, Churn, DeltaKernel, FullScratch, Mover, State};
 use super::joint::SolveStats;
 use super::objective::ScoreSpec;
+use super::risk::Risk;
 use crate::util::rng::DetRng;
 use crate::util::{Deadline, DeadlinePoll, DEADLINE_POLL_PERIOD};
 use std::sync::{mpsc, Arc};
@@ -99,6 +100,16 @@ pub(crate) struct AnnealParams<'a> {
     /// churn term it is a pure per-task function of the candidate state,
     /// so thread-count and evaluator parity are preserved per objective.
     pub objective: &'a ScoreSpec,
+    /// Expected-loss pricing model (failure-aware planning): when
+    /// present, every evaluator pads each placed gang's wall duration by
+    /// [`Risk::extra`] on the chosen host (see
+    /// [`DeltaKernel::with_risk`]). Like churn and rates it is a pure
+    /// per-assignment function of the candidate state, applied
+    /// identically by the delta kernel, the read-only worker replays,
+    /// and the full-replay baseline — thread-count and evaluator parity
+    /// hold with risk exactly as without it. `None` is the bit-identical
+    /// risk-blind behavior.
+    pub risk: Option<&'a Risk>,
     /// Annealing restarts (≥ 1); restarts > 0 perturb the incumbent.
     pub restarts: usize,
     /// Candidate evaluations per temperature level.
@@ -227,9 +238,11 @@ enum EvalScratch {
 }
 
 impl EvalScratch {
-    fn new(full_replay: bool, node_gpus: &[usize], node_rates: &[f64]) -> Self {
+    fn new(full_replay: bool, node_gpus: &[usize], node_rates: &[f64], risk: Option<&Risk>) -> Self {
         if full_replay {
-            EvalScratch::Full(FullScratch::new(node_gpus).with_rates(node_rates))
+            EvalScratch::Full(
+                FullScratch::new(node_gpus).with_rates(node_rates).with_risk(risk.cloned()),
+            )
         } else {
             EvalScratch::Delta { free: Vec::new(), tail: Vec::new() }
         }
@@ -281,7 +294,10 @@ pub(crate) fn anneal(
             let node_rates = p.node_rates;
             let durs = p.durs;
             let churn = p.churn;
-            sc.spawn(move || worker_loop(jrx, rtx, full_replay, node_gpus, node_rates, durs, churn));
+            let risk = p.risk;
+            sc.spawn(move || {
+                worker_loop(jrx, rtx, full_replay, node_gpus, node_rates, durs, churn, risk)
+            });
         }
         // the coordinator holds no result sender: if every worker dies,
         // recv reports it instead of blocking forever
@@ -294,6 +310,7 @@ pub(crate) fn anneal(
 }
 
 /// Worker: score assigned batch slices until the job channel closes.
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     jobs: mpsc::Receiver<Job>,
     results: mpsc::Sender<(usize, Vec<f64>)>,
@@ -302,8 +319,9 @@ fn worker_loop(
     node_rates: &[f64],
     durs: &[Vec<(usize, f64)>],
     churn: Option<&Churn>,
+    risk: Option<&Risk>,
 ) {
-    let mut scratch = EvalScratch::new(full_replay, node_gpus, node_rates);
+    let mut scratch = EvalScratch::new(full_replay, node_gpus, node_rates, risk);
     let mut local = State::default();
     while let Ok(job) = jobs.recv() {
         let Job { shared, lo, hi, mut out } = job;
@@ -340,9 +358,11 @@ fn run(
     let n = seed.order.len();
     let n_nodes = p.node_gpus.len();
     let mut kernel = Arc::new(
-        DeltaKernel::new(p.node_gpus.to_vec(), n, p.objective.clone()).with_rates(p.node_rates),
+        DeltaKernel::new(p.node_gpus.to_vec(), n, p.objective.clone())
+            .with_rates(p.node_rates)
+            .with_risk(p.risk.cloned()),
     );
-    let mut scratch = EvalScratch::new(p.full_replay, p.node_gpus, p.node_rates);
+    let mut scratch = EvalScratch::new(p.full_replay, p.node_gpus, p.node_rates, p.risk);
     let mut mover = Mover::new(n);
     let mut poll = DeadlinePoll::new(p.deadline, DEADLINE_POLL_PERIOD);
     let mut best = seed.clone();

@@ -48,6 +48,7 @@
 //!   so the A/B baseline parallelizes identically.
 
 use super::objective::{tail_push, tail_score, ScoreKind, ScoreSpec};
+use super::risk::Risk;
 use crate::util::rng::DetRng;
 
 /// Churn-cost model for online preemption: in-flight (pinned) tasks are
@@ -193,6 +194,15 @@ pub(crate) struct DeltaKernel {
     /// default) divides by 1.0, which is IEEE-exact: the no-chaos path
     /// stays bit-identical to the pre-rates kernel.
     rates: Vec<f64>,
+    /// Expected-loss pricing model (failure-aware planning): when set,
+    /// each placed gang's wall duration gains
+    /// [`Risk::extra`]`(node, task, w)` — checkpoint overhead plus
+    /// expected rework and restarts on the chosen host. Like rates, the
+    /// term applies *after* node selection; like churn, it is a pure
+    /// per-assignment function of candidate state, so the delta ≡
+    /// full-replay and thread-parity contracts carry over. `None` (the
+    /// default) takes the exact risk-blind arithmetic path.
+    risk: Option<Risk>,
 }
 
 /// Sanitize a rate vector for evaluator use: sized to `n` nodes (missing
@@ -244,6 +254,7 @@ impl DeltaKernel {
             committed_ms: 0.0,
             valid_upto: 0,
             rates: vec![1.0; n_nodes],
+            risk: None,
         }
     }
 
@@ -251,6 +262,13 @@ impl DeltaKernel {
     /// all-1.0, the bit-identical fixed-rate behavior).
     pub(crate) fn with_rates(mut self, rates: &[f64]) -> Self {
         self.rates = sanitize_rates(rates, self.node_gpus.len());
+        self
+    }
+
+    /// Attach an expected-loss pricing model (builder-style; the default
+    /// `None` is the bit-identical risk-blind behavior).
+    pub(crate) fn with_risk(mut self, risk: Option<Risk>) -> Self {
+        self.risk = risk;
         self
     }
 
@@ -263,8 +281,18 @@ impl DeltaKernel {
     /// node (or the forced one), occupy the g earliest-free GPUs, return
     /// the gang's end time. `None` when no candidate node is wide enough —
     /// the same infeasibility the full-replay evaluator maps to INFINITY.
-    fn step(&mut self, g: usize, dur: f64, forced: Option<usize>) -> Option<f64> {
-        place_gang(&mut self.free, &self.node_gpus, &self.offsets, &self.rates, g, dur, forced)
+    fn step(&mut self, g: usize, dur: f64, forced: Option<usize>, t: usize) -> Option<f64> {
+        place_gang(
+            &mut self.free,
+            &self.node_gpus,
+            &self.offsets,
+            &self.rates,
+            self.risk.as_ref(),
+            g,
+            dur,
+            forced,
+            t,
+        )
     }
 
     /// Full replay of `s`, refreshing every checkpoint. Returns the
@@ -293,7 +321,7 @@ impl DeltaKernel {
             }
             let t = s.order[pos];
             let (g, dur) = gang_dur(durs, churn, s, t);
-            match self.step(g, dur, s.node[t]) {
+            match self.step(g, dur, s.node[t], t) {
                 Some(end) => match self.spec.kind {
                     ScoreKind::Makespan => ms = ms.max(end),
                     ScoreKind::Flow => sum += self.spec.flow_term(t, end),
@@ -371,7 +399,7 @@ impl DeltaKernel {
             }
             let t = s.order[pos];
             let (g, dur) = gang_dur(durs, churn, s, t);
-            match self.step(g, dur, s.node[t]) {
+            match self.step(g, dur, s.node[t], t) {
                 Some(end) => match self.spec.kind {
                     ScoreKind::Makespan => ms = ms.max(end),
                     ScoreKind::Flow => sum += self.spec.flow_term(t, end),
@@ -458,7 +486,17 @@ impl DeltaKernel {
         for pos in b0 * self.block..self.n {
             let t = s.order[pos];
             let (g, dur) = gang_dur(durs, churn, s, t);
-            match place_gang(free, &self.node_gpus, &self.offsets, &self.rates, g, dur, s.node[t]) {
+            match place_gang(
+                free,
+                &self.node_gpus,
+                &self.offsets,
+                &self.rates,
+                self.risk.as_ref(),
+                g,
+                dur,
+                s.node[t],
+                t,
+            ) {
                 Some(end) => match self.spec.kind {
                     ScoreKind::Makespan => ms = ms.max(end),
                     ScoreKind::Flow => sum += self.spec.flow_term(t, end),
@@ -481,15 +519,21 @@ impl DeltaKernel {
 /// GPUs, return the gang's end time. `None` when no candidate node is
 /// wide enough. The chosen host's rate stretches the duration *after*
 /// selection (`dur / rates[node]`), so selection itself is rate-blind
-/// and identical across every evaluator layer.
+/// and identical across every evaluator layer. With a [`Risk`] model
+/// attached, the chosen host also pads the wall duration by its
+/// expected loss (`w + risk.extra(node, t, w)`) — again post-selection,
+/// and match-gated so the `None` path is the exact legacy arithmetic.
+#[allow(clippy::too_many_arguments)]
 fn place_gang(
     free: &mut [f64],
     node_gpus: &[usize],
     offsets: &[usize],
     rates: &[f64],
+    risk: Option<&Risk>,
     g: usize,
     dur: f64,
     forced: Option<usize>,
+    t: usize,
 ) -> Option<f64> {
     let (node, start) = match forced {
         Some(ni) => {
@@ -519,7 +563,13 @@ fn place_gang(
             (best_node, best_start)
         }
     };
-    let end = start + dur / rates[node];
+    let end = match risk {
+        Some(r) => {
+            let w = dur / rates[node];
+            start + (w + r.extra(node, t, w))
+        }
+        None => start + dur / rates[node],
+    };
     let off = offsets[node];
     let width = node_gpus[node];
     let seg = &mut free[off..off + width];
@@ -549,6 +599,9 @@ pub(crate) struct FullScratch {
     /// Per-node effective rates; same semantics as [`DeltaKernel`]'s
     /// (selection rate-blind, chosen host stretches `dur / rate`).
     rates: Vec<f64>,
+    /// Expected-loss pricing model; same semantics as [`DeltaKernel`]'s
+    /// (post-selection padding, `None` = exact risk-blind arithmetic).
+    risk: Option<Risk>,
 }
 
 /// The g-th smallest value of `xs` (gang start time), using `tmp` as
@@ -571,6 +624,7 @@ impl FullScratch {
             tmp: Vec::new(),
             tailbuf: Vec::new(),
             rates: vec![1.0; node_gpus.len()],
+            risk: None,
         }
     }
 
@@ -578,6 +632,13 @@ impl FullScratch {
     /// all-1.0, the bit-identical fixed-rate behavior).
     pub(crate) fn with_rates(mut self, rates: &[f64]) -> Self {
         self.rates = sanitize_rates(rates, self.node_gpus.len());
+        self
+    }
+
+    /// Attach an expected-loss pricing model (builder-style; the default
+    /// `None` is the bit-identical risk-blind behavior).
+    pub(crate) fn with_risk(mut self, risk: Option<Risk>) -> Self {
+        self.risk = risk;
         self
     }
 
@@ -627,7 +688,13 @@ impl FullScratch {
                     }
                 }
             }
-            let end = best_start + dur / self.rates[best_node];
+            let end = match self.risk.as_ref() {
+                Some(r) => {
+                    let w = dur / self.rates[best_node];
+                    best_start + (w + r.extra(best_node, t, w))
+                }
+                None => best_start + dur / self.rates[best_node],
+            };
             // occupy the g earliest-free GPUs on that node
             let free = &mut self.free[best_node];
             for _ in 0..g {
@@ -1433,6 +1500,167 @@ mod tests {
         // sanitizer: junk rates degrade to 1.0, missing entries fill
         let clean = sanitize_rates(&[0.5, f64::NAN, -2.0, 0.0, f64::INFINITY], 7);
         assert_eq!(clean, vec![0.5, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0]);
+    }
+
+    /// Risk-aware reference: verbatim [`eval_reference_rated`] with the
+    /// one failure-aware extension — the chosen host pads the wall
+    /// duration by its expected loss, *after* node selection, with the
+    /// same `start + (w + extra)` association every evaluator uses.
+    fn eval_reference_risked(
+        s: &State,
+        durs: &[Vec<(usize, f64)>],
+        node_gpus: &[usize],
+        rates: &[f64],
+        risk: &Risk,
+        churn: Option<&Churn>,
+    ) -> f64 {
+        let mut free: Vec<Vec<f64>> = node_gpus.iter().map(|&n| vec![0.0; n]).collect();
+        let mut makespan = 0.0f64;
+        for &t in &s.order {
+            let (g, dur) = gang_dur(durs, churn, s, t);
+            let kth = |xs: &[f64]| {
+                let mut tmp = xs.to_vec();
+                tmp.sort_by(f64::total_cmp);
+                tmp[g - 1]
+            };
+            let mut best_node = usize::MAX;
+            let mut best_start = f64::INFINITY;
+            match s.node[t] {
+                Some(n) if node_gpus[n] >= g => {
+                    best_node = n;
+                    best_start = kth(&free[n]);
+                }
+                Some(_) => return f64::INFINITY,
+                None => {
+                    for n in 0..node_gpus.len() {
+                        if node_gpus[n] < g {
+                            continue;
+                        }
+                        let start = kth(&free[n]);
+                        if start < best_start {
+                            best_start = start;
+                            best_node = n;
+                        }
+                    }
+                    if best_node == usize::MAX {
+                        return f64::INFINITY;
+                    }
+                }
+            }
+            let w = dur / rates[best_node];
+            let end = best_start + (w + risk.extra(best_node, t, w));
+            let fr = &mut free[best_node];
+            for _ in 0..g {
+                let (mi, _) =
+                    fr.iter().enumerate().min_by(|a, b| a.1.total_cmp(b.1)).expect("non-empty");
+                fr[mi] = end;
+            }
+            makespan = makespan.max(end);
+        }
+        makespan
+    }
+
+    /// The failure-aware planning contract: with a per-node reliability
+    /// model attached (flaky nodes with random MTBF/restart, mixed
+    /// explicit and Young/Daly checkpoint cadences, straggler rates in
+    /// play), the delta evaluator, the read-only worker replay, and the
+    /// FullScratch evaluator agree bit for bit with the risk-aware
+    /// transliterated reference over random accepted/rejected move
+    /// sequences — and an all-`None` reliability vector builds no model
+    /// at all, leaving the kernel byte-identical to the risk-blind path.
+    #[test]
+    fn prop_risk_delta_eval_matches_full_replay() {
+        use crate::cluster::NodeReliability;
+        let mut risk_bites = 0usize;
+        for case in 0..30u64 {
+            let mut rng = DetRng::new(15000 + case);
+            let (durs, node_gpus) = random_instance(&mut rng, case % 3 == 0);
+            let nt = durs.len();
+            let mut s = random_state(&mut rng, &durs, node_gpus.len(), true);
+            let rates: Vec<f64> = (0..node_gpus.len())
+                .map(|_| if rng.f64() < 0.3 { rng.range_f64(0.2, 0.9) } else { 1.0 })
+                .collect();
+            // node 0 always flaky so the model always exists; others mixed
+            let reliability: Vec<Option<NodeReliability>> = (0..node_gpus.len())
+                .map(|ni| {
+                    (ni == 0 || rng.f64() < 0.5).then(|| {
+                        NodeReliability::new(
+                            rng.range_f64(500.0, 5000.0),
+                            rng.range_f64(0.0, 300.0),
+                        )
+                    })
+                })
+                .collect();
+            // mixed cadences: explicit intervals on half the tasks, the
+            // rest fall back to the host node's Young/Daly optimum
+            let intervals: Vec<f64> = (0..nt)
+                .map(|_| if rng.f64() < 0.5 { rng.range_f64(50.0, 1000.0) } else { f64::INFINITY })
+                .collect();
+            let ckpt_cost = rng.range_f64(0.0, 60.0);
+            let risk = Risk::new(&reliability, intervals, ckpt_cost).expect("node 0 is flaky");
+            let mut kernel = DeltaKernel::new(node_gpus.clone(), nt, ScoreSpec::makespan())
+                .with_rates(&rates)
+                .with_risk(Some(risk.clone()));
+            // an all-None reliability vector must not build a model, and
+            // the resulting kernel is the risk-blind arithmetic exactly
+            let blind = Risk::new(&vec![None; node_gpus.len()], vec![f64::INFINITY; nt], ckpt_cost);
+            assert!(blind.is_none(), "case {case}: unset reliability built a model");
+            let mut unrisked = DeltaKernel::new(node_gpus.clone(), nt, ScoreSpec::makespan())
+                .with_rates(&rates)
+                .with_risk(blind);
+            let mut mover = Mover::new(nt);
+            let mut full =
+                FullScratch::new(&node_gpus).with_rates(&rates).with_risk(Some(risk.clone()));
+            mover.rebuild_pos(&s.order);
+            let ms0 = kernel.rebuild(&s, &durs, None);
+            assert_eq!(
+                ms0,
+                eval_reference_risked(&s, &durs, &node_gpus, &rates, &risk, None),
+                "case {case}: risk rebuild"
+            );
+            assert_eq!(
+                unrisked.rebuild(&s, &durs, None),
+                eval_reference_rated(&s, &durs, &node_gpus, &rates, None),
+                "case {case}: reliability-unset kernel drifted from risk-blind"
+            );
+            let movable: Vec<usize> = (0..nt).collect();
+            let mut ro_free: Vec<f64> = Vec::new();
+            let mut ro_tail: Vec<f64> = Vec::new();
+            for step in 0..200 {
+                let (undo, p0) = mover.propose(&mut s, &durs, node_gpus.len(), &mut rng, &movable);
+                let ms_ro =
+                    kernel.eval_move_readonly(&s, &durs, p0, &mut ro_free, &mut ro_tail, None);
+                let ms = kernel.eval_move(&s, &durs, p0, None);
+                assert_eq!(ms, ms_ro, "case {case} step {step}: risk readonly diverged");
+                let reference = eval_reference_risked(&s, &durs, &node_gpus, &rates, &risk, None);
+                assert_eq!(ms, reference, "case {case} step {step}: risk delta != reference");
+                assert_eq!(
+                    full.eval(&s, &durs, None, kernel.spec()),
+                    reference,
+                    "case {case} step {step}: risk FullScratch != reference"
+                );
+                if ms.is_finite()
+                    && ms != eval_reference_rated(&s, &durs, &node_gpus, &rates, None)
+                {
+                    risk_bites += 1;
+                }
+                if ms.is_finite() && rng.f64() < 0.4 {
+                    kernel.accept(p0, ms);
+                } else {
+                    mover.undo(&mut s, undo);
+                }
+            }
+            // committed checkpoints must agree with a cold risk rebuild
+            let mut fresh = DeltaKernel::new(node_gpus.clone(), nt, ScoreSpec::makespan())
+                .with_rates(&rates)
+                .with_risk(Some(risk.clone()));
+            assert_eq!(
+                fresh.rebuild(&s, &durs, None),
+                kernel.rebuild(&s, &durs, None),
+                "case {case}: risk aggregates drifted"
+            );
+        }
+        assert!(risk_bites > 200, "risk term rarely bit: {risk_bites}");
     }
 
     /// Reference scorer for arbitrary objectives: the verbatim naive

@@ -36,9 +36,10 @@ use super::anneal::{self, AnnealParams};
 use super::delta::{Churn, State};
 use super::objective::{Objective, ScoreKind, ScoreSpec};
 use super::policy::{PlanCtx, Policy};
+use super::risk::Risk;
 use super::spase::SpaseTask;
 use crate::cluster::Cluster;
-use crate::sched::{list_schedule_masked, PlacementChoice, Schedule};
+use crate::sched::{list_schedule_ext, PlacementChoice, Schedule};
 use crate::util::rng::DetRng;
 use crate::util::Deadline;
 use std::time::Duration;
@@ -199,14 +200,16 @@ impl JointOptimizer {
         let spec = self.objective.resolve(tasks, &[]);
         let caps: Vec<usize> = cluster.nodes.iter().map(|n| n.gpus).collect();
         let rates = vec![1.0f64; cluster.nodes.len()];
-        self.solve_with(tasks, cluster, &spec, &caps, &rates, rng)
+        self.solve_with(tasks, cluster, &spec, &caps, &rates, None, rng)
     }
 
     /// [`Self::solve`] against an already-resolved objective spec and an
     /// explicit chaos capacity view: `caps` is the per-node GPU budget
-    /// (dead nodes zeroed — every evaluator then refuses them) and
-    /// `rates` the per-node effective speed. Full caps + unit rates is
-    /// the bit-identical legacy solve.
+    /// (dead nodes zeroed — every evaluator then refuses them), `rates`
+    /// the per-node effective speed, and `risk` the expected-loss
+    /// pricing model (failure-aware planning). Full caps + unit rates +
+    /// no risk is the bit-identical legacy solve.
+    #[allow(clippy::too_many_arguments)]
     fn solve_with(
         &self,
         tasks: &[SpaseTask],
@@ -214,6 +217,7 @@ impl JointOptimizer {
         spec: &ScoreSpec,
         caps: &[usize],
         rates: &[f64],
+        risk: Option<&Risk>,
         rng: &mut DetRng,
     ) -> (Schedule, SolveStats) {
         let mut stats = SolveStats::default();
@@ -229,7 +233,7 @@ impl JointOptimizer {
 
         // ---- warm starts -------------------------------------------------
         let (best_state, mut best_sched, mut best_ms) =
-            self.warm_starts(tasks, cluster, spec, caps, rates, rng, &mut stats);
+            self.warm_starts(tasks, cluster, spec, caps, rates, risk, rng, &mut stats);
         stats.warm_makespan = best_ms;
 
         // ---- speculative annealing with restarts ------------------------
@@ -245,6 +249,7 @@ impl JointOptimizer {
             full_replay: self.full_replay,
             churn: None,
             objective: spec,
+            risk,
             restarts: self.restarts.max(1),
             iters_per_temp: self.iters_per_temp,
             init_temp_frac: 0.08,
@@ -253,7 +258,8 @@ impl JointOptimizer {
         best_ms = out.best_ms;
 
         // materialize the incumbent's full schedule once
-        let (sched, ms) = self.eval(&out.best, tasks, cluster, caps, rates, None, spec, &mut stats);
+        let (sched, ms) =
+            self.eval(&out.best, tasks, cluster, caps, rates, None, risk, spec, &mut stats);
         if ms <= best_ms + 1e-9 {
             best_sched = sched;
             best_ms = ms;
@@ -333,7 +339,11 @@ impl JointOptimizer {
     /// as the annealing evaluators compute them, so the materialized
     /// schedule's score matches the annealed incumbent's. `caps`/`rates`
     /// are the chaos capacity view the annealing evaluators used (full
-    /// caps + unit rates = the bit-identical legacy scheduler).
+    /// caps + unit rates = the bit-identical legacy scheduler), and
+    /// `risk` the expected-loss model they priced: the materializing
+    /// scheduler pads each gang's wall duration through the same
+    /// `Risk::extra` hook, post-selection, so the assignments' end times
+    /// bit-match the annealed score.
     #[allow(clippy::too_many_arguments)]
     fn eval(
         &self,
@@ -343,6 +353,7 @@ impl JointOptimizer {
         caps: &[usize],
         rates: &[f64],
         churn: Option<&Churn>,
+        risk: Option<&Risk>,
         spec: &ScoreSpec,
         stats: &mut SolveStats,
     ) -> (Schedule, f64) {
@@ -361,7 +372,15 @@ impl JointOptimizer {
                 }
             })
             .collect();
-        let (sched, _skipped) = list_schedule_masked(&choices, cluster, caps, rates);
+        let (sched, _skipped) = match risk {
+            Some(r) => {
+                // choices[j] holds the task at order position j, so the
+                // hook prices task s.order[j] on its chosen host
+                let ext = |j: usize, ni: usize, w: f64| r.extra(ni, s.order[j], w);
+                list_schedule_ext(&choices, cluster, caps, rates, Some(&ext))
+            }
+            None => list_schedule_ext(&choices, cluster, caps, rates, None),
+        };
         // unplaceable tasks (forced node too small) poison the candidate
         let ms = if sched.assignments.len() == tasks.len() {
             spec.score_assignments(&s.order, &sched)
@@ -493,6 +512,7 @@ impl JointOptimizer {
         let nt = tasks.len();
         let preempt = ctx.preempt_cost.or(self.preempt);
         let spec = self.ctx_spec(ctx, &tasks);
+        let risk = ctx.risk_model(&tasks);
         let (seed, locked, churn) = self.incremental_seed(ctx, &tasks, preempt);
         let durs = duration_table(&tasks);
         // chaos capacity view: plan-dead nodes are zero-width for every
@@ -512,6 +532,7 @@ impl JointOptimizer {
             full_replay: self.full_replay,
             churn: churn.as_ref(),
             objective: &spec,
+            risk: risk.as_ref(),
             restarts: 1,
             iters_per_temp: (self.iters_per_temp / 2).max(50),
             init_temp_frac: 0.05,
@@ -522,8 +543,17 @@ impl JointOptimizer {
             // incumbent cannot seat the current task set: cold-solve
             // (the engine consumed no randomness — with one restart and an
             // infeasible seed the annealing loop never starts), keeping
-            // the context's objective, task ages, and chaos capacity view
-            return self.solve_with(&tasks, cluster, &spec, &node_gpus, &ctx.node_rate, rng);
+            // the context's objective, task ages, chaos capacity view,
+            // and risk model
+            return self.solve_with(
+                &tasks,
+                cluster,
+                &spec,
+                &node_gpus,
+                &ctx.node_rate,
+                risk.as_ref(),
+                rng,
+            );
         }
 
         let (sched, ms) = self.eval(
@@ -533,6 +563,7 @@ impl JointOptimizer {
             &node_gpus,
             &ctx.node_rate,
             churn.as_ref(),
+            risk.as_ref(),
             &spec,
             &mut stats,
         );
@@ -555,6 +586,7 @@ impl JointOptimizer {
         spec: &ScoreSpec,
         caps: &[usize],
         rates: &[f64],
+        risk: Option<&Risk>,
         rng: &mut DetRng,
         stats: &mut SolveStats,
     ) -> (State, Schedule, f64) {
@@ -598,7 +630,8 @@ impl JointOptimizer {
 
         let mut best: Option<(State, Schedule, f64)> = None;
         for cand in candidates {
-            let (sched, ms) = self.eval(&cand, tasks, cluster, caps, rates, None, spec, stats);
+            let (sched, ms) =
+                self.eval(&cand, tasks, cluster, caps, rates, None, risk, spec, stats);
             if best.as_ref().map_or(true, |(_, _, bms)| ms < *bms) {
                 best = Some((cand, sched, ms));
             }
@@ -659,7 +692,8 @@ impl Policy for JointOptimizer {
         let tasks = ctx.spase_tasks();
         let spec = self.ctx_spec(ctx, &tasks);
         let caps = ctx.node_caps();
-        self.solve_with(&tasks, ctx.cluster, &spec, &caps, &ctx.node_rate, rng).0
+        let risk = ctx.risk_model(&tasks);
+        self.solve_with(&tasks, ctx.cluster, &spec, &caps, &ctx.node_rate, risk.as_ref(), rng).0
     }
 }
 
@@ -834,6 +868,62 @@ mod tests {
         assert_eq!(s1, s4, "plans must be identical for every thread count");
     }
 
+    /// The tentpole economics on the hand-built flaky-node instance: one
+    /// 8-GPU 2000 s gang plus eight 1-GPU 400 s tasks on two 8-GPU nodes,
+    /// node 0 flaky (MTBF 800 s, restart 200 s). Risk-blind scoring has
+    /// tied 2000 s optima and the earliest-free strict-< tie-break parks
+    /// the long gang on the flaky node 0. The expected-loss term re-prices
+    /// that plan to 2000 + (2000/800)·200 = 2500 s, so only
+    /// long-on-the-clean-node plans reach the (risk-free) 2000 s lower
+    /// bound and the annealer's lower-bound early exit pins the steering
+    /// deterministically: any single move that puts a short ahead of the
+    /// gang (or forces its node) scores 2000 and is strictly improving.
+    #[test]
+    fn risk_steers_long_gang_off_the_flaky_node() {
+        use crate::cluster::NodeReliability;
+        let mut tasks = vec![SpaseTask { id: 0, configs: vec![cfg(8, 2000.0)] }];
+        tasks.extend((1..9).map(|i| SpaseTask { id: i, configs: vec![cfg(1, 400.0)] }));
+        let cluster = Cluster::from_gpu_counts(&[8, 8]);
+        let opt = JointOptimizer {
+            timeout: Duration::from_secs(600),
+            restarts: 2,
+            iters_per_temp: 200,
+            ..Default::default()
+        };
+        let spec = opt.objective.resolve(&tasks, &[]);
+        let caps = [8usize, 8];
+        let rates = [1.0f64, 1.0];
+        let reliability = [Some(NodeReliability::new(800.0, 200.0)), None];
+        let risk =
+            Risk::new(&reliability, vec![f64::INFINITY; 9], 0.0).expect("flaky node 0 ⇒ model");
+
+        let (blind, _) =
+            opt.solve_with(&tasks, &cluster, &spec, &caps, &rates, None, &mut DetRng::new(808));
+        let (aware, _) = opt.solve_with(
+            &tasks,
+            &cluster,
+            &spec,
+            &caps,
+            &rates,
+            Some(&risk),
+            &mut DetRng::new(808),
+        );
+
+        let gang = |s: &Schedule| {
+            s.assignments.iter().find(|a| a.config.gpus == 8).expect("8-gang planned").clone()
+        };
+        // risk-blind: 2000 s either way; the tie-break picks the flaky node
+        assert_eq!(gang(&blind).node, 0, "risk-blind parks the gang on the flaky node");
+        assert!((blind.makespan() - 2000.0).abs() < 1e-9, "blind={}", blind.makespan());
+        // risk-aware: only node-1 plans hit the 2000 s lower bound
+        assert_eq!(gang(&aware).node, 1, "risk must steer the gang to the clean node");
+        assert!((aware.makespan() - 2000.0).abs() < 1e-9, "aware={}", aware.makespan());
+        // shorts absorb the flaky node at padded duration 400 + (400/800)·200
+        for a in aware.assignments.iter().filter(|a| a.config.gpus == 1 && a.node == 0) {
+            assert_eq!(a.duration, 500.0, "planned short must carry the risk padding");
+        }
+    }
+
     /// The incremental budget fraction is configurable (the online
     /// coordinator tunes it against its arrival rate) with the historical
     /// hardcoded `timeout / 4` as the unchanged default; degenerate
@@ -891,7 +981,7 @@ mod tests {
         let mut rng = DetRng::new(11);
         let spec = opt.objective.resolve(&tasks, &[]);
         let (_, sched, ms) =
-            opt.warm_starts(&tasks, &cluster, &spec, &[8], &[1.0], &mut rng, &mut stats);
+            opt.warm_starts(&tasks, &cluster, &spec, &[8], &[1.0], None, &mut rng, &mut stats);
         assert_eq!(stats.evals, 5, "5 candidates ⇒ exactly 5 evaluations");
         assert!(ms.is_finite());
         assert_eq!(sched.assignments.len(), 4);

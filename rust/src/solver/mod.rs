@@ -23,6 +23,10 @@
 //! - [`policy`]: the common interface all planners (Saturn + baselines)
 //!   implement, so the simulator and introspection loop can drive any of
 //!   them interchangeably.
+//! - [`risk`]: failure-aware planning — per-node MTBF reliability models
+//!   priced into every evaluator as a closed-form expected-loss term
+//!   (lost work + restarts given the gang's duration and checkpoint
+//!   cadence), plus the Young/Daly checkpoint-interval policy.
 
 mod anneal;
 mod delta;
@@ -31,7 +35,9 @@ pub mod lp;
 pub mod milp;
 pub mod objective;
 pub mod policy;
+pub mod risk;
 pub mod spase;
 
 pub use objective::Objective;
 pub use policy::{PlanCtx, Policy};
+pub use risk::{young_daly_interval, Risk};

@@ -6,11 +6,12 @@
 //! every planner introspection-ready (paper §4.4): at a round boundary the
 //! simulator re-invokes the planner with partially-trained tasks.
 
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, NodeReliability};
 use crate::costmodel::ParallelismKind;
 use crate::profiler::{ProfileGrid, TaskConfig};
 use crate::sched::Schedule;
 use crate::solver::objective::Objective;
+use crate::solver::risk::Risk;
 use crate::solver::spase::SpaseTask;
 use crate::trainer::Workload;
 use crate::util::rng::DetRng;
@@ -96,6 +97,18 @@ pub struct PlanCtx<'a> {
     /// with preemption on, the ordinary preempt churn already prices the
     /// move.
     pub relocate_cost: f64,
+    /// Per-node failure statistics, indexed like `cluster.nodes`. `None`
+    /// entries carry no evidence (treated as never failing); an all-`None`
+    /// or empty vector (the default) builds no [`Risk`] model at all, so
+    /// planning stays byte-identical to the risk-blind behavior. The
+    /// simulator stamps this from `SimConfig::reliability`; online it can
+    /// be derived from observed chaos traces with
+    /// [`crate::cluster::estimate_reliability`].
+    pub reliability: Vec<Option<NodeReliability>>,
+    /// Cost of writing one checkpoint, seconds — the `C` in the
+    /// Young/Daly interval √(2·C·MTBF) and the per-interval overhead the
+    /// risk term prices. 0.0 (the default) makes checkpoints free.
+    pub ckpt_cost: f64,
 }
 
 impl<'a> PlanCtx<'a> {
@@ -116,7 +129,31 @@ impl<'a> PlanCtx<'a> {
             node_alive: vec![true; cluster.nodes.len()],
             node_rate: vec![1.0; cluster.nodes.len()],
             relocate_cost: 0.0,
+            reliability: Vec::new(),
+            ckpt_cost: 0.0,
         }
+    }
+
+    /// The expected-loss pricing model for a solve over `tasks` (the
+    /// SPASE instances the planner is deciding, in solve order): per-node
+    /// failure statistics from [`Self::reliability`] joined with each
+    /// task's explicit `ckpt_interval` (∞ = defer to the host node's
+    /// Young/Daly optimum). `None` when no node carries a model, keeping
+    /// every evaluator on the exact risk-blind arithmetic.
+    pub fn risk_model(&self, tasks: &[SpaseTask]) -> Option<Risk> {
+        if self.reliability.iter().all(|r| r.is_none()) {
+            return None;
+        }
+        let idx = self.id_index_map();
+        let intervals = tasks
+            .iter()
+            .map(|t| {
+                idx.get(&t.id)
+                    .and_then(|&i| self.workload[i].ckpt_interval)
+                    .unwrap_or(f64::INFINITY)
+            })
+            .collect();
+        Risk::new(&self.reliability, intervals, self.ckpt_cost)
     }
 
     /// Per-node *effective* GPU capacities under the availability mask:
@@ -397,6 +434,10 @@ mod tests {
         assert_eq!(ctx.node_alive, vec![true; 4]);
         assert_eq!(ctx.node_rate, vec![1.0; 4]);
         assert_eq!(ctx.relocate_cost, 0.0);
+        // risk defaults are inert: no reliability evidence, no model
+        assert!(ctx.reliability.is_empty());
+        assert_eq!(ctx.ckpt_cost, 0.0);
+        assert!(ctx.risk_model(&ctx.spase_tasks()).is_none());
         assert_eq!(ctx.node_caps(), vec![2, 2, 4, 8]);
         assert_eq!(ctx.max_live_gpus_per_node(), 8);
         assert!(ctx.node_is_alive(99), "out-of-range defaults to alive");

@@ -1,0 +1,294 @@
+//! Failure-aware planning: MTBF-driven expected-loss pricing.
+//!
+//! PR 7 made cluster capacity failure-prone but left the solver purely
+//! *reactive* — it relocates gangs after a crash, it never anticipates
+//! one. This module turns the chaos machinery into a planning signal: a
+//! per-node reliability model ([`crate::cluster::NodeReliability`],
+//! surfaced via `SimConfig::reliability` / `OnlineCoordinator` and
+//! derivable from observed chaos traces with
+//! [`crate::cluster::estimate_reliability`]) is priced into every
+//! evaluator as a closed-form **expected-loss term**: a gang scheduled on
+//! a flaky node carries its expected rework and restart delay as extra
+//! effective duration, so the annealer keeps long gangs off flaky nodes
+//! and pays relocation churn *preemptively* exactly when the expected
+//! loss beats it.
+//!
+//! # The closed form
+//!
+//! Failures on a node arrive Poisson with rate λ = 1/MTBF. A gang running
+//! for wall-clock duration `w` with checkpoint cadence τ expects:
+//!
+//! - **checkpoint overhead** `(w/τ)·C` — one write of cost `C` per
+//!   interval (zero when τ = ∞, i.e. segment-boundary checkpoints only);
+//! - **rework** `λ·w · τ.min(w)/2` — λ·w expected failures, each losing
+//!   on average half an interval of progress (capped at `w` when the gang
+//!   never checkpoints mid-flight);
+//! - **restart delay** `λ·w · R` — each failure pays the node's mean
+//!   restart/repair delay `R`.
+//!
+//! [`Risk::extra`] returns the sum. It is a pure per-assignment function
+//! of (host node, task, wall duration) — exactly the shape of
+//! `Churn::extra` — which is what keeps delta ≡ full-replay and
+//! 1-vs-8-thread bit-identity intact: the padded effective duration flows
+//! through the prefix aggregates, `eval_move_readonly`, `FullScratch`,
+//! `JointOptimizer::eval`, and the simulator's re-plan acceptance without
+//! touching their arithmetic. With no reliability model set, no [`Risk`]
+//! is constructed and every code path is byte-identical to the risk-blind
+//! arithmetic.
+//!
+//! # The checkpoint-interval policy
+//!
+//! Minimizing overhead + rework over τ gives the Young/Daly optimum
+//! τ* = √(2·C·MTBF) ([`young_daly_interval`]). Per task, an explicit
+//! `Task::ckpt_interval` overrides; otherwise the cadence defaults to
+//! τ* for the host node. The same cadence drives the simulator's
+//! rollback accounting, so realized `lost_work_secs` reflects the
+//! interval the planner priced.
+
+/// The Young/Daly checkpoint interval τ* = √(2·C·MTBF).
+///
+/// Degenerate regimes pick the limit behavior: a non-finite or
+/// non-positive MTBF (the node never fails) returns ∞ — never checkpoint
+/// mid-flight; a non-positive checkpoint cost returns 0.0 — checkpoints
+/// are free, take them continuously (callers treat a non-positive cadence
+/// as "no overhead, no rework").
+pub fn young_daly_interval(ckpt_cost: f64, mtbf_secs: f64) -> f64 {
+    if !(mtbf_secs.is_finite() && mtbf_secs > 0.0) {
+        return f64::INFINITY;
+    }
+    if !(ckpt_cost.is_finite() && ckpt_cost > 0.0) {
+        return 0.0;
+    }
+    (2.0 * ckpt_cost * mtbf_secs).sqrt()
+}
+
+/// The expected-loss pricing model every evaluator consults: per-node
+/// failure statistics, per-task checkpoint intervals, and the checkpoint
+/// write cost. Built by [`Risk::new`] from the surfaced reliability
+/// vector; `None` (no node carries a model) disables risk entirely.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Risk {
+    /// Per-node MTBF, seconds (∞ = never fails).
+    mtbf: Vec<f64>,
+    /// Per-node mean restart/repair delay, seconds.
+    restart: Vec<f64>,
+    /// Per-task explicit checkpoint interval; non-finite or non-positive
+    /// entries fall back to the host node's Young/Daly optimum.
+    intervals: Vec<f64>,
+    /// Cost of writing one checkpoint, seconds.
+    ckpt_cost: f64,
+}
+
+impl Risk {
+    /// Build the pricing model. `reliability` is per-node (`None` =
+    /// no evidence = treated as never failing); `intervals` is the
+    /// per-task explicit cadence (use `f64::INFINITY` for "auto");
+    /// `ckpt_cost` is the per-checkpoint write cost. Returns `None` when
+    /// no node carries a model at all, so unset reliability keeps every
+    /// evaluator on the exact risk-blind arithmetic.
+    pub fn new(
+        reliability: &[Option<crate::cluster::NodeReliability>],
+        intervals: Vec<f64>,
+        ckpt_cost: f64,
+    ) -> Option<Self> {
+        if reliability.iter().all(|r| r.is_none()) {
+            return None;
+        }
+        let mut mtbf = Vec::with_capacity(reliability.len());
+        let mut restart = Vec::with_capacity(reliability.len());
+        for r in reliability {
+            match r {
+                Some(r) => {
+                    mtbf.push(if r.mtbf_secs.is_finite() && r.mtbf_secs > 0.0 {
+                        r.mtbf_secs
+                    } else {
+                        f64::INFINITY
+                    });
+                    restart.push(if r.restart_secs.is_finite() && r.restart_secs > 0.0 {
+                        r.restart_secs
+                    } else {
+                        0.0
+                    });
+                }
+                None => {
+                    mtbf.push(f64::INFINITY);
+                    restart.push(0.0);
+                }
+            }
+        }
+        let ckpt_cost = if ckpt_cost.is_finite() && ckpt_cost > 0.0 { ckpt_cost } else { 0.0 };
+        Some(Self { mtbf, restart, intervals, ckpt_cost })
+    }
+
+    /// The checkpoint cadence task `t` runs with on `node`: its explicit
+    /// interval if finite and positive, else the node's Young/Daly
+    /// optimum. A non-positive result means "checkpoints are free and
+    /// continuous"; ∞ means "no mid-flight checkpoints".
+    pub fn cadence(&self, t: usize, node: usize) -> f64 {
+        let explicit = self.intervals.get(t).copied().unwrap_or(f64::INFINITY);
+        if explicit.is_finite() && explicit > 0.0 {
+            return explicit;
+        }
+        young_daly_interval(self.ckpt_cost, self.mtbf.get(node).copied().unwrap_or(f64::INFINITY))
+    }
+
+    /// The node's failure rate λ = 1/MTBF (0.0 = never fails).
+    pub fn failure_rate(&self, node: usize) -> f64 {
+        match self.mtbf.get(node) {
+            Some(&m) if m.is_finite() && m > 0.0 => 1.0 / m,
+            _ => 0.0,
+        }
+    }
+
+    /// Expected checkpoint-write overhead for a gang of wall duration `w`
+    /// at cadence `tau`: one cost-`C` write per interval.
+    fn overhead_term(&self, w: f64, tau: f64) -> f64 {
+        if tau.is_finite() && tau > 0.0 {
+            (w / tau) * self.ckpt_cost
+        } else {
+            0.0
+        }
+    }
+
+    /// Expected rework + restart delay for a gang of wall duration `w` on
+    /// a node with failure rate `lam` and restart delay `restart`, at
+    /// cadence `tau`: λ·w failures, each losing half an interval (capped
+    /// at the whole gang) plus the restart.
+    fn loss_term(lam: f64, restart: f64, w: f64, tau: f64) -> f64 {
+        if lam <= 0.0 {
+            return 0.0;
+        }
+        let half_interval = if tau > 0.0 { 0.5 * tau.min(w) } else { 0.0 };
+        lam * w * (half_interval + restart)
+    }
+
+    /// E[lost work + restarts + checkpoint overhead] for task `t` running
+    /// `w` wall-clock seconds on `node` — the expected-loss term added to
+    /// the gang's effective duration by every evaluator. Pure in its
+    /// arguments; 0.0 exactly when the node never fails and no explicit
+    /// cadence prices checkpoint writes.
+    pub fn extra(&self, node: usize, t: usize, w: f64) -> f64 {
+        let lam = self.failure_rate(node);
+        let restart = self.restart.get(node).copied().unwrap_or(0.0);
+        let tau = self.cadence(t, node);
+        if lam <= 0.0 && !(tau.is_finite() && tau > 0.0) {
+            return 0.0;
+        }
+        self.overhead_term(w, tau) + Self::loss_term(lam, restart, w, tau)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::NodeReliability;
+
+    fn flaky(mtbf: f64, restart: f64) -> Vec<Option<NodeReliability>> {
+        vec![Some(NodeReliability::new(mtbf, restart)), None]
+    }
+
+    #[test]
+    fn young_daly_pins_the_closed_form() {
+        // √(2·30·800) — the flaky-node fixture's operating point
+        assert!((young_daly_interval(30.0, 800.0) - 48000.0f64.sqrt()).abs() < 1e-12);
+        assert!((young_daly_interval(10.0, 1000.0) - 20000.0f64.sqrt()).abs() < 1e-12);
+        assert_eq!(young_daly_interval(30.0, f64::INFINITY), f64::INFINITY);
+        assert_eq!(young_daly_interval(30.0, 0.0), f64::INFINITY);
+        assert_eq!(young_daly_interval(30.0, f64::NAN), f64::INFINITY);
+        assert_eq!(young_daly_interval(0.0, 800.0), 0.0);
+    }
+
+    #[test]
+    fn young_daly_minimizes_the_priced_total() {
+        // τ* must beat every other cadence on overhead + rework (restart
+        // is cadence-independent): scan a fine τ grid around the optimum.
+        let (c, mtbf, w) = (30.0, 800.0, 1e9);
+        let r = Risk::new(&flaky(mtbf, 0.0), vec![f64::INFINITY], c).expect("model");
+        let lam = 1.0 / mtbf;
+        let total = |tau: f64| r.overhead_term(w, tau) + Risk::loss_term(lam, 0.0, w, tau);
+        let star = young_daly_interval(c, mtbf);
+        let best = total(star);
+        let mut tau = 1.0;
+        while tau < 1e6 {
+            assert!(best <= total(tau) + 1e-6 * best, "τ*={star} beaten at τ={tau}");
+            tau *= 1.07;
+        }
+    }
+
+    #[test]
+    fn extra_prices_the_flaky_node_and_spares_the_clean_one() {
+        // MTBF 800 s, restart 200 s, no explicit cadence, free checkpoints
+        // ⇒ τ* = 0 ⇒ extra = λ·w·restart.
+        let r = Risk::new(&flaky(800.0, 200.0), vec![f64::INFINITY], 0.0).expect("model");
+        let w = 2000.0;
+        assert!((r.extra(0, 0, w) - (w / 800.0) * 200.0).abs() < 1e-9);
+        assert_eq!(r.extra(1, 0, w), 0.0, "the clean node adds nothing");
+        // with a real write cost the Young/Daly rework term appears
+        let r = Risk::new(&flaky(800.0, 200.0), vec![f64::INFINITY], 30.0).expect("model");
+        let tau = young_daly_interval(30.0, 800.0);
+        let want = (w / tau) * 30.0 + (w / 800.0) * (0.5 * tau.min(w) + 200.0);
+        assert!((r.extra(0, 0, w) - want).abs() < 1e-9);
+        // no mid-flight checkpoints at all: half the gang reworks
+        let r = Risk::new(&flaky(800.0, 200.0), vec![1e30], 0.0).expect("model");
+        let want = (w / 800.0) * (0.5 * w + 200.0);
+        assert!((r.extra(0, 0, w) - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn explicit_interval_overrides_young_daly() {
+        let r = Risk::new(&flaky(800.0, 0.0), vec![200.0, f64::INFINITY], 30.0).expect("model");
+        assert_eq!(r.cadence(0, 0), 200.0);
+        assert!((r.cadence(1, 0) - young_daly_interval(30.0, 800.0)).abs() < 1e-12);
+        // out-of-range task index falls back to auto, not a panic
+        assert!((r.cadence(7, 0) - young_daly_interval(30.0, 800.0)).abs() < 1e-12);
+        let w = 1000.0;
+        let want = (w / 200.0) * 30.0 + (w / 800.0) * (0.5 * 200.0);
+        assert!((r.extra(0, 0, w) - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn no_reliability_builds_no_model() {
+        assert_eq!(Risk::new(&[None, None], vec![100.0], 30.0), None);
+        assert_eq!(Risk::new(&[], vec![], 30.0), None);
+        // a reliable node builds a model that prices nothing
+        let r = Risk::new(&[Some(NodeReliability::reliable())], vec![f64::INFINITY], 30.0)
+            .expect("model");
+        assert_eq!(r.extra(0, 0, 5000.0), 0.0);
+    }
+
+    /// Satellite property: expected *failure loss* is monotone
+    /// non-increasing in checkpoint frequency (checkpointing more often
+    /// never loses more work) and the full expected loss is monotone
+    /// non-decreasing in the failure rate, across randomized operating
+    /// points.
+    #[test]
+    fn prop_loss_monotone_in_cadence_and_failure_rate() {
+        let mut rng = crate::util::rng::DetRng::new(0x5EED_5157);
+        for case in 0..500u64 {
+            let mut crng = rng.fork(case);
+            let w = crng.range_f64(10.0, 5000.0);
+            let restart = crng.range_f64(0.0, 500.0);
+            let lam = crng.range_f64(1e-6, 1e-2);
+            // denser cadence (smaller τ) never loses more
+            let mut prev = f64::INFINITY;
+            for k in 1..40 {
+                let tau = w * 1.5 / k as f64;
+                let loss = Risk::loss_term(lam, restart, w, tau);
+                assert!(
+                    loss <= prev + 1e-12,
+                    "case {case}: loss rose as τ shrank ({prev} -> {loss} at τ={tau})"
+                );
+                prev = loss;
+            }
+            // a higher failure rate never prices lower
+            let tau = crng.range_f64(1.0, w * 2.0);
+            let mut prev = 0.0;
+            for k in 0..40 {
+                let lam_k = lam * (1.0 + k as f64 * 0.25);
+                let loss = Risk::loss_term(lam_k, restart, w, tau);
+                assert!(loss + 1e-12 >= prev, "case {case}: loss fell as λ rose");
+                prev = loss;
+            }
+        }
+    }
+}

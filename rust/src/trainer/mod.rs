@@ -63,6 +63,12 @@ pub struct Task {
     /// online-submission path (`crate::online`, arrival-aware simulation)
     /// injects tasks with positive arrivals mid-run.
     pub arrival: f64,
+    /// Explicit checkpoint interval, seconds. `None` (the default) defers
+    /// to the host node's Young/Daly optimum √(2·C·MTBF) whenever a
+    /// reliability model is in play; `Some(τ)` pins the cadence — the
+    /// risk term prices it and the simulator's rollback accounting
+    /// rounds lost work down to the last τ-boundary checkpoint.
+    pub ckpt_interval: Option<f64>,
 }
 
 impl Task {
@@ -70,13 +76,33 @@ impl Task {
     pub fn new(id: usize, model: ModelDesc, hparams: HParams, dataset_examples: usize) -> Self {
         let name = format!("{}/b{}/lr{:.0e}", model.name, hparams.batch_size, hparams.lr);
         let is_transformer = !matches!(model.arch, crate::model::Arch::ConvNet);
-        Self { id, name, model, hparams, dataset_examples, is_transformer, arrival: 0.0 }
+        Self {
+            id,
+            name,
+            model,
+            hparams,
+            dataset_examples,
+            is_transformer,
+            arrival: 0.0,
+            ckpt_interval: None,
+        }
     }
 
     /// Builder: set the submission time (online workloads).
     pub fn with_arrival(mut self, arrival: f64) -> Self {
         assert!(arrival >= 0.0 && arrival.is_finite(), "arrival must be finite and non-negative");
         self.arrival = arrival;
+        self
+    }
+
+    /// Builder: pin the checkpoint cadence (overrides the Young/Daly
+    /// default wherever a reliability model is active).
+    pub fn with_ckpt_interval(mut self, interval: f64) -> Self {
+        assert!(
+            interval.is_finite() && interval > 0.0,
+            "ckpt_interval must be finite and positive"
+        );
+        self.ckpt_interval = Some(interval);
         self
     }
 
@@ -145,6 +171,20 @@ mod tests {
     #[should_panic(expected = "arrival")]
     fn arrival_rejects_negative() {
         let _ = task().with_arrival(-1.0);
+    }
+
+    #[test]
+    fn ckpt_interval_defaults_to_auto() {
+        let t = task();
+        assert_eq!(t.ckpt_interval, None);
+        let t2 = t.with_ckpt_interval(200.0);
+        assert_eq!(t2.ckpt_interval, Some(200.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "ckpt_interval")]
+    fn ckpt_interval_rejects_nonpositive() {
+        let _ = task().with_ckpt_interval(0.0);
     }
 
     #[test]

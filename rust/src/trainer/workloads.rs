@@ -313,6 +313,49 @@ pub fn blocked_failure_instance() -> (Workload, crate::profiler::ProfileGrid, Cl
     (w, grid, Cluster::from_gpu_counts(&[8, 2]))
 }
 
+/// The canonical **flaky-node** risk instance: one 8-GPU 2000 s gang
+/// (task 0, single config) plus eight 1-GPU 400 s jobs on a `[8, 8]`-GPU
+/// cluster, everything arriving at t = 0. Paired with
+/// [`flaky_node_events`] (node 0 fails at 700/1600/2500 s, 200 s
+/// repairs — observed MTBF 800 s, restart 200 s), the economics separate
+/// cleanly: a risk-blind makespan solver has tied 2000 s optima and its
+/// earliest-free tie-break parks the gang on flaky node 0, where the
+/// t = 700 s crash rolls it back to its last checkpoint; the
+/// expected-loss term re-prices the node-0 seat to
+/// 2000 + (2000/800)·200 = 2500 s, steering the gang to clean node 1
+/// while the 400 s shorts absorb node 0 and finish before the first
+/// failure. Every task runs exactly 100 minibatches, so
+/// `task_secs = 100 × minibatch_secs` and the margins are bit-exact.
+/// Used by the solver and simulator risk acceptance tests and
+/// cross-validated by `scripts/validate_chaos_fixture.py`.
+pub fn flaky_node_instance() -> (Workload, crate::profiler::ProfileGrid, Cluster) {
+    use crate::profiler::{PlanEstimate, ProfileGrid};
+    // dataset 100 examples at batch 1 over 1 epoch → exactly 100 batches
+    let w: Workload = (0..9)
+        .map(|id| {
+            Task::new(id, ModelDesc::resnet_200m(), HParams::new(1, 1e-4, 1, Optimizer::Sgd), 100)
+        })
+        .collect();
+    let mut grid = ProfileGrid::default();
+    let mut put = |id: usize, gpus: usize, secs: f64| {
+        grid.insert(PlanEstimate {
+            task_id: id,
+            upp: "pytorch-ddp".into(),
+            kind: ParallelismKind::Ddp,
+            gpus,
+            knobs: Knobs::default(),
+            minibatch_secs: secs / 100.0,
+            mem_per_gpu_gib: 1.0,
+            dram_gib: 1.0,
+        });
+    };
+    put(0, 8, 2000.0);
+    for id in 1..9 {
+        put(id, 1, 400.0);
+    }
+    (w, grid, Cluster::from_gpu_counts(&[8, 8]))
+}
+
 // ---- chaos event traces ----------------------------------------------------
 //
 // Capacity events for `SimConfig::chaos`: hand-built recovery scenarios
@@ -343,6 +386,29 @@ pub fn failure_wait_baseline_events() -> Vec<TimedClusterEvent> {
         TimedClusterEvent { at: 2600.0, event: ClusterEvent::SlowdownEnd { node: 0 } },
     ]
 }
+
+/// The flaky-node trace paired with [`flaky_node_instance`]: node 0
+/// fails at t = 700 / 1600 / 2500 s and rejoins 200 s after each crash;
+/// node 1 stays clean. Over a 3000 s observation horizon
+/// [`crate::cluster::estimate_reliability`] recovers exactly
+/// MTBF = (700 + 700 + 700 + 300)/3 = 800 s and mean restart
+/// = 600/3 = 200 s — the operating point every risk acceptance test and
+/// the Python cross-validation pin.
+pub fn flaky_node_events() -> Vec<TimedClusterEvent> {
+    [700.0, 1600.0, 2500.0]
+        .iter()
+        .flat_map(|&at| {
+            [
+                TimedClusterEvent { at, event: ClusterEvent::NodeFail { node: 0 } },
+                TimedClusterEvent { at: at + 200.0, event: ClusterEvent::NodeJoin { node: 0 } },
+            ]
+        })
+        .collect()
+}
+
+/// The observation horizon over which [`flaky_node_events`] yields the
+/// pinned MTBF 800 s / restart 200 s estimate.
+pub const FLAKY_NODE_HORIZON_SECS: f64 = 3000.0;
 
 /// Poisson node-failure trace: each node independently fails with
 /// exponential mean-time-between-failures `mtbf_secs` and rejoins
@@ -681,6 +747,36 @@ mod tests {
         let wait = failure_wait_baseline_events();
         assert_eq!(wait[0].event, ClusterEvent::SlowdownStart { node: 0, rate: 1e-9 });
         assert_eq!((wait[0].at, wait[1].at), (600.0, 2600.0));
+    }
+
+    #[test]
+    fn flaky_node_instance_exact_economics() {
+        let (w, grid, c) = flaky_node_instance();
+        assert_eq!(w.len(), 9);
+        assert_eq!(c.nodes.len(), 2);
+        assert!(c.nodes.iter().all(|n| n.gpus == 8), "both nodes must fit the gang");
+        assert!(w.iter().all(|t| t.arrival == 0.0));
+        assert!(w.iter().all(|t| t.ckpt_interval.is_none()), "cadence defaults to Young/Daly");
+        // bit-exact frontiers (100 minibatches ⇒ task_secs = 100 × minibatch_secs)
+        let long = grid.configs(&w[0]);
+        assert_eq!(long.len(), 1);
+        assert_eq!((long[0].gpus, long[0].task_secs), (8, 2000.0));
+        for t in &w[1..] {
+            let cfgs = grid.configs(t);
+            assert_eq!(cfgs.len(), 1);
+            assert_eq!((cfgs[0].gpus, cfgs[0].task_secs), (1, 400.0));
+        }
+        // the paired trace recovers the pinned reliability operating point
+        let ev = flaky_node_events();
+        assert_eq!(ev.len(), 6);
+        assert_eq!(ev[0].event, ClusterEvent::NodeFail { node: 0 });
+        assert_eq!((ev[0].at, ev[1].at, ev[4].at, ev[5].at), (700.0, 900.0, 2500.0, 2700.0));
+        let rel =
+            crate::cluster::estimate_reliability(&ev, c.nodes.len(), FLAKY_NODE_HORIZON_SECS);
+        let r0 = rel[0].expect("node 0 observed failing");
+        assert_eq!(r0.mtbf_secs, 800.0, "MTBF = 2400 s of uptime over 3 interruptions");
+        assert_eq!(r0.restart_secs, 200.0);
+        assert!(rel[1].is_none(), "clean node 1 yields no model");
     }
 
     #[test]

@@ -789,6 +789,68 @@ fn prop_objective_thread_count_preserves_trajectory() {
     }
 }
 
+/// Failure-aware parity (this PR's determinism contract, run explicitly
+/// in release by CI alongside the preempt and objective jobs): with a
+/// per-node reliability model priced into every placement of a 64-task
+/// mid-stream incremental re-solve, the trajectory must stay
+/// bit-identical across 1 vs 8 worker threads AND across the delta /
+/// full-replay evaluators, and the expected-loss term must genuinely
+/// reprice the search away from the risk-blind trajectory. Budgets are
+/// un-truncatable so wall-clock cannot fork the comparison.
+#[test]
+fn prop_risk_resolve_thread_and_evaluator_parity() {
+    use saturn::cluster::NodeReliability;
+    use saturn::trainer::workloads;
+
+    let registry = UppRegistry::default_library(Arc::new(CostModel::default()));
+    let mut wrng = DetRng::new(881);
+    let w = workloads::online_mixed_workload(64, 200.0, &mut wrng);
+    let c = Cluster::four_node_32gpu();
+    let (grid, _) = TrialRunner::new(registry).profile(&w, &c);
+    let mut ctx = mid_stream_ctx(&w, &grid, &c, 882);
+    ctx.reliability = vec![
+        Some(NodeReliability::new(1800.0, 300.0)),
+        None,
+        Some(NodeReliability::new(7200.0, 120.0)),
+        None,
+    ];
+    ctx.ckpt_cost = 20.0;
+    let mk = |threads: usize, full_replay: bool| JointOptimizer {
+        timeout: std::time::Duration::from_secs(14400),
+        incremental: true,
+        threads,
+        full_replay,
+        ..Default::default()
+    };
+    let (p1, s1) = mk(1, false).resolve_incremental(&ctx, &mut DetRng::new(883));
+    let (p8, s8) = mk(8, false).resolve_incremental(&ctx, &mut DetRng::new(883));
+    assert_eq!(s1.evals, s8.evals, "risk eval counts diverged across threads");
+    assert_eq!(s1.improvements, s8.improvements);
+    assert_eq!(s1.warm_makespan, s8.warm_makespan);
+    assert_eq!(s1.final_makespan, s8.final_makespan);
+    assert_eq!(p1, p8, "risk plans diverged across thread counts");
+    // the full-replay A/B evaluator prices the identical loss term
+    let (f1, sf1) = mk(1, true).resolve_incremental(&ctx, &mut DetRng::new(883));
+    let (f8, sf8) = mk(8, true).resolve_incremental(&ctx, &mut DetRng::new(883));
+    assert_eq!(sf1.evals, sf8.evals, "full-replay risk eval counts diverged");
+    assert_eq!(sf1.final_makespan, sf8.final_makespan);
+    assert_eq!(f1, f8, "full-replay risk plans diverged across thread counts");
+    assert_eq!(s1.evals, sf1.evals, "delta vs full replay diverged under risk");
+    assert_eq!(s1.improvements, sf1.improvements);
+    assert_eq!(s1.final_makespan, sf1.final_makespan);
+    assert_eq!(p1, f1, "delta and full-replay risk plans must be identical");
+    // the expected-loss term must bite: the risk-blind run with the same
+    // seed scores every placement without the padding, so the two
+    // trajectories cannot coincide on both plan and final scalar
+    let mut ctx_blind = ctx.clone();
+    ctx_blind.reliability = Vec::new();
+    let (pb, sb) = mk(1, false).resolve_incremental(&ctx_blind, &mut DetRng::new(883));
+    assert!(
+        pb != p1 || sb.final_makespan != s1.final_makespan,
+        "the reliability model had no effect on a 64-task stream"
+    );
+}
+
 /// Chaos safety: a node that dies and never recovers hosts no new work.
 /// For random instances with a mid-stream crash (and a dead-at-start
 /// crash), no busy span on the failed node may begin after the failure

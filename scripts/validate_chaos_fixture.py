@@ -474,7 +474,178 @@ cap = capacity_gpu_secs(res["capacity_trace"], 8, 0.0, res["makespan"])
 check("outage-aware utilization", busy / cap, 1.0, 1e-12)
 NODE_GPUS[:] = _saved
 
+# ================================================================== §Risk
+# Cross-validation of solver::risk (MTBF-driven expected-loss pricing and
+# the Young/Daly checkpoint-interval policy) and of the simulator's
+# cadence-aware crash rollback, against the margins pinned in
+# rust/src/solver/risk.rs, rust/src/solver/joint.rs and rust/src/sim/mod.rs.
+
+
+def young_daly(ckpt_cost, mtbf):
+    """rust/src/solver/risk.rs::young_daly_interval, bit for bit."""
+    if not (math.isfinite(mtbf) and mtbf > 0.0):
+        return math.inf
+    if not (math.isfinite(ckpt_cost) and ckpt_cost > 0.0):
+        return 0.0
+    return math.sqrt(2.0 * ckpt_cost * mtbf)
+
+
+def risk_extra(mtbf, restart, ckpt_cost, explicit, w):
+    """rust/src/solver/risk.rs::Risk::extra for one (node, task) pair."""
+    lam = 1.0 / mtbf if math.isfinite(mtbf) and mtbf > 0.0 else 0.0
+    if math.isfinite(explicit) and explicit > 0.0:
+        tau = explicit
+    else:
+        tau = young_daly(ckpt_cost, mtbf)
+    if lam <= 0.0 and not (math.isfinite(tau) and tau > 0.0):
+        return 0.0
+    overhead = (w / tau) * ckpt_cost if (math.isfinite(tau) and tau > 0.0) else 0.0
+    half = 0.5 * min(tau, w) if tau > 0.0 else 0.0
+    loss = lam * w * (half + restart) if lam > 0.0 else 0.0
+    return overhead + loss
+
+
+def cadence_rollback(done, tau):
+    """rust/src/sim/mod.rs crash rollback: work kept at a crash after
+    `done` seconds of progress under cadence tau. Returns (lost, kept)."""
+    if tau <= 0.0:
+        kept = done          # free checkpoints: continuous cadence
+    elif math.isfinite(tau):
+        kept = math.floor(done / tau) * tau
+    else:
+        kept = 0.0           # segment-boundary checkpoints only
+    return done - kept, kept
+
+
+print("risk: Young/Daly checkpoint-interval policy")
+check("τ*(25, 800) = 200 exactly", young_daly(25.0, 800.0), 200.0)
+check("τ*(30, 800)", young_daly(30.0, 800.0), math.sqrt(48000.0), 1e-12)
+check("MTBF ∞ ⇒ no mid-flight checkpoints", young_daly(30.0, math.inf), math.inf)
+check("free checkpoints ⇒ continuous", young_daly(0.0, 800.0), 0.0)
+# τ* minimizes overhead + rework on a fine grid around the optimum
+_c, _mtbf, _w = 30.0, 800.0, 1e9
+_star = young_daly(_c, _mtbf)
+_best = risk_extra(_mtbf, 0.0, _c, math.inf, _w)
+_tau, _beaten = 1.0, False
+while _tau < 1e6:
+    if _best > risk_extra(_mtbf, 0.0, _c, _tau, _w) + 1e-6 * _best:
+        _beaten = True
+    _tau *= 1.07
+check("τ* minimizes overhead + rework", _beaten, False)
+
+print("risk: closed-form expected loss (flaky-node operating point)")
+# MTBF 800 s, restart 200 s, free checkpoints: extra = λ·w·R
+check("short 400 s on the flaky node pads +100",
+      risk_extra(800.0, 200.0, 0.0, math.inf, 400.0), 100.0)
+check("gang 2000 s on the flaky node pads +500",
+      risk_extra(800.0, 200.0, 0.0, math.inf, 2000.0), 500.0)
+check("the clean node pads nothing",
+      risk_extra(math.inf, 0.0, 0.0, math.inf, 2000.0), 0.0)
+# with a real write cost the Young/Daly rework term appears
+_tau = young_daly(30.0, 800.0)
+check("priced total at τ*",
+      risk_extra(800.0, 200.0, 30.0, math.inf, 2000.0),
+      (2000.0 / _tau) * 30.0 + (2000.0 / 800.0) * (0.5 * min(_tau, 2000.0) + 200.0), 1e-12)
+# explicit cadence overrides the Young/Daly default
+check("explicit τ=200 overrides",
+      risk_extra(800.0, 0.0, 30.0, 200.0, 1000.0),
+      (1000.0 / 200.0) * 30.0 + (1000.0 / 800.0) * (0.5 * 200.0), 1e-12)
+
+print("risk: cadence-aware crash rollback (single gang, crash@700, join@900)")
+# gang 2000 s, crash after 700 s of progress
+lost, kept = cadence_rollback(700.0, 200.0)
+check("τ=200: kept 600", kept, 600.0)
+check("τ=200: lost 100", lost, 100.0)
+check("τ=200: makespan", 900.0 + (1.0 - kept / 2000.0) * 2000.0, 2300.0, 1e-9)
+lost_yd, kept_yd = cadence_rollback(700.0, young_daly(25.0, 800.0))
+check("Young/Daly(25, 800) pins the same cadence", (lost_yd, kept_yd), (lost, kept))
+lost, kept = cadence_rollback(700.0, math.inf)
+check("legacy (no cadence): lost 700", lost, 700.0)
+check("legacy makespan", 900.0 + (1.0 - kept / 2000.0) * 2000.0, 2900.0, 1e-9)
+lost, kept = cadence_rollback(700.0, 0.0)
+check("free checkpoints: lost 0", lost, 0.0)
+
+# ---- flaky-node fixture: risk-aware vs risk-blind, end to end ----------
+# 2 × 8-GPU nodes; task 0 = 8-GPU 2000 s gang (single config); tasks 1–8 =
+# 1-GPU 400 s shorts; node 0 fails at 700/1600/2500 and rejoins 200 s
+# later each time. MTBF (700+700+700+300)/3 = 800, restart 600/3 = 200.
+_saved = (NODE_GPUS[:], SHORT_SECS, dict(GANG_FRONTIER), dict(ARRIVALS))
+NODE_GPUS[:] = [8, 8]
+SHORT_SECS = 400.0
+GANG_FRONTIER = {8: 2000.0}
+ARRIVALS = {t: 0.0 for t in range(9)}
+FLAKY = list(range(9))
+FLAKY_EVENTS = [(at, "fail", 0, None) for at in (700.0, 1600.0, 2500.0)] + \
+               [(at + 200.0, "join", 0, None) for at in (700.0, 1600.0, 2500.0)]
+
+check("estimated MTBF", (700.0 + 700.0 + 700.0 + 300.0) / 3.0, 800.0)
+check("estimated restart", (200.0 * 3) / 3.0, 200.0)
+
+
+def flaky_blind_planner(now, states, plan_alive, started):
+    """Risk-blind annealer: 2000 s is the lower bound and the warm start
+    parks the gang on node 0 (ties broken longest-first); after the crash
+    the in-flight gang relocates to node 1 and pins there."""
+    active = [t for t in sorted(states) if states[t]["remaining"] > 1e-12]
+    plan = []
+    if 0 in active:
+        if now == 0.0 and plan_alive[0]:
+            plan.append({"task_id": 0, "gpus": 8, "node": 0})
+        elif plan_alive[1]:
+            plan.append({"task_id": 0, "gpus": 8, "node": 1})
+    plan.extend({"task_id": t, "gpus": 1, "node": 1} for t in active if t != 0)
+    return plan
+
+
+def flaky_aware_planner(now, states, plan_alive, started):
+    """Risk-aware annealer: the +500 s padding re-prices gang-on-node-0 to
+    2500 s, so the only 2000 s-scoring states put the gang on the clean
+    node; the shorts absorb node 0 (padded to 500 s in the plan, actual
+    400 s — done before the first crash)."""
+    active = [t for t in sorted(states) if states[t]["remaining"] > 1e-12]
+    plan = []
+    if 0 in active and plan_alive[1]:
+        plan.append({"task_id": 0, "gpus": 8, "node": 1})
+    plan.extend({"task_id": t, "gpus": 1, "node": 0} for t in active if t != 0)
+    return plan
+
+
+print("flaky fixture, risk-blind: gang parks on the flaky node")
+blind, _ = run_scenario(FLAKY_EVENTS, flaky_blind_planner, FLAKY)
+check("makespan", blind["makespan"], 2730.0, 1e-6)
+check("lost_work_secs", blind["lost_work_secs"], 700.0, 1e-6)
+check("failures", blind["failures"], 3)
+check("relocations", blind["relocations"], 1)
+
+print("flaky fixture, risk-aware: gang steered to the clean node")
+aware, _ = run_scenario(FLAKY_EVENTS, flaky_aware_planner, FLAKY)
+check("makespan", aware["makespan"], 2000.0, 1e-6)
+check("lost_work_secs", aware["lost_work_secs"], 0.0)
+check("failures", aware["failures"], 2)
+check("relocations", aware["relocations"], 0)
+
+print("flaky fixture: margins and goodput")
+check("lost-work margin >= 600",
+      blind["lost_work_secs"] - aware["lost_work_secs"] >= 600.0, True)
+check("makespan margin >= 600", blind["makespan"] - aware["makespan"] >= 600.0, True)
+
+
+def goodput(result):
+    """rust/src/metrics/mod.rs::goodput."""
+    total = sum(e - s for (_, _, _, s, e) in result["spans"])
+    if total <= 0.0:
+        return 1.0
+    return min(max(1.0 - result["lost_work_secs"] / total, 0.0), 1.0)
+
+
+# blind spans: 8 shorts × 400, the doomed gang segment [0, 700], and the
+# relocated gang [700, 2730] ⇒ 3200 + 700 + 2030 wall-seconds
+check("blind goodput", goodput(blind), 1.0 - 700.0 / 5930.0, 1e-9)
+check("aware goodput is perfect", goodput(aware), 1.0)
+
+NODE_GPUS[:], SHORT_SECS, GANG_FRONTIER, ARRIVALS = _saved
+
 if FAILURES:
     print(f"\n{len(FAILURES)} mismatch(es): {FAILURES}")
     raise SystemExit(1)
-print("\nall pinned fixture economics reproduced")
+print("\nall pinned fixture and risk economics reproduced")
