@@ -1,7 +1,8 @@
 //! `saturn-lint` — CLI front-end for [`saturn::lint`].
 //!
 //! ```text
-//! saturn-lint [--root <dir>] [--list-waivers] [PATH...]
+//! saturn-lint [--root <dir>] [--format text|json] [--stats]
+//!             [--fail-unresolved-above <rate>] [--list-waivers] [PATH...]
 //! ```
 //!
 //! Lints every `.rs` file under the given `--root`-relative paths
@@ -9,7 +10,15 @@
 //! defaults to the crate's own manifest directory, so `cargo run
 //! --release --bin saturn-lint` works from anywhere in the checkout.
 //!
-//! Exit status: 0 clean, 1 findings, 2 usage or I/O error.
+//! `--format json` emits the full report — findings with call chains,
+//! the waiver inventory, and call-graph resolution stats — on stdout;
+//! CI uploads it as a build artifact. `--stats` prints the resolution
+//! counters in text mode. `--fail-unresolved-above <rate>` exits
+//! non-zero when the unresolved-call rate exceeds the given baseline,
+//! so resolver regressions cannot silently shrink reachability.
+//!
+//! Exit status: 0 clean, 1 findings (or rate over baseline), 2 usage or
+//! I/O error.
 
 use saturn::lint::{lint_tree, DEFAULT_ROOTS};
 use std::path::PathBuf;
@@ -19,13 +28,18 @@ struct Args {
     root: PathBuf,
     rels: Vec<String>,
     list_waivers: bool,
+    json: bool,
+    stats: bool,
+    fail_unresolved_above: Option<f64>,
 }
 
 fn usage() -> &'static str {
-    "usage: saturn-lint [--root <dir>] [--list-waivers] [PATH...]\n\
+    "usage: saturn-lint [--root <dir>] [--format text|json] [--stats]\n\
+     \x20                 [--fail-unresolved-above <rate>] [--list-waivers] [PATH...]\n\
      \n\
      Lints .rs files under each PATH (relative to --root) against the\n\
-     Saturn determinism and panic-freedom contracts. Default paths:\n\
+     Saturn determinism and panic-freedom contracts, including the\n\
+     crate-wide call-graph chain pass. Default paths:\n\
      rust/src rust/benches rust/tests examples. See LINTS.md."
 }
 
@@ -33,12 +47,31 @@ fn parse_args() -> Result<Args, String> {
     let mut root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
     let mut rels: Vec<String> = Vec::new();
     let mut list_waivers = false;
+    let mut json = false;
+    let mut stats = false;
+    let mut fail_unresolved_above: Option<f64> = None;
     let mut it = std::env::args().skip(1);
     while let Some(a) = it.next() {
         match a.as_str() {
             "--root" => match it.next() {
                 Some(d) => root = PathBuf::from(d),
                 None => return Err("--root needs a directory argument".to_string()),
+            },
+            "--format" => match it.next().as_deref() {
+                Some("json") => json = true,
+                Some("text") => json = false,
+                Some(other) => return Err(format!("unknown format: {other} (text|json)")),
+                None => return Err("--format needs an argument: text|json".to_string()),
+            },
+            "--stats" => stats = true,
+            "--fail-unresolved-above" => match it.next().map(|s| s.parse::<f64>()) {
+                Some(Ok(rate)) if (0.0..=1.0).contains(&rate) => {
+                    fail_unresolved_above = Some(rate);
+                }
+                Some(_) => {
+                    return Err("--fail-unresolved-above needs a rate in [0, 1]".to_string())
+                }
+                None => return Err("--fail-unresolved-above needs a rate argument".to_string()),
             },
             "--list-waivers" => list_waivers = true,
             "--help" | "-h" => return Err(String::new()),
@@ -49,7 +82,7 @@ fn parse_args() -> Result<Args, String> {
     if rels.is_empty() {
         rels = DEFAULT_ROOTS.iter().map(|s| s.to_string()).collect();
     }
-    Ok(Args { root, rels, list_waivers })
+    Ok(Args { root, rels, list_waivers, json, stats, fail_unresolved_above })
 }
 
 fn main() -> ExitCode {
@@ -72,18 +105,62 @@ fn main() -> ExitCode {
             return ExitCode::from(2);
         }
     };
+    let rate = report.stats.unresolved_rate();
+    let rate_regressed = args.fail_unresolved_above.is_some_and(|baseline| rate > baseline);
+    if args.json {
+        print!("{}", report.to_json());
+        if rate_regressed {
+            eprintln!(
+                "saturn-lint: unresolved-call rate {rate:.4} exceeds the pinned baseline; \
+                 teach lint::graph the new call shape instead of letting reachability shrink"
+            );
+        }
+        return if report.findings.is_empty() && !rate_regressed {
+            ExitCode::SUCCESS
+        } else {
+            ExitCode::from(1)
+        };
+    }
     if args.list_waivers {
         if report.waivers.is_empty() {
             println!("no waivers in {} files", report.files);
         } else {
             for w in &report.waivers {
-                println!("{w}");
+                let state = if w.used { "in force" } else { "UNUSED" };
+                println!("{w} [{state}]");
             }
             println!("-- {} waiver(s) in {} files", report.waivers.len(), report.files);
         }
         return ExitCode::SUCCESS;
     }
+    if args.stats {
+        let s = &report.stats;
+        println!(
+            "saturn-lint: graph: {} fns, {} call sites, {} resolved ({} edges), \
+             {} external, {} ctor, {} local, {} unresolved (rate {:.4}), \
+             {} ambiguous-method sites",
+            s.functions,
+            s.call_sites,
+            s.resolved_calls,
+            s.resolved_edges,
+            s.external_calls,
+            s.ctor_calls,
+            s.local_calls,
+            s.unresolved_calls,
+            rate,
+            s.ambiguous_methods,
+        );
+    }
+    if rate_regressed {
+        eprintln!(
+            "saturn-lint: unresolved-call rate {rate:.4} exceeds the pinned baseline; \
+             teach lint::graph the new call shape instead of letting reachability shrink"
+        );
+    }
     if report.findings.is_empty() {
+        if rate_regressed {
+            return ExitCode::from(1);
+        }
         println!(
             "saturn-lint: clean — {} files, {} waiver(s) in force",
             report.files,

@@ -1,0 +1,10 @@
+//! Cross-file propagation fixture: a determinism-contract entry point
+//! (linted under the virtual path `rust/src/solver/delta.rs`) that calls
+//! through a mid-module into shared helpers. The file itself is clean —
+//! every violation in this twin set lives two hops away.
+use crate::metrics::window_stats;
+
+/// Contract entry: must stay clock/RNG/order-free *transitively*.
+pub fn eval_move(xs: &[f64]) -> f64 {
+    window_stats(xs)
+}

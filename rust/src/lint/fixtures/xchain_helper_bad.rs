@@ -1,0 +1,24 @@
+//! Cross-file propagation fixture, BAD twin (linted under the virtual
+//! path `rust/src/util/buf.rs` — no contract class): each helper hides
+//! one violation that only the call-graph pass can see from the
+//! contract entry points in `xchain_entry.rs` / `xchain_panic_entry.rs`.
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub fn now_secs() -> f64 {
+    Instant::now().elapsed().as_secs_f64()
+}
+
+pub fn drain_unordered() -> f64 {
+    let m: HashMap<u32, f64> = HashMap::new();
+    m.values().sum()
+}
+
+pub fn pick_random() -> f64 {
+    let _s = std::collections::hash_map::RandomState::new();
+    0.5
+}
+
+pub fn try_pop(xs: &[f64]) -> f64 {
+    *xs.first().unwrap()
+}

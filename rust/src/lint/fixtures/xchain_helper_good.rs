@@ -1,0 +1,20 @@
+//! Cross-file propagation fixture, GOOD twin: the same public surface
+//! as `xchain_helper_bad.rs` with order-stable, clock-free, RNG-free,
+//! panic-free bodies. With this helper the whole twin set lints clean —
+//! the chain findings come from the helper's bodies, not its callers.
+pub fn now_secs() -> f64 {
+    0.0
+}
+
+pub fn drain_unordered() -> f64 {
+    let v: Vec<f64> = Vec::new();
+    v.iter().sum()
+}
+
+pub fn pick_random() -> f64 {
+    0.5
+}
+
+pub fn try_pop(xs: &[f64]) -> f64 {
+    xs.first().copied().unwrap_or(0.0)
+}

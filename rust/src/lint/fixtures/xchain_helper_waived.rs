@@ -1,0 +1,28 @@
+//! Cross-file propagation fixture, WAIVED twin: the bad bodies with a
+//! justified `lint:allow` at every source site. A waiver at the source
+//! suppresses every chain through it; deleting one (the meta-tests do)
+//! must surface exactly that family's chain again.
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub fn now_secs() -> f64 {
+    // lint:allow(clock-in-evaluator) -- fixture: pretend this feeds reporting only
+    Instant::now().elapsed().as_secs_f64()
+}
+
+pub fn drain_unordered() -> f64 {
+    let m: HashMap<u32, f64> = HashMap::new();
+    // lint:allow(unordered-iteration) -- fixture: sum is a commutative exact fold
+    m.values().sum()
+}
+
+pub fn pick_random() -> f64 {
+    // lint:allow(ambient-rng) -- fixture: pretend the state never feeds a decision
+    let _s = std::collections::hash_map::RandomState::new();
+    0.5
+}
+
+pub fn try_pop(xs: &[f64]) -> f64 {
+    // lint:allow(panic-freedom) -- fixture: pretend the caller guarantees non-empty
+    *xs.first().unwrap()
+}

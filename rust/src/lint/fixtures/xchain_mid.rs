@@ -1,0 +1,13 @@
+//! Cross-file propagation fixture: the middle hop (linted under the
+//! virtual path `rust/src/metrics/mod.rs` — no contract class of its
+//! own). It merely forwards into `util::buf`; the chain pass must walk
+//! through it without flagging anything here.
+use crate::util::buf::{drain_unordered, now_secs, pick_random, try_pop};
+
+pub fn window_stats(xs: &[f64]) -> f64 {
+    let a = now_secs();
+    let b = drain_unordered();
+    let c = pick_random();
+    let d = try_pop(xs);
+    a + b + c + d
+}

@@ -1,0 +1,9 @@
+//! Cross-file propagation fixture: a panic-sensitive entry point
+//! (linted under the virtual path `rust/src/online/mod.rs`) reaching a
+//! helper that unwraps. The panic-freedom chain must anchor at the
+//! helper's unwrap, not here.
+use crate::util::buf::try_pop;
+
+pub fn ingest(xs: &[f64]) -> f64 {
+    try_pop(xs)
+}

@@ -1,0 +1,765 @@
+//! Conservative crate-level call graph for `saturn-lint` v2.
+//!
+//! Built from the item spans of [`crate::lint::items`], without `syn` or
+//! type inference. Every call site in a fn body is classified into one
+//! of five buckets:
+//!
+//! - **resolved** — an edge to one or more crate fns: free-fn calls
+//!   through `use` aliases, `crate::`/`self::`/`super::` paths, glob
+//!   imports, re-exports (`pub use inner::f;` in the owning module
+//!   file), `Self::helper`, `Type::assoc_fn`, and method calls matched
+//!   by name against every crate method (ambiguity keeps *all*
+//!   candidates — over-approximation is the safe direction for taint);
+//! - **external** — `std`/`core`/`alloc`/vendored-crate paths, prelude
+//!   types, and well-known std method names with no crate-side
+//!   definition;
+//! - **ctor** — UpperCamel calls (tuple-struct/enum constructors);
+//! - **local** — calls through closures or fn params bound in the same
+//!   body (already covered by the per-file hit scan);
+//! - **unresolved** — anything else. Unresolved sites produce no edge
+//!   but are *counted*; CI pins the rate so resolution regressions
+//!   surface instead of silently shrinking reachability.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::items::{local_callables, Item};
+use super::lexer::{TokKind, Token};
+
+/// Heads that always denote an external crate.
+const EXTERNAL_HEADS: [&str; 5] = ["std", "core", "alloc", "anyhow", "xla"];
+
+/// Prelude types/traits and primitives: `Vec::new`, `f64::max`, … are
+/// external calls, never crate edges.
+const PRELUDE_EXTERNAL: [&str; 46] = [
+    "Some", "None", "Ok", "Err", "Box", "Vec", "String", "Option", "Result", "Default", "Clone",
+    "Copy", "Drop", "From", "Into", "TryFrom", "TryInto", "Iterator", "IntoIterator",
+    "DoubleEndedIterator", "ExactSizeIterator", "PartialEq", "PartialOrd", "Ord", "Eq", "ToString",
+    "ToOwned", "AsRef", "AsMut", "FnOnce", "FnMut", "Fn", "Send", "Sync", "Sized", "f32", "f64",
+    "u8", "u16", "u32", "u64", "u128", "usize", "i8", "i16", "i32",
+];
+
+/// Remaining primitive heads (split from [`PRELUDE_EXTERNAL`] only to
+/// keep the array literals readable).
+const PRELUDE_EXTERNAL_2: [&str; 6] = ["i64", "i128", "isize", "bool", "char", "str"];
+
+fn is_prelude_external(name: &str) -> bool {
+    PRELUDE_EXTERNAL.contains(&name) || PRELUDE_EXTERNAL_2.contains(&name)
+}
+
+/// std/prelude method names treated as external when no crate method of
+/// the same name exists; a crate-defined method always wins over this
+/// list.
+const STD_METHODS: [&str; 328] = [
+    "len", "is_empty", "push", "pop", "insert", "remove", "get", "get_mut", "contains",
+    "contains_key", "entry", "clone", "to_string", "to_owned", "as_str", "as_ref", "as_mut",
+    "as_slice", "as_bytes", "as_path", "iter", "iter_mut", "into_iter", "keys", "values", "drain",
+    "map", "map_err", "and_then", "or_else", "unwrap", "unwrap_or", "unwrap_or_else",
+    "unwrap_or_default", "expect", "ok_or", "ok_or_else", "filter", "filter_map", "collect",
+    "fold", "sum", "product", "min", "max", "min_by", "max_by", "min_by_key", "max_by_key",
+    "sort", "sort_by", "sort_by_key", "sort_unstable", "sort_unstable_by", "sort_unstable_by_key",
+    "binary_search", "binary_search_by", "retain", "extend", "extend_from_slice", "truncate",
+    "clear", "resize", "fill", "copy_within", "copy_from_slice", "clone_from_slice", "split_at",
+    "split_at_mut", "chunks", "windows", "first", "last", "first_mut", "last_mut", "abs", "powi",
+    "powf", "sqrt", "ln", "log2", "exp", "floor", "ceil", "round", "is_finite", "is_nan",
+    "is_sign_negative", "is_some", "is_none", "is_ok", "is_err", "ok", "err", "take", "replace",
+    "swap", "swap_remove", "rev", "zip", "enumerate", "chain", "any", "all", "find", "find_map",
+    "position", "count", "nth", "skip", "step_by", "flat_map", "flatten", "cloned", "copied",
+    "join", "split", "split_whitespace", "splitn", "trim", "trim_start", "trim_end",
+    "starts_with", "ends_with", "strip_prefix", "strip_suffix", "parse", "chars", "bytes",
+    "lines", "to_vec", "into", "try_into", "cmp", "partial_cmp", "eq", "ne", "lt", "le", "gt",
+    "ge", "hash", "fmt", "write", "write_all", "writeln", "read", "read_to_string", "flush",
+    "elapsed", "as_secs", "as_secs_f64", "as_millis", "from_secs", "from_secs_f64",
+    "from_millis", "saturating_sub", "saturating_add", "saturating_mul", "checked_sub",
+    "checked_add", "checked_mul", "checked_div", "wrapping_add", "wrapping_sub", "wrapping_mul",
+    "rotate_left", "rotate_right", "to_le_bytes", "to_be_bytes", "from_le_bytes", "push_str",
+    "repeat", "rem_euclid", "div_euclid", "signum", "clamp", "mul_add", "recip", "to_bits",
+    "from_bits", "total_cmp", "then", "then_some", "then_with", "reserve", "dedup", "dedup_by",
+    "dedup_by_key", "concat", "next", "next_back", "peek", "peekable", "by_ref", "take_while",
+    "skip_while", "last_key_value", "or_insert", "or_insert_with", "or_default", "and_modify",
+    "get_or_insert_with", "send", "recv", "try_recv", "lock", "spawn", "join_handle", "sleep",
+    "store", "load", "fetch_add", "compare_exchange", "abs_diff", "unzip", "partition",
+    "max_element", "is_dir", "is_file", "exists", "extension", "file_name", "file_stem",
+    "display", "to_string_lossy", "to_path_buf", "read_dir", "metadata", "min_element",
+    "subsec_nanos", "is_zero", "as_nanos", "abs_sub", "floor_char_boundary",
+    "make_ascii_lowercase", "to_ascii_lowercase", "to_lowercase", "is_ascii", "is_ascii_digit",
+    "is_ascii_alphabetic", "is_ascii_alphanumeric", "is_ascii_whitespace", "is_whitespace",
+    "is_alphabetic", "is_alphanumeric", "is_digit", "is_numeric", "get_unchecked",
+    "unchecked_add", "leading_zeros", "trailing_zeros", "count_ones", "pow", "is_power_of_two",
+    "next_power_of_two", "is_char_boundary", "char_indices", "encode_utf8", "fract", "trunc",
+    "try_fold", "try_for_each", "for_each", "inspect", "scan", "cycle", "is_match",
+    "shrink_to_fit", "with_capacity", "capacity", "as_ptr", "as_mut_ptr", "offset", "add", "sub",
+    "wait", "notify_all", "notify_one", "try_lock", "try_send", "recv_timeout", "set_len",
+    "min_by_cached_key", "sort_by_cached_key", "rsplit", "rsplitn", "to_uppercase",
+    "to_ascii_uppercase", "eq_ignore_ascii_case", "saturating_duration_since", "duration_since",
+    "checked_duration_since", "default", "map_or", "map_or_else", "is_some_and", "is_none_or",
+    "clone_from", "div_ceil", "partition_point", "with_context", "context", "split_once",
+    "rsplit_once", "debug_struct", "field", "finish", "to_str", "as_deref", "as_deref_mut",
+    "mul_f64", "div_f64", "or", "and", "xor", "wrapping_neg", "cos", "sin", "tan", "exp_m1",
+    "ln_1p", "is_ascii_uppercase", "split_last", "append", "reverse",
+    // vendored-xla surface (external crate; methods live outside rust/src)
+    "reshape", "to_literal_sync", "to_tuple", "compile", "platform_name",
+];
+
+/// Identifiers that read like `name(` but are never calls.
+const KEYWORDS_NOT_CALLS: [&str; 30] = [
+    "if", "while", "for", "match", "return", "loop", "in", "as", "move", "else", "unsafe", "let",
+    "mut", "ref", "fn", "impl", "trait", "mod", "use", "pub", "where", "struct", "enum", "union",
+    "type", "const", "static", "await", "dyn", "box",
+];
+
+/// One fn node in the crate call graph.
+#[derive(Debug, Clone)]
+pub struct FnNode {
+    /// Index of the owning file in the `units` slice passed to
+    /// [`build_graph`].
+    pub unit: usize,
+    /// Full module path, inline mods included.
+    pub module: Vec<String>,
+    /// Enclosing `impl`/`trait` type, `None` for free fns.
+    pub self_type: Option<String>,
+    /// The fn's name.
+    pub name: String,
+    /// Token-index body span in the owning file's code tokens.
+    pub body: (usize, usize),
+    /// 1-based line span.
+    pub lines: (u32, u32),
+    /// Inside a `#[test]`/`#[cfg(test)]` exempt range.
+    pub exempt: bool,
+}
+
+/// Per-file input to [`build_graph`]: the parsed structure of one
+/// lib-crate file.
+#[derive(Debug, Clone)]
+pub struct FileUnit {
+    /// Display path (repo-relative, `/`-separated).
+    pub path: String,
+    /// Crate-relative module path from [`super::items::module_path_of`].
+    pub module: Vec<String>,
+    /// Code tokens (comments stripped).
+    pub code: Vec<Token>,
+    /// Parsed fn items.
+    pub items: Vec<Item>,
+    /// use-alias → full segment path.
+    pub uses: BTreeMap<String, Vec<String>>,
+    /// Glob-import prefixes.
+    pub globs: Vec<Vec<String>>,
+    /// Test-exempt line ranges.
+    pub exempt: Vec<(u32, u32)>,
+}
+
+/// Aggregate resolution statistics; CI pins the unresolved rate.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GraphStats {
+    /// Non-exempt fns in the graph.
+    pub functions: u64,
+    /// Total call sites classified.
+    pub call_sites: u64,
+    /// Sites that produced at least one crate edge.
+    pub resolved_calls: u64,
+    /// Total crate edges (≥ resolved_calls; method ambiguity fans out).
+    pub resolved_edges: u64,
+    /// Sites classified external (std/prelude/vendored).
+    pub external_calls: u64,
+    /// UpperCamel constructor calls.
+    pub ctor_calls: u64,
+    /// Calls through body-local closures/params.
+    pub local_calls: u64,
+    /// Sites the resolver could not place (no edge, counted).
+    pub unresolved_calls: u64,
+    /// Method sites that matched more than one crate candidate.
+    pub ambiguous_methods: u64,
+}
+
+impl GraphStats {
+    /// unresolved_calls / call_sites (0 when there are no sites).
+    pub fn unresolved_rate(&self) -> f64 {
+        if self.call_sites == 0 {
+            0.0
+        } else {
+            self.unresolved_calls as f64 / self.call_sites as f64
+        }
+    }
+}
+
+/// The crate call graph: fn nodes, adjacency, and resolution stats.
+#[derive(Debug, Default)]
+pub struct Graph {
+    /// All fn nodes (exempt ones included, but edge-less and index-less).
+    pub fns: Vec<FnNode>,
+    /// Caller fn id → sorted callee fn ids.
+    pub edges: BTreeMap<usize, Vec<usize>>,
+    /// Resolution statistics.
+    pub stats: GraphStats,
+    free_index: BTreeMap<(Vec<String>, String), usize>,
+    method_index: BTreeMap<String, Vec<usize>>,
+    typed_method_index: BTreeMap<(Vec<String>, String, String), usize>,
+    type_method_index: BTreeMap<(String, String), Vec<usize>>,
+    modules: BTreeSet<Vec<String>>,
+    top_modules: BTreeSet<String>,
+    module_unit: BTreeMap<Vec<String>, usize>,
+}
+
+/// A classified call site.
+enum CallSite {
+    /// `[seg ::]* name (` — full segment list, callee name last.
+    Path(Vec<String>),
+    /// `. name (` — method name only.
+    Method(String),
+}
+
+/// How one call site resolved.
+enum Resolution {
+    /// Crate edges to these fn ids.
+    Resolved(Vec<usize>),
+    /// std/prelude/vendored — outside the crate.
+    External,
+    /// UpperCamel constructor.
+    Ctor,
+    /// Call through a body-local closure or fn param.
+    Local,
+    /// Could not place; counted, no edge.
+    Unresolved,
+}
+
+/// Where a normalized path head points.
+enum Head {
+    /// Crate-relative absolute segments.
+    Crate(Vec<String>),
+    /// External crate.
+    External,
+    /// Unknown head.
+    Unknown,
+}
+
+fn ident(code: &[Token], i: usize, text: &str) -> bool {
+    code.get(i).is_some_and(|t| t.kind == TokKind::Ident && t.text == text)
+}
+
+fn any_ident(code: &[Token], i: usize) -> Option<&str> {
+    code.get(i).filter(|t| t.kind == TokKind::Ident).map(|t| t.text.as_str())
+}
+
+fn punct(code: &[Token], i: usize, text: &str) -> bool {
+    code.get(i).is_some_and(|t| t.kind == TokKind::Punct && t.text == text)
+}
+
+fn is_upper_camel(name: &str) -> bool {
+    name.chars().next().is_some_and(|c| c.is_ascii_uppercase())
+}
+
+/// Extract the call sites in `body` (inclusive `{`..`}` token indices).
+fn call_sites(code: &[Token], body: (usize, usize)) -> Vec<CallSite> {
+    let (a, b) = body;
+    let mut out = Vec::new();
+    let mut i = a;
+    while i <= b && i < code.len() {
+        let t = &code[i];
+        // method call: `. name (` with an optional `::<…>` turbofish
+        if t.kind == TokKind::Punct && t.text == "." {
+            if let Some(m) = any_ident(code, i + 1) {
+                let mut j = i + 2;
+                if punct(code, j, "::") && punct(code, j + 1, "<") {
+                    let mut angle = 0i32;
+                    j += 1;
+                    while j <= b && j < code.len() {
+                        if code[j].kind == TokKind::Punct {
+                            match code[j].text.as_str() {
+                                "<" => angle += 1,
+                                "<<" => angle += 2,
+                                ">" => angle -= 1,
+                                ">>" => angle -= 2,
+                                _ => {}
+                            }
+                        }
+                        j += 1;
+                        if angle <= 0 {
+                            break;
+                        }
+                    }
+                }
+                if punct(code, j, "(") {
+                    out.push(CallSite::Method(m.to_string()));
+                    i += 2;
+                    continue;
+                }
+            }
+            i += 1;
+            continue;
+        }
+        // path or bare call: `[seg ::]* name (`
+        if t.kind == TokKind::Ident
+            && punct(code, i + 1, "(")
+            && !KEYWORDS_NOT_CALLS.contains(&t.text.as_str())
+        {
+            // walk the path backwards
+            let mut segs = vec![t.text.clone()];
+            let mut j = i;
+            while j >= 2
+                && punct(code, j - 1, "::")
+                && code.get(j - 2).is_some_and(|t2| t2.kind == TokKind::Ident)
+            {
+                segs.insert(0, code[j - 2].text.clone());
+                j -= 2;
+            }
+            // a leading `.` means this is a method/turbofish chain,
+            // handled above; `fn name(` is a definition, not a call
+            if j >= 1 && (punct(code, j - 1, ".") || ident(code, j - 1, "fn")) {
+                i += 1;
+                continue;
+            }
+            out.push(CallSite::Path(segs));
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Normalize a multi-segment path's head against the file's imports and
+/// the crate module tree. `depth` guards alias cycles (`use x;` aliasing
+/// itself) — real imports resolve in one or two hops.
+fn normalize_head(g: &Graph, unit: &FileUnit, segs: &[String], depth: u32) -> Head {
+    if depth > 8 {
+        return Head::Unknown;
+    }
+    let Some(head) = segs.first() else { return Head::Unknown };
+    let head = head.as_str();
+    if head == "crate" || head == "saturn" {
+        return Head::Crate(segs[1..].to_vec());
+    }
+    if head == "self" {
+        let mut m = unit.module.clone();
+        m.extend_from_slice(&segs[1..]);
+        return Head::Crate(m);
+    }
+    if head == "super" {
+        let mut m = unit.module.clone();
+        let mut rest = segs;
+        while rest.first().map(String::as_str) == Some("super") {
+            m.pop();
+            rest = &rest[1..];
+        }
+        m.extend_from_slice(rest);
+        return Head::Crate(m);
+    }
+    if EXTERNAL_HEADS.contains(&head) {
+        return Head::External;
+    }
+    if let Some(target) = unit.uses.get(head) {
+        if target.first().is_some_and(|t| EXTERNAL_HEADS.contains(&t.as_str())) {
+            return Head::External;
+        }
+        let mut joined = target.clone();
+        joined.extend_from_slice(&segs[1..]);
+        return match normalize_head(g, unit, &joined, depth + 1) {
+            Head::Unknown => Head::Crate(joined),
+            norm => norm,
+        };
+    }
+    if g.top_modules.contains(head) {
+        return Head::Crate(segs.to_vec());
+    }
+    let mut sibling = unit.module.clone();
+    sibling.push(head.to_string());
+    if g.modules.contains(&sibling) {
+        // `sibling::f(…)` from a file whose module has a child `sibling`
+        let mut m = unit.module.clone();
+        m.extend_from_slice(segs);
+        return Head::Crate(m);
+    }
+    if is_prelude_external(head) {
+        return Head::External;
+    }
+    Head::Unknown
+}
+
+fn resolve_absolute(
+    g: &Graph,
+    units: &[FileUnit],
+    unit: &FileUnit,
+    item: &Item,
+    segs: &[String],
+    depth: u32,
+) -> Resolution {
+    if segs.len() == 1 {
+        // a use-alias of a bare function name resolved to a single segment
+        if let Some(&fid) = g.free_index.get(&(unit.module.clone(), segs[0].clone())) {
+            return Resolution::Resolved(vec![fid]);
+        }
+        if is_upper_camel(&segs[0]) {
+            return Resolution::Ctor;
+        }
+        return Resolution::Unresolved;
+    }
+    let head = segs[0].as_str();
+    let name = segs[segs.len() - 1].clone();
+    // `Self::helper(` — a method of the enclosing impl type
+    if head == "Self" {
+        if let Some(self_type) = &item.self_type {
+            let mut full_mod = unit.module.clone();
+            full_mod.extend(item.mods.iter().cloned());
+            let key = (full_mod, self_type.clone(), name.clone());
+            let fid = g.typed_method_index.get(&key).or_else(|| {
+                g.typed_method_index.get(&(unit.module.clone(), self_type.clone(), name.clone()))
+            });
+            if let Some(&fid) = fid {
+                return Resolution::Resolved(vec![fid]);
+            }
+            if is_upper_camel(&name) {
+                return Resolution::Ctor;
+            }
+            if STD_METHODS.contains(&name.as_str()) {
+                return Resolution::External; // e.g. derived `Self::default`
+            }
+            return Resolution::Unresolved;
+        }
+    }
+    match normalize_head(g, unit, segs, 0) {
+        Head::Unknown => {
+            // `Type::method(` with the type defined (or imported) in this file
+            if is_upper_camel(head) {
+                let cands: Vec<usize> = g
+                    .type_method_index
+                    .get(&(head.to_string(), name.clone()))
+                    .map(|v| v.iter().copied().filter(|&c| !g.fns[c].exempt).collect())
+                    .unwrap_or_default();
+                if segs.len() == 2 && !cands.is_empty() {
+                    return Resolution::Resolved(cands);
+                }
+                if is_upper_camel(&name) {
+                    return Resolution::Ctor;
+                }
+                if STD_METHODS.contains(&name.as_str()) && cands.is_empty() {
+                    return Resolution::External;
+                }
+                if !cands.is_empty() {
+                    return Resolution::Resolved(cands);
+                }
+            }
+            if is_upper_camel(&name) {
+                return Resolution::Ctor;
+            }
+            Resolution::Unresolved
+        }
+        Head::External => Resolution::External,
+        Head::Crate(abs_segs) => {
+            if abs_segs.is_empty() {
+                return Resolution::Unresolved;
+            }
+            let name = abs_segs[abs_segs.len() - 1].clone();
+            let prefix = abs_segs[..abs_segs.len() - 1].to_vec();
+            if let Some(&fid) = g.free_index.get(&(prefix.clone(), name.clone())) {
+                return Resolution::Resolved(vec![fid]);
+            }
+            // re-export: `mod::f` where `mod`'s own file says `pub use inner::f;`
+            if depth < 4 {
+                if let Some(&ou) = g.module_unit.get(&prefix) {
+                    let owner = &units[ou];
+                    if let Some(target) = owner.uses.get(&name) {
+                        if *target != abs_segs {
+                            return resolve_absolute(g, units, owner, item, target, depth + 1);
+                        }
+                    }
+                }
+            }
+            if abs_segs.len() >= 2 {
+                let ty = abs_segs[abs_segs.len() - 2].clone();
+                let mod_prefix = abs_segs[..abs_segs.len() - 2].to_vec();
+                if let Some(&fid) =
+                    g.typed_method_index.get(&(mod_prefix, ty.clone(), name.clone()))
+                {
+                    return Resolution::Resolved(vec![fid]);
+                }
+                // type imported by alias: `DetRng::new` -> util::rng::DetRng::new
+                let cands: Vec<usize> = g
+                    .type_method_index
+                    .get(&(ty, name.clone()))
+                    .map(|v| v.iter().copied().filter(|&c| !g.fns[c].exempt).collect())
+                    .unwrap_or_default();
+                if !cands.is_empty() {
+                    return Resolution::Resolved(cands);
+                }
+            }
+            if is_upper_camel(&name) {
+                return Resolution::Ctor;
+            }
+            if STD_METHODS.contains(&name.as_str()) {
+                return Resolution::External;
+            }
+            Resolution::Unresolved
+        }
+    }
+}
+
+fn resolve_call(
+    g: &Graph,
+    units: &[FileUnit],
+    unit: &FileUnit,
+    item: &Item,
+    site: &CallSite,
+    locals: &BTreeSet<String>,
+) -> Resolution {
+    match site {
+        CallSite::Method(name) => {
+            let cands: Vec<usize> = g
+                .method_index
+                .get(name)
+                .map(|v| v.iter().copied().filter(|&c| !g.fns[c].exempt).collect())
+                .unwrap_or_default();
+            if !cands.is_empty() {
+                return Resolution::Resolved(cands);
+            }
+            if STD_METHODS.contains(&name.as_str()) {
+                return Resolution::External;
+            }
+            Resolution::Unresolved
+        }
+        CallSite::Path(segs) if segs.len() == 1 => {
+            let n = segs[0].as_str();
+            let mut full_mod = unit.module.clone();
+            full_mod.extend(item.mods.iter().cloned());
+            let fid = g
+                .free_index
+                .get(&(full_mod, n.to_string()))
+                .or_else(|| g.free_index.get(&(unit.module.clone(), n.to_string())));
+            if let Some(&fid) = fid {
+                return Resolution::Resolved(vec![fid]);
+            }
+            if let Some(target) = unit.uses.get(n) {
+                return resolve_absolute(g, units, unit, item, target, 0);
+            }
+            for gl in &unit.globs {
+                let mut joined = gl.clone();
+                joined.push(n.to_string());
+                if let Head::Crate(target) = normalize_head(g, unit, &joined, 0) {
+                    if let Some((name, prefix)) = target.split_last() {
+                        if let Some(&fid) = g.free_index.get(&(prefix.to_vec(), name.clone())) {
+                            return Resolution::Resolved(vec![fid]);
+                        }
+                    }
+                }
+            }
+            if locals.contains(n) {
+                return Resolution::Local;
+            }
+            if is_upper_camel(n) {
+                return Resolution::Ctor;
+            }
+            if n == "drop" {
+                return Resolution::External;
+            }
+            Resolution::Unresolved
+        }
+        CallSite::Path(segs) => resolve_absolute(g, units, unit, item, segs, 0),
+    }
+}
+
+/// Whether `line` falls inside any of the exempt ranges.
+fn in_ranges(ranges: &[(u32, u32)], line: u32) -> bool {
+    ranges.iter().any(|&(a, b)| a <= line && line <= b)
+}
+
+/// Build the crate call graph over the given file units.
+pub fn build_graph(units: &[FileUnit]) -> Graph {
+    let mut g = Graph::default();
+    // first pass: fn nodes and name indexes
+    let mut unit_fn_ids: Vec<Vec<usize>> = Vec::with_capacity(units.len());
+    for (ui, unit) in units.iter().enumerate() {
+        g.modules.insert(unit.module.clone());
+        for k in 1..unit.module.len() {
+            g.modules.insert(unit.module[..k].to_vec());
+        }
+        if let Some(top) = unit.module.first() {
+            g.top_modules.insert(top.clone());
+        }
+        g.module_unit.entry(unit.module.clone()).or_insert(ui);
+        let mut ids = Vec::with_capacity(unit.items.len());
+        for it in &unit.items {
+            let mut full_mod = unit.module.clone();
+            full_mod.extend(it.mods.iter().cloned());
+            let exempt = in_ranges(&unit.exempt, it.lines.0);
+            let fid = g.fns.len();
+            ids.push(fid);
+            g.fns.push(FnNode {
+                unit: ui,
+                module: full_mod.clone(),
+                self_type: it.self_type.clone(),
+                name: it.name.clone(),
+                body: it.body,
+                lines: it.lines,
+                exempt,
+            });
+            if exempt {
+                continue;
+            }
+            g.modules.insert(full_mod.clone());
+            match &it.self_type {
+                None => {
+                    g.free_index.entry((full_mod, it.name.clone())).or_insert(fid);
+                }
+                Some(ty) => {
+                    g.method_index.entry(it.name.clone()).or_default().push(fid);
+                    g.typed_method_index
+                        .entry((full_mod, ty.clone(), it.name.clone()))
+                        .or_insert(fid);
+                    g.type_method_index
+                        .entry((ty.clone(), it.name.clone()))
+                        .or_default()
+                        .push(fid);
+                }
+            }
+        }
+        unit_fn_ids.push(ids);
+    }
+    g.stats.functions = g.fns.iter().filter(|f| !f.exempt).count() as u64;
+    // second pass: edges (resolution reads `g` immutably; accumulate
+    // stats and adjacency on the side, then install them)
+    let mut stats = g.stats;
+    let mut edges: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    for (ui, unit) in units.iter().enumerate() {
+        for (it, &fid) in unit.items.iter().zip(&unit_fn_ids[ui]) {
+            if g.fns[fid].exempt {
+                continue;
+            }
+            let locals = local_callables(&unit.code, it);
+            let mut callees: BTreeSet<usize> = BTreeSet::new();
+            for site in call_sites(&unit.code, it.body) {
+                stats.call_sites += 1;
+                match resolve_call(&g, units, unit, it, &site, &locals) {
+                    Resolution::Resolved(ids) => {
+                        stats.resolved_calls += 1;
+                        stats.resolved_edges += ids.len() as u64;
+                        if ids.len() > 1 {
+                            stats.ambiguous_methods += 1;
+                        }
+                        for cid in ids {
+                            if cid != fid {
+                                callees.insert(cid);
+                            }
+                        }
+                    }
+                    Resolution::External => stats.external_calls += 1,
+                    Resolution::Ctor => stats.ctor_calls += 1,
+                    Resolution::Local => stats.local_calls += 1,
+                    Resolution::Unresolved => stats.unresolved_calls += 1,
+                }
+            }
+            edges.insert(fid, callees.into_iter().collect());
+        }
+    }
+    g.stats = stats;
+    g.edges = edges;
+    g
+}
+
+/// The id of the narrowest non-exempt fn in `unit` spanning `line`.
+pub fn innermost_fn_at(g: &Graph, unit: usize, line: u32) -> Option<usize> {
+    let mut best: Option<(usize, u32)> = None;
+    for (fid, f) in g.fns.iter().enumerate() {
+        if f.unit != unit || f.exempt {
+            continue;
+        }
+        let (lo, hi) = f.lines;
+        if lo <= line && line <= hi {
+            let span = hi - lo;
+            if best.map_or(true, |(_, s)| span < s) {
+                best = Some((fid, span));
+            }
+        }
+    }
+    best.map(|(fid, _)| fid)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::items::{module_path_of, parse_items};
+    use crate::lint::lexer::tokenize;
+
+    fn unit(path: &str, src: &str) -> FileUnit {
+        let code: Vec<Token> = tokenize(src)
+            .into_iter()
+            .filter(|t| t.kind != TokKind::LineComment && t.kind != TokKind::BlockComment)
+            .collect();
+        let (items, uses, globs) = parse_items(&code);
+        FileUnit {
+            path: path.to_string(),
+            module: module_path_of(path).unwrap_or_default(),
+            code,
+            items,
+            uses,
+            globs,
+            exempt: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn resolution_classes_cover_edges_external_ctor_unresolved() {
+        let units = vec![
+            unit(
+                "rust/src/solver/delta.rs",
+                "use crate::util::buf::drain_helper;\n\
+                 use crate::util::buf::Buf;\n\
+                 pub fn eval_move(b: &mut Buf) { drain_helper(b); b.spill(); Buf::fresh(); }\n\
+                 pub fn other() { crate::util::buf::free_fn(); let v = Vec::new(); v.len(); }\n",
+            ),
+            unit(
+                "rust/src/util/buf.rs",
+                "pub struct Buf;\n\
+                 impl Buf {\n\
+                     pub fn spill(&self) {}\n\
+                     pub fn fresh() -> Self { Buf }\n\
+                 }\n\
+                 pub fn drain_helper(b: &mut Buf) {}\n\
+                 pub fn free_fn() {}\n\
+                 pub fn unknown_caller() { mystery_fn(); }\n",
+            ),
+        ];
+        let g = build_graph(&units);
+        let id = |name: &str| {
+            g.fns.iter().position(|f| f.name == name).unwrap_or_else(|| panic!("fn {name}"))
+        };
+        let em = &g.edges[&id("eval_move")];
+        assert!(em.contains(&id("drain_helper")), "use-alias free fn edge: {em:?}");
+        assert!(em.contains(&id("spill")), "method-name edge: {em:?}");
+        assert!(em.contains(&id("fresh")), "Type::assoc-fn edge via use alias: {em:?}");
+        assert!(g.edges[&id("other")].contains(&id("free_fn")), "crate::-qualified edge");
+        assert_eq!(g.stats.unresolved_calls, 1, "mystery_fn is the only unresolved site");
+        assert!(g.stats.external_calls >= 2, "Vec::new + .len() counted external");
+    }
+
+    #[test]
+    fn self_and_super_paths_resolve() {
+        let units = vec![unit(
+            "rust/src/sched/queue.rs",
+            "pub struct Q;\n\
+             impl Q {\n\
+                 pub fn run(&self) { Self::step(); helper(); }\n\
+                 fn step() {}\n\
+             }\n\
+             fn helper() { super::shared(); }\n",
+        )];
+        let mut units = units;
+        units.push(unit("rust/src/sched/mod.rs", "pub fn shared() {}\n"));
+        let g = build_graph(&units);
+        let id = |name: &str| g.fns.iter().position(|f| f.name == name).expect("fn");
+        assert!(g.edges[&id("run")].contains(&id("step")), "Self:: edge");
+        assert!(g.edges[&id("run")].contains(&id("helper")), "bare free-fn edge");
+        assert!(g.edges[&id("helper")].contains(&id("shared")), "super:: edge");
+        assert_eq!(g.stats.unresolved_calls, 0);
+    }
+
+    #[test]
+    fn test_exempt_fns_join_no_index() {
+        let mut u = unit(
+            "rust/src/util/buf.rs",
+            "pub fn live() {}\n\
+             fn test_helper() { live(); }\n",
+        );
+        u.exempt = vec![(2, 2)]; // pretend line 2 is inside #[cfg(test)]
+        let g = build_graph(&[u]);
+        let th = g.fns.iter().position(|f| f.name == "test_helper").expect("fn");
+        assert!(g.fns[th].exempt);
+        assert!(!g.edges.contains_key(&th), "exempt fns contribute no edges");
+        assert_eq!(g.stats.functions, 1);
+    }
+}

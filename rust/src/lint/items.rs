@@ -1,0 +1,481 @@
+//! Item-level parser for `saturn-lint` v2: the structural layer between
+//! the raw token stream ([`crate::lint::lexer`]) and the call graph
+//! ([`crate::lint::graph`]).
+//!
+//! One pass over a file's code tokens (comments already stripped)
+//! recovers exactly what cross-file reachability needs, and nothing
+//! more:
+//!
+//! - the **module tree**: inline `mod name { … }` nesting plus the
+//!   file's own crate-relative path ([`module_path_of`]);
+//! - **fn items** with their token-index body span and line span, the
+//!   enclosing `impl`/`trait` type (so `Self::helper` and method-name
+//!   resolution have a target), and the inline-mod path;
+//! - **use declarations** resolved to segment lists: `{…}` groups are
+//!   expanded, `as` aliases recorded under the alias, `self` in a group
+//!   imports the parent, and `*` records a glob of the prefix.
+//!
+//! Spans come from token-level brace matching, never from text offsets,
+//! so strings/comments can't unbalance them. The parser is conservative
+//! by construction: a shape it does not recognize is skipped, which can
+//! only make the call graph *miss* an edge — and every miss is visible
+//! in the `--stats` unresolved-call count that CI pins.
+
+use super::lexer::{TokKind, Token};
+
+/// A parsed `fn` item with everything resolution needs.
+#[derive(Debug, Clone)]
+pub struct Item {
+    /// The fn's name.
+    pub name: String,
+    /// Enclosing `impl`/`trait` type, `None` for free fns.
+    pub self_type: Option<String>,
+    /// Inline-mod path from the file root (e.g. `["tests"]`).
+    pub mods: Vec<String>,
+    /// Token-index range of the signature: one past `fn name`, up to the
+    /// body `{`.
+    pub sig: (usize, usize),
+    /// Token-index range of the body: the `{` .. matching `}` inclusive.
+    pub body: (usize, usize),
+    /// 1-based line span: the `fn` keyword's line .. the closing brace's.
+    pub lines: (u32, u32),
+}
+
+/// Crate-relative module path of a lib-crate file; `None` if the file is
+/// not part of the library crate graph (bins, `main.rs`, tests, benches,
+/// examples, lint fixtures).
+pub fn module_path_of(path: &str) -> Option<Vec<String>> {
+    let p = path.replace('\\', "/");
+    if p.contains("lint/fixtures") {
+        return None;
+    }
+    let idx = p.find("rust/src/")?;
+    let rel = &p[idx + "rust/src/".len()..];
+    if rel.starts_with("bin/") || rel == "main.rs" || !rel.ends_with(".rs") {
+        return None;
+    }
+    let mut parts: Vec<String> =
+        rel[..rel.len() - ".rs".len()].split('/').map(|s| s.to_string()).collect();
+    if parts.last().map(String::as_str) == Some("mod") {
+        parts.pop();
+    } else if parts == ["lib"] {
+        parts.clear();
+    }
+    Some(parts)
+}
+
+fn ident(code: &[Token], i: usize, text: &str) -> bool {
+    code.get(i).is_some_and(|t| t.kind == TokKind::Ident && t.text == text)
+}
+
+fn any_ident(code: &[Token], i: usize) -> Option<&str> {
+    code.get(i).filter(|t| t.kind == TokKind::Ident).map(|t| t.text.as_str())
+}
+
+fn punct(code: &[Token], i: usize, text: &str) -> bool {
+    code.get(i).is_some_and(|t| t.kind == TokKind::Punct && t.text == text)
+}
+
+enum Scope {
+    Mod(String),
+    Impl(String),
+    Trait(String),
+    Fn(usize),
+    Block,
+}
+
+/// Parse a file's code tokens into fn items, use-aliases, and globs.
+///
+/// `uses` maps each imported name (or `as` alias) to its full segment
+/// list; `globs` holds the prefixes of `use path::*;` imports.
+#[allow(clippy::type_complexity)]
+pub fn parse_items(
+    code: &[Token],
+) -> (Vec<Item>, std::collections::BTreeMap<String, Vec<String>>, Vec<Vec<String>>) {
+    let mut items: Vec<Item> = Vec::new();
+    let mut uses = std::collections::BTreeMap::new();
+    let mut globs = Vec::new();
+    let mut stack: Vec<Scope> = Vec::new();
+    let n = code.len();
+    let mut i = 0usize;
+
+    let mods = |stack: &[Scope]| -> Vec<String> {
+        stack
+            .iter()
+            .filter_map(|s| if let Scope::Mod(m) = s { Some(m.clone()) } else { None })
+            .collect()
+    };
+    let self_type = |stack: &[Scope]| -> Option<String> {
+        stack.iter().rev().find_map(|s| match s {
+            Scope::Impl(t) | Scope::Trait(t) => Some(t.clone()),
+            _ => None,
+        })
+    };
+
+    while i < n {
+        let (kind, text, line) = (code[i].kind, code[i].text.as_str(), code[i].line);
+        if kind == TokKind::Punct && text == "{" {
+            stack.push(Scope::Block);
+            i += 1;
+            continue;
+        }
+        if kind == TokKind::Punct && text == "}" {
+            if let Some(top) = stack.pop() {
+                if let Scope::Fn(idx) = top {
+                    items[idx].body.1 = i;
+                    items[idx].lines.1 = line;
+                }
+            }
+            i += 1;
+            continue;
+        }
+        if kind == TokKind::Ident {
+            if text == "use" {
+                i = parse_use(code, i + 1, &mut uses, &mut globs);
+                continue;
+            }
+            if text == "mod" {
+                if let Some(name) = any_ident(code, i + 1) {
+                    if punct(code, i + 2, "{") {
+                        stack.push(Scope::Mod(name.to_string()));
+                        i += 3;
+                        continue;
+                    }
+                    if punct(code, i + 2, ";") {
+                        i += 3;
+                        continue;
+                    }
+                }
+            }
+            if text == "impl" || text == "trait" {
+                // scan to the body `{` (or a terminating `;`), tracking
+                // angle depth so generics never hide the type name
+                let is_trait = text == "trait";
+                let mut angle = 0i32;
+                let mut j = i + 1;
+                let mut type_idents: Vec<String> = Vec::new();
+                let mut after_for: Option<usize> = None;
+                let mut saw_where = false;
+                while j < n {
+                    let t = &code[j];
+                    if t.kind == TokKind::Punct {
+                        match t.text.as_str() {
+                            "<" => angle += 1,
+                            ">" => angle -= 1,
+                            "<<" => angle += 2,
+                            ">>" => angle -= 2,
+                            "{" | ";" if angle <= 0 => break,
+                            _ => {}
+                        }
+                    } else if t.kind == TokKind::Ident && angle <= 0 {
+                        if t.text == "for" {
+                            after_for = Some(type_idents.len());
+                        } else if t.text == "where" {
+                            saw_where = true;
+                        } else if !saw_where {
+                            type_idents.push(t.text.clone());
+                        }
+                    }
+                    j += 1;
+                }
+                if j < n && code[j].text == "{" {
+                    let ty = if is_trait {
+                        type_idents.first().cloned()
+                    } else if let Some(f) = after_for {
+                        type_idents.get(f..).and_then(|t| t.last().cloned())
+                    } else {
+                        type_idents.last().cloned()
+                    }
+                    .unwrap_or_else(|| "?".to_string());
+                    stack.push(if is_trait { Scope::Trait(ty) } else { Scope::Impl(ty) });
+                }
+                i = j + 1;
+                continue;
+            }
+            if text == "fn" {
+                if let Some(name) = any_ident(code, i + 1) {
+                    let name = name.to_string();
+                    let mut depth = 0i32;
+                    let mut j = i + 2;
+                    while j < n {
+                        let t = &code[j];
+                        if t.kind == TokKind::Punct {
+                            match t.text.as_str() {
+                                "(" | "[" => depth += 1,
+                                ")" | "]" => depth -= 1,
+                                "{" | ";" if depth == 0 => break,
+                                _ => {}
+                            }
+                        }
+                        j += 1;
+                    }
+                    if j < n && code[j].text == "{" {
+                        items.push(Item {
+                            name,
+                            self_type: self_type(&stack),
+                            mods: mods(&stack),
+                            sig: (i + 2, j),
+                            body: (j, j),
+                            lines: (line, line),
+                        });
+                        stack.push(Scope::Fn(items.len() - 1));
+                    }
+                    i = j + 1;
+                    continue;
+                }
+            }
+        }
+        i += 1;
+    }
+    (items, uses, globs)
+}
+
+/// Parse one use declaration starting after the `use` keyword; returns
+/// the index one past the terminating `;`. Expands `{…}` groups and
+/// records `as` aliases; `*` records a glob import of the prefix.
+fn parse_use(
+    code: &[Token],
+    mut i: usize,
+    uses: &mut std::collections::BTreeMap<String, Vec<String>>,
+    globs: &mut Vec<Vec<String>>,
+) -> usize {
+    let n = code.len();
+
+    fn record(uses: &mut std::collections::BTreeMap<String, Vec<String>>, segs: Vec<String>) {
+        if segs.len() >= 2 && segs.last().map(String::as_str) == Some("self") {
+            // `use a::b::{self, C}` imports `b` itself under its own name
+            let parent = segs[..segs.len() - 1].to_vec();
+            uses.insert(segs[segs.len() - 2].clone(), parent);
+        } else if let Some(last) = segs.last() {
+            uses.insert(last.clone(), segs.clone());
+        }
+    }
+
+    fn parse_tree(
+        code: &[Token],
+        mut i: usize,
+        prefix: &[String],
+        uses: &mut std::collections::BTreeMap<String, Vec<String>>,
+        globs: &mut Vec<Vec<String>>,
+    ) -> usize {
+        let n = code.len();
+        let mut segs: Vec<String> = prefix.to_vec();
+        while i < n {
+            let t = &code[i];
+            if t.kind == TokKind::Ident && t.text == "as" {
+                if let Some(alias) = any_ident(code, i + 1) {
+                    uses.insert(alias.to_string(), segs);
+                    return i + 2;
+                }
+            }
+            if t.kind == TokKind::Ident || t.kind == TokKind::Num {
+                segs.push(t.text.clone());
+                i += 1;
+                continue;
+            }
+            if t.kind == TokKind::Punct && t.text == "::" {
+                i += 1;
+                continue;
+            }
+            if t.kind == TokKind::Punct && t.text == "{" {
+                i += 1;
+                while i < n && !punct(code, i, "}") {
+                    i = parse_tree(code, i, &segs, uses, globs);
+                    if punct(code, i, ",") {
+                        i += 1;
+                    }
+                }
+                return i + 1;
+            }
+            if t.kind == TokKind::Punct && t.text == "*" {
+                globs.push(segs);
+                return i + 1;
+            }
+            break;
+        }
+        record(uses, segs);
+        i
+    }
+
+    while i < n && !punct(code, i, ";") {
+        i = parse_tree(code, i, &[], uses, globs);
+        if i < n && punct(code, i, ",") {
+            i += 1;
+        } else if i < n && !punct(code, i, ";") {
+            i += 1;
+        }
+    }
+    i + 1
+}
+
+/// Names that can shadow free fns inside `item`'s body: parameter names
+/// from the signature, `let`-bound locals (closures included),
+/// destructuring patterns, and match-arm ctor patterns (`Some(f) => …`).
+/// Calls through them stay inside the enclosing fn's body, which the
+/// per-file hit scan already covers — no edge, no unresolved count.
+pub fn local_callables(code: &[Token], item: &Item) -> std::collections::BTreeSet<String> {
+    let mut names = std::collections::BTreeSet::new();
+    let (lo, hi) = item.sig;
+    let mut depth = 0i32;
+    for k in lo..hi.min(code.len()) {
+        if code[k].kind == TokKind::Punct {
+            match code[k].text.as_str() {
+                "(" | "[" | "{" => depth += 1,
+                ")" | "]" | "}" => depth -= 1,
+                _ => {}
+            }
+        } else if depth >= 1 && code[k].kind == TokKind::Ident && punct(code, k + 1, ":") {
+            names.insert(code[k].text.clone());
+        }
+    }
+    let (a, b) = item.body;
+    for k in a..(b + 1).min(code.len()) {
+        if ident(code, k, "let") {
+            let mut j = k + 1;
+            if ident(code, j, "mut") {
+                j += 1;
+            }
+            let head = any_ident(code, j).map(|s| s.to_string());
+            if let Some(ref name) = head {
+                if punct(code, j + 1, "=") {
+                    names.insert(name.clone());
+                    continue;
+                }
+            }
+            // destructuring pattern: `let Some(f) =`, `let (a, b) =`
+            if head.is_some() {
+                j += 1; // ctor name
+            }
+            if punct(code, j, "(") {
+                let mut depth2 = 1i32;
+                j += 1;
+                while j < code.len() && depth2 > 0 {
+                    if code[j].kind == TokKind::Punct && code[j].text == "(" {
+                        depth2 += 1;
+                    } else if code[j].kind == TokKind::Punct && code[j].text == ")" {
+                        depth2 -= 1;
+                    } else if let Some(n3) = any_ident(code, j) {
+                        if n3 != "mut" {
+                            names.insert(n3.to_string());
+                        }
+                    }
+                    j += 1;
+                }
+            }
+        }
+        // match-arm ctor pattern: `Some(f) => …` binds `f`
+        if code[k].kind == TokKind::Ident && punct(code, k + 1, "(") {
+            let mut depth2 = 1i32;
+            let mut j = k + 2;
+            let mut inner: Vec<String> = Vec::new();
+            while j < (b + 1).min(code.len()) && depth2 > 0 {
+                if code[j].kind == TokKind::Punct && code[j].text == "(" {
+                    depth2 += 1;
+                } else if code[j].kind == TokKind::Punct && code[j].text == ")" {
+                    depth2 -= 1;
+                } else if let Some(n3) = any_ident(code, j) {
+                    if n3 != "mut" {
+                        inner.push(n3.to_string());
+                    }
+                }
+                j += 1;
+            }
+            if punct(code, j, "=>") {
+                names.extend(inner);
+            }
+        }
+    }
+    names
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer::tokenize;
+
+    fn code_tokens(src: &str) -> Vec<Token> {
+        tokenize(src)
+            .into_iter()
+            .filter(|t| t.kind != TokKind::LineComment && t.kind != TokKind::BlockComment)
+            .collect()
+    }
+
+    #[test]
+    fn module_paths_follow_crate_layout() {
+        assert_eq!(module_path_of("rust/src/util/mod.rs"), Some(vec!["util".to_string()]));
+        assert_eq!(
+            module_path_of("rust/src/sim/chaos.rs"),
+            Some(vec!["sim".to_string(), "chaos".to_string()])
+        );
+        assert_eq!(module_path_of("rust/src/lib.rs"), Some(vec![]));
+        assert_eq!(module_path_of("rust/src/bin/saturn_lint.rs"), None);
+        assert_eq!(module_path_of("rust/tests/prop_invariants.rs"), None);
+        assert_eq!(module_path_of("rust/src/lint/fixtures/xchain_entry.rs"), None);
+    }
+
+    #[test]
+    fn fn_items_record_impl_type_and_inline_mods() {
+        let code = code_tokens(
+            "pub fn top(x: u32) -> u32 { helper(x) }\n\
+             fn helper(x: u32) -> u32 { x + 1 }\n\
+             impl<'a> Kernel<'a> {\n\
+                 pub fn eval(&self) -> f64 { self.score() }\n\
+                 fn score(&self) -> f64 { 0.0 }\n\
+             }\n\
+             impl fmt::Display for Finding {\n\
+                 fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result { write!(f, \"x\") }\n\
+             }\n\
+             mod inner { pub fn leaf() {} }",
+        );
+        let (items, _, _) = parse_items(&code);
+        let sig = |name: &str| {
+            items
+                .iter()
+                .find(|it| it.name == name)
+                .map(|it| (it.self_type.clone(), it.mods.clone()))
+        };
+        assert_eq!(sig("top"), Some((None, vec![])));
+        assert_eq!(sig("eval"), Some((Some("Kernel".to_string()), vec![])));
+        assert_eq!(sig("fmt"), Some((Some("Finding".to_string()), vec![])));
+        assert_eq!(sig("leaf"), Some((None, vec!["inner".to_string()])));
+        // body line spans cover the whole fn
+        let top = items.iter().find(|it| it.name == "top").expect("top parsed");
+        assert_eq!(top.lines, (1, 1));
+    }
+
+    #[test]
+    fn use_declarations_resolve_groups_aliases_and_globs() {
+        let code = code_tokens(
+            "use crate::util::rng::DetRng;\n\
+             use std::collections::{HashMap, HashSet};\n\
+             use crate::solver::risk as risk_mod;\n\
+             use crate::sched::{self, Schedule};\n\
+             use crate::model::*;\n",
+        );
+        let (_, uses, globs) = parse_items(&code);
+        let path = |alias: &str| uses.get(alias).map(|v| v.join("::"));
+        assert_eq!(path("DetRng"), Some("crate::util::rng::DetRng".to_string()));
+        assert_eq!(path("HashMap"), Some("std::collections::HashMap".to_string()));
+        assert_eq!(path("HashSet"), Some("std::collections::HashSet".to_string()));
+        assert_eq!(path("risk_mod"), Some("crate::solver::risk".to_string()));
+        assert_eq!(path("sched"), Some("crate::sched".to_string()));
+        assert_eq!(path("Schedule"), Some("crate::sched::Schedule".to_string()));
+        assert_eq!(globs, vec![vec!["crate".to_string(), "model".to_string()]]);
+    }
+
+    #[test]
+    fn local_callables_cover_params_lets_and_match_arms() {
+        let code = code_tokens(
+            "fn f(cb: impl Fn(u32) -> u32, x: u32) -> u32 {\n\
+                 let g = |y: u32| y + 1;\n\
+                 let Some(h) = maybe() else { return 0 };\n\
+                 match pick() { Some(k) => k(x), None => cb(g(h(x))) }\n\
+             }",
+        );
+        let (items, _, _) = parse_items(&code);
+        let locals = local_callables(&code, &items[0]);
+        for name in ["cb", "g", "h", "k"] {
+            assert!(locals.contains(name), "missing {name} in {locals:?}");
+        }
+    }
+}

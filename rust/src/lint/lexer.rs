@@ -14,9 +14,13 @@
 //!   really is an assignment.
 //!
 //! It is *not* a full Rust lexer: exotica such as raw identifiers
-//! (`r#match`) or float exponents (`1e-9`) lex as several adjacent tokens.
-//! That is harmless for linting — every rule matches short, anchored token
-//! sequences — and keeps the lexer small enough to be obviously correct.
+//! (`r#match`) lex as several adjacent tokens. That is harmless for
+//! linting — every rule matches short, anchored token sequences — and
+//! keeps the lexer small enough to be obviously correct. Numeric
+//! literals are lexed whole, including underscores (`1_000`), radix
+//! prefixes (`0x_FF`), suffixes (`1.5f64`), and signed exponents
+//! (`1e-3`, `2.5E+10`); `0xE-3` stays a subtraction because radix
+//! literals have no exponent.
 
 /// Kind of a lexed token.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -274,6 +278,24 @@ pub fn tokenize(src: &str) -> Vec<Token> {
                     i += 1;
                 }
             }
+            // exponent with an explicit sign (`1e-3`, `2.5E+10`): the
+            // unsigned form is already absorbed by the ident-cont runs;
+            // radix-prefixed literals (`0xE-3`) must stay subtraction
+            let radix = b[start] == b'0'
+                && i > start + 1
+                && matches!(b[start + 1], b'x' | b'X' | b'o' | b'O' | b'b' | b'B');
+            if !radix
+                && i < n
+                && (b[i] == b'+' || b[i] == b'-')
+                && (b[i - 1] == b'e' || b[i - 1] == b'E')
+                && i + 1 < n
+                && b[i + 1].is_ascii_digit()
+            {
+                i += 1;
+                while i < n && is_ident_cont(b[i]) {
+                    i += 1;
+                }
+            }
             push(&mut toks, TokKind::Num, &src[start..i], line);
             continue;
         }
@@ -327,6 +349,26 @@ mod tests {
         assert_eq!(ts[0].0, TokKind::Ident);
         assert_eq!(ts[2].0, TokKind::Punct);
         assert_eq!(ts[9].0, TokKind::Num);
+    }
+
+    #[test]
+    fn numeric_literals_lex_whole() {
+        // underscores, signed exponents, radix prefixes: one token each
+        let nums: Vec<String> = kinds("let a = 1_000; let b = 1e-3; let c = 0x_FF;")
+            .into_iter()
+            .filter(|(k, _)| *k == TokKind::Num)
+            .map(|(_, s)| s)
+            .collect();
+        assert_eq!(nums, ["1_000", "1e-3", "0x_FF"]);
+        let texts: Vec<String> =
+            kinds("2.5E+10 1e3 7f64 1.5e-3f64").into_iter().map(|(_, s)| s).collect();
+        assert_eq!(texts, ["2.5E+10", "1e3", "7f64", "1.5e-3f64"]);
+        // radix literals have no exponent and ranges keep their operators
+        let texts: Vec<String> = kinds("0xE-3 1-3 0..5").into_iter().map(|(_, s)| s).collect();
+        assert_eq!(texts, ["0xE", "-", "3", "1", "-", "3", "0", "..", "5"]);
+        // a trailing `e-` without a digit is not an exponent
+        let texts: Vec<String> = kinds("1e- 3").into_iter().map(|(_, s)| s).collect();
+        assert_eq!(texts, ["1e", "-", "3"]);
     }
 
     #[test]

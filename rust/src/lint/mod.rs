@@ -12,9 +12,28 @@
 //! text inside strings or docs, and `#[cfg(test)]`/`#[test]` regions (and
 //! `tests/`/`benches/` trees) are exempt.
 //!
-//! Run it as `cargo run --release --bin saturn-lint` (CI does), or call
-//! [`lint_tree`] / [`lint_source`] directly. See `LINTS.md` for the rule
-//! catalogue.
+//! # v2: crate-wide call-graph taint analysis
+//!
+//! Per-file scanning misses the laundered violation: a contract fn that
+//! calls a helper in a *non*-contract file which reads the clock, draws
+//! ambient randomness, iterates a `HashMap`, or unwraps. v2 re-expresses
+//! each contract rule as source/sink reachability over a conservative
+//! crate call graph ([`items`] parses fn items and imports, [`graph`]
+//! builds best-effort edges): entry points are the non-test fns of
+//! contract-classified files, and any rule hit inside a fn *reachable*
+//! from them — wherever it lives — is a finding, reported with the full
+//! call chain (`solver/delta.rs::eval_move → util/buf.rs::drain_unordered
+//! → HashMap::iter`) and anchored at the source site so the fix location
+//! is unambiguous. A waiver at the source fn waives every chain through
+//! it. Two meta-rules ride along: `unclassified-module` (a new file under
+//! `src/solver/`/`src/sim/` missing from the contract map — unwaivable)
+//! and the CI-pinned unresolved-call-rate (resolution regressions fail
+//! the build instead of silently shrinking reachability).
+//!
+//! Run it as `cargo run --release --bin saturn-lint` (CI does, with
+//! `--format json` uploaded as an artifact), or call [`lint_tree`] /
+//! [`lint_files`] / [`lint_source`] directly. See `LINTS.md` for the
+//! rule catalogue.
 //!
 //! # Waivers
 //!
@@ -33,13 +52,18 @@
 //! documenting the syntax cannot accidentally waive). Inventory them with
 //! `saturn-lint --list-waivers`.
 
+pub mod graph;
+pub mod items;
 pub mod lexer;
 pub mod rules;
 
+use self::graph::{build_graph, innermost_fn_at, FileUnit, GraphStats};
+use self::items::{module_path_of, parse_items};
 use self::lexer::{tokenize, TokKind, Token};
 use self::rules::{
     check_clock, check_debug_assert, check_panic, check_rng, check_unordered, RawFinding,
-    RULE_UNUSED_WAIVER, RULE_WAIVER_SYNTAX, WAIVABLE_RULES,
+    RULE_CLOCK, RULE_PANIC, RULE_RNG, RULE_UNCLASSIFIED, RULE_UNORDERED, RULE_UNUSED_WAIVER,
+    RULE_WAIVER_SYNTAX, WAIVABLE_RULES,
 };
 use std::fmt;
 use std::path::{Path, PathBuf};
@@ -60,6 +84,22 @@ const DETERMINISM_FILES: [&str; 6] = [
     "src/solver/joint.rs",
     "src/solver/policy.rs",
     "src/solver/risk.rs",
+];
+
+/// Files under `src/solver/`/`src/sim/` that are *deliberately* outside
+/// the determinism contract (entry shims, the offline MILP/LP reference
+/// solvers, the sim driver, the chaos generator — each is covered by
+/// `src/sim/`-wide classification or carries its own class). Every other
+/// file under those roots must appear in [`DETERMINISM_FILES`] or here,
+/// or the `unclassified-module` meta-rule fires: a new solver/sim module
+/// must be classified *explicitly*, never silently unchecked.
+const KNOWN_NON_CONTRACT: [&str; 6] = [
+    "src/solver/mod.rs",
+    "src/solver/spase.rs",
+    "src/solver/milp.rs",
+    "src/solver/lp.rs",
+    "src/sim/mod.rs",
+    "src/sim/chaos.rs",
 ];
 
 /// Which rule families apply to a file, derived from its path.
@@ -107,6 +147,10 @@ pub struct Finding {
     pub rule: &'static str,
     /// Explanation of the violation.
     pub message: String,
+    /// For cross-file findings: the call chain from a contract entry
+    /// point to the source site (`path::fn` labels, hit token last).
+    /// Empty for direct (same-file) findings.
+    pub chain: Vec<String>,
 }
 
 impl fmt::Display for Finding {
@@ -126,6 +170,8 @@ pub struct Waiver {
     pub rules: Vec<String>,
     /// The mandatory justification after `--`.
     pub justification: String,
+    /// Whether the waiver suppressed at least one hit (direct or chain).
+    pub used: bool,
 }
 
 impl fmt::Display for Waiver {
@@ -152,6 +198,8 @@ pub struct TreeReport {
     pub waivers: Vec<Waiver>,
     /// Number of files scanned.
     pub files: usize,
+    /// Call-graph resolution statistics from the chain pass.
+    pub stats: GraphStats,
 }
 
 /// Index one past the matching `]` of an attribute starting at `i`
@@ -348,12 +396,14 @@ pub fn lint_source(path: &str, src: &str) -> FileReport {
                     line: t.line,
                     rules,
                     justification,
+                    used: false,
                 }),
                 WaiverParse::Bad(msg) => findings.push(Finding {
                     path: path.to_string(),
                     line: t.line,
                     rule: RULE_WAIVER_SYNTAX,
                     message: msg,
+                    chain: Vec::new(),
                 }),
             },
             TokKind::BlockComment => {}
@@ -378,13 +428,12 @@ pub fn lint_source(path: &str, src: &str) -> FileReport {
     }
     raw.retain(|f| !in_exempt(&exempt, f.line));
 
-    let mut used = vec![false; waivers.len()];
     for f in raw {
         let mut waived = false;
-        for (wi, w) in waivers.iter().enumerate() {
+        for w in waivers.iter_mut() {
             let covers = w.line == f.line || w.line + 1 == f.line;
             if covers && w.rules.iter().any(|r| r == f.rule) {
-                used[wi] = true;
+                w.used = true;
                 waived = true;
             }
         }
@@ -394,11 +443,12 @@ pub fn lint_source(path: &str, src: &str) -> FileReport {
                 line: f.line,
                 rule: f.rule,
                 message: f.message,
+                chain: Vec::new(),
             });
         }
     }
-    for (wi, w) in waivers.iter().enumerate() {
-        if !used[wi] && !class.test_only && !in_exempt(&exempt, w.line) {
+    for w in &waivers {
+        if !w.used && !class.test_only && !in_exempt(&exempt, w.line) {
             findings.push(Finding {
                 path: path.to_string(),
                 line: w.line,
@@ -408,11 +458,409 @@ pub fn lint_source(path: &str, src: &str) -> FileReport {
                      the finding it covers",
                     w.rules.join(", ")
                 ),
+                chain: Vec::new(),
             });
         }
     }
     findings.sort_by(|a, b| a.line.cmp(&b.line).then(a.rule.cmp(b.rule)));
     FileReport { findings, waivers }
+}
+
+/// The chain-checked rule families, in hit-table order: each pairs a
+/// per-file token check with the [`FileClass`] flag that marks a file's
+/// fns as contract entry points for that family.
+const FAMILIES: [&str; 4] = [RULE_CLOCK, RULE_UNORDERED, RULE_RNG, RULE_PANIC];
+
+fn family_check(fam: &str, code: &[Token], out: &mut Vec<RawFinding>) {
+    if fam == RULE_CLOCK {
+        check_clock(code, out);
+    } else if fam == RULE_UNORDERED {
+        check_unordered(code, out);
+    } else if fam == RULE_RNG {
+        check_rng(code, out);
+    } else if fam == RULE_PANIC {
+        check_panic(code, out);
+    }
+}
+
+fn family_class(fam: &str, c: &FileClass) -> bool {
+    if fam == RULE_CLOCK || fam == RULE_UNORDERED {
+        c.determinism
+    } else if fam == RULE_RNG {
+        c.rng_scope
+    } else {
+        c.panic_sensitive
+    }
+}
+
+/// Everything the crate-wide pass needs from one file: classification,
+/// code tokens, waivers, exempt ranges, and the per-family rule hits
+/// (computed once, unconditionally — the direct pass consumes the
+/// families the file's class enables, the chain pass the rest).
+struct FileAnalysis {
+    path: String,
+    class: FileClass,
+    code: Vec<Token>,
+    waivers: Vec<Waiver>,
+    early_findings: Vec<Finding>,
+    exempt: Vec<(u32, u32)>,
+    /// Per-family hits, indexed like [`FAMILIES`], test-exempt filtered.
+    hits: Vec<Vec<RawFinding>>,
+    debug_assert_hits: Vec<RawFinding>,
+    module: Option<Vec<String>>,
+}
+
+fn analyze_file(path: &str, src: &str) -> FileAnalysis {
+    let class = classify(path);
+    let toks = tokenize(src);
+    let mut code: Vec<Token> = Vec::with_capacity(toks.len());
+    let mut waivers: Vec<Waiver> = Vec::new();
+    let mut early_findings: Vec<Finding> = Vec::new();
+    for t in toks {
+        match t.kind {
+            TokKind::LineComment => match parse_waiver(&t.text) {
+                WaiverParse::NotAWaiver => {}
+                WaiverParse::Ok(rules, justification) => waivers.push(Waiver {
+                    path: path.to_string(),
+                    line: t.line,
+                    rules,
+                    justification,
+                    used: false,
+                }),
+                WaiverParse::Bad(msg) => early_findings.push(Finding {
+                    path: path.to_string(),
+                    line: t.line,
+                    rule: RULE_WAIVER_SYNTAX,
+                    message: msg,
+                    chain: Vec::new(),
+                }),
+            },
+            TokKind::BlockComment => {}
+            _ => code.push(t),
+        }
+    }
+    let exempt = test_exempt_ranges(&code);
+    let mut hits: Vec<Vec<RawFinding>> = Vec::with_capacity(FAMILIES.len());
+    for fam in FAMILIES {
+        let mut out = Vec::new();
+        family_check(fam, &code, &mut out);
+        out.retain(|h| !in_exempt(&exempt, h.line));
+        hits.push(out);
+    }
+    let mut debug_assert_hits = Vec::new();
+    check_debug_assert(&code, &mut debug_assert_hits);
+    debug_assert_hits.retain(|h| !in_exempt(&exempt, h.line));
+    FileAnalysis {
+        path: path.to_string(),
+        class,
+        code,
+        waivers,
+        early_findings,
+        exempt,
+        hits,
+        debug_assert_hits,
+        module: module_path_of(path),
+    }
+}
+
+/// Mark every waiver covering (`rule`, `line`) used; true if any did.
+/// A waiver on line L covers hits on L and L+1, same as v1.
+fn waive(waivers: &mut [Waiver], rule: &str, line: u32) -> bool {
+    let mut waived = false;
+    for w in waivers.iter_mut() {
+        let covers = w.line == line || w.line + 1 == line;
+        if covers && w.rules.iter().any(|r| r == rule) {
+            w.used = true;
+            waived = true;
+        }
+    }
+    waived
+}
+
+/// Lint a set of files *as one crate*: the v1 per-file direct pass, the
+/// classification completeness meta-rule, and the v2 call-graph chain
+/// pass (rule hits in fns reachable from contract entry points, reported
+/// with the full call chain and anchored at the source site). `files`
+/// are `(repo-relative path, source)` pairs, so fixtures can be linted
+/// under virtual paths.
+pub fn lint_files(files: &[(String, String)]) -> TreeReport {
+    let mut analyses: Vec<FileAnalysis> =
+        files.iter().map(|(p, s)| analyze_file(p, s)).collect();
+    let mut findings: Vec<Finding> = Vec::new();
+    // ---- per-file direct pass (identical to v1 lint_source) ----
+    let mut direct_sites: std::collections::BTreeSet<(String, u32, &'static str)> =
+        std::collections::BTreeSet::new();
+    for fa in analyses.iter_mut() {
+        findings.append(&mut fa.early_findings);
+        if fa.class.test_only {
+            continue;
+        }
+        let mut raw: Vec<RawFinding> = Vec::new();
+        if fa.class.determinism {
+            raw.extend(fa.hits[0].iter().cloned()); // clock
+            raw.extend(fa.hits[1].iter().cloned()); // unordered
+        }
+        if fa.class.rng_scope {
+            raw.extend(fa.hits[2].iter().cloned());
+        }
+        if fa.class.panic_sensitive {
+            raw.extend(fa.hits[3].iter().cloned());
+        }
+        raw.extend(fa.debug_assert_hits.iter().cloned());
+        for h in raw {
+            if waive(&mut fa.waivers, h.rule, h.line) {
+                continue;
+            }
+            direct_sites.insert((fa.path.clone(), h.line, h.rule));
+            findings.push(Finding {
+                path: fa.path.clone(),
+                line: h.line,
+                rule: h.rule,
+                message: h.message,
+                chain: Vec::new(),
+            });
+        }
+    }
+    // ---- classification completeness meta-rule ----
+    for fa in &analyses {
+        let p = fa.path.replace('\\', "/");
+        if fa.class.test_only || p.contains("lint/fixtures") {
+            continue;
+        }
+        if (p.contains("src/solver/") || p.contains("src/sim/"))
+            && !DETERMINISM_FILES
+                .iter()
+                .chain(KNOWN_NON_CONTRACT.iter())
+                .any(|s| p.ends_with(s))
+        {
+            findings.push(Finding {
+                path: fa.path.clone(),
+                line: 1,
+                rule: RULE_UNCLASSIFIED,
+                message: "new module under src/solver/ or src/sim/ is not explicitly \
+                          classified; add it to DETERMINISM_FILES or KNOWN_NON_CONTRACT \
+                          in rust/src/lint/mod.rs (and LINTS.md)"
+                    .to_string(),
+                chain: Vec::new(),
+            });
+        }
+    }
+    // ---- call graph + chain pass ----
+    let graph_idx: Vec<usize> = analyses
+        .iter()
+        .enumerate()
+        .filter(|(_, fa)| fa.module.is_some() && !fa.class.test_only)
+        .map(|(i, _)| i)
+        .collect();
+    let units: Vec<FileUnit> = graph_idx
+        .iter()
+        .map(|&ai| {
+            let fa = &analyses[ai];
+            let (items, uses, globs) = parse_items(&fa.code);
+            FileUnit {
+                path: fa.path.clone(),
+                module: fa.module.clone().unwrap_or_default(),
+                code: fa.code.clone(),
+                items,
+                uses,
+                globs,
+                exempt: fa.exempt.clone(),
+            }
+        })
+        .collect();
+    let g = build_graph(&units);
+    for (fi, fam) in FAMILIES.iter().enumerate() {
+        // multi-source BFS from every non-exempt fn of this family's
+        // contract-classified files, recording parents for chain labels
+        let mut parent: std::collections::BTreeMap<usize, Option<usize>> =
+            std::collections::BTreeMap::new();
+        let mut queue: Vec<usize> = Vec::new();
+        for (fid, f) in g.fns.iter().enumerate() {
+            if !f.exempt && family_class(fam, &analyses[graph_idx[f.unit]].class) {
+                parent.insert(fid, None);
+                queue.push(fid);
+            }
+        }
+        let mut qi = 0usize;
+        while qi < queue.len() {
+            let cur = queue[qi];
+            qi += 1;
+            if let Some(nbrs) = g.edges.get(&cur) {
+                for &nxt in nbrs {
+                    if let std::collections::btree_map::Entry::Vacant(e) = parent.entry(nxt) {
+                        e.insert(Some(cur));
+                        queue.push(nxt);
+                    }
+                }
+            }
+        }
+        // hits inside reachable fns of NON-classified files become chain
+        // findings, anchored at the source site (the fix location)
+        let mut seen_sites: std::collections::BTreeSet<(String, u32, &'static str)> =
+            std::collections::BTreeSet::new();
+        for &fid in &queue {
+            let (unit_idx, lo, hi) = {
+                let f = &g.fns[fid];
+                (f.unit, f.lines.0, f.lines.1)
+            };
+            let ai = graph_idx[unit_idx];
+            if family_class(fam, &analyses[ai].class) {
+                continue; // direct pass owns hits in contract-classified files
+            }
+            let hits: Vec<RawFinding> = analyses[ai].hits[fi].clone();
+            for h in hits {
+                if h.line < lo || h.line > hi {
+                    continue;
+                }
+                // innermost-fn attribution: a hit belongs to the
+                // narrowest fn spanning its line
+                if innermost_fn_at(&g, unit_idx, h.line).is_some_and(|inner| inner != fid) {
+                    continue;
+                }
+                let site = (analyses[ai].path.clone(), h.line, h.rule);
+                if seen_sites.contains(&site) || direct_sites.contains(&site) {
+                    continue;
+                }
+                seen_sites.insert(site);
+                if waive(&mut analyses[ai].waivers, h.rule, h.line) {
+                    continue;
+                }
+                let mut chain_ids = vec![fid];
+                let mut cur = fid;
+                while let Some(Some(p)) = parent.get(&cur) {
+                    cur = *p;
+                    chain_ids.push(cur);
+                }
+                chain_ids.reverse();
+                let mut chain: Vec<String> = chain_ids
+                    .iter()
+                    .map(|&c| format!("{}::{}", units[g.fns[c].unit].path, g.fns[c].name))
+                    .collect();
+                chain.push(h.what.clone());
+                findings.push(Finding {
+                    path: analyses[ai].path.clone(),
+                    line: h.line,
+                    rule: h.rule,
+                    message: format!(
+                        "reachable from a contract entry point: {}; {}",
+                        chain.join(" → "),
+                        h.message
+                    ),
+                    chain,
+                });
+            }
+        }
+    }
+    // ---- unused waivers (crate-wide: chain suppression counts as use) ----
+    for fa in &analyses {
+        if fa.class.test_only {
+            continue;
+        }
+        for w in &fa.waivers {
+            if !w.used && !in_exempt(&fa.exempt, w.line) {
+                findings.push(Finding {
+                    path: fa.path.clone(),
+                    line: w.line,
+                    rule: RULE_UNUSED_WAIVER,
+                    message: format!(
+                        "waiver for `{}` suppresses nothing; delete it or move it next to \
+                         the finding it covers",
+                        w.rules.join(", ")
+                    ),
+                    chain: Vec::new(),
+                });
+            }
+        }
+    }
+    findings.sort_by_key(|f| (f.path.clone(), f.line, f.rule));
+    let waivers: Vec<Waiver> = analyses.into_iter().flat_map(|fa| fa.waivers).collect();
+    TreeReport { findings, waivers, files: files.len(), stats: g.stats }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn json_str_list(items: &[String]) -> String {
+    let quoted: Vec<String> = items.iter().map(|s| format!("\"{}\"", json_escape(s))).collect();
+    format!("[{}]", quoted.join(", "))
+}
+
+impl TreeReport {
+    /// Serialize the report (findings with chains, the waiver inventory,
+    /// and the call-graph stats) as JSON — hand-rolled, dependency-free,
+    /// deterministic key order. CI uploads this as a build artifact.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"findings\": [");
+        for (i, f) in self.findings.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n    {{\"path\": \"{}\", \"line\": {}, \"rule\": \"{}\", \
+                 \"message\": \"{}\", \"chain\": {}}}",
+                json_escape(&f.path),
+                f.line,
+                json_escape(f.rule),
+                json_escape(&f.message),
+                json_str_list(&f.chain),
+            ));
+        }
+        if !self.findings.is_empty() {
+            out.push_str("\n  ");
+        }
+        out.push_str("],\n  \"waivers\": [");
+        for (i, w) in self.waivers.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n    {{\"path\": \"{}\", \"line\": {}, \"rules\": {}, \
+                 \"justification\": \"{}\", \"used\": {}}}",
+                json_escape(&w.path),
+                w.line,
+                json_str_list(&w.rules),
+                json_escape(&w.justification),
+                w.used,
+            ));
+        }
+        if !self.waivers.is_empty() {
+            out.push_str("\n  ");
+        }
+        let s = &self.stats;
+        out.push_str(&format!(
+            "],\n  \"files\": {},\n  \"stats\": {{\"functions\": {}, \"call_sites\": {}, \
+             \"resolved_calls\": {}, \"resolved_edges\": {}, \"external_calls\": {}, \
+             \"ctor_calls\": {}, \"local_calls\": {}, \"unresolved_calls\": {}, \
+             \"ambiguous_methods\": {}, \"unresolved_rate\": {:.6}}}\n}}\n",
+            self.files,
+            s.functions,
+            s.call_sites,
+            s.resolved_calls,
+            s.resolved_edges,
+            s.external_calls,
+            s.ctor_calls,
+            s.local_calls,
+            s.unresolved_calls,
+            s.ambiguous_methods,
+            s.unresolved_rate(),
+        ));
+        out
+    }
 }
 
 /// Recursively collect `.rs` files (deterministic order: sorted by name).
@@ -448,7 +896,7 @@ pub fn lint_tree(root: &Path, rels: &[&str]) -> std::io::Result<TreeReport> {
     }
     files.sort();
     files.dedup();
-    let mut report = TreeReport::default();
+    let mut inputs: Vec<(String, String)> = Vec::new();
     for f in &files {
         let disp = f
             .strip_prefix(root)
@@ -458,13 +906,9 @@ pub fn lint_tree(root: &Path, rels: &[&str]) -> std::io::Result<TreeReport> {
         if disp.contains("lint/fixtures") {
             continue;
         }
-        let src = std::fs::read_to_string(f)?;
-        let fr = lint_source(&disp, &src);
-        report.files += 1;
-        report.findings.extend(fr.findings);
-        report.waivers.extend(fr.waivers);
+        inputs.push((disp, std::fs::read_to_string(f)?));
     }
-    Ok(report)
+    Ok(lint_files(&inputs))
 }
 
 #[cfg(test)]
@@ -698,7 +1142,22 @@ mod tests {
         assert!(report.files > 50, "walker found suspiciously few files: {}", report.files);
         let msgs: Vec<String> = report.findings.iter().map(|f| f.to_string()).collect();
         assert!(report.findings.is_empty(), "the tree must be lint-clean:\n{}", msgs.join("\n"));
-        assert!(!report.waivers.is_empty(), "the joint.rs deadline waivers should be inventoried");
+        assert!(
+            report.waivers.len() >= 5,
+            "the joint.rs/util/anneal waivers should be inventoried: {:?}",
+            report.waivers
+        );
+        assert!(
+            report.waivers.iter().all(|w| w.used),
+            "every waiver in the tree must be in force: {:?}",
+            report.waivers.iter().filter(|w| !w.used).collect::<Vec<_>>()
+        );
+        assert!(
+            report.stats.unresolved_rate() <= 0.002,
+            "call resolution regressed past the pinned baseline: {:?}",
+            report.stats
+        );
+        assert!(report.stats.functions > 300, "graph too small: {:?}", report.stats);
     }
 
     /// Acceptance demo: deleting any one waiver comment makes the lint
@@ -724,6 +1183,192 @@ mod tests {
         let without = lint_source(path, &stripped);
         let clocks = without.findings.iter().filter(|f| f.rule == RULE_CLOCK).count();
         assert!(clocks >= 2, "stripping waivers must surface the clock reads: {:?}", without.findings);
+    }
+
+    // ---- v2: cross-file call chains ---------------------------------------
+
+    /// The xchain fixture twins under their virtual crate paths: a clean
+    /// determinism entry (`delta.rs`), a clean panic entry (`online`),
+    /// a clean mid hop (`metrics`), and one of three helper twins
+    /// (`util/buf.rs`) carrying the actual bodies.
+    fn xchain_files(helper: &str) -> Vec<(String, String)> {
+        vec![
+            (
+                "rust/src/solver/delta.rs".to_string(),
+                include_str!("fixtures/xchain_entry.rs").to_string(),
+            ),
+            (
+                "rust/src/metrics/mod.rs".to_string(),
+                include_str!("fixtures/xchain_mid.rs").to_string(),
+            ),
+            (
+                "rust/src/online/mod.rs".to_string(),
+                include_str!("fixtures/xchain_panic_entry.rs").to_string(),
+            ),
+            ("rust/src/util/buf.rs".to_string(), helper.to_string()),
+        ]
+    }
+
+    #[test]
+    fn xchain_bad_twin_reports_one_chain_finding_per_family() {
+        let r = lint_files(&xchain_files(include_str!("fixtures/xchain_helper_bad.rs")));
+        let got: Vec<(&str, &'static str, u32)> =
+            r.findings.iter().map(|f| (f.path.as_str(), f.rule, f.line)).collect();
+        assert_eq!(
+            got,
+            [
+                ("rust/src/util/buf.rs", RULE_CLOCK, 9),
+                ("rust/src/util/buf.rs", RULE_UNORDERED, 14),
+                ("rust/src/util/buf.rs", RULE_RNG, 18),
+                ("rust/src/util/buf.rs", RULE_PANIC, 23),
+            ],
+            "chain findings must anchor at the source site: {:?}",
+            r.findings
+        );
+        let clock = &r.findings[0];
+        assert_eq!(
+            clock.chain,
+            [
+                "rust/src/solver/delta.rs::eval_move",
+                "rust/src/metrics/mod.rs::window_stats",
+                "rust/src/util/buf.rs::now_secs",
+                "`Instant::now`",
+            ],
+            "the clock chain must run entry → metrics → util → token"
+        );
+        assert!(
+            clock.message.starts_with("reachable from a contract entry point: "),
+            "{}",
+            clock.message
+        );
+        let panic = &r.findings[3];
+        assert_eq!(
+            panic.chain.first().map(String::as_str),
+            Some("rust/src/online/mod.rs::ingest"),
+            "the panic chain starts at the online entry point: {:?}",
+            panic.chain
+        );
+    }
+
+    #[test]
+    fn xchain_good_twin_is_silent() {
+        let r = lint_files(&xchain_files(include_str!("fixtures/xchain_helper_good.rs")));
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn xchain_waived_twin_is_silent_with_all_source_waivers_used() {
+        let r = lint_files(&xchain_files(include_str!("fixtures/xchain_helper_waived.rs")));
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        let used = r
+            .waivers
+            .iter()
+            .filter(|w| w.used && w.path == "rust/src/util/buf.rs")
+            .count();
+        assert_eq!(used, 4, "a source-site waiver must suppress the chains through it");
+    }
+
+    #[test]
+    fn deleting_the_xchain_clock_waiver_surfaces_exactly_that_chain() {
+        let helper: String = include_str!("fixtures/xchain_helper_waived.rs")
+            .lines()
+            .filter(|l| !l.contains("clock-in-evaluator"))
+            .map(|l| format!("{l}\n"))
+            .collect();
+        let r = lint_files(&xchain_files(&helper));
+        let fired: Vec<&'static str> = r.findings.iter().map(|f| f.rule).collect();
+        assert_eq!(fired, [RULE_CLOCK], "{:?}", r.findings);
+        assert!(!r.findings[0].chain.is_empty());
+    }
+
+    // ---- v2: classification completeness ----------------------------------
+
+    #[test]
+    fn unclassified_solver_or_sim_module_is_a_finding() {
+        let src = "pub fn f() -> u32 { 1 }\n".to_string();
+        let r = lint_files(&[("rust/src/solver/brand_new.rs".to_string(), src.clone())]);
+        assert_eq!(r.findings.len(), 1, "{:?}", r.findings);
+        assert_eq!(r.findings[0].rule, rules::RULE_UNCLASSIFIED);
+        assert_eq!(r.findings[0].line, 1);
+        let r = lint_files(&[("rust/src/sim/new_chaos.rs".to_string(), src.clone())]);
+        assert_eq!(r.findings.len(), 1, "{:?}", r.findings);
+        assert_eq!(r.findings[0].rule, rules::RULE_UNCLASSIFIED);
+        let r = lint_files(&[("rust/src/solver/policy.rs".to_string(), src)]);
+        assert!(r.findings.is_empty(), "classified files are silent: {:?}", r.findings);
+    }
+
+    #[test]
+    fn the_completeness_rule_is_unwaivable() {
+        let src = "// lint:allow(unclassified-module) -- trying to opt out\n\
+                   pub fn f() -> u32 { 1 }\n";
+        let r = lint_files(&[("rust/src/solver/brand_new.rs".to_string(), src.to_string())]);
+        let fired: Vec<&'static str> = r.findings.iter().map(|f| f.rule).collect();
+        assert!(fired.contains(&rules::RULE_UNCLASSIFIED), "{fired:?}");
+        assert!(
+            fired.contains(&rules::RULE_WAIVER_SYNTAX),
+            "naming the meta-rule in lint:allow must itself be rejected: {fired:?}"
+        );
+    }
+
+    /// Acceptance demo: deleting the `Deadline::after` source-site waiver
+    /// in `util/mod.rs` surfaces a *cross-file* clock chain — the solver
+    /// entry points reach it even though `util` has no contract class.
+    #[test]
+    fn deleting_the_deadline_waiver_surfaces_its_clock_chain() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let mut paths: Vec<PathBuf> = Vec::new();
+        for rel in DEFAULT_ROOTS {
+            if let Err(e) = collect_rs_files(&root.join(rel), &mut paths) {
+                panic!("tree walk failed: {e}");
+            }
+        }
+        paths.sort();
+        paths.dedup();
+        let mut inputs: Vec<(String, String)> = Vec::new();
+        for p in &paths {
+            let disp =
+                p.strip_prefix(root).unwrap_or(p.as_path()).to_string_lossy().replace('\\', "/");
+            if disp.contains("lint/fixtures") {
+                continue;
+            }
+            let src = match std::fs::read_to_string(p) {
+                Ok(s) => s,
+                Err(e) => panic!("reading {disp}: {e}"),
+            };
+            let src = if disp == "rust/src/util/mod.rs" {
+                src.lines().filter(|l| !l.contains("lint:allow")).map(|l| format!("{l}\n")).collect()
+            } else {
+                src
+            };
+            inputs.push((disp, src));
+        }
+        let r = lint_files(&inputs);
+        let clocks: Vec<&Finding> = r
+            .findings
+            .iter()
+            .filter(|f| f.rule == RULE_CLOCK && f.path == "rust/src/util/mod.rs")
+            .collect();
+        assert!(
+            !clocks.is_empty(),
+            "stripping the Deadline waiver must surface its clock chain: {:?}",
+            r.findings
+        );
+        assert!(
+            clocks[0].message.contains("reachable from a contract entry point"),
+            "{}",
+            clocks[0].message
+        );
+        assert!(!clocks[0].chain.is_empty());
+    }
+
+    #[test]
+    fn tree_report_serializes_to_json() {
+        let r = lint_files(&xchain_files(include_str!("fixtures/xchain_helper_waived.rs")));
+        let json = r.to_json();
+        assert!(json.contains("\"findings\": []"), "{json}");
+        assert!(json.contains("\"used\": true"), "{json}");
+        assert!(json.contains("\"unresolved_rate\": 0.000000"), "{json}");
+        assert!(json.contains("\"files\": 4"), "{json}");
     }
 
     /// Acceptance demo: reverting an online-path panic fix (reintroducing

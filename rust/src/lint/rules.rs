@@ -19,6 +19,8 @@ pub const RULE_DEBUG_ASSERT: &str = "debug-assert-side-effect";
 pub const RULE_WAIVER_SYNTAX: &str = "waiver-syntax";
 /// A waiver that suppresses nothing (stale after the code moved on).
 pub const RULE_UNUSED_WAIVER: &str = "unused-waiver";
+/// A file under `src/solver/`/`src/sim/` missing from the contract map.
+pub const RULE_UNCLASSIFIED: &str = "unclassified-module";
 
 /// Rules that may be waived with `// lint:allow(<rule>) -- <justification>`.
 /// The two waiver meta-rules are deliberately not waivable.
@@ -32,6 +34,9 @@ pub struct RawFinding {
     pub rule: &'static str,
     /// 1-based source line.
     pub line: u32,
+    /// The matched construct (`` `Instant::now` ``, `` `.unwrap()` `` …),
+    /// used as the final hop of a call-chain label.
+    pub what: String,
     /// Human-readable explanation.
     pub message: String,
 }
@@ -66,6 +71,7 @@ pub fn check_clock(code: &[Token], out: &mut Vec<RawFinding>) {
                 out.push(RawFinding {
                     rule: RULE_CLOCK,
                     line: code[i].line,
+                    what: format!("`{src}::now`"),
                     message: format!(
                         "`{src}::now` in a determinism-contract module; route timing \
                          through util::Deadline / util::DeadlinePoll (workers never \
@@ -173,6 +179,7 @@ pub fn check_unordered(code: &[Token], out: &mut Vec<RawFinding>) {
         out.push(RawFinding {
             rule: RULE_UNORDERED,
             line,
+            what: what.to_string(),
             message: format!(
                 "{what}: HashMap/HashSet iteration order is nondeterministic in a \
                  determinism-contract module; iterate a Vec/BTreeMap or sort first \
@@ -254,6 +261,7 @@ pub fn check_rng(code: &[Token], out: &mut Vec<RawFinding>) {
             out.push(RawFinding {
                 rule: RULE_RNG,
                 line: code[i].line,
+                what: format!("`{name}`"),
                 message: format!(
                     "`{name}` is an ambient randomness source; only util::rng::DetRng \
                      may produce randomness in solver/sim"
@@ -274,6 +282,7 @@ pub fn check_panic(code: &[Token], out: &mut Vec<RawFinding>) {
                     out.push(RawFinding {
                         rule: RULE_PANIC,
                         line: code[i + 1].line,
+                        what: format!("`.{m}()`"),
                         message: format!(
                             "`.{m}()` in a panic-sensitive module; propagate the error \
                              with Result/anyhow instead"
@@ -287,6 +296,7 @@ pub fn check_panic(code: &[Token], out: &mut Vec<RawFinding>) {
                 out.push(RawFinding {
                     rule: RULE_PANIC,
                     line: code[i].line,
+                    what: format!("`{m}!`"),
                     message: format!(
                         "`{m}!` in a panic-sensitive module; propagate the error with \
                          Result/anyhow instead"
@@ -330,6 +340,7 @@ pub fn check_debug_assert(code: &[Token], out: &mut Vec<RawFinding>) {
                     out.push(RawFinding {
                         rule: RULE_DEBUG_ASSERT,
                         line: code[j].line,
+                        what: "`=`".to_string(),
                         message: format!(
                             "assignment inside `{macro_name}!` body; debug assertions \
                              are compiled out in release and must stay side-effect free"
@@ -343,6 +354,7 @@ pub fn check_debug_assert(code: &[Token], out: &mut Vec<RawFinding>) {
                         out.push(RawFinding {
                             rule: RULE_DEBUG_ASSERT,
                             line: code[j + 1].line,
+                            what: format!("`.{m}(`"),
                             message: format!(
                                 "`.{m}(` inside `{macro_name}!` body; debug assertions \
                                  are compiled out in release and must stay side-effect \

@@ -242,12 +242,11 @@ impl TrialRunner {
         let mut grid = ProfileGrid { max_gpus: cluster.max_gpus_per_node(), ..Default::default() };
         // Profile against the *largest* node type: single-model training
         // never crosses nodes (paper §3.4) and nodes are GPU-homogeneous.
-        let node = cluster
-            .nodes
-            .iter()
-            .max_by_key(|n| n.gpus)
-            .expect("cluster has at least one node")
-            .clone();
+        let Some(node) = cluster.nodes.iter().max_by_key(|n| n.gpus).cloned() else {
+            // an empty cluster has nothing to profile on: empty grid, no
+            // overhead — the caller's plan loop degrades instead of dying
+            return (grid, 0.0);
+        };
         let mut trials: Vec<(usize, f64)> = Vec::new(); // (gpus, duration)
         // representative task per runtime-equivalence class: tasks sharing
         // (model, batch size) have identical iteration times regardless of
@@ -320,7 +319,9 @@ impl TrialRunner {
                     best = Some((ni, start));
                 }
             }
-            let (ni, start) = best.expect("some node can fit the trial");
+            // every trial width comes from this cluster's own node sizes,
+            // so some node always fits; skip the trial if none does
+            let Some((ni, start)) = best else { continue };
             // Occupy the g earliest-free GPUs on that node.
             let mut idx: Vec<usize> = (0..free[ni].len()).collect();
             idx.sort_by(|&a, &b| free[ni][a].total_cmp(&free[ni][b]));

@@ -189,7 +189,10 @@ impl Runtime {
         }
         let art = self.manifest.get(name).ok_or_else(|| anyhow!("unknown artifact {name}"))?;
         let path = self.dir.join(&art.file);
-        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-UTF-8 artifact path {}", path.display()))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
             .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))?;

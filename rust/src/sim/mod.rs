@@ -561,9 +561,10 @@ pub fn simulate_with_controller(
         }
 
         // introspection (Alg. 2): re-solve the remaining workload
+        // (only reachable when `next_intro` was set, i.e. introspect is on)
+        let Some(ic) = cfg.introspect else { continue };
         result.rounds += 1;
-        next_intro = cfg.introspect.map(|ic| now + ic.interval);
-        let ic = cfg.introspect.unwrap();
+        next_intro = Some(now + ic.interval);
         // AutoML review: the controller may stop tasks at this boundary
         let progress: Vec<f64> = states.iter().map(|s| 1.0 - s.remaining).collect();
         for kill in controller.review(workload, &progress) {

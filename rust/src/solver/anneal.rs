@@ -548,6 +548,7 @@ fn evaluate(
         }
         let out = pool.spare_results.pop().unwrap_or_default();
         jtx.send(Job { shared: shared.clone(), lo, hi: lo + len, out })
+            // lint:allow(panic-freedom) -- a closed job channel means a worker thread already panicked; aborting the solve loudly beats silently returning garbage scores
             .expect("annealing worker channel closed");
         sent += 1;
         lo += len;
@@ -563,6 +564,7 @@ fn evaluate(
         let (rlo, vals) = pool
             .res_rx
             .recv_timeout(Duration::from_secs(120))
+            // lint:allow(panic-freedom) -- a dead worker cannot deliver its batch; aborting the solve loudly beats scoring with a hole in `ms`
             .expect("annealing worker died mid-batch");
         ms[rlo..rlo + vals.len()].copy_from_slice(&vals);
         pool.spare_results.push(vals);

@@ -698,11 +698,12 @@ impl FullScratch {
             // occupy the g earliest-free GPUs on that node
             let free = &mut self.free[best_node];
             for _ in 0..g {
-                let (mi, _) = free
-                    .iter()
-                    .enumerate()
-                    .min_by(|a, b| a.1.total_cmp(b.1))
-                    .expect("non-empty");
+                // `best_node` was chosen to fit `g` GPUs, so `free` is
+                // non-empty here; degrade rather than abort if it isn't
+                let Some((mi, _)) = free.iter().enumerate().min_by(|a, b| a.1.total_cmp(b.1))
+                else {
+                    break;
+                };
                 free[mi] = end;
             }
             match spec.kind {

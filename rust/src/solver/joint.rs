@@ -608,7 +608,7 @@ impl JointOptimizer {
             .map(|t| {
                 (0..t.configs.len())
                     .min_by(|&a, &b| t.configs[a].task_secs.total_cmp(&t.configs[b].task_secs))
-                    .unwrap()
+                    .unwrap_or(0)
             })
             .collect();
         let mut order2: Vec<usize> = (0..nt).collect();
@@ -636,7 +636,16 @@ impl JointOptimizer {
                 best = Some((cand, sched, ms));
             }
         }
-        best.expect("at least one warm-start candidate")
+        if let Some(b) = best {
+            b
+        } else {
+            // the heuristics above always push at least one candidate;
+            // degrade to the greedy state rather than abort the plan loop
+            let cand = self.greedy_rescale(tasks, caps);
+            let (sched, ms) =
+                self.eval(&cand, tasks, cluster, caps, rates, None, risk, spec, stats);
+            (cand, sched, ms)
+        }
     }
 
     /// Optimus-style greedy: start every task at its smallest config, then

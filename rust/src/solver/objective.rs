@@ -86,7 +86,8 @@ impl Objective {
             offsets.iter().map(|o| o.max(0.0)).collect()
         };
         match self {
-            Objective::Makespan => unreachable!("handled above"),
+            // handled by the early return; kept equivalent, not a panic
+            Objective::Makespan => ScoreSpec::makespan(),
             Objective::MeanTurnaround => ScoreSpec::flow(vec![1.0; n], off),
             Objective::WeightedFlow { weights } => {
                 let w = tasks.iter().map(|t| sanitize_weight(weights.get(t.id))).collect();
@@ -112,7 +113,8 @@ impl Objective {
         }
         let turn = |a: &Assignment| (now - arrival(a.task_id)).max(0.0) + a.end();
         match self {
-            Objective::Makespan => unreachable!("handled above"),
+            // handled by the early return; kept equivalent, not a panic
+            Objective::Makespan => sched.makespan(),
             Objective::MeanTurnaround => {
                 sched.assignments.iter().map(turn).sum::<f64>() / n as f64
             }
