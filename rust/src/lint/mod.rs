@@ -73,17 +73,19 @@ pub const DEFAULT_ROOTS: [&str; 4] = ["rust/src", "rust/benches", "rust/tests", 
 
 /// Determinism-contract files: the delta kernel, the speculative anneal
 /// engine, the objective layer, the optimizer driving both, the planning
-/// context they all read, and the expected-loss risk pricing scored
-/// inside every evaluator. Together with `src/sim/` these are the
-/// modules where delta ≡ full-replay and thread-count trajectory parity
-/// must hold bit-for-bit.
-const DETERMINISM_FILES: [&str; 6] = [
+/// context they all read, the expected-loss risk pricing scored inside
+/// every evaluator, and the simulator's indexed event queue (whose
+/// ordering and tie-breaks pin the byte-identity of every sim run).
+/// Together with `src/sim/` these are the modules where delta ≡
+/// full-replay and thread-count trajectory parity must hold bit-for-bit.
+const DETERMINISM_FILES: [&str; 7] = [
     "src/solver/delta.rs",
     "src/solver/anneal.rs",
     "src/solver/objective.rs",
     "src/solver/joint.rs",
     "src/solver/policy.rs",
     "src/solver/risk.rs",
+    "src/sim/events.rs",
 ];
 
 /// Files under `src/solver/`/`src/sim/` that are *deliberately* outside
@@ -939,6 +941,15 @@ mod tests {
         assert!(
             c.determinism && c.rng_scope && !c.panic_sensitive,
             "risk pricing runs inside every evaluator: deterministic, DetRng-only"
+        );
+        let c = classify("rust/src/sim/events.rs");
+        assert!(
+            c.determinism && c.rng_scope && !c.panic_sensitive,
+            "the event queue orders every sim run: explicitly determinism-contract"
+        );
+        assert!(
+            DETERMINISM_FILES.contains(&"src/sim/events.rs"),
+            "events.rs must be explicitly classified, not just swept in by src/sim/"
         );
         let c = classify("rust/src/online/mod.rs");
         assert!(c.panic_sensitive && !c.determinism);

@@ -1,0 +1,249 @@
+//! Indexed event queue for the simulator main loop.
+//!
+//! Before the 4096-task scale rung, every trip around
+//! [`super::simulate_with_controller`]'s loop re-derived the next arrival
+//! by scanning all `n` tasks (`(0..n).filter(|i| !available[i]).map(...)
+//! .fold(INFINITY, f64::min)`), and every arrival event re-scanned all
+//! `n` tasks again to find the newly due ones — O(n) bookkeeping per
+//! event, O(n²) over an n-task stream, which at 4096 tasks starts to
+//! rival the re-solve itself. This module replaces those rescans with a
+//! queue built **once** per simulation: arrivals sorted by
+//! `(time, index)` with a head cursor, so peeking the next arrival is
+//! O(1) and draining the due ones is O(k) per event.
+//!
+//! The other event sources stay analytic, by design rather than
+//! omission:
+//!
+//! - **introspection rounds** are a single rolling boundary
+//!   (`now + interval`, re-anchored after idle gaps) — one scalar, no
+//!   scan to index;
+//! - **chaos events** already live in their own sorted cursor stream
+//!   ([`super::chaos::ChaosState`], sorted at construction, `next_at()`
+//!   peek);
+//! - **cadence checkpoints** ([`super::ckpt_cadence`]) are pure per-task
+//!   functions evaluated only at crash time — they never cut a segment,
+//!   so they have no place in the event order.
+//!
+//! [`EventHorizons`] merges the three live sources into the one ordered
+//! view the loop consumes, encoding the historical tie-breaks (chaos
+//! first, then arrivals, then introspection) exactly — the simulator's
+//! byte-identity suite pins that the rewrite changed nothing observable.
+
+use crate::trainer::Workload;
+
+/// The submitted-but-not-yet-injected half of the workload, as a sorted
+/// arrival queue with a head cursor.
+///
+/// Semantics are pinned to the scans this replaces:
+///
+/// - a task is *due* when `arrival <= now + 1e-9` — the same epsilon the
+///   availability scan used;
+/// - a NaN arrival never compared `<=` true and fell out of the
+///   `f64::min` fold, i.e. the task never arrives; the queue stores it
+///   as `INFINITY`, which behaves identically (never due, keeps
+///   [`Self::has_pending`] true, never terminates the idle loop);
+/// - draining reports indices in ascending order, matching the
+///   ascending-index scan that built `newly` in the arrival re-plan.
+#[derive(Debug)]
+pub(super) struct ArrivalQueue {
+    /// `(arrival, workload index)`, sorted ascending by time then index.
+    /// NaN arrivals are stored as `INFINITY`.
+    queue: Vec<(f64, usize)>,
+    /// First not-yet-injected entry.
+    head: usize,
+}
+
+impl ArrivalQueue {
+    /// Index every task's arrival. O(n log n), once per simulation.
+    pub(super) fn new(workload: &Workload) -> Self {
+        let mut queue: Vec<(f64, usize)> = workload
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (if t.arrival.is_nan() { f64::INFINITY } else { t.arrival }, i))
+            .collect();
+        queue.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        Self { queue, head: 0 }
+    }
+
+    /// Earliest not-yet-injected arrival time; `INFINITY` when none
+    /// remain — exactly the old `fold(INFINITY, f64::min)` over pending
+    /// tasks.
+    pub(super) fn next_arrival(&self) -> f64 {
+        self.queue.get(self.head).map_or(f64::INFINITY, |&(t, _)| t)
+    }
+
+    /// Pop every arrival due at `now` (the `<= now + 1e-9` rule) into
+    /// `newly`, in ascending workload-index order. Returns how many.
+    pub(super) fn pop_due(&mut self, now: f64, newly: &mut Vec<usize>) -> usize {
+        newly.clear();
+        while let Some(&(t, i)) = self.queue.get(self.head) {
+            if t <= now + 1e-9 {
+                newly.push(i);
+                self.head += 1;
+            } else {
+                break;
+            }
+        }
+        // the queue is time-sorted; the replaced scan walked indices
+        newly.sort_unstable();
+        newly.len()
+    }
+
+    /// True while any task remains submitted-but-not-injected — the old
+    /// `any(!available[i])`.
+    pub(super) fn has_pending(&self) -> bool {
+        self.head < self.queue.len()
+    }
+}
+
+/// The three live event sources merged into one ordered view: how far
+/// the running segment may execute before *something* cuts it, and which
+/// source fires at that horizon. Tie-breaks are the historical ones —
+/// chaos beats arrivals beats introspection; the losers of a tie fire on
+/// the immediately following (zero-length) loop iteration.
+#[derive(Debug, Clone, Copy)]
+pub(super) struct EventHorizons {
+    /// Seconds until the next introspection boundary (`INFINITY` in
+    /// one-shot mode).
+    pub(super) intro: f64,
+    /// Seconds until the next pending arrival.
+    pub(super) arrival: f64,
+    /// Seconds until the next chaos op.
+    pub(super) chaos: f64,
+}
+
+impl EventHorizons {
+    /// Horizons from absolute event times at `now`. Each is clamped at
+    /// zero (an overdue event fires immediately), `INFINITY` when the
+    /// source is exhausted.
+    pub(super) fn at(now: f64, next_intro: Option<f64>, next_arrival: f64, next_chaos: Option<f64>) -> Self {
+        Self {
+            intro: next_intro.map_or(f64::INFINITY, |t| (t - now).max(0.0)),
+            arrival: if next_arrival.is_finite() {
+                (next_arrival - now).max(0.0)
+            } else {
+                f64::INFINITY
+            },
+            chaos: next_chaos.map_or(f64::INFINITY, |t| (t - now).max(0.0)),
+        }
+    }
+
+    /// The nearest event across all sources.
+    pub(super) fn horizon(&self) -> f64 {
+        self.intro.min(self.arrival).min(self.chaos)
+    }
+
+    /// Chaos wins every tie: capacity must change under the segment
+    /// before anything re-plans over it.
+    pub(super) fn chaos_first(&self) -> bool {
+        self.chaos <= self.intro.min(self.arrival)
+    }
+
+    /// Arrivals beat introspection on a tie: the overdue round fires on
+    /// the next iteration and sees the injected tasks.
+    pub(super) fn arrival_before_intro(&self) -> bool {
+        self.arrival <= self.intro
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelDesc;
+    use crate::trainer::{HParams, Optimizer, Task};
+
+    fn wl(arrivals: &[f64]) -> Workload {
+        arrivals
+            .iter()
+            .enumerate()
+            .map(|(i, &a)| {
+                let mut t = Task::new(
+                    i,
+                    ModelDesc::gpt2_1_5b(),
+                    HParams::new(16, 1e-5, 10, Optimizer::Adam),
+                    1600,
+                );
+                // direct write: `with_arrival` (rightly) rejects NaN, but
+                // the queue must tolerate whatever the field carries
+                t.arrival = a;
+                t
+            })
+            .collect()
+    }
+
+    /// The queue must reproduce the O(n) scans it replaced: same next
+    /// arrival, same due set (ascending indices), same pending flag —
+    /// including over duplicate timestamps and out-of-order submission.
+    #[test]
+    fn queue_matches_linear_scan_reference() {
+        let w = wl(&[500.0, 0.0, 100.0, 100.0, 0.0, 2000.0]);
+        let mut q = ArrivalQueue::new(&w);
+        let mut available = vec![false; w.len()];
+        let mut newly = Vec::new();
+        for &now in &[0.0, 50.0, 100.0, 1999.9999, 2000.0] {
+            // reference: the replaced scans
+            let want_next = (0..w.len())
+                .filter(|&i| !available[i])
+                .map(|i| w[i].arrival)
+                .fold(f64::INFINITY, f64::min);
+            assert_eq!(q.next_arrival(), want_next, "next_arrival at {now}");
+            let mut want_newly = Vec::new();
+            for i in 0..w.len() {
+                if !available[i] && w[i].arrival <= now + 1e-9 {
+                    available[i] = true;
+                    want_newly.push(i);
+                }
+            }
+            q.pop_due(now, &mut newly);
+            assert_eq!(newly, want_newly, "due set at {now}");
+            assert_eq!(q.has_pending(), available.iter().any(|a| !a), "pending at {now}");
+        }
+        assert!(!q.has_pending());
+        assert_eq!(q.next_arrival(), f64::INFINITY);
+    }
+
+    /// NaN arrivals behave as never-arriving (the old fold skipped them;
+    /// the old `<=` never admitted them): pending forever, never due,
+    /// and they do not mask a real later arrival.
+    #[test]
+    fn nan_arrival_never_arrives_but_stays_pending() {
+        let w = wl(&[f64::NAN, 300.0]);
+        let mut q = ArrivalQueue::new(&w);
+        assert_eq!(q.next_arrival(), 300.0);
+        let mut newly = Vec::new();
+        assert_eq!(q.pop_due(1e12, &mut newly), 1);
+        assert_eq!(newly, vec![1]);
+        assert!(q.has_pending(), "the NaN task is pending forever");
+        assert_eq!(q.next_arrival(), f64::INFINITY);
+        assert_eq!(q.pop_due(1e300, &mut newly), 0, "the INFINITY sentinel is never due at any finite time");
+    }
+
+    /// The epsilon rule is the scan's: due at `arrival - 1e-10`, not due
+    /// at `arrival - 1e-6`.
+    #[test]
+    fn epsilon_matches_availability_rule() {
+        let w = wl(&[100.0]);
+        let mut q = ArrivalQueue::new(&w);
+        let mut newly = Vec::new();
+        assert_eq!(q.pop_due(100.0 - 1e-6, &mut newly), 0);
+        assert_eq!(q.pop_due(100.0 - 1e-10, &mut newly), 1);
+    }
+
+    /// Tie-break table: chaos ≤ min(intro, arrival) wins; arrivals beat
+    /// introspection; overdue events clamp to zero horizon.
+    #[test]
+    fn horizons_encode_historical_tiebreaks() {
+        let h = EventHorizons::at(10.0, Some(20.0), 20.0, Some(20.0));
+        assert_eq!((h.intro, h.arrival, h.chaos), (10.0, 10.0, 10.0));
+        assert!(h.chaos_first(), "chaos wins three-way ties");
+        assert!(h.arrival_before_intro(), "arrivals beat introspection on ties");
+        let h = EventHorizons::at(10.0, Some(12.0), 30.0, None);
+        assert!(!h.chaos_first());
+        assert!(!h.arrival_before_intro());
+        assert_eq!(h.horizon(), 2.0);
+        let overdue = EventHorizons::at(10.0, Some(5.0), f64::INFINITY, None);
+        assert_eq!(overdue.horizon(), 0.0, "overdue boundaries fire immediately");
+        let idle = EventHorizons::at(0.0, None, f64::INFINITY, None);
+        assert_eq!(idle.horizon(), f64::INFINITY);
+    }
+}

@@ -26,11 +26,13 @@
 //!   the same checkpoint/relaunch cost as any other switch.
 
 mod chaos;
+mod events;
 
 use crate::cluster::{Cluster, NodeReliability, TimedClusterEvent};
 use crate::profiler::ProfileGrid;
 use crate::sched::{list_schedule_masked, PlacementChoice, Schedule};
 use crate::sim::chaos::ChaosState;
+use crate::sim::events::{ArrivalQueue, EventHorizons};
 use crate::solver::objective::Objective;
 use crate::solver::policy::{PlanCtx, Policy};
 use crate::trainer::Workload;
@@ -214,8 +216,26 @@ impl SimResult {
         if self.capacity_trace.is_empty() {
             return cluster.total_gpus() as f64 * (hi - lo);
         }
+        self.capacity_gpu_secs_at(lo, hi, &mut 0)
+    }
+
+    /// [`Self::capacity_gpu_secs`] with a resumable cursor: callers that
+    /// sweep ascending windows (the utilization trace) advance through
+    /// the time-sorted [`Self::capacity_trace`] once overall instead of
+    /// rescanning it per window. Entries the cursor skips ended at or
+    /// before `lo` (`seg_hi <= lo <= seg_lo` fails the width guard) and
+    /// entries past `hi` never open (`seg_lo >= hi >= seg_hi`), so the
+    /// surviving terms — and therefore the float accumulation — are
+    /// bit-identical to the full iteration. Requires a non-empty trace.
+    fn capacity_gpu_secs_at(&self, lo: f64, hi: f64, cursor: &mut usize) -> f64 {
+        while *cursor + 1 < self.capacity_trace.len() && self.capacity_trace[*cursor + 1].0 <= lo {
+            *cursor += 1;
+        }
         let mut total = 0.0;
-        for (i, &(t, cap)) in self.capacity_trace.iter().enumerate() {
+        for (i, &(t, cap)) in self.capacity_trace.iter().enumerate().skip(*cursor) {
+            if t >= hi {
+                break;
+            }
             let seg_lo = t.max(lo);
             let seg_hi = self.capacity_trace.get(i + 1).map_or(hi, |&(t2, _)| t2).min(hi);
             if seg_hi > seg_lo {
@@ -262,30 +282,51 @@ impl SimResult {
             "utilization_trace: period must be positive and finite, got {period}"
         );
         let total = cluster.total_gpus() as f64;
-        let mut out = Vec::new();
+        // window starts: the exact `t += period` float walk (NOT
+        // `k × period`) — the accumulated boundaries are part of the
+        // pinned output
+        let mut starts = Vec::new();
         let mut t = 0.0;
         while t < self.makespan {
-            let hi = (t + period).min(self.makespan);
-            let busy: f64 = self
-                .spans
-                .iter()
-                .map(|s| (s.end.min(hi) - s.start.max(t)).max(0.0) * s.gpus as f64)
-                .sum();
+            starts.push(t);
+            t += period;
+        }
+        // span-major busy accumulation: each span adds only to the
+        // window range it can touch (binary search over the sorted
+        // starts) instead of every window rescanning every span —
+        // O((spans + windows) log windows) where the rescan was
+        // O(spans × windows). Each window still receives its non-zero
+        // terms in span order, and every skipped term is exactly +0.0
+        // under the historical `.max(0.0)` clamp, so the accumulated
+        // sums are bit-identical.
+        let mut busy = vec![0.0f64; starts.len()];
+        for s in &self.spans {
+            let g = s.gpus as f64;
+            let k_lo = starts.partition_point(|&w| w + period <= s.start);
+            let k_hi = starts.partition_point(|&w| w < s.end);
+            for (&w, b) in starts[k_lo..k_hi].iter().zip(&mut busy[k_lo..k_hi]) {
+                let hi = (w + period).min(self.makespan);
+                *b += (s.end.min(hi) - s.start.max(w)).max(0.0) * g;
+            }
+        }
+        let mut cursor = 0usize;
+        let mut out = Vec::with_capacity(starts.len());
+        for (k, &w) in starts.iter().enumerate() {
+            let hi = (w + period).min(self.makespan);
             let u = if self.capacity_trace.is_empty() {
                 // static capacity: the exact historical arithmetic
-                busy / ((hi - t).max(1e-12) * total)
+                busy[k] / ((hi - w).max(1e-12) * total)
             } else {
                 // time-varying capacity: windows that fall entirely
                 // inside an outage have no capacity and report 0
-                let cap = self.capacity_gpu_secs(cluster, t, hi);
+                let cap = self.capacity_gpu_secs_at(w, hi, &mut cursor);
                 if cap > 0.0 {
-                    busy / cap
+                    busy[k] / cap
                 } else {
                     0.0
                 }
             };
-            out.push((t, u));
-            t += period;
+            out.push((w, u));
         }
         out
     }
@@ -379,8 +420,17 @@ pub fn simulate_with_controller(
     // occurrence, exactly like the per-task linear `position` scans it
     // replaces — those made every replay O(n²) at online stream scale)
     let id2idx = ctx.id_index_map();
-    for i in 0..n {
-        ctx.available[i] = workload[i].arrival <= now + 1e-9;
+    // arrivals indexed once: the queue replays the exact availability
+    // rule (`arrival <= now + 1e-9`, NaN never due) the per-iteration
+    // O(n) rescans used to re-derive
+    let mut arrivals = ArrivalQueue::new(workload);
+    for a in ctx.available.iter_mut() {
+        *a = false;
+    }
+    let mut due_at_start = Vec::new();
+    arrivals.pop_due(now, &mut due_at_start);
+    for &i in &due_at_start {
+        ctx.available[i] = true;
     }
     // chaos: capacity events desugared into a sorted op stream. Events at
     // or before the start (including negative timestamps) apply before
@@ -425,14 +475,9 @@ pub fn simulate_with_controller(
         // the next event cutting this segment short: an introspection
         // boundary, the next pending arrival, or the next chaos event,
         // whichever is sooner
-        let next_arrival = (0..n)
-            .filter(|&i| !ctx.available[i])
-            .map(|i| workload[i].arrival)
-            .fold(f64::INFINITY, f64::min);
-        let intro_h = next_intro.map_or(f64::INFINITY, |t| (t - now).max(0.0));
-        let arr_h = if next_arrival.is_finite() { (next_arrival - now).max(0.0) } else { f64::INFINITY };
-        let chaos_h = chaos.next_at().map_or(f64::INFINITY, |t| (t - now).max(0.0));
-        let horizon = intro_h.min(arr_h).min(chaos_h);
+        let next_arrival = arrivals.next_arrival();
+        let ev = EventHorizons::at(now, next_intro, next_arrival, chaos.next_at());
+        let horizon = ev.horizon();
 
         if seg_makespan <= horizon {
             // everything currently *placeable* finishes before the next
@@ -482,7 +527,7 @@ pub fn simulate_with_controller(
             refresh_chaos_ctx(&mut ctx, &chaos, &cfg);
             arrival_replan(
                 policy, workload, cluster, &cfg, rng, &mut ctx, &mut states, &mut plan, &started, now,
-                &mut result, &id2idx, &mut scratch, &exec_caps, &exec_rates,
+                &mut result, &id2idx, &mut scratch, &exec_caps, &exec_rates, &mut arrivals,
             );
             continue;
         }
@@ -491,7 +536,7 @@ pub fn simulate_with_controller(
         commit_segment(&trace, horizon, now, &mut states, &mut started, &id2idx, &mut result);
         now += horizon;
 
-        if chaos_h <= intro_h.min(arr_h) {
+        if ev.chaos_first() {
             // chaos event: capacity changed under the running segment.
             // Ties resolve chaos-first — an arrival or overdue
             // introspection round fires on the very next iteration (with
@@ -546,7 +591,7 @@ pub fn simulate_with_controller(
         for (i, st) in states.iter().enumerate() {
             ckpt[i] = st.remaining;
         }
-        if arr_h <= intro_h {
+        if ev.arrival_before_intro() {
             // arrival event: inject the newly submitted tasks and re-plan
             // through the same proposal/threshold path as introspection.
             // The introspection clock keeps running — on a tie the
@@ -555,7 +600,7 @@ pub fn simulate_with_controller(
             refresh_chaos_ctx(&mut ctx, &chaos, &cfg);
             arrival_replan(
                 policy, workload, cluster, &cfg, rng, &mut ctx, &mut states, &mut plan, &started, now,
-                &mut result, &id2idx, &mut scratch, &exec_caps, &exec_rates,
+                &mut result, &id2idx, &mut scratch, &exec_caps, &exec_rates, &mut arrivals,
             );
             continue;
         }
@@ -578,7 +623,7 @@ pub fn simulate_with_controller(
         refresh_prior(&mut ctx, &plan, &started);
         refresh_chaos_ctx(&mut ctx, &chaos, &cfg);
         if ctx.active().is_empty() {
-            if !has_pending(&ctx, workload) {
+            if !arrivals.has_pending() {
                 result.makespan = now;
                 break;
             }
@@ -630,17 +675,12 @@ pub fn simulate_with_controller(
             // keep the current plan: drop completed tasks from the order
             plan.retain(|c| states[id2idx[&c.task_id]].remaining > 1e-12);
         }
-        if plan.is_empty() && !has_pending(&ctx, workload) {
+        if plan.is_empty() && !arrivals.has_pending() {
             result.makespan = now;
             break;
         }
     }
     result
-}
-
-/// True if any task has been submitted but not yet injected.
-fn has_pending(ctx: &PlanCtx, workload: &Workload) -> bool {
-    (0..workload.len()).any(|i| !ctx.available[i])
 }
 
 /// Score a replayed (relative-time) schedule of the remaining tasks
@@ -835,14 +875,12 @@ fn arrival_replan(
     scratch: &mut ReplanScratch,
     caps: &[usize],
     rates: &[f64],
+    arrivals: &mut ArrivalQueue,
 ) {
-    let n = workload.len();
     let mut newly: Vec<usize> = Vec::new();
-    for i in 0..n {
-        if !ctx.available[i] && workload[i].arrival <= now + 1e-9 {
-            ctx.available[i] = true;
-            newly.push(i);
-        }
+    arrivals.pop_due(now, &mut newly);
+    for &i in &newly {
+        ctx.available[i] = true;
     }
     if newly.is_empty() {
         return;
@@ -1172,6 +1210,95 @@ mod tests {
         }
         let avg = r.avg_utilization(&c);
         assert!(avg > 0.3 && avg <= 1.0, "avg={avg}");
+    }
+
+    /// The replaced per-window rescans, transliterated: every window
+    /// sums every span; every capacity query walks the whole trace.
+    fn utilization_trace_rescan_reference(
+        r: &SimResult,
+        cluster: &Cluster,
+        period: f64,
+    ) -> Vec<(f64, f64)> {
+        let cap_ref = |lo: f64, hi: f64| -> f64 {
+            let mut total = 0.0;
+            for (i, &(t, cap)) in r.capacity_trace.iter().enumerate() {
+                let seg_lo = t.max(lo);
+                let seg_hi = r.capacity_trace.get(i + 1).map_or(hi, |&(t2, _)| t2).min(hi);
+                if seg_hi > seg_lo {
+                    total += cap as f64 * (seg_hi - seg_lo);
+                }
+            }
+            let (first_t, first_cap) = r.capacity_trace[0];
+            if first_t > lo {
+                total += first_cap as f64 * ((first_t.min(hi) - lo).max(0.0));
+            }
+            total
+        };
+        let total = cluster.total_gpus() as f64;
+        let mut out = Vec::new();
+        let mut t = 0.0;
+        while t < r.makespan {
+            let hi = (t + period).min(r.makespan);
+            let busy: f64 = r
+                .spans
+                .iter()
+                .map(|s| (s.end.min(hi) - s.start.max(t)).max(0.0) * s.gpus as f64)
+                .sum();
+            let u = if r.capacity_trace.is_empty() {
+                busy / ((hi - t).max(1e-12) * total)
+            } else {
+                let cap = cap_ref(t, hi);
+                if cap > 0.0 {
+                    busy / cap
+                } else {
+                    0.0
+                }
+            };
+            out.push((t, u));
+            t += period;
+        }
+        out
+    }
+
+    /// The single-sweep utilization trace must be BYTE-identical to the
+    /// O(spans × windows) rescan it replaced — same float walk, same
+    /// per-window accumulation order — on both a static-capacity run and
+    /// a chaos run whose capacity trace has changepoints, across period
+    /// choices that do and do not divide the makespan.
+    #[test]
+    fn utilization_trace_sweep_matches_rescan_reference_bit_for_bit() {
+        let c = Cluster::single_node_8gpu();
+        let (w, grid) = setup(&c);
+        let mut rng = DetRng::new(5);
+        let static_run =
+            simulate(&JointOptimizer::default(), &w, &grid, &c, SimConfig::default(), &mut rng);
+        let (cw, cgrid, cc) = workloads::blocked_failure_instance();
+        let cfg = SimConfig {
+            noise_sigma: 0.0,
+            switch_cost: 30.0,
+            objective: Objective::MeanTurnaround,
+            chaos: workloads::failure_recovery_events(),
+            ..Default::default()
+        };
+        let policy = JointOptimizer {
+            timeout: std::time::Duration::from_secs(120),
+            incremental: true,
+            ..Default::default()
+        };
+        let mut crng = DetRng::new(99);
+        let chaos_run = simulate(&policy, &cw, &cgrid, &cc, cfg, &mut crng);
+        assert!(!chaos_run.capacity_trace.is_empty(), "fixture must exercise the cursor path");
+        for (r, cl) in [(&static_run, &c), (&chaos_run, &cc)] {
+            for period in [100.0, 97.0, 1e4] {
+                let got = r.utilization_trace(cl, period);
+                let want = utilization_trace_rescan_reference(r, cl, period);
+                assert_eq!(got.len(), want.len());
+                for (g, w) in got.iter().zip(&want) {
+                    assert_eq!(g.0.to_bits(), w.0.to_bits(), "window start drifted");
+                    assert_eq!(g.1.to_bits(), w.1.to_bits(), "utilization drifted at t={}", g.0);
+                }
+            }
+        }
     }
 
     #[test]

@@ -87,6 +87,14 @@ pub(crate) struct AnnealParams<'a> {
     /// Score with the legacy full-replay evaluator instead of the delta
     /// kernel (A/B baseline; bit-identical trajectories either way).
     pub full_replay: bool,
+    /// Delta-kernel mode: `true` (the production default) builds the
+    /// indexed evaluator (placement records + prefix aggregates — see
+    /// [`DeltaKernel::with_indexed`]), `false` the legacy √n block
+    /// kernel. Ignored under `full_replay`. Either way the trajectory is
+    /// bit-identical — the knob trades memory for late-position move
+    /// throughput and exists for A/B benchmarking
+    /// (`JointOptimizer::block_kernel`).
+    pub indexed: bool,
     /// Online-preemption churn model: when present, every evaluator adds
     /// the per-task checkpoint/restore cost for decisions deviating from
     /// the incumbent (see [`Churn`]). A pure per-task function of the
@@ -360,7 +368,8 @@ fn run(
     let mut kernel = Arc::new(
         DeltaKernel::new(p.node_gpus.to_vec(), n, p.objective.clone())
             .with_rates(p.node_rates)
-            .with_risk(p.risk.cloned()),
+            .with_risk(p.risk.cloned())
+            .with_indexed(p.indexed),
     );
     let mut scratch = EvalScratch::new(p.full_replay, p.node_gpus, p.node_rates, p.risk);
     let mut mover = Mover::new(n);

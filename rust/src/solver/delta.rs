@@ -203,6 +203,57 @@ pub(crate) struct DeltaKernel {
     /// full-replay and thread-parity contracts carry over. `None` (the
     /// default) takes the exact risk-blind arithmetic path.
     risk: Option<Risk>,
+    /// Indexed-evaluator mode (the default): alongside the block
+    /// checkpoints, the kernel keeps **per-position placement records**
+    /// `(node, gangs, end)` and **prefix score aggregates** for the
+    /// committed state. Pricing a move at position `p0` then
+    ///
+    /// 1. loads the nearest free-time checkpoint (O(total)),
+    /// 2. fast-forwards to `p0` by *re-applying the recorded splices* —
+    ///    pure sorted-array surgery, no node scan and no churn/rate/risk
+    ///    float arithmetic (the recorded `end` already embeds them),
+    /// 3. reads the prefix aggregate at `p0` in O(1) (`pre_ms`,
+    ///    `pre_sum`; the tail top-k buffer replays record ends from the
+    ///    block checkpoint), and
+    /// 4. replays only the genuinely changed suffix `[p0, n)`.
+    ///
+    /// On a late-position move the per-eval cost drops from
+    /// O((√n + n − p0)·m) node scans to O(√n·ḡ) splice work plus the
+    /// unavoidable O((n − p0)·m) suffix — the 4096-task scale rung's
+    /// headline win (EXPERIMENTS.md §Scale). Bit-exactness is preserved
+    /// by construction: the prefix aggregates are exactly the list
+    /// scheduler's left-fold partials (same discipline as the block
+    /// checkpoints), and a recorded splice reproduces the free multiset
+    /// byte for byte because [`place_gang`]'s occupation depends only on
+    /// `(node, g, end)`. `false` retains the pure √n block kernel as the
+    /// A/B baseline (`JointOptimizer::block_kernel`).
+    indexed: bool,
+    /// Committed per-position placement records: host node index.
+    rec_node: Vec<usize>,
+    /// Committed per-position placement records: gang width.
+    rec_g: Vec<usize>,
+    /// Committed per-position placement records: gang end time (wall
+    /// clock, churn/rate/risk already applied).
+    rec_end: Vec<f64>,
+    /// Staged records written by an indexed `eval_move`, adopted by
+    /// `accept` (suffix `[p0, n)` only — the prefix is unchanged).
+    srec_node: Vec<usize>,
+    /// Staged gang widths.
+    srec_g: Vec<usize>,
+    /// Staged gang end times.
+    srec_end: Vec<f64>,
+    /// Committed prefix running makespans, length `n + 1`: `pre_ms[p]` is
+    /// the left-fold `max` over positions `[0, p)` — the exact partial
+    /// the legacy replay reaches at position `p`. (All-zero for flow/tail
+    /// objectives, mirroring `ckpt_ms`.)
+    pre_ms: Vec<f64>,
+    /// Committed prefix weighted-turnaround sums, length `n + 1` (flow
+    /// objectives; the exact left-fold `+` partials).
+    pre_sum: Vec<f64>,
+    /// Staged prefix makespans (suffix `[p0, n]` of the candidate).
+    spre_ms: Vec<f64>,
+    /// Staged prefix flow sums.
+    spre_sum: Vec<f64>,
 }
 
 /// Sanitize a rate vector for evaluator use: sized to `n` nodes (missing
@@ -255,7 +306,28 @@ impl DeltaKernel {
             valid_upto: 0,
             rates: vec![1.0; n_nodes],
             risk: None,
+            indexed: true,
+            rec_node: vec![0; n],
+            rec_g: vec![0; n],
+            rec_end: vec![0.0; n],
+            srec_node: vec![0; n],
+            srec_g: vec![0; n],
+            srec_end: vec![0.0; n],
+            pre_ms: vec![0.0; n + 1],
+            pre_sum: vec![0.0; n + 1],
+            spre_ms: vec![0.0; n + 1],
+            spre_sum: vec![0.0; n + 1],
         }
+    }
+
+    /// Select the evaluator mode (builder-style): `true` (the default)
+    /// is the indexed evaluator, `false` the legacy √n block kernel kept
+    /// as the A/B baseline. Both modes return bit-identical scores for
+    /// every candidate — the mode only changes how much work a move
+    /// costs.
+    pub(crate) fn with_indexed(mut self, indexed: bool) -> Self {
+        self.indexed = indexed;
+        self
     }
 
     /// Attach per-node rate multipliers (builder-style; the default is
@@ -279,9 +351,10 @@ impl DeltaKernel {
 
     /// Place one gang on the working free lists: pick the earliest-start
     /// node (or the forced one), occupy the g earliest-free GPUs, return
-    /// the gang's end time. `None` when no candidate node is wide enough —
-    /// the same infeasibility the full-replay evaluator maps to INFINITY.
-    fn step(&mut self, g: usize, dur: f64, forced: Option<usize>, t: usize) -> Option<f64> {
+    /// the chosen `(node, end)`. `None` when no candidate node is wide
+    /// enough — the same infeasibility the full-replay evaluator maps to
+    /// INFINITY.
+    fn step(&mut self, g: usize, dur: f64, forced: Option<usize>, t: usize) -> Option<(usize, f64)> {
         place_gang(
             &mut self.free,
             &self.node_gpus,
@@ -319,21 +392,40 @@ impl DeltaKernel {
                     }
                 }
             }
+            if self.indexed {
+                self.pre_ms[pos] = ms;
+                if let ScoreKind::Flow = self.spec.kind {
+                    self.pre_sum[pos] = sum;
+                }
+            }
             let t = s.order[pos];
             let (g, dur) = gang_dur(durs, churn, s, t);
             match self.step(g, dur, s.node[t], t) {
-                Some(end) => match self.spec.kind {
-                    ScoreKind::Makespan => ms = ms.max(end),
-                    ScoreKind::Flow => sum += self.spec.flow_term(t, end),
-                    ScoreKind::Tail => {
-                        tail_push(&mut self.tail, self.spec.k, self.spec.turnaround(t, end))
+                Some((node, end)) => {
+                    if self.indexed {
+                        self.rec_node[pos] = node;
+                        self.rec_g[pos] = g;
+                        self.rec_end[pos] = end;
                     }
-                },
+                    match self.spec.kind {
+                        ScoreKind::Makespan => ms = ms.max(end),
+                        ScoreKind::Flow => sum += self.spec.flow_term(t, end),
+                        ScoreKind::Tail => {
+                            tail_push(&mut self.tail, self.spec.k, self.spec.turnaround(t, end))
+                        }
+                    }
+                }
                 None => {
                     self.valid_upto = pos;
                     self.committed_ms = f64::INFINITY;
                     return f64::INFINITY;
                 }
+            }
+        }
+        if self.indexed {
+            self.pre_ms[self.n] = ms;
+            if let ScoreKind::Flow = self.spec.kind {
+                self.pre_sum[self.n] = sum;
             }
         }
         let score = match self.spec.kind {
@@ -365,6 +457,9 @@ impl DeltaKernel {
         if p0 >= self.n {
             // no-op move: the candidate IS the committed state
             return self.committed_ms;
+        }
+        if self.indexed {
+            return self.eval_move_indexed(s, durs, p0, churn);
         }
         let b0 = p0 / self.block;
         let o0 = b0 * self.total;
@@ -400,7 +495,7 @@ impl DeltaKernel {
             let t = s.order[pos];
             let (g, dur) = gang_dur(durs, churn, s, t);
             match self.step(g, dur, s.node[t], t) {
-                Some(end) => match self.spec.kind {
+                Some((_, end)) => match self.spec.kind {
                     ScoreKind::Makespan => ms = ms.max(end),
                     ScoreKind::Flow => sum += self.spec.flow_term(t, end),
                     ScoreKind::Tail => {
@@ -409,6 +504,106 @@ impl DeltaKernel {
                 },
                 None => return f64::INFINITY,
             }
+        }
+        match self.spec.kind {
+            ScoreKind::Makespan => ms,
+            ScoreKind::Flow => self.spec.flow_score(sum),
+            ScoreKind::Tail => tail_score(&self.tail),
+        }
+    }
+
+    /// Indexed-mode body of [`Self::eval_move`] (guards already passed):
+    /// checkpoint load + recorded-splice fast-forward to `p0`, O(1)
+    /// prefix aggregates, then a real replay of the changed suffix that
+    /// stages block snapshots, placement records, and prefix aggregates
+    /// for [`Self::accept`]. Scores are bit-identical to the block-mode
+    /// replay (see the `indexed` field docs for why).
+    fn eval_move_indexed(
+        &mut self,
+        s: &State,
+        durs: &[Vec<(usize, f64)>],
+        p0: usize,
+        churn: Option<&Churn>,
+    ) -> f64 {
+        let b0 = p0 / self.block;
+        let o0 = b0 * self.total;
+        self.free.copy_from_slice(&self.ckpt[o0..o0 + self.total]);
+        // fast-forward [b0·block, p0): re-apply the committed splices —
+        // no node scan, no churn/rate/risk arithmetic
+        for pos in b0 * self.block..p0 {
+            apply_record(
+                &mut self.free,
+                &self.node_gpus,
+                &self.offsets,
+                self.rec_node[pos],
+                self.rec_g[pos],
+                self.rec_end[pos],
+            );
+        }
+        // prefix aggregates at p0: O(1) reads (tail: record-end pushes
+        // from the block-granular checkpoint buffer)
+        let mut ms = self.pre_ms[p0];
+        let mut sum = 0.0f64;
+        match self.spec.kind {
+            ScoreKind::Makespan => {}
+            ScoreKind::Flow => sum = self.pre_sum[p0],
+            ScoreKind::Tail => {
+                let o = b0 * self.spec.k;
+                self.tail.clear();
+                self.tail.extend_from_slice(&self.ckpt_tail[o..o + self.ckpt_tail_len[b0]]);
+                for pos in b0 * self.block..p0 {
+                    tail_push(
+                        &mut self.tail,
+                        self.spec.k,
+                        self.spec.turnaround(s.order[pos], self.rec_end[pos]),
+                    );
+                }
+            }
+        }
+        // real replay of the changed suffix, staging as it goes (every
+        // block boundary past b0 lies at or beyond p0: (b0+1)·block > p0)
+        for pos in p0..self.n {
+            if pos % self.block == 0 {
+                let b = pos / self.block;
+                if b > b0 {
+                    self.staged[b * self.total..(b + 1) * self.total].copy_from_slice(&self.free);
+                    self.staged_ms[b] = ms;
+                    match self.spec.kind {
+                        ScoreKind::Makespan => {}
+                        ScoreKind::Flow => self.staged_sum[b] = sum,
+                        ScoreKind::Tail => {
+                            let o = b * self.spec.k;
+                            self.staged_tail[o..o + self.tail.len()].copy_from_slice(&self.tail);
+                            self.staged_tail_len[b] = self.tail.len();
+                        }
+                    }
+                }
+            }
+            self.spre_ms[pos] = ms;
+            if let ScoreKind::Flow = self.spec.kind {
+                self.spre_sum[pos] = sum;
+            }
+            let t = s.order[pos];
+            let (g, dur) = gang_dur(durs, churn, s, t);
+            match self.step(g, dur, s.node[t], t) {
+                Some((node, end)) => {
+                    self.srec_node[pos] = node;
+                    self.srec_g[pos] = g;
+                    self.srec_end[pos] = end;
+                    match self.spec.kind {
+                        ScoreKind::Makespan => ms = ms.max(end),
+                        ScoreKind::Flow => sum += self.spec.flow_term(t, end),
+                        ScoreKind::Tail => {
+                            tail_push(&mut self.tail, self.spec.k, self.spec.turnaround(t, end))
+                        }
+                    }
+                }
+                None => return f64::INFINITY,
+            }
+        }
+        self.spre_ms[self.n] = ms;
+        if let ScoreKind::Flow = self.spec.kind {
+            self.spre_sum[self.n] = sum;
         }
         match self.spec.kind {
             ScoreKind::Makespan => ms,
@@ -437,6 +632,18 @@ impl DeltaKernel {
                         self.ckpt_tail[ot..ot + len].copy_from_slice(&self.staged_tail[ot..ot + len]);
                         self.ckpt_tail_len[b] = len;
                     }
+                }
+            }
+            if self.indexed {
+                // adopt the candidate's suffix records and prefix
+                // aggregates; positions < p0 are untouched by definition
+                // of p0, so the committed prefix stays valid
+                self.rec_node[p0..self.n].copy_from_slice(&self.srec_node[p0..self.n]);
+                self.rec_g[p0..self.n].copy_from_slice(&self.srec_g[p0..self.n]);
+                self.rec_end[p0..self.n].copy_from_slice(&self.srec_end[p0..self.n]);
+                self.pre_ms[p0..=self.n].copy_from_slice(&self.spre_ms[p0..=self.n]);
+                if let ScoreKind::Flow = self.spec.kind {
+                    self.pre_sum[p0..=self.n].copy_from_slice(&self.spre_sum[p0..=self.n]);
                 }
             }
         }
@@ -483,7 +690,39 @@ impl DeltaKernel {
                 tail.extend_from_slice(&self.ckpt_tail[o..o + self.ckpt_tail_len[b0]]);
             }
         }
-        for pos in b0 * self.block..self.n {
+        let replay_from = if self.indexed {
+            // indexed fast-forward, read-only: re-apply the committed
+            // splice records up to p0 and read the prefix aggregates —
+            // the same shortcut as `eval_move_indexed`, through `&self`
+            for pos in b0 * self.block..p0 {
+                apply_record(
+                    free,
+                    &self.node_gpus,
+                    &self.offsets,
+                    self.rec_node[pos],
+                    self.rec_g[pos],
+                    self.rec_end[pos],
+                );
+            }
+            ms = self.pre_ms[p0];
+            match self.spec.kind {
+                ScoreKind::Makespan => {}
+                ScoreKind::Flow => sum = self.pre_sum[p0],
+                ScoreKind::Tail => {
+                    for pos in b0 * self.block..p0 {
+                        tail_push(
+                            tail,
+                            self.spec.k,
+                            self.spec.turnaround(s.order[pos], self.rec_end[pos]),
+                        );
+                    }
+                }
+            }
+            p0
+        } else {
+            b0 * self.block
+        };
+        for pos in replay_from..self.n {
             let t = s.order[pos];
             let (g, dur) = gang_dur(durs, churn, s, t);
             match place_gang(
@@ -497,7 +736,7 @@ impl DeltaKernel {
                 s.node[t],
                 t,
             ) {
-                Some(end) => match self.spec.kind {
+                Some((_, end)) => match self.spec.kind {
                     ScoreKind::Makespan => ms = ms.max(end),
                     ScoreKind::Flow => sum += self.spec.flow_term(t, end),
                     ScoreKind::Tail => tail_push(tail, self.spec.k, self.spec.turnaround(t, end)),
@@ -516,8 +755,8 @@ impl DeltaKernel {
 /// Place one gang on flat sorted free lists (shared by the kernel's
 /// committed replay and the workers' read-only replays): pick the
 /// earliest-start node (or the forced one), occupy the g earliest-free
-/// GPUs, return the gang's end time. `None` when no candidate node is
-/// wide enough. The chosen host's rate stretches the duration *after*
+/// GPUs, return the chosen `(node, end)`. `None` when no candidate node
+/// is wide enough. The chosen host's rate stretches the duration *after*
 /// selection (`dur / rates[node]`), so selection itself is rate-blind
 /// and identical across every evaluator layer. With a [`Risk`] model
 /// attached, the chosen host also pads the wall duration by its
@@ -534,7 +773,7 @@ fn place_gang(
     dur: f64,
     forced: Option<usize>,
     t: usize,
-) -> Option<f64> {
+) -> Option<(usize, f64)> {
     let (node, start) = match forced {
         Some(ni) => {
             if node_gpus[ni] < g {
@@ -581,7 +820,92 @@ fn place_gang(
     for x in &mut seg[hi - g..hi] {
         *x = end;
     }
-    Some(end)
+    Some((node, end))
+}
+
+/// Re-apply one committed placement record to a working free-list state:
+/// the occupation splice of [`place_gang`] — and *only* the splice. The
+/// indexed evaluator's fast-forward uses this to reconstruct the free
+/// multiset at a move position without re-running node selection or the
+/// churn/rate/risk duration arithmetic: the splice depends only on
+/// `(node, g, end)`, so replaying records is byte-identical to replaying
+/// placements.
+fn apply_record(
+    free: &mut [f64],
+    node_gpus: &[usize],
+    offsets: &[usize],
+    node: usize,
+    g: usize,
+    end: f64,
+) {
+    let off = offsets[node];
+    let width = node_gpus[node];
+    let seg = &mut free[off..off + width];
+    let hi = seg.partition_point(|&x| x <= end);
+    seg.copy_within(g..hi, 0);
+    for x in &mut seg[hi - g..hi] {
+        *x = end;
+    }
+}
+
+/// Kernel-level eval-throughput harness for the scale benches
+/// (re-exported as `solver::eval_burst`): runs `iters` configuration
+/// moves whose positions concentrate in the **last `⌈n·late_frac⌉`
+/// order slots** — the regime where the block kernel pays a full
+/// O(√n·m) placement fast-forward per eval but the indexed evaluator
+/// only re-applies recorded splices — against a DetRng-seeded random
+/// state, accepting via a fixed-temperature Metropolis rule so the
+/// committed state keeps churning. Returns `(score checksum, accepted
+/// count)`; both are bit-identical across `indexed` modes (the benches
+/// assert it), so a throughput ratio between two calls that differ only
+/// in `indexed` isolates the evaluator cost. Deliberately contains no
+/// clock reads — this file is a determinism-contract module
+/// (saturn-lint bans clocks here); timing belongs to the bench binary.
+pub fn eval_burst(
+    node_gpus: &[usize],
+    durs: &[Vec<(usize, f64)>],
+    indexed: bool,
+    late_frac: f64,
+    iters: usize,
+    seed: u64,
+) -> (f64, usize) {
+    let n = durs.len();
+    if n == 0 {
+        return (0.0, 0);
+    }
+    let mut rng = DetRng::new(seed);
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut s = State {
+        cfg: durs.iter().map(|d| rng.below(d.len().max(1))).collect(),
+        order,
+        node: vec![None; n],
+    };
+    let mut kernel = DeltaKernel::new(node_gpus.to_vec(), n, ScoreSpec::makespan())
+        .with_indexed(indexed);
+    let mut cur = kernel.rebuild(&s, durs, None);
+    let late_n = ((n as f64 * late_frac).ceil() as usize).clamp(1, n);
+    let temp = 0.02 * cur.max(1e-9);
+    let mut checksum = 0.0f64;
+    let mut accepts = 0usize;
+    for _ in 0..iters {
+        let p0 = n - late_n + rng.below(late_n);
+        let t = s.order[p0];
+        let old = s.cfg[t];
+        s.cfg[t] = rng.below(durs[t].len().max(1));
+        let cand = kernel.eval_move(&s, durs, p0, None);
+        if cand.is_finite() {
+            checksum += cand;
+        }
+        if cand.is_finite() && rng.metropolis(cur, cand, temp) {
+            kernel.accept(p0, cand);
+            cur = cand;
+            accepts += 1;
+        } else {
+            s.cfg[t] = old;
+        }
+    }
+    (checksum, accepts)
 }
 
 /// Reusable buffers for the legacy full-replay evaluator (the annealing
@@ -1816,5 +2140,189 @@ mod tests {
             );
         }
         assert!(tail_cases >= 10, "too few tail-objective cases: {tail_cases}");
+    }
+
+    /// The scale rung's A/B contract: the indexed evaluator and the
+    /// legacy √n block kernel are *the same function* — over random move
+    /// sequences on every objective, both modes return bit-identical
+    /// scores from `eval_move` and `eval_move_readonly`, stay in
+    /// lock-step through accepts, and land on cold-rebuild-identical
+    /// committed states. (The throughput benches lean on this to let a
+    /// mode ratio isolate evaluator cost.)
+    #[test]
+    fn prop_indexed_matches_block_kernel() {
+        for case in 0..36u64 {
+            let mut rng = DetRng::new(11000 + case);
+            let (durs, node_gpus) = random_instance(&mut rng, case % 3 == 0);
+            let nt = durs.len();
+            let mut s = random_state(&mut rng, &durs, node_gpus.len(), true);
+            let offsets: Vec<f64> = (0..nt).map(|_| rng.range_f64(0.0, 800.0)).collect();
+            let spec = match case % 3 {
+                0 => ScoreSpec::makespan(),
+                1 => ScoreSpec::flow((0..nt).map(|_| rng.range_f64(0.25, 4.0)).collect(), offsets),
+                _ => ScoreSpec::tail(1 + rng.below(nt), offsets),
+            };
+            let mut ker_i =
+                DeltaKernel::new(node_gpus.clone(), nt, spec.clone()).with_indexed(true);
+            let mut ker_b =
+                DeltaKernel::new(node_gpus.clone(), nt, spec.clone()).with_indexed(false);
+            let mut mover = Mover::new(nt);
+            mover.rebuild_pos(&s.order);
+            let mut committed = ker_i.rebuild(&s, &durs, None);
+            assert_eq!(
+                committed,
+                ker_b.rebuild(&s, &durs, None),
+                "case {case}: rebuild mode divergence"
+            );
+            let movable: Vec<usize> = (0..nt).collect();
+            let mut ro_free: Vec<f64> = Vec::new();
+            let mut ro_tail: Vec<f64> = Vec::new();
+            for step in 0..220 {
+                let (undo, p0) = mover.propose(&mut s, &durs, node_gpus.len(), &mut rng, &movable);
+                let e_i = ker_i.eval_move(&s, &durs, p0, None);
+                let e_b = ker_b.eval_move(&s, &durs, p0, None);
+                assert_eq!(e_i, e_b, "case {case} step {step}: eval mode divergence (p0={p0})");
+                let ro_i = ker_i.eval_move_readonly(&s, &durs, p0, &mut ro_free, &mut ro_tail, None);
+                assert_eq!(e_i, ro_i, "case {case} step {step}: indexed readonly diverged");
+                let ro_b = ker_b.eval_move_readonly(&s, &durs, p0, &mut ro_free, &mut ro_tail, None);
+                assert_eq!(e_b, ro_b, "case {case} step {step}: block readonly diverged");
+                if e_i.is_finite() && rng.f64() < 0.4 {
+                    ker_i.accept(p0, e_i);
+                    ker_b.accept(p0, e_b);
+                    committed = e_i;
+                } else {
+                    mover.undo(&mut s, undo);
+                }
+            }
+            let mut cold_i =
+                DeltaKernel::new(node_gpus.clone(), nt, spec.clone()).with_indexed(true);
+            let mut cold_b = DeltaKernel::new(node_gpus, nt, spec).with_indexed(false);
+            assert_eq!(cold_i.rebuild(&s, &durs, None), committed, "case {case}: indexed drift");
+            assert_eq!(cold_b.rebuild(&s, &durs, None), committed, "case {case}: block drift");
+        }
+    }
+
+    /// The indexed evaluator's committed placement records and prefix
+    /// aggregates must be *exactly* a cold rebuild's after any amount of
+    /// accept/undo churn — the "aggregates are the list scheduler's
+    /// left-fold partials" contract that makes the record fast-forward
+    /// byte-identical to a real replay. Compared field by field (the
+    /// test module sees private state), not just through scores.
+    #[test]
+    fn prop_indexed_aggregates_match_cold_rebuild_after_churn() {
+        let mut compared = 0usize;
+        for case in 0..30u64 {
+            let mut rng = DetRng::new(13000 + case);
+            let (durs, node_gpus) = random_instance(&mut rng, case % 2 == 0);
+            let nt = durs.len();
+            let mut s = random_state(&mut rng, &durs, node_gpus.len(), true);
+            let offsets: Vec<f64> = (0..nt).map(|_| rng.range_f64(0.0, 800.0)).collect();
+            let spec = match case % 3 {
+                0 => ScoreSpec::makespan(),
+                1 => ScoreSpec::flow(vec![1.0; nt], offsets),
+                _ => ScoreSpec::tail(1 + rng.below(nt), offsets),
+            };
+            let mut kernel = DeltaKernel::new(node_gpus.clone(), nt, spec.clone());
+            let mut mover = Mover::new(nt);
+            mover.rebuild_pos(&s.order);
+            let mut committed = kernel.rebuild(&s, &durs, None);
+            let movable: Vec<usize> = (0..nt).collect();
+            for _ in 0..200 {
+                let (undo, p0) = mover.propose(&mut s, &durs, node_gpus.len(), &mut rng, &movable);
+                let ms = kernel.eval_move(&s, &durs, p0, None);
+                if ms.is_finite() && rng.f64() < 0.4 {
+                    kernel.accept(p0, ms);
+                    committed = ms;
+                } else {
+                    mover.undo(&mut s, undo);
+                }
+            }
+            if !committed.is_finite() {
+                continue; // records are only defined for feasible prefixes
+            }
+            let mut cold = DeltaKernel::new(node_gpus, nt, spec.clone());
+            assert_eq!(cold.rebuild(&s, &durs, None), committed, "case {case}: score drift");
+            assert_eq!(kernel.rec_node, cold.rec_node, "case {case}: rec_node drift");
+            assert_eq!(kernel.rec_g, cold.rec_g, "case {case}: rec_g drift");
+            assert_eq!(kernel.rec_end, cold.rec_end, "case {case}: rec_end drift");
+            assert_eq!(kernel.pre_ms, cold.pre_ms, "case {case}: pre_ms drift");
+            if let ScoreKind::Flow = spec.kind {
+                assert_eq!(kernel.pre_sum, cold.pre_sum, "case {case}: pre_sum drift");
+            }
+            assert_eq!(kernel.ckpt, cold.ckpt, "case {case}: ckpt drift");
+            assert_eq!(kernel.ckpt_ms, cold.ckpt_ms, "case {case}: ckpt_ms drift");
+            compared += 1;
+        }
+        assert!(compared >= 20, "too few feasible churn cases: {compared}");
+    }
+
+    /// Twin of `scripts/validate_indexed_kernel.py`: a fixed fixture with
+    /// exactly-representable durations, a fixed move/accept tape, and the
+    /// constants the exact-arithmetic Python transliteration emits. Both
+    /// kernel modes must reproduce every eval score, the final committed
+    /// score, and (indexed mode) the final prefix aggregates bit for bit.
+    /// Regenerate the constants with
+    /// `python3 scripts/validate_indexed_kernel.py --emit`.
+    #[test]
+    fn indexed_kernel_cross_validation_fixture() {
+        let node_gpus = vec![4usize, 2];
+        let durs: Vec<Vec<(usize, f64)>> = vec![
+            vec![(1, 8.0), (2, 4.5), (4, 2.25)],
+            vec![(1, 6.0), (2, 3.5)],
+            vec![(2, 5.0), (4, 3.25)],
+            vec![(1, 7.0), (2, 4.0)],
+            vec![(2, 6.5), (4, 3.75)],
+            vec![(1, 9.0), (2, 5.25)],
+        ];
+        let moves = [(4usize, 1usize), (1, 1), (5, 0), (2, 1), (0, 2), (3, 0)];
+        let expected_evals = [14.25f64, 13.5, 18.0, 13.0, 19.0, 15.0];
+        let run = |spec: ScoreSpec, check_makespan_state: bool| {
+            let mut s = State {
+                cfg: vec![1, 0, 0, 1, 0, 1],
+                order: vec![0, 1, 2, 3, 4, 5],
+                node: vec![None, None, None, Some(1), None, None],
+            };
+            let mut ker_i =
+                DeltaKernel::new(node_gpus.clone(), 6, spec.clone()).with_indexed(true);
+            let mut ker_b = DeltaKernel::new(node_gpus.clone(), 6, spec).with_indexed(false);
+            let mut committed = ker_i.rebuild(&s, &durs, None);
+            assert_eq!(committed, ker_b.rebuild(&s, &durs, None), "fixture rebuild divergence");
+            for (i, &(p0, newcfg)) in moves.iter().enumerate() {
+                let t = s.order[p0];
+                let old = s.cfg[t];
+                s.cfg[t] = newcfg;
+                let e_i = ker_i.eval_move(&s, &durs, p0, None);
+                let e_b = ker_b.eval_move(&s, &durs, p0, None);
+                assert_eq!(e_i, e_b, "fixture move {i}: mode divergence");
+                if check_makespan_state {
+                    assert_eq!(e_i, expected_evals[i], "fixture move {i}: pinned eval");
+                }
+                if e_i.is_finite() && i % 2 == 0 {
+                    ker_i.accept(p0, e_i);
+                    ker_b.accept(p0, e_b);
+                    committed = e_i;
+                } else {
+                    s.cfg[t] = old;
+                }
+            }
+            if check_makespan_state {
+                assert_eq!(committed, 19.0, "fixture final committed");
+                assert_eq!(
+                    ker_i.pre_ms,
+                    vec![0.0, 2.25, 6.0, 7.25, 10.0, 11.0, 19.0],
+                    "fixture pre_ms"
+                );
+                assert_eq!(
+                    ker_i.rec_end,
+                    vec![2.25, 6.0, 7.25, 10.0, 11.0, 19.0],
+                    "fixture rec_end"
+                );
+            }
+            committed
+        };
+        run(ScoreSpec::makespan(), true);
+        let offsets = vec![0.0, 10.0, 20.0, 30.0, 40.0, 50.0];
+        assert_eq!(run(ScoreSpec::flow(vec![1.0; 6], offsets.clone()), false), 34.25);
+        assert_eq!(run(ScoreSpec::tail(2, offsets), false), 60.0);
     }
 }

@@ -69,6 +69,14 @@ pub struct JointOptimizer {
     /// the delta kernel just gets there orders of magnitude cheaper per
     /// move (EXPERIMENTS.md §Perf).
     pub full_replay: bool,
+    /// Score annealing candidates with the legacy √n **block kernel**
+    /// instead of the indexed evaluator (placement records + prefix
+    /// score aggregates, the default since the 4096-task scale rung).
+    /// Kept for A/B benchmarking: both kernel modes walk bit-identical
+    /// trajectories — the indexed evaluator just prices late-position
+    /// moves without re-running placement over the unchanged prefix
+    /// (EXPERIMENTS.md §Scale). Ignored under [`Self::full_replay`].
+    pub block_kernel: bool,
     /// Worker threads for speculative batch evaluation. `0` = automatic:
     /// the `SATURN_THREADS` environment variable if set, else all
     /// available cores. An explicit value pins the count (the
@@ -115,6 +123,7 @@ impl Default for JointOptimizer {
             iters_per_temp: 400,
             incremental: false,
             full_replay: false,
+            block_kernel: false,
             threads: 0,
             warm_frac: 0.25,
             preempt: None,
@@ -247,6 +256,7 @@ impl JointOptimizer {
             deadline,
             threads: self.resolved_threads(),
             full_replay: self.full_replay,
+            indexed: !self.block_kernel,
             churn: None,
             objective: spec,
             risk,
@@ -530,6 +540,7 @@ impl JointOptimizer {
             deadline,
             threads: self.resolved_threads(),
             full_replay: self.full_replay,
+            indexed: !self.block_kernel,
             churn: churn.as_ref(),
             objective: &spec,
             risk: risk.as_ref(),
@@ -851,6 +862,42 @@ mod tests {
         assert_eq!(stats_d.improvements, stats_f.improvements);
         assert_eq!(stats_d.final_makespan, stats_f.final_makespan);
         assert_eq!(sched_d.makespan(), sched_f.makespan());
+    }
+
+    /// Three-way mode parity for the scale rung: the indexed evaluator
+    /// (the default), the legacy √n block kernel (`block_kernel`), and
+    /// the full-replay baseline all score every candidate bit-identically
+    /// and draw from the RNG in the same pattern, so with one seed and an
+    /// un-truncatable budget all three walk the same trajectory to the
+    /// same incumbent.
+    #[test]
+    fn indexed_block_and_full_replay_walk_one_trajectory() {
+        let tasks: Vec<SpaseTask> = (0..14)
+            .map(|i| SpaseTask {
+                id: i,
+                configs: frontier(&[650.0 + 17.0 * i as f64, 370.0, 255.0, 205.0]),
+            })
+            .collect();
+        let cluster = Cluster::heterogeneous_12gpu();
+        let opt_indexed = JointOptimizer {
+            timeout: Duration::from_secs(600),
+            restarts: 2,
+            iters_per_temp: 120,
+            ..Default::default()
+        };
+        let opt_block = JointOptimizer { block_kernel: true, ..opt_indexed.clone() };
+        let opt_full = JointOptimizer { full_replay: true, ..opt_indexed.clone() };
+        let (sched_i, st_i) = opt_indexed.solve(&tasks, &cluster, &mut DetRng::new(47));
+        let (sched_b, st_b) = opt_block.solve(&tasks, &cluster, &mut DetRng::new(47));
+        let (sched_f, st_f) = opt_full.solve(&tasks, &cluster, &mut DetRng::new(47));
+        assert_eq!(st_i.evals, st_b.evals, "indexed vs block: eval counts diverged");
+        assert_eq!(st_i.evals, st_f.evals, "indexed vs full replay: eval counts diverged");
+        assert_eq!(st_i.improvements, st_b.improvements);
+        assert_eq!(st_i.improvements, st_f.improvements);
+        assert_eq!(st_i.final_makespan, st_b.final_makespan);
+        assert_eq!(st_i.final_makespan, st_f.final_makespan);
+        assert_eq!(sched_i, sched_b, "indexed and block kernels must emit one plan");
+        assert_eq!(sched_i, sched_f, "indexed and full replay must emit one plan");
     }
 
     /// Thread count is a wall-clock knob, not a semantics knob: with an

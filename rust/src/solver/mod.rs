@@ -15,8 +15,12 @@
 //!   trajectories are bit-identical for every thread count.
 //! - `delta` (internal): the delta-evaluation kernel behind the annealer —
 //!   in-place moves with an undo log, block-checkpointed suffix replay,
-//!   sorted per-node free lists. Bit-identical to full replay, orders of
-//!   magnitude cheaper per move at 100+-task scale.
+//!   sorted per-node free lists, and (default since the 4096-task scale
+//!   rung) an indexed evaluator: per-position placement records + prefix
+//!   score aggregates that price late-position moves without re-running
+//!   placement over the unchanged prefix. Bit-identical to full replay in
+//!   both modes; [`eval_burst`] is the kernel-level throughput harness
+//!   the scale benches time.
 //! - [`objective`]: pluggable scheduling objectives — makespan (default),
 //!   mean/weighted turnaround, and a smoothed-p95 tail surrogate — the
 //!   scalar every evaluator layer scores candidates with.
@@ -38,6 +42,7 @@ pub mod policy;
 pub mod risk;
 pub mod spase;
 
+pub use delta::eval_burst;
 pub use objective::Objective;
 pub use policy::{PlanCtx, Policy};
 pub use risk::{young_daly_interval, Risk};

@@ -22,7 +22,7 @@ use crate::util::Deadline;
 
 /// One task as the MILP sees it: its id and its configuration list
 /// (`G_t`, `R_t` in the paper's notation).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SpaseTask {
     /// Task id.
     pub id: usize,

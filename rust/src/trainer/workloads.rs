@@ -550,6 +550,28 @@ pub fn scaling_instance(
     (tasks, cluster)
 }
 
+/// The **4096-task / 1024-GPU scale rung** (EXPERIMENTS.md §Scale): the
+/// canonical instance for the indexed delta-kernel benchmarks, one order
+/// of magnitude past the 512-task rung the √n block kernel was sized
+/// for. 128 nodes × 8 GPUs, every frontier covering 1..=8 GPUs —
+/// generation is O(1) per task (a handful of `DetRng` draws and eight
+/// closed-form Amdahl points), so building the instance is negligible
+/// next to a single anneal sweep over it.
+pub fn scale_rung_4096() -> (Vec<SpaseTask>, Cluster) {
+    scaling_instance(4096, 128, 8, 0x5CA1E)
+}
+
+/// A long online submission stream for the per-arrival re-solve bench:
+/// `n` mixed model-selection tasks arriving as a Poisson process with
+/// the given mean gap, deterministically derived from `seed`. Same O(1)
+/// per-task generation as [`online_mixed_workload`]; the seed is taken
+/// directly so benches and tests can pin independent streams without
+/// sharing a caller-side RNG.
+pub fn long_online_stream(n: usize, mean_gap_secs: f64, seed: u64) -> Workload {
+    let mut rng = DetRng::new(seed);
+    online_mixed_workload(n, mean_gap_secs, &mut rng)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -607,6 +629,36 @@ mod tests {
         let w = txt_model_size(24, 4);
         assert_eq!(w.len(), 4);
         assert!(w[0].model.name.contains("stack-24"));
+    }
+
+    #[test]
+    fn scale_rung_4096_shape_and_determinism() {
+        let (tasks, cluster) = scale_rung_4096();
+        assert_eq!(tasks.len(), 4096);
+        assert_eq!(cluster.total_gpus(), 1024);
+        for (i, t) in tasks.iter().enumerate() {
+            assert_eq!(t.id, i, "ids must be dense");
+            assert_eq!(t.configs.len(), 8);
+            // frontier gpu counts ascending (the greedy_rescale contract)
+            for w in t.configs.windows(2) {
+                assert!(w[1].gpus > w[0].gpus);
+            }
+        }
+        let (tasks2, _) = scale_rung_4096();
+        assert_eq!(tasks, tasks2, "the rung must be bit-identical across calls");
+    }
+
+    #[test]
+    fn long_online_stream_is_seeded_and_ordered() {
+        let a = long_online_stream(256, 400.0, 7);
+        let b = long_online_stream(256, 400.0, 7);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 256);
+        for w in a.windows(2) {
+            assert!(w[1].arrival > w[0].arrival, "Poisson arrivals strictly increase");
+        }
+        let c = long_online_stream(256, 400.0, 8);
+        assert_ne!(a, c, "different seeds must give different streams");
     }
 
     #[test]

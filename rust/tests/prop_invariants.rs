@@ -1065,3 +1065,59 @@ fn prop_optimus_allocation_budget() {
         assert!(alloc.iter().sum::<usize>() <= budget.max(tasks.len()), "case {case}");
     }
 }
+
+/// The indexed evaluator ≡ full replay ≡ block kernel at the 1024-task
+/// scale rung (run explicitly in release by CI — a debug build would
+/// take minutes; in release one restart is seconds). All three
+/// evaluators solve the same `scaling_instance(1024, 32, 8, ..)` with
+/// the same seed and an un-truncatable budget, and must walk one
+/// trajectory: identical eval/improvement counts, identical final
+/// incumbent, identical emitted plan.
+#[test]
+fn prop_indexed_delta_and_full_replay_agree() {
+    use saturn::trainer::workloads;
+    let (tasks, cluster) = workloads::scaling_instance(1024, 32, 8, 4242);
+    let opt_indexed = JointOptimizer {
+        timeout: std::time::Duration::from_secs(3600),
+        restarts: 1,
+        iters_per_temp: 12,
+        threads: 1,
+        ..Default::default()
+    };
+    let opt_block = JointOptimizer { block_kernel: true, ..opt_indexed.clone() };
+    let opt_full = JointOptimizer { full_replay: true, ..opt_indexed.clone() };
+    let (sched_i, st_i) = opt_indexed.solve(&tasks, &cluster, &mut DetRng::new(64));
+    let (sched_b, st_b) = opt_block.solve(&tasks, &cluster, &mut DetRng::new(64));
+    let (sched_f, st_f) = opt_full.solve(&tasks, &cluster, &mut DetRng::new(64));
+    assert_eq!(st_i.evals, st_b.evals, "indexed vs block kernel: trajectories diverged");
+    assert_eq!(st_i.evals, st_f.evals, "indexed vs full replay: trajectories diverged");
+    assert_eq!(st_i.improvements, st_b.improvements);
+    assert_eq!(st_i.improvements, st_f.improvements);
+    assert_eq!(st_i.final_makespan, st_b.final_makespan);
+    assert_eq!(st_i.final_makespan, st_f.final_makespan);
+    assert_eq!(sched_i, sched_b, "indexed and block kernels must emit one plan");
+    assert_eq!(sched_i, sched_f, "indexed and full replay must emit one plan");
+}
+
+/// Thread-count parity at the same 1024-task rung (release-only by CI,
+/// like its sibling above): the speculative engine at 8 threads must
+/// walk the bit-identical trajectory the 1-thread solve walks, through
+/// the indexed evaluator.
+#[test]
+fn prop_indexed_thread_parity_1024tasks() {
+    use saturn::trainer::workloads;
+    let (tasks, cluster) = workloads::scaling_instance(1024, 32, 8, 4242);
+    let mk = |threads: usize| JointOptimizer {
+        timeout: std::time::Duration::from_secs(3600),
+        restarts: 1,
+        iters_per_temp: 12,
+        threads,
+        ..Default::default()
+    };
+    let (sched_1, st_1) = mk(1).solve(&tasks, &cluster, &mut DetRng::new(65));
+    let (sched_8, st_8) = mk(8).solve(&tasks, &cluster, &mut DetRng::new(65));
+    assert_eq!(st_1.evals, st_8.evals, "thread count forked the indexed trajectory");
+    assert_eq!(st_1.improvements, st_8.improvements);
+    assert_eq!(st_1.final_makespan, st_8.final_makespan);
+    assert_eq!(sched_1, sched_8, "1-thread and 8-thread solves must emit one plan");
+}

@@ -1,0 +1,551 @@
+#!/usr/bin/env python3
+"""Cross-validation of the indexed delta-evaluator arithmetic.
+
+Transliterates `rust/src/solver/delta.rs`'s placement and scoring core —
+`place_gang` over flat sorted free lists, the block-checkpointed replay,
+and the indexed evaluator's per-position placement records + prefix score
+aggregates (`rec_*`, `pre_ms`, `pre_sum`, the record-end tail replay) —
+with the same IEEE-754 arithmetic, then checks three things:
+
+1. **Mode equivalence.** Over the pinned fixture and a randomized move
+   sweep, the indexed evaluator, the legacy sqrt(n) block kernel, and a
+   from-scratch reference replay (per-gang min-scans, the historical
+   evaluator) return bit-identical scores for every candidate, for the
+   makespan, weighted-flow, and top-k tail objectives alike.
+2. **Aggregate integrity.** After every accept, the committed placement
+   records and prefix aggregates equal those of a cold rebuild on the
+   committed state — the "tree aggregates are exactly the list
+   scheduler's left-fold partials" contract.
+3. **Pinned constants.** The fixture's eval-by-eval scores and final
+   aggregate arrays match the constants hardcoded in
+   `delta.rs::tests::indexed_kernel_cross_validation_fixture`, so the
+   Rust test and this script pin each other.
+
+All fixture durations are exactly representable binary fractions and the
+identity paths (rates 1.0, no risk, no churn) divide by 1.0 — IEEE-exact
+— so Python floats (IEEE doubles) reproduce the Rust arithmetic bit for
+bit.
+
+Run: python3 scripts/validate_indexed_kernel.py  (exits non-zero on any
+mismatch; --emit prints the constants for re-pinning).
+"""
+
+import bisect
+import math
+import random
+import sys
+
+# ------------------------------------------------------------ objectives
+
+MAKESPAN, FLOW, TAIL = "makespan", "flow", "tail"
+
+
+class Spec:
+    def __init__(self, kind, weights=None, offsets=None, k=0):
+        self.kind = kind
+        self.weights = weights or []
+        self.offsets = offsets or []
+        self.wsum = math.fsum([]) if not self.weights else _plain_sum(self.weights)
+        self.k = k
+
+    def turnaround(self, t, end):
+        return end + self.offsets[t]
+
+    def flow_term(self, t, end):
+        return self.weights[t] * self.turnaround(t, end)
+
+    def flow_score(self, s):
+        return s / self.wsum
+
+
+def _plain_sum(xs):
+    # Rust's `weights.iter().sum()`: left-fold +, NOT fsum
+    s = 0.0
+    for x in xs:
+        s += x
+    return s
+
+
+def tail_push(buf, k, v):
+    """objective.rs::tail_push — ascending top-k insertion."""
+    if len(buf) < k:
+        bisect.insort_right(buf, v)
+    elif k > 0 and v > buf[0]:
+        i = bisect.bisect_right(buf, v)
+        del buf[0]
+        buf.insert(i - 1, v)
+
+
+def tail_score(buf):
+    if not buf:
+        return 0.0
+    s = 0.0
+    for v in buf:
+        s += v
+    return s / len(buf)
+
+
+# ------------------------------------------------------------- placement
+
+def place_gang(free, node_gpus, offsets, g, dur, forced):
+    """delta.rs::place_gang on the identity rate/risk path.
+
+    Mutates the flat sorted free list; returns (node, end) or None.
+    """
+    if forced is not None:
+        if node_gpus[forced] < g:
+            return None
+        node, start = forced, free[offsets[forced] + g - 1]
+    else:
+        node, start = -1, math.inf
+        for ni in range(len(node_gpus)):
+            if node_gpus[ni] < g:
+                continue
+            s = free[offsets[ni] + g - 1]
+            if s < start:
+                start, node = s, ni
+        if node < 0:
+            return None
+    end = start + dur / 1.0  # rates[node] == 1.0: IEEE-exact
+    _splice(free, node_gpus, offsets, node, g, end)
+    return node, end
+
+
+def _splice(free, node_gpus, offsets, node, g, end):
+    """The occupation splice — delta.rs::apply_record."""
+    off, width = offsets[node], node_gpus[node]
+    seg = free[off:off + width]
+    hi = bisect.bisect_right(seg, end)
+    seg[0:hi - g] = seg[g:hi]
+    for i in range(hi - g, hi):
+        seg[i] = end
+    free[off:off + width] = seg
+
+
+# ---------------------------------------------------------------- kernel
+
+class Kernel:
+    """delta.rs::DeltaKernel, both modes (indexed=True/False)."""
+
+    def __init__(self, node_gpus, n, spec, indexed):
+        self.node_gpus = list(node_gpus)
+        self.offsets = [0]
+        for g in node_gpus:
+            self.offsets.append(self.offsets[-1] + g)
+        self.total = self.offsets[-1]
+        self.n = n
+        self.block = max(math.ceil(math.sqrt(n)), 1) if n else 1
+        self.nblocks = max(-(-n // self.block), 1)
+        self.spec = spec
+        self.indexed = indexed
+        self.ckpt = [[0.0] * self.total for _ in range(self.nblocks)]
+        self.ckpt_ms = [0.0] * self.nblocks
+        self.ckpt_sum = [0.0] * self.nblocks
+        self.ckpt_tail = [[] for _ in range(self.nblocks)]
+        self.staged = [[0.0] * self.total for _ in range(self.nblocks)]
+        self.staged_ms = [0.0] * self.nblocks
+        self.staged_sum = [0.0] * self.nblocks
+        self.staged_tail = [[] for _ in range(self.nblocks)]
+        self.rec_node = [0] * n
+        self.rec_g = [0] * n
+        self.rec_end = [0.0] * n
+        self.srec_node = [0] * n
+        self.srec_g = [0] * n
+        self.srec_end = [0.0] * n
+        self.pre_ms = [0.0] * (n + 1)
+        self.pre_sum = [0.0] * (n + 1)
+        self.spre_ms = [0.0] * (n + 1)
+        self.spre_sum = [0.0] * (n + 1)
+        self.tail = []
+        self.committed = 0.0
+        self.valid_upto = 0
+
+    def _score(self, ms, ssum):
+        if self.spec.kind == MAKESPAN:
+            return ms
+        if self.spec.kind == FLOW:
+            return self.spec.flow_score(ssum)
+        return tail_score(self.tail)
+
+    def rebuild(self, cfg, order, node, durs):
+        free = [0.0] * self.total
+        ms = 0.0
+        ssum = 0.0
+        self.tail = []
+        self.valid_upto = self.n
+        for pos in range(self.n):
+            if pos % self.block == 0:
+                b = pos // self.block
+                self.ckpt[b] = free[:]
+                self.ckpt_ms[b] = ms
+                if self.spec.kind == FLOW:
+                    self.ckpt_sum[b] = ssum
+                elif self.spec.kind == TAIL:
+                    self.ckpt_tail[b] = self.tail[:]
+            if self.indexed:
+                self.pre_ms[pos] = ms
+                if self.spec.kind == FLOW:
+                    self.pre_sum[pos] = ssum
+            t = order[pos]
+            g, dur = durs[t][cfg[t]]
+            hit = place_gang(free, self.node_gpus, self.offsets, g, dur, node[t])
+            if hit is None:
+                self.valid_upto = pos
+                self.committed = math.inf
+                return math.inf
+            nd, end = hit
+            if self.indexed:
+                self.rec_node[pos] = nd
+                self.rec_g[pos] = g
+                self.rec_end[pos] = end
+            if self.spec.kind == MAKESPAN:
+                ms = max(ms, end)
+            elif self.spec.kind == FLOW:
+                ssum += self.spec.flow_term(t, end)
+            else:
+                tail_push(self.tail, self.spec.k, self.spec.turnaround(t, end))
+        if self.indexed:
+            self.pre_ms[self.n] = ms
+            if self.spec.kind == FLOW:
+                self.pre_sum[self.n] = ssum
+        score = self._score(ms, ssum)
+        self.committed = score
+        return score
+
+    def eval_move(self, cfg, order, node, durs, p0):
+        if p0 > self.valid_upto:
+            return math.inf
+        if p0 >= self.n:
+            return self.committed
+        b0 = p0 // self.block
+        free = self.ckpt[b0][:]
+        if self.indexed:
+            for pos in range(b0 * self.block, p0):
+                _splice(free, self.node_gpus, self.offsets,
+                        self.rec_node[pos], self.rec_g[pos], self.rec_end[pos])
+            ms = self.pre_ms[p0]
+            ssum = self.pre_sum[p0] if self.spec.kind == FLOW else 0.0
+            if self.spec.kind == TAIL:
+                self.tail = self.ckpt_tail[b0][:]
+                for pos in range(b0 * self.block, p0):
+                    tail_push(self.tail, self.spec.k,
+                              self.spec.turnaround(order[pos], self.rec_end[pos]))
+            start = p0
+        else:
+            ms = self.ckpt_ms[b0]
+            ssum = self.ckpt_sum[b0] if self.spec.kind == FLOW else 0.0
+            if self.spec.kind == TAIL:
+                self.tail = self.ckpt_tail[b0][:]
+            start = b0 * self.block
+        for pos in range(start, self.n):
+            if pos % self.block == 0:
+                b = pos // self.block
+                if b > b0:
+                    self.staged[b] = free[:]
+                    self.staged_ms[b] = ms
+                    if self.spec.kind == FLOW:
+                        self.staged_sum[b] = ssum
+                    elif self.spec.kind == TAIL:
+                        self.staged_tail[b] = self.tail[:]
+            if self.indexed:
+                self.spre_ms[pos] = ms
+                if self.spec.kind == FLOW:
+                    self.spre_sum[pos] = ssum
+            t = order[pos]
+            g, dur = durs[t][cfg[t]]
+            hit = place_gang(free, self.node_gpus, self.offsets, g, dur, node[t])
+            if hit is None:
+                return math.inf
+            nd, end = hit
+            if self.indexed:
+                self.srec_node[pos] = nd
+                self.srec_g[pos] = g
+                self.srec_end[pos] = end
+            if self.spec.kind == MAKESPAN:
+                ms = max(ms, end)
+            elif self.spec.kind == FLOW:
+                ssum += self.spec.flow_term(t, end)
+            else:
+                tail_push(self.tail, self.spec.k, self.spec.turnaround(t, end))
+        if self.indexed:
+            self.spre_ms[self.n] = ms
+            if self.spec.kind == FLOW:
+                self.spre_sum[self.n] = ssum
+        return self._score(ms, ssum)
+
+    def accept(self, p0, final):
+        if p0 < self.n:
+            b0 = p0 // self.block
+            for b in range(b0 + 1, self.nblocks):
+                self.ckpt[b] = self.staged[b][:]
+                self.ckpt_ms[b] = self.staged_ms[b]
+                if self.spec.kind == FLOW:
+                    self.ckpt_sum[b] = self.staged_sum[b]
+                elif self.spec.kind == TAIL:
+                    self.ckpt_tail[b] = self.staged_tail[b][:]
+            if self.indexed:
+                self.rec_node[p0:self.n] = self.srec_node[p0:self.n]
+                self.rec_g[p0:self.n] = self.srec_g[p0:self.n]
+                self.rec_end[p0:self.n] = self.srec_end[p0:self.n]
+                self.pre_ms[p0:self.n + 1] = self.spre_ms[p0:self.n + 1]
+                if self.spec.kind == FLOW:
+                    self.pre_sum[p0:self.n + 1] = self.spre_sum[p0:self.n + 1]
+        self.committed = final
+        self.valid_upto = self.n
+
+
+# ------------------------------------------------------------- reference
+
+def reference(cfg, order, node, durs, node_gpus, spec):
+    """The historical full replay: per-gang copy+sort start, g min-scans."""
+    free = [[0.0] * g for g in node_gpus]
+    ms = 0.0
+    ssum = 0.0
+    tail = []
+    for t in order:
+        g, dur = durs[t][cfg[t]]
+        best_node, best_start = -1, math.inf
+        if node[t] is not None:
+            if node_gpus[node[t]] < g:
+                return math.inf
+            best_node = node[t]
+            best_start = sorted(free[best_node])[g - 1]
+        else:
+            for ni in range(len(node_gpus)):
+                if node_gpus[ni] < g:
+                    continue
+                s = sorted(free[ni])[g - 1]
+                if s < best_start:
+                    best_start, best_node = s, ni
+            if best_node < 0:
+                return math.inf
+        end = best_start + dur
+        fr = free[best_node]
+        for _ in range(g):
+            fr[fr.index(min(fr))] = end
+        if spec.kind == MAKESPAN:
+            ms = max(ms, end)
+        elif spec.kind == FLOW:
+            ssum += spec.flow_term(t, end)
+        else:
+            tail_push(tail, spec.k, spec.turnaround(t, end))
+    if spec.kind == MAKESPAN:
+        return ms
+    if spec.kind == FLOW:
+        return spec.flow_score(ssum)
+    return tail_score(tail)
+
+
+# ----------------------------------------------------------- the fixture
+
+NODE_GPUS = [4, 2]
+DURS = [
+    [(1, 8.0), (2, 4.5), (4, 2.25)],
+    [(1, 6.0), (2, 3.5)],
+    [(2, 5.0), (4, 3.25)],
+    [(1, 7.0), (2, 4.0)],
+    [(2, 6.5), (4, 3.75)],
+    [(1, 9.0), (2, 5.25)],
+]
+ORDER0 = [0, 1, 2, 3, 4, 5]
+CFG0 = [1, 0, 0, 1, 0, 1]
+NODE0 = [None, None, None, 1, None, None]
+# (p0, new cfg for the task at order position p0); accept when finite and
+# the move index is even
+MOVES = [(4, 1), (1, 1), (5, 0), (2, 1), (0, 2), (3, 0)]
+
+# pinned by delta.rs::tests::indexed_kernel_cross_validation_fixture —
+# regenerate with --emit
+EXPECTED_EVALS = [14.25, 13.5, 18.0, 13.0, 19.0, 15.0]
+EXPECTED_FINAL = 19.0
+EXPECTED_PRE_MS = [0.0, 2.25, 6.0, 7.25, 10.0, 11.0, 19.0]
+EXPECTED_REC_END = [2.25, 6.0, 7.25, 10.0, 11.0, 19.0]
+EXPECTED_FLOW = 34.25
+EXPECTED_TAIL = 60.0
+
+
+def run_fixture(emit):
+    n = len(DURS)
+    spec = Spec(MAKESPAN)
+    ker_i = Kernel(NODE_GPUS, n, spec, indexed=True)
+    ker_b = Kernel(NODE_GPUS, n, spec, indexed=False)
+    cfg, order, node = CFG0[:], ORDER0[:], NODE0[:]
+    r0_i = ker_i.rebuild(cfg, order, node, DURS)
+    r0_b = ker_b.rebuild(cfg, order, node, DURS)
+    ref0 = reference(cfg, order, node, DURS, NODE_GPUS, spec)
+    check(r0_i == r0_b == ref0, f"fixture rebuild: {r0_i} vs {r0_b} vs {ref0}")
+    evals = []
+    committed = r0_i
+    for i, (p0, newcfg) in enumerate(MOVES):
+        t = order[p0]
+        old = cfg[t]
+        cfg[t] = newcfg
+        e_i = ker_i.eval_move(cfg, order, node, DURS, p0)
+        e_b = ker_b.eval_move(cfg, order, node, DURS, p0)
+        ref = reference(cfg, order, node, DURS, NODE_GPUS, spec)
+        check(e_i == e_b == ref, f"fixture move {i}: {e_i} vs {e_b} vs {ref}")
+        evals.append(e_i)
+        if math.isfinite(e_i) and i % 2 == 0:
+            ker_i.accept(p0, e_i)
+            ker_b.accept(p0, e_b)
+            committed = e_i
+            cold = Kernel(NODE_GPUS, n, spec, indexed=True)
+            check(cold.rebuild(cfg, order, node, DURS) == committed,
+                  f"fixture move {i}: cold rebuild disagrees")
+            check(cold.rec_node == ker_i.rec_node, f"move {i}: rec_node drift")
+            check(cold.rec_g == ker_i.rec_g, f"move {i}: rec_g drift")
+            check(cold.rec_end == ker_i.rec_end, f"move {i}: rec_end drift")
+            check(cold.pre_ms == ker_i.pre_ms, f"move {i}: pre_ms drift")
+        else:
+            cfg[t] = old
+    # flow and tail over the same committed state, same move/accept tape
+    flow = Spec(FLOW, weights=[1.0] * n, offsets=[0.0, 10.0, 20.0, 30.0, 40.0, 50.0])
+    tailspec = Spec(TAIL, offsets=[0.0, 10.0, 20.0, 30.0, 40.0, 50.0], k=2)
+    fscore = replay_tape(flow)
+    tscore = replay_tape(tailspec)
+    if emit:
+        print(f"EXPECTED_EVALS = {evals}")
+        print(f"EXPECTED_FINAL = {committed}")
+        print(f"EXPECTED_PRE_MS = {ker_i.pre_ms}")
+        print(f"EXPECTED_REC_END = {ker_i.rec_end}")
+        print(f"EXPECTED_FLOW = {fscore}")
+        print(f"EXPECTED_TAIL = {tscore}")
+        return
+    check(evals == EXPECTED_EVALS, f"fixture evals {evals} != {EXPECTED_EVALS}")
+    check(committed == EXPECTED_FINAL, f"fixture final {committed} != {EXPECTED_FINAL}")
+    check(ker_i.pre_ms == EXPECTED_PRE_MS, f"fixture pre_ms {ker_i.pre_ms}")
+    check(ker_i.rec_end == EXPECTED_REC_END, f"fixture rec_end {ker_i.rec_end}")
+    check(fscore == EXPECTED_FLOW, f"fixture flow {fscore} != {EXPECTED_FLOW}")
+    check(tscore == EXPECTED_TAIL, f"fixture tail {tscore} != {EXPECTED_TAIL}")
+
+
+def replay_tape(spec):
+    """Run the fixture move/accept tape under `spec`, asserting mode
+    equivalence throughout; returns the final committed score."""
+    n = len(DURS)
+    ker_i = Kernel(NODE_GPUS, n, spec, indexed=True)
+    ker_b = Kernel(NODE_GPUS, n, spec, indexed=False)
+    cfg, order, node = CFG0[:], ORDER0[:], NODE0[:]
+    committed = ker_i.rebuild(cfg, order, node, DURS)
+    check(committed == ker_b.rebuild(cfg, order, node, DURS),
+          f"{spec.kind}: rebuild mode divergence")
+    check(committed == reference(cfg, order, node, DURS, NODE_GPUS, spec),
+          f"{spec.kind}: rebuild != reference")
+    for i, (p0, newcfg) in enumerate(MOVES):
+        t = order[p0]
+        old = cfg[t]
+        cfg[t] = newcfg
+        e_i = ker_i.eval_move(cfg, order, node, DURS, p0)
+        e_b = ker_b.eval_move(cfg, order, node, DURS, p0)
+        ref = reference(cfg, order, node, DURS, NODE_GPUS, spec)
+        check(e_i == e_b == ref, f"{spec.kind} move {i}: {e_i} vs {e_b} vs {ref}")
+        if math.isfinite(e_i) and i % 2 == 0:
+            ker_i.accept(p0, e_i)
+            ker_b.accept(p0, e_b)
+            committed = e_i
+        else:
+            cfg[t] = old
+    return committed
+
+
+# ------------------------------------------------------ randomized sweep
+
+def run_sweep():
+    rng = random.Random(20260808)
+    for case in range(12):
+        node_gpus = [1 + rng.randrange(8) for _ in range(1 + rng.randrange(4))]
+        maxg = max(node_gpus)
+        nt = 4 + rng.randrange(20)
+        durs = []
+        for _ in range(nt):
+            k = 1 + rng.randrange(maxg)
+            # quantized durations: exactly-representable, tie-rich
+            base = float(rng.randrange(50, 2000))
+            durs.append([(g, math.floor(base / g) + 1.0) for g in range(1, k + 1)])
+        if case % 3 == 0:
+            spec = Spec(MAKESPAN)
+        elif case % 3 == 1:
+            spec = Spec(FLOW, weights=[float(1 + rng.randrange(4)) for _ in range(nt)],
+                        offsets=[float(rng.randrange(800)) for _ in range(nt)])
+        else:
+            spec = Spec(TAIL, offsets=[float(rng.randrange(800)) for _ in range(nt)],
+                        k=1 + rng.randrange(nt))
+        cfg = [rng.randrange(len(durs[t])) for t in range(nt)]
+        order = list(range(nt))
+        rng.shuffle(order)
+        node = [rng.randrange(len(node_gpus)) if rng.random() < 0.25 else None
+                for _ in range(nt)]
+        ker_i = Kernel(node_gpus, nt, spec, indexed=True)
+        ker_b = Kernel(node_gpus, nt, spec, indexed=False)
+        committed = ker_i.rebuild(cfg, order, node, durs)
+        check(committed == ker_b.rebuild(cfg, order, node, durs),
+              f"sweep {case}: rebuild mode divergence")
+        for step in range(240):
+            kind = rng.randrange(3)
+            if kind == 0:  # config flip
+                p0 = rng.randrange(nt)
+                t = order[p0]
+                undo = ("cfg", t, cfg[t])
+                cfg[t] = rng.randrange(len(durs[t]))
+            elif kind == 1:  # order swap
+                a, b = rng.randrange(nt), rng.randrange(nt)
+                p0 = min(a, b)
+                undo = ("swap", a, b)
+                order[a], order[b] = order[b], order[a]
+            else:  # force/release node
+                p0 = rng.randrange(nt)
+                t = order[p0]
+                undo = ("node", t, node[t])
+                node[t] = rng.randrange(len(node_gpus)) if rng.random() < 0.6 else None
+            e_i = ker_i.eval_move(cfg, order, node, durs, p0)
+            e_b = ker_b.eval_move(cfg, order, node, durs, p0)
+            ref = reference(cfg, order, node, durs, node_gpus, spec)
+            check(e_i == e_b == ref or (math.isinf(e_i) and math.isinf(e_b) and math.isinf(ref)),
+                  f"sweep {case} step {step}: {e_i} vs {e_b} vs {ref}")
+            if math.isfinite(e_i) and rng.random() < 0.4:
+                ker_i.accept(p0, e_i)
+                ker_b.accept(p0, e_b)
+                committed = e_i
+            else:
+                if undo[0] == "cfg":
+                    cfg[undo[1]] = undo[2]
+                elif undo[0] == "swap":
+                    _, a, b = undo
+                    order[a], order[b] = order[b], order[a]
+                else:
+                    node[undo[1]] = undo[2]
+        # committed aggregates must equal a cold rebuild's
+        cold = Kernel(node_gpus, nt, spec, indexed=True)
+        check(cold.rebuild(cfg, order, node, durs) == committed,
+              f"sweep {case}: committed score drifted")
+        if math.isfinite(committed):
+            check(cold.rec_node == ker_i.rec_node, f"sweep {case}: rec_node drift")
+            check(cold.rec_g == ker_i.rec_g, f"sweep {case}: rec_g drift")
+            check(cold.rec_end == ker_i.rec_end, f"sweep {case}: rec_end drift")
+            check(cold.pre_ms == ker_i.pre_ms, f"sweep {case}: pre_ms drift")
+            if spec.kind == FLOW:
+                check(cold.pre_sum == ker_i.pre_sum, f"sweep {case}: pre_sum drift")
+
+
+FAILED = []
+
+
+def check(ok, msg):
+    if not ok:
+        FAILED.append(msg)
+        print(f"FAIL: {msg}")
+
+
+def main():
+    emit = "--emit" in sys.argv[1:]
+    run_fixture(emit)
+    if not emit:
+        run_sweep()
+        if FAILED:
+            print(f"{len(FAILED)} check(s) failed")
+            sys.exit(1)
+        print("validate_indexed_kernel: all checks passed")
+
+
+if __name__ == "__main__":
+    main()

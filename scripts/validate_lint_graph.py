@@ -518,6 +518,7 @@ DETERMINISM_FILES = [
     "src/solver/joint.rs",
     "src/solver/policy.rs",
     "src/solver/risk.rs",
+    "src/sim/events.rs",
 ]
 
 KNOWN_NON_CONTRACT = [
